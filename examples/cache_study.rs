@@ -1,0 +1,121 @@
+//! Cache study: the §4 claims, demonstrated on the cache simulator.
+//!
+//! 1. Prop. 15 — with 3-way associativity (and L = C/3 windows) the
+//!    three merge streams produce **zero conflict misses**, while a
+//!    direct-mapped cache of the same capacity conflicts heavily.
+//! 2. LRU vs FIFO on the merge access pattern (§4.2's replacement
+//!    discussion).
+//! 3. Regular vs Segmented Merge Path total misses as arrays grow past
+//!    the cache (the Table 1 effect, per-size).
+//!
+//! Run: `cargo run --release --example cache_study`
+
+use mergeflow::bench::harness::{fmt_elems, Table};
+use mergeflow::bench::workload::{gen_sorted_pair, WorkloadKind};
+use mergeflow::sim::cache::{CacheConfig, ReplacementPolicy, SetAssocCache};
+use mergeflow::sim::engine::{simulate_merge, MergeAlgo, SimWorkload};
+use mergeflow::sim::machine::x5670_12;
+use mergeflow::sim::stream::Stage;
+
+/// Replay the SPM window pattern (A, B, S streams of C/3 each) through
+/// one cache and report its stats. Bases are chosen adversarially:
+/// all three streams map onto the *same* cache sets (worst case —
+/// Prop. 15 must hold for any placement).
+fn spm_window_pass(cfg: CacheConfig) -> mergeflow::sim::cache::CacheStats {
+    let mut c = SetAssocCache::new(cfg);
+    let l = cfg.capacity / 3; // bytes per stream window
+    let cap = cfg.capacity as u64;
+    let (base_a, base_b, base_s) = (0u64, 16 * cap, 32 * cap);
+    for i in 0..(l as u64 / 4) {
+        c.access(base_a + i * 4, false);
+        c.access(base_b + i * 4, false);
+        c.access(base_s + i * 4, true);
+    }
+    c.stats()
+}
+
+fn main() {
+    // --- 1. Prop. 15: associativity sweep ----------------------------
+    let mut t = Table::new(
+        "Prop. 15 — SPM window (3 streams x C/3) conflict misses by associativity",
+        &["ways", "hits", "compulsory", "conflict", "capacity"],
+    );
+    for ways in [1usize, 2, 3, 6, 12] {
+        let stats = spm_window_pass(CacheConfig {
+            capacity: 3 * 4096 * 64,
+            line: 64,
+            ways,
+            policy: ReplacementPolicy::Lru,
+        });
+        t.row(&[
+            ways.to_string(),
+            stats.hits.to_string(),
+            stats.compulsory.to_string(),
+            stats.conflict.to_string(),
+            stats.capacity.to_string(),
+        ]);
+    }
+    t.print();
+    println!("(>= 3 ways: zero conflicts, exactly as Prop. 15 guarantees)");
+
+    // --- 2. LRU vs FIFO ----------------------------------------------
+    let mut t = Table::new(
+        "Replacement policy on one SPM window pass",
+        &["policy", "misses", "hits"],
+    );
+    for policy in [ReplacementPolicy::Lru, ReplacementPolicy::Fifo] {
+        let stats = spm_window_pass(CacheConfig {
+            capacity: 3 * 1024 * 64,
+            line: 64,
+            ways: 3,
+            policy,
+        });
+        t.row(&[
+            format!("{policy:?}"),
+            stats.misses().to_string(),
+            stats.hits.to_string(),
+        ]);
+    }
+    t.print();
+
+    // --- 3. Regular vs segmented as N grows --------------------------
+    let machine = x5670_12().scaled_caches(64);
+    let l3_elems = machine.mem.l3.capacity / 4;
+    let mut t = Table::new(
+        &format!(
+            "Regular vs segmented Merge Path, p=8 (scaled L3 = {} elements; odd N keeps the regular\n             algorithm's data-dependent boundaries off line boundaries, while SPM's\n             aligned L/p sub-segments avoid sharing — the Table 1 footnote)",
+            l3_elems
+        ),
+        &[
+            "|A|=|B|",
+            "reg L3 misses",
+            "seg L3 misses",
+            "reg invals",
+            "seg invals",
+            "reg L1 conflicts",
+            "seg L1 conflicts",
+        ],
+    );
+    for n in [l3_elems / 4 + 11, l3_elems + 11, 4 * l3_elems + 11, 16 * l3_elems + 11] {
+        let (a, b) = gen_sorted_pair(WorkloadKind::Uniform, n, n, 3);
+        let w = SimWorkload { a: &a, b: &b, writeback: true, stage: Stage::Both };
+        let reg = simulate_merge(&machine, MergeAlgo::MergePath, &w, 8);
+        let seg = simulate_merge(
+            &machine,
+            MergeAlgo::Segmented { segment_len: (l3_elems / 3).max(64) },
+            &w,
+            8,
+        );
+        t.row(&[
+            fmt_elems(n),
+            reg.mem.l3.misses().to_string(),
+            seg.mem.l3.misses().to_string(),
+            reg.mem.invalidations.to_string(),
+            seg.mem.invalidations.to_string(),
+            reg.mem.l1.conflict.to_string(),
+            seg.mem.l1.conflict.to_string(),
+        ]);
+    }
+    t.print();
+    println!("ok");
+}

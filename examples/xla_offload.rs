@@ -1,0 +1,62 @@
+//! XLA offload: merge through the AOT-compiled JAX/Pallas kernel
+//! (L1+L2 of the stack) from rust, and cross-check against the native
+//! Merge Path bit-for-bit.
+//!
+//! Requires `make artifacts`. Run:
+//! `cargo run --release --example xla_offload`
+
+use mergeflow::bench::harness::{report_line, BenchTimer};
+use mergeflow::bench::workload::{gen_sorted_pair, WorkloadKind};
+use mergeflow::mergepath::merge_into;
+use mergeflow::runtime::XlaRuntime;
+
+fn main() {
+    let rt = match XlaRuntime::open(std::path::Path::new("artifacts")) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("cannot open artifacts ({e}); run `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    println!("PJRT platform: {}", rt.platform());
+    println!("artifacts:");
+    for m in rt.manifest().entries() {
+        println!("  {:<24} op={:<10} |A|={:<7} |B|={:<7}", m.name, m.op, m.n_a, m.n_b);
+    }
+
+    let timer = BenchTimer::quick();
+    for meta in rt.manifest().entries().to_vec() {
+        if meta.op != "merge" {
+            continue;
+        }
+        let exe = rt.merge_executable(&meta.name).expect("compile artifact");
+        // Cross-check on several seeds, including adversarial shapes.
+        for seed in [1u64, 2, 3] {
+            let (a, b) = gen_sorted_pair(WorkloadKind::Uniform, meta.n_a, meta.n_b, seed);
+            let got = exe.merge(&a, &b).expect("xla merge");
+            let mut expected = vec![0i32; a.len() + b.len()];
+            merge_into(&a, &b, &mut expected);
+            assert_eq!(got, expected, "{} seed {seed}", meta.name);
+        }
+        let (a, b) = gen_sorted_pair(WorkloadKind::OneSided, meta.n_a, meta.n_b, 9);
+        assert_eq!(
+            exe.merge(&a, &b).unwrap(),
+            {
+                let mut e = vec![0i32; a.len() + b.len()];
+                merge_into(&a, &b, &mut e);
+                e
+            },
+            "one-sided"
+        );
+        println!("  {}: numerics verified (4 cases)", meta.name);
+        let (a, b) = gen_sorted_pair(WorkloadKind::Uniform, meta.n_a, meta.n_b, 11);
+        let m = timer.measure(|| {
+            std::hint::black_box(exe.merge(&a, &b).unwrap());
+        });
+        println!(
+            "  {}",
+            report_line(&meta.name, &m, (meta.n_a + meta.n_b) as u64)
+        );
+    }
+    println!("ok — python never ran: this binary only loaded HLO text via PJRT");
+}

@@ -1,0 +1,89 @@
+"""AOT export: lower the L2 merge graphs to HLO **text** artifacts the
+rust runtime loads via PJRT.
+
+Usage (from python/): ``python -m compile.aot --outdir ../artifacts``
+
+HLO text — NOT ``lowered.compile()`` / serialized protos: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` 0.1.6 rust crate pins)
+rejects; the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import merge_model, merge_ref_model
+
+# (name, n_a, n_b, segment_len) — shapes served by the coordinator.
+# Kept deliberately small: CPU-interpret Pallas inflates compile time,
+# and the coordinator batches jobs into these buckets.
+ARTIFACTS = [
+    ("merge_1024x1024", 1024, 1024, 256),
+    ("merge_4096x4096", 4096, 4096, 512),
+    ("merge_16384x16384", 16384, 16384, 1024),
+]
+
+# Plain-jnp (no Pallas) variant, exported for the L2 ablation bench.
+REF_ARTIFACTS = [
+    ("merge_ref_4096x4096", 4096, 4096),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side unwraps with to_tuple1)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_merge(n_a: int, n_b: int, segment_len: int) -> str:
+    fn = merge_model(n_a, n_b, segment_len)
+    spec_a = jax.ShapeDtypeStruct((n_a,), jnp.int32)
+    spec_b = jax.ShapeDtypeStruct((n_b,), jnp.int32)
+    return to_hlo_text(jax.jit(fn).lower(spec_a, spec_b))
+
+
+def lower_merge_ref(n_a: int, n_b: int) -> str:
+    fn = merge_ref_model(n_a, n_b)
+    spec_a = jax.ShapeDtypeStruct((n_a,), jnp.int32)
+    spec_b = jax.ShapeDtypeStruct((n_b,), jnp.int32)
+    return to_hlo_text(jax.jit(fn).lower(spec_a, spec_b))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    manifest_lines = ["# name  file  op  n_a  n_b  dtype"]
+    for name, n_a, n_b, seg in ARTIFACTS:
+        text = lower_merge(n_a, n_b, seg)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.outdir, fname), "w") as f:
+            f.write(text)
+        manifest_lines.append(f"{name} {fname} merge {n_a} {n_b} i32")
+        print(f"wrote {fname} ({len(text)} chars, L={seg})")
+    for name, n_a, n_b in REF_ARTIFACTS:
+        text = lower_merge_ref(n_a, n_b)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.outdir, fname), "w") as f:
+            f.write(text)
+        manifest_lines.append(f"{name} {fname} merge-ref {n_a} {n_b} i32")
+        print(f"wrote {fname} ({len(text)} chars, pure-jnp ref)")
+
+    with open(os.path.join(args.outdir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"manifest: {len(manifest_lines) - 1} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,147 @@
+"""L1 Pallas kernels: Merge Path on the TPU programming model.
+
+Two kernels implement the paper's two phases (DESIGN.md
+§Hardware-Adaptation):
+
+- ``partition_call`` — the cross-diagonal binary search (paper Alg 2),
+  one *lane* per partition point, branch-free: ``log2`` iterations of
+  compare+select across all diagonals at once. This is the TPU rethink
+  of the GPU version's per-SM search (Green et al., ICS'12).
+
+- ``merge_blocks_call`` — the per-segment merge. Instead of the serial
+  two-finger walk (hostile to the VPU), each segment's output is
+  produced by *rank-based* placement: ``pos(A[i]) = i + |{B < A[i]}|``
+  and ``pos(B[j]) = j + |{A <= B[j]}|`` (the ``<=`` keeps the merge
+  stable with A-priority, matching the rust implementation bit for
+  bit). Ranks come from vectorized ``searchsorted``; the scatter is an
+  XLA scatter in interpret mode.
+
+Both kernels run with ``interpret=True``: real-TPU lowering would emit
+Mosaic custom-calls the CPU PJRT plugin cannot execute (see
+/opt/xla-example/README.md). VMEM sizing for a real TPU is estimated in
+DESIGN.md §Perf: 3 tiles x L x 4B per grid step.
+
+Key-domain contract: keys are ``int32`` strictly below ``INT32_MAX``
+(the maximum is reserved as the window padding sentinel).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Padding sentinel: +inf for int32 keys.
+INT32_INF = jnp.iinfo(jnp.int32).max
+
+
+def _partition_kernel(a_ref, b_ref, starts_ref, *, segment_len: int):
+    """Compute merge-path intersections for all grid diagonals at once.
+
+    starts_ref has shape (G + 1, 2): row g is (a_start, b_start) of
+    segment g; row G is (|A|, |B|).
+    """
+    a = a_ref[...]
+    b = b_ref[...]
+    n_a = a.shape[0]
+    n_b = b.shape[0]
+    g_plus_1 = starts_ref.shape[0]
+    # Diagonal of row g (the last row's diagonal is exactly n_a + n_b).
+    diag = jnp.minimum(
+        jnp.arange(g_plus_1, dtype=jnp.int32) * segment_len, n_a + n_b
+    )
+    lo = jnp.maximum(diag - n_b, 0)
+    hi = jnp.minimum(diag, n_a)
+    # Degenerate one-sided inputs: the intersection is forced (shapes
+    # are static, so this is a trace-time branch — no gathers emitted
+    # against an empty operand).
+    if n_a == 0 or n_b == 0:
+        starts_ref[...] = jnp.stack([hi, diag - hi], axis=1).astype(jnp.int32)
+        return
+    # Branch-free binary search, identical invariants to the rust
+    # diagonal_intersection: find the smallest a-count not in the first
+    # `diag` outputs.
+    steps = max(1, int(n_a).bit_length() + 1)
+    for _ in range(steps):
+        active = lo < hi
+        mid = lo + (hi - lo) // 2
+        # Safe gathers (indices clipped; results ignored when inactive).
+        a_mid = a[jnp.clip(mid, 0, n_a - 1)]
+        b_idx = jnp.clip(diag - 1 - mid, 0, n_b - 1)
+        b_val = b[b_idx]
+        pred = a_mid <= b_val  # A[mid] lands inside the first diag outputs
+        lo = jnp.where(active & pred, mid + 1, lo)
+        hi = jnp.where(active & ~pred, mid, hi)
+    starts_ref[...] = jnp.stack([lo, diag - lo], axis=1).astype(jnp.int32)
+
+
+def partition_call(a, b, segment_len: int):
+    """Run the partition kernel: returns (G + 1, 2) int32 start points."""
+    n = a.shape[0] + b.shape[0]
+    num_segments = -(-n // segment_len) if n else 1
+    # Degenerate one-sided shapes: the Pallas interpreter rejects
+    # zero-length operands, and the intersection is forced anyway —
+    # compute it in plain jnp at trace time.
+    if a.shape[0] == 0 or b.shape[0] == 0:
+        diag = jnp.minimum(
+            jnp.arange(num_segments + 1, dtype=jnp.int32) * segment_len, n
+        )
+        a_cnt = jnp.minimum(diag, a.shape[0])
+        return jnp.stack([a_cnt, diag - a_cnt], axis=1).astype(jnp.int32)
+    return pl.pallas_call(
+        functools.partial(_partition_kernel, segment_len=segment_len),
+        out_shape=jax.ShapeDtypeStruct((num_segments + 1, 2), jnp.int32),
+        interpret=True,
+    )(a, b)
+
+
+def _merge_block_kernel(a_win_ref, b_win_ref, ka_ref, kb_ref, o_ref):
+    """Merge one path segment from its A/B windows (see module docs).
+
+    a_win/b_win: (1, L) window blocks (one grid row) starting at the
+    segment's path point, padded with INT32_INF past the end of the
+    source array.
+    ka/kb: (1,) consumed-element counts: ka + kb == L (interior
+    segments) or the residual for the last one.
+    """
+    a = a_win_ref[0, :]
+    b = b_win_ref[0, :]
+    ka = ka_ref[0]
+    kb = kb_ref[0]
+    length = a.shape[0]
+    idx = jnp.arange(length, dtype=jnp.int32)
+    a_valid = jnp.where(idx < ka, a, INT32_INF)
+    b_valid = jnp.where(idx < kb, b, INT32_INF)
+    # Stable A-priority ranks (see module docstring).
+    pos_a = idx + jnp.searchsorted(b_valid, a_valid, side="left").astype(jnp.int32)
+    pos_b = idx + jnp.searchsorted(a_valid, b_valid, side="right").astype(jnp.int32)
+    pos_a = jnp.where(idx < ka, pos_a, length)  # drop invalid lanes
+    pos_b = jnp.where(idx < kb, pos_b, length)
+    out = jnp.full((length,), INT32_INF, dtype=a.dtype)
+    out = out.at[pos_a].set(a_valid, mode="drop")
+    out = out.at[pos_b].set(b_valid, mode="drop")
+    o_ref[0, :] = out
+
+
+def merge_blocks_call(a_windows, b_windows, ka, kb):
+    """Merge all segments: (G, L) windows -> (G, L) merged blocks.
+
+    The grid dimension is the path segment (the GPU threadblock / the
+    paper's cache segment); BlockSpec stages one (L,) window of each
+    input per grid step — the HBM->VMEM schedule of DESIGN.md
+    §Hardware-Adaptation.
+    """
+    g, length = a_windows.shape
+    return pl.pallas_call(
+        _merge_block_kernel,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, length), lambda i: (i, 0)),
+            pl.BlockSpec((1, length), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, length), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, length), a_windows.dtype),
+        interpret=True,
+    )(a_windows, b_windows, ka, kb)

@@ -1,0 +1,69 @@
+"""Pure-jnp / numpy oracles for the Pallas kernels.
+
+These are the correctness ground truth: slow, obvious implementations
+mirroring the paper's definitions. The pytest suite asserts the Pallas
+kernels and the full L2 model against them (exact equality — integer
+keys, no tolerance games).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def merge_ref_np(a, b):
+    """Two-finger stable (A-priority) merge — the paper's Lemma 1 walk."""
+    a = np.asarray(a)
+    b = np.asarray(b)
+    out = np.empty(a.shape[0] + b.shape[0], dtype=a.dtype)
+    i = j = k = 0
+    while i < len(a) and j < len(b):
+        if a[i] <= b[j]:
+            out[k] = a[i]
+            i += 1
+        else:
+            out[k] = b[j]
+            j += 1
+        k += 1
+    out[k : k + len(a) - i] = a[i:]
+    k += len(a) - i
+    out[k:] = b[j:]
+    return out
+
+
+def merge_ref_jnp(a, b):
+    """Rank-based merge in pure jnp (the vectorization the kernel uses,
+    but without windows/padding — an independent derivation to check
+    the kernel's masking logic against)."""
+    a = jnp.asarray(a)
+    b = jnp.asarray(b)
+    n_a, n_b = a.shape[0], b.shape[0]
+    pos_a = jnp.arange(n_a) + jnp.searchsorted(b, a, side="left")
+    pos_b = jnp.arange(n_b) + jnp.searchsorted(a, b, side="right")
+    out = jnp.zeros(n_a + n_b, dtype=a.dtype)
+    out = out.at[pos_a].set(a)
+    out = out.at[pos_b].set(b)
+    return out
+
+
+def diagonal_intersection_ref(a, b, diag):
+    """O(diag) merge-path walk (mirrors the rust test oracle)."""
+    a = np.asarray(a)
+    b = np.asarray(b)
+    ai = bi = 0
+    while ai + bi < diag:
+        if ai < len(a) and (bi >= len(b) or a[ai] <= b[bi]):
+            ai += 1
+        else:
+            bi += 1
+    return ai, bi
+
+
+def partition_ref(a, b, segment_len):
+    """All segment start points, via the walk oracle: (G + 1, 2)."""
+    n = len(a) + len(b)
+    num_segments = max(1, -(-n // segment_len)) if n else 1
+    points = []
+    for g in range(num_segments + 1):
+        d = min(g * segment_len, n)
+        points.append(diagonal_intersection_ref(a, b, d))
+    return np.array(points, dtype=np.int32)

@@ -1,0 +1,79 @@
+"""L2: the full Merge-Path compute graph in JAX, calling the L1 Pallas
+kernels. Lowered once by aot.py; never imported at serve time.
+
+The graph mirrors the paper's two phases:
+
+1. ``partition_call`` (Pallas) — start points of every path segment.
+2. window gather — for each segment, a static-size ``L`` window of each
+   input starting at its path point (Lemma 16 guarantees a length-L
+   segment needs at most L consecutive elements of each input). Inputs
+   are padded with the INT32_INF sentinel so windows near the array end
+   stay in bounds.
+3. ``merge_blocks_call`` (Pallas, grid over segments) — rank-based
+   merge of each window pair; blocks concatenate to the merged array
+   (Thm 5).
+
+Shapes are static (XLA requirement): one artifact per (|A|, |B|, L).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.merge_path import (
+    INT32_INF,
+    merge_blocks_call,
+    partition_call,
+)
+
+
+def merge_model(n_a: int, n_b: int, segment_len: int):
+    """Build the merge function for fixed sizes; returns a traceable fn
+    of (a: i32[n_a], b: i32[n_b]) -> (i32[n_a + n_b],).
+
+    ``segment_len`` must divide into the output usefully; the last
+    segment may be short (masked inside the kernel).
+    """
+    n = n_a + n_b
+    num_segments = max(1, -(-n // segment_len))
+
+    def merge(a, b):
+        starts = partition_call(a, b, segment_len)  # (G+1, 2)
+        a_starts = starts[:-1, 0]
+        b_starts = starts[:-1, 1]
+        ka = starts[1:, 0] - starts[:-1, 0]  # per-segment A consumption
+        kb = starts[1:, 1] - starts[:-1, 1]
+        # Pad inputs so every window gather is in bounds.
+        a_pad = jnp.concatenate(
+            [a, jnp.full((segment_len,), INT32_INF, dtype=a.dtype)]
+        )
+        b_pad = jnp.concatenate(
+            [b, jnp.full((segment_len,), INT32_INF, dtype=b.dtype)]
+        )
+        gather = lambda arr, s: jax.lax.dynamic_slice(arr, (s,), (segment_len,))
+        a_windows = jax.vmap(lambda s: gather(a_pad, s))(a_starts)  # (G, L)
+        b_windows = jax.vmap(lambda s: gather(b_pad, s))(b_starts)
+        blocks = merge_blocks_call(a_windows, b_windows, ka, kb)  # (G, L)
+        merged = blocks.reshape(-1)[:n]
+        return (merged,)
+
+    merge.num_segments = num_segments
+    return merge
+
+
+def merge_ref_model(n_a: int, n_b: int):
+    """Plain-jnp reference graph (no Pallas): used by the HLO cost
+    comparison in the perf pass and as an L2-level oracle."""
+
+    def merge(a, b):
+        pos_a = jnp.arange(n_a, dtype=jnp.int32) + jnp.searchsorted(
+            b, a, side="left"
+        ).astype(jnp.int32)
+        pos_b = jnp.arange(n_b, dtype=jnp.int32) + jnp.searchsorted(
+            a, b, side="right"
+        ).astype(jnp.int32)
+        out = jnp.zeros(n_a + n_b, dtype=a.dtype)
+        out = out.at[pos_a].set(a)
+        out = out.at[pos_b].set(b)
+        return (out,)
+
+    return merge

@@ -1,0 +1,166 @@
+"""L1 kernel correctness: Pallas kernels vs the pure oracles.
+
+Exact integer equality everywhere — merging is not approximate.
+Hypothesis sweeps shapes, duplicates and adversarial layouts.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.merge_path import (
+    INT32_INF,
+    merge_blocks_call,
+    partition_call,
+)
+from compile.kernels.ref import (
+    merge_ref_jnp,
+    merge_ref_np,
+    partition_ref,
+)
+
+# Key domain: strictly below the INT32_INF sentinel (kernel contract).
+KEY = st.integers(min_value=-(2**31), max_value=2**31 - 2)
+
+
+def sorted_arr(values):
+    return np.sort(np.asarray(values, dtype=np.int32))
+
+
+# ---------------------------------------------------------------- refs
+
+
+@given(st.lists(KEY, max_size=60), st.lists(KEY, max_size=60))
+@settings(max_examples=60, deadline=None)
+def test_ref_jnp_matches_ref_np(xs, ys):
+    a, b = sorted_arr(xs), sorted_arr(ys)
+    got = np.asarray(merge_ref_jnp(a, b))
+    expected = merge_ref_np(a, b)
+    np.testing.assert_array_equal(got, expected)
+
+
+def test_ref_walk_paper_example():
+    a = sorted_arr([17, 29, 35, 73, 86, 90, 95, 99])
+    b = sorted_arr([3, 5, 12, 22, 45, 64, 69, 82])
+    out = merge_ref_np(a, b)
+    assert list(out[:8]) == [3, 5, 12, 17, 22, 29, 35, 45]
+
+
+# ----------------------------------------------------- partition kernel
+
+
+@given(
+    st.lists(KEY, max_size=80),
+    st.lists(KEY, max_size=80),
+    st.integers(min_value=1, max_value=64),
+)
+@settings(max_examples=40, deadline=None)
+def test_partition_kernel_matches_walk(xs, ys, seg):
+    a, b = sorted_arr(xs), sorted_arr(ys)
+    if len(a) + len(b) == 0:
+        return
+    got = np.asarray(partition_call(jnp.asarray(a), jnp.asarray(b), seg))
+    expected = partition_ref(a, b, seg)
+    np.testing.assert_array_equal(got, expected)
+
+
+def test_partition_one_sided():
+    a = sorted_arr(np.arange(100) + 1000)
+    b = sorted_arr(np.arange(100))
+    got = np.asarray(partition_call(jnp.asarray(a), jnp.asarray(b), 50))
+    expected = partition_ref(a, b, 50)
+    np.testing.assert_array_equal(got, expected)
+    # First two segments consume only B.
+    assert got[1][0] == 0 and got[1][1] == 50
+    assert got[2][0] == 0 and got[2][1] == 100
+
+
+def test_partition_duplicates_ties_go_to_a():
+    a = sorted_arr([5] * 40)
+    b = sorted_arr([5] * 40)
+    got = np.asarray(partition_call(jnp.asarray(a), jnp.asarray(b), 20))
+    # First 40 outputs must all come from A (stability).
+    assert got[1][0] == 20 and got[1][1] == 0
+    assert got[2][0] == 40 and got[2][1] == 0
+    assert got[3][0] == 40 and got[3][1] == 20
+
+
+# --------------------------------------------------------- merge kernel
+
+
+def run_full_merge(a, b, seg):
+    """Drive the two kernels the way model.py does (numpy gather)."""
+    a_j, b_j = jnp.asarray(a), jnp.asarray(b)
+    starts = np.asarray(partition_call(a_j, b_j, seg))
+    g = starts.shape[0] - 1
+    a_pad = np.concatenate([a, np.full(seg, INT32_INF, dtype=np.int32)])
+    b_pad = np.concatenate([b, np.full(seg, INT32_INF, dtype=np.int32)])
+    a_w = np.stack([a_pad[s : s + seg] for s in starts[:-1, 0]])
+    b_w = np.stack([b_pad[s : s + seg] for s in starts[:-1, 1]])
+    ka = (starts[1:, 0] - starts[:-1, 0]).astype(np.int32)
+    kb = (starts[1:, 1] - starts[:-1, 1]).astype(np.int32)
+    blocks = np.asarray(
+        merge_blocks_call(jnp.asarray(a_w), jnp.asarray(b_w), jnp.asarray(ka), jnp.asarray(kb))
+    )
+    assert blocks.shape == (g, seg)
+    return blocks.reshape(-1)[: len(a) + len(b)]
+
+
+@given(
+    st.lists(KEY, max_size=100),
+    st.lists(KEY, max_size=100),
+    st.sampled_from([1, 2, 7, 16, 64]),
+)
+@settings(max_examples=40, deadline=None)
+def test_merge_kernel_matches_ref(xs, ys, seg):
+    a, b = sorted_arr(xs), sorted_arr(ys)
+    if len(a) + len(b) == 0:
+        return
+    got = run_full_merge(a, b, seg)
+    expected = merge_ref_np(a, b)
+    np.testing.assert_array_equal(got, expected)
+
+
+@pytest.mark.parametrize("seg", [4, 32, 256])
+@pytest.mark.parametrize(
+    "case",
+    [
+        "one_sided",
+        "interleaved",
+        "all_equal",
+        "empty_a",
+        "empty_b",
+        "unequal",
+    ],
+)
+def test_merge_kernel_adversarial(case, seg):
+    rng = np.random.default_rng(7)
+    if case == "one_sided":
+        a = sorted_arr(np.arange(200) + 10_000)
+        b = sorted_arr(np.arange(300))
+    elif case == "interleaved":
+        a = sorted_arr(np.arange(250) * 2)
+        b = sorted_arr(np.arange(250) * 2 + 1)
+    elif case == "all_equal":
+        a = sorted_arr([42] * 128)
+        b = sorted_arr([42] * 200)
+    elif case == "empty_a":
+        a = sorted_arr([])
+        b = sorted_arr(rng.integers(-1000, 1000, 157))
+    elif case == "empty_b":
+        a = sorted_arr(rng.integers(-1000, 1000, 157))
+        b = sorted_arr([])
+    else:  # unequal
+        a = sorted_arr(rng.integers(-(2**30), 2**30, 13))
+        b = sorted_arr(rng.integers(-(2**30), 2**30, 499))
+    got = run_full_merge(a, b, seg)
+    np.testing.assert_array_equal(got, merge_ref_np(a, b))
+
+
+def test_merge_kernel_extreme_keys():
+    # Keys at the edges of the allowed domain (INT32_INF - 1 is legal).
+    a = sorted_arr([-(2**31), -(2**31), 0, 2**31 - 2])
+    b = sorted_arr([-(2**31), 2**31 - 2, 2**31 - 2])
+    got = run_full_merge(a, b, 4)
+    np.testing.assert_array_equal(got, merge_ref_np(a, b))

@@ -1,0 +1,63 @@
+//! Ablation: SPM path-segment length L sweep (DESIGN.md calls out the
+//! L = C/3 choice of Prop. 15) on the simulated 12-core machine plus
+//! real single-core wallclock. Shows the U-shape: tiny L drowns in
+//! per-segment partition/barrier overhead, huge L loses the cache
+//! residency that motivates SPM.
+use mergeflow::bench::figures::sim_scale;
+use mergeflow::bench::harness::{report_line, BenchTimer, Table};
+use mergeflow::bench::workload::{gen_sorted_pair, WorkloadKind};
+use mergeflow::mergepath::{segmented_parallel_merge, SegmentedConfig};
+use mergeflow::sim::engine::{simulate_merge, MergeAlgo, SimWorkload};
+use mergeflow::sim::machine::x5670_12;
+use mergeflow::sim::stream::Stage;
+
+fn main() {
+    let scale = sim_scale();
+    let machine = x5670_12().scaled_caches(scale);
+    let l3_elems = machine.mem.l3.capacity / 4;
+    let n = ((50usize << 20) / scale).max(1 << 14);
+    let (a, b) = gen_sorted_pair(WorkloadKind::Uniform, n, n, 99);
+    let w = SimWorkload { a: &a, b: &b, writeback: true, stage: Stage::Both };
+
+    let mut t = Table::new(
+        &format!(
+            "SPM segment-length ablation (|A|=|B|={n}, p=8, scaled L3 = {l3_elems} elems; Prop. 15 pick = L3/3 = {})",
+            l3_elems / 3
+        ),
+        &["L (elements)", "cycles", "L1 misses", "L3 misses", "barriers"],
+    );
+    let picks = [
+        l3_elems / 48,
+        l3_elems / 12,
+        l3_elems / 3, // the paper's C/3
+        l3_elems,
+        4 * l3_elems,
+    ];
+    for l in picks {
+        let r = simulate_merge(&machine, MergeAlgo::Segmented { segment_len: l.max(64) }, &w, 8);
+        t.row(&[
+            l.to_string(),
+            r.cycles.to_string(),
+            r.mem.l1.misses().to_string(),
+            r.mem.l3.misses().to_string(),
+            r.barriers.to_string(),
+        ]);
+    }
+    t.print();
+
+    println!("\nReal single-core wallclock (4M outputs):");
+    let (a, b) = gen_sorted_pair(WorkloadKind::Uniform, 2 << 20, 2 << 20, 7);
+    let mut out = vec![0i32; 4 << 20];
+    let timer = BenchTimer::quick();
+    for l in [1usize << 12, 1 << 16, 1 << 20, 1 << 22] {
+        let m = timer.measure(|| {
+            segmented_parallel_merge(
+                &a,
+                &b,
+                &mut out,
+                SegmentedConfig { segment_len: l, threads: 1 },
+            )
+        });
+        println!("{}", report_line(&format!("SPM L={l}"), &m, 4 << 20));
+    }
+}

@@ -1,0 +1,10 @@
+//! Regenerates Figure 4: Merge Path speedup on the simulated 12-core
+//! X5670 system for 1M / 10M / 100M-element arrays.
+//! Scale via MERGEFLOW_SIM_SCALE (default 64; 1 = paper-size inputs).
+use mergeflow::bench::figures;
+
+fn main() {
+    let scale = figures::sim_scale();
+    figures::fig4(scale).print();
+    println!("\npaper reference: near-linear, ~11.7x at 12 threads, slight dip for the largest arrays");
+}

@@ -1,0 +1,11 @@
+//! Regenerates Figure 5 (a-d): regular vs segmented Merge Path on the
+//! simulated 40-core E7-8870, 10M/50M arrays, writeback vs register.
+use mergeflow::bench::figures;
+
+fn main() {
+    let scale = figures::sim_scale();
+    for t in figures::fig5(scale) {
+        t.print();
+    }
+    println!("\npaper reference: ~32x register vs ~28x writeback at 40 threads (50M); segmented wins on the larger arrays, regular on the smaller");
+}

@@ -1,0 +1,11 @@
+//! Regenerates Figure 7 (a, b): Merge Path speedups on the Plurality
+//! HyperCore model (32 cores, shared banked cache).
+use mergeflow::bench::figures;
+
+fn main() {
+    let scale = figures::sim_scale();
+    for t in figures::fig7(scale) {
+        t.print();
+    }
+    println!("\npaper reference: near-linear to 16 cores for all sizes; the largest arrays dip at 32 cores for the regular algorithm only");
+}

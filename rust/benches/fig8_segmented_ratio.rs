@@ -1,0 +1,9 @@
+//! Regenerates Figure 8: regular/segmented cycle ratio on the
+//! HyperCore (values > 1 mean segmented is faster).
+use mergeflow::bench::figures;
+
+fn main() {
+    let scale = figures::sim_scale();
+    figures::fig8(scale).print();
+    println!("\npaper reference: segmented pulls ahead as arrays outgrow the shared cache; regular wins for cache-resident sizes");
+}

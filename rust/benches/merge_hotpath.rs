@@ -1,0 +1,48 @@
+//! Hot-path microbenches: single-core merge throughput of every kernel
+//! variant against the std-sort floor, across workload shapes.
+//! This is the §Perf L3 driver (see EXPERIMENTS.md §Perf).
+use mergeflow::baselines::{bitonic_merge, concat_sort_merge};
+use mergeflow::bench::harness::{report_line, BenchTimer};
+use mergeflow::bench::workload::{gen_sorted_pair, WorkloadKind};
+use mergeflow::mergepath::merge::{branchless_merge_bounded, hybrid_merge_bounded, merge_bounded};
+use mergeflow::mergepath::{gallop_merge_into, merge_into, parallel_merge, segmented_parallel_merge, SegmentedConfig};
+
+fn main() {
+    let n = std::env::var("MERGEFLOW_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4usize << 20);
+    let timer = BenchTimer::default();
+    for kind in [WorkloadKind::Uniform, WorkloadKind::Runs, WorkloadKind::OneSided] {
+        println!("\n--- workload: {} (|A|=|B|={}) ---", kind.name(), n / 2);
+        let (a, b) = gen_sorted_pair(kind, n / 2, n / 2, 42);
+        let mut out = vec![0i32; n];
+        let total = n as u64;
+
+        let m = timer.measure(|| merge_into(&a, &b, &mut out));
+        println!("{}", report_line("merge_into (two-finger)", &m, total));
+        let m = timer.measure(|| merge_bounded(&a, &b, &mut out, n));
+        println!("{}", report_line("merge_bounded", &m, total));
+        let m = timer.measure(|| branchless_merge_bounded(&a, &b, &mut out, n));
+        println!("{}", report_line("branchless_merge", &m, total));
+        let m = timer.measure(|| hybrid_merge_bounded(&a, &b, &mut out, n));
+        println!("{}", report_line("hybrid_merge (production kernel)", &m, total));
+        let m = timer.measure(|| gallop_merge_into(&a, &b, &mut out));
+        println!("{}", report_line("gallop_merge", &m, total));
+        let m = timer.measure(|| parallel_merge(&a, &b, &mut out, 1));
+        println!("{}", report_line("parallel_merge p=1", &m, total));
+        let m = timer.measure(|| {
+            segmented_parallel_merge(
+                &a, &b, &mut out,
+                SegmentedConfig { segment_len: 1 << 20, threads: 1 },
+            )
+        });
+        println!("{}", report_line("segmented p=1 L=1M", &m, total));
+        let m = timer.measure(|| concat_sort_merge(&a, &b, &mut out));
+        println!("{}", report_line("concat+sort floor", &m, total));
+        if n <= 1 << 20 {
+            let m = timer.measure(|| bitonic_merge(&a, &b, &mut out, 1));
+            println!("{}", report_line("bitonic network", &m, total));
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! §6.1 probe: partition (diagonal intersection) time growth with
+//! thread count — simulated cycles plus real single-core wallclock of
+//! the partition routine itself.
+use mergeflow::bench::figures;
+use mergeflow::bench::harness::{report_line, BenchTimer};
+use mergeflow::bench::workload::{gen_sorted_pair, WorkloadKind};
+use mergeflow::mergepath::partition_merge_path;
+
+fn main() {
+    let scale = figures::sim_scale();
+    figures::partition_probe(scale).print();
+
+    println!("\nReal wallclock of partition_merge_path (10M-element arrays):");
+    let (a, b) = gen_sorted_pair(WorkloadKind::Uniform, 10 << 20, 10 << 20, 7);
+    let timer = BenchTimer::default();
+    for p in [2usize, 8, 40, 400] {
+        let m = timer.measure(|| {
+            let segs = partition_merge_path(&a, &b, p);
+            std::hint::black_box(&segs);
+        });
+        println!("{}", report_line(&format!("partition p={p}"), &m, p as u64));
+    }
+}

@@ -1,0 +1,9 @@
+//! Regenerates Table 1: cache misses per parallel-merge algorithm,
+//! split into partition and merge stages (measured on the simulator).
+use mergeflow::bench::figures;
+
+fn main() {
+    let scale = figures::sim_scale();
+    figures::table1(scale).print();
+    println!("\npaper reference: partition O(p log N) for [9]/[8]/[2]&MP vs O(p N/C log C) for SPM; merge stage Omega(N) for all; SPM has the lowest total bound and no inter-core line sharing");
+}

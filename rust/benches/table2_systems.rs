@@ -1,0 +1,6 @@
+//! Regenerates Table 2: the evaluation systems (simulated geometries).
+use mergeflow::bench::figures;
+
+fn main() {
+    figures::table2().print();
+}

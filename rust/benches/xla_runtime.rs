@@ -1,0 +1,39 @@
+//! XLA runtime bench: per-artifact execution latency/throughput of the
+//! AOT Pallas merge vs the native rust merge at the same shape.
+//! Skips gracefully when `make artifacts` has not been run.
+use mergeflow::bench::harness::{report_line, BenchTimer};
+use mergeflow::bench::workload::{gen_sorted_pair, WorkloadKind};
+use mergeflow::mergepath::merge_into;
+use mergeflow::runtime::XlaRuntime;
+
+fn main() {
+    let dir = std::path::Path::new("artifacts");
+    let Ok(rt) = XlaRuntime::open(dir) else {
+        eprintln!("skipping xla_runtime bench: run `make artifacts` first");
+        return;
+    };
+    println!("platform: {}", rt.platform());
+    let timer = BenchTimer::default();
+    for meta in rt.manifest().entries().to_vec() {
+        if meta.op != "merge" && meta.op != "merge-ref" {
+            continue;
+        }
+        let exe = match rt.merge_executable(&meta.name) {
+            Ok(e) => e,
+            Err(e) => {
+                eprintln!("compile {} failed: {e}", meta.name);
+                continue;
+            }
+        };
+        let (a, b) = gen_sorted_pair(WorkloadKind::Uniform, meta.n_a, meta.n_b, 11);
+        let total = (meta.n_a + meta.n_b) as u64;
+        let m = timer.measure(|| {
+            let out = exe.merge(&a, &b).expect("exec failed");
+            std::hint::black_box(&out);
+        });
+        println!("{}", report_line(&format!("xla {}", meta.name), &m, total));
+        let mut out = vec![0i32; meta.n_a + meta.n_b];
+        let m = timer.measure(|| merge_into(&a, &b, &mut out));
+        println!("{}", report_line(&format!("native same shape"), &m, total));
+    }
+}

@@ -1,0 +1,244 @@
+//! Batcher's bitonic merging and sorting networks ([7], §5).
+//!
+//! The paper cites bitonic sort as the classic example of the
+//! "problem-size-dependent processor count" category: `N/2` comparators
+//! per stage, `O(log² N)` stages. Here the network runs on `p` real
+//! threads by chunking each stage's independent compare-exchanges —
+//! every stage is a perfectly parallel loop, but total work is
+//! `O(N log² N)`, which is what the comparison benches show against the
+//! `O(N)` Merge Path.
+//!
+//! Arbitrary (non-power-of-two) lengths are handled by virtually
+//! padding with `+∞` (`None`-as-greatest in a scratch buffer of
+//! `Option<T>`).
+
+use crate::exec::fork_join;
+use crate::mergepath::parallel::SliceParts;
+
+/// `Option<T>` ordered with `None` as `+∞` (padding element).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct Padded<T>(Option<T>);
+
+impl<T: Ord> PartialOrd for Padded<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T: Ord> Ord for Padded<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        match (&self.0, &other.0) {
+            (Some(a), Some(b)) => a.cmp(b),
+            (Some(_), None) => std::cmp::Ordering::Less,
+            (None, Some(_)) => std::cmp::Ordering::Greater,
+            (None, None) => std::cmp::Ordering::Equal,
+        }
+    }
+}
+
+/// One ascending bitonic-network pass over `v` (length must be a power
+/// of two): for stride `k`, compare-exchange pairs `(i, i|k)`.
+fn stage<T: Ord + Copy + Send + Sync>(v: &mut [Padded<T>], k: usize, p: usize) {
+    let n = v.len();
+    let shared = SliceParts::new(v);
+    let pairs = n / 2;
+    let workers = p.min(pairs.max(1));
+    fork_join(workers, |tid| {
+        // Enumerate pair indices i with bit k clear, chunked by thread.
+        let lo = tid * pairs / workers;
+        let hi = (tid + 1) * pairs / workers;
+        for t in lo..hi {
+            // t-th index with bit k clear: insert a 0 at bit position of k.
+            let below = t & (k - 1);
+            let above = (t & !(k - 1)) << 1;
+            let i = above | below;
+            let j = i | k;
+            // SAFETY: each (i, j) pair is touched by exactly one thread.
+            unsafe {
+                let a = shared.slice_mut(i, 1);
+                let b = shared.slice_mut(j, 1);
+                if a[0] > b[0] {
+                    std::mem::swap(&mut a[0], &mut b[0]);
+                }
+            }
+        }
+    });
+}
+
+/// Bitonic *merge* of a bitonic sequence held in `v` (power-of-two
+/// length): the classic `log n` halving stages.
+fn bitonic_merge_network<T: Ord + Copy + Send + Sync>(v: &mut [Padded<T>], p: usize) {
+    let n = v.len();
+    debug_assert!(n.is_power_of_two());
+    let mut k = n / 2;
+    while k >= 1 {
+        stage(v, k, p);
+        k /= 2;
+    }
+}
+
+/// Merge two sorted arrays with the bitonic merging network on `p`
+/// threads. `O(N log N)` work, `O(log N)` depth.
+pub fn bitonic_merge<T: Ord + Copy + Send + Sync>(a: &[T], b: &[T], out: &mut [T], p: usize) {
+    assert_eq!(out.len(), a.len() + b.len());
+    assert!(p > 0);
+    let n = (a.len() + b.len()).next_power_of_two().max(1);
+    if a.len() + b.len() == 0 {
+        return;
+    }
+    // ascending ++ descending = bitonic. Padding must go *between* the
+    // ascending run and the reversed `b`: [a…, +∞…, b-reversed…] is
+    // non-decreasing then non-increasing, i.e. still bitonic, whereas
+    // appending +∞ after the descent would not be.
+    let pad = n - (a.len() + b.len());
+    let mut v: Vec<Padded<T>> = Vec::with_capacity(n);
+    v.extend(a.iter().map(|&x| Padded(Some(x))));
+    v.extend(std::iter::repeat(Padded(None)).take(pad));
+    v.extend(b.iter().rev().map(|&x| Padded(Some(x))));
+    debug_assert_eq!(v.len(), n);
+    bitonic_merge_network(&mut v, p);
+    for (o, x) in out.iter_mut().zip(v.into_iter()) {
+        *o = x.0.expect("padding sorted past payload");
+    }
+}
+
+/// Full bitonic sort on `p` threads. `O(N log² N)` work.
+pub fn bitonic_sort<T: Ord + Copy + Send + Sync>(data: &mut [T], p: usize) {
+    assert!(p > 0);
+    let len = data.len();
+    if len <= 1 {
+        return;
+    }
+    let n = len.next_power_of_two();
+    let mut v: Vec<Padded<T>> = Vec::with_capacity(n);
+    v.extend(data.iter().map(|&x| Padded(Some(x))));
+    v.extend(std::iter::repeat(Padded(None)).take(n - len));
+    // Standard iterative bitonic sorter (ascending), padding = +∞.
+    let mut k = 2usize;
+    while k <= n {
+        let mut j = k / 2;
+        while j >= 1 {
+            bitonic_sort_stage(&mut v, j, k, p);
+            j /= 2;
+        }
+        k *= 2;
+    }
+    for (o, x) in data.iter_mut().zip(v.into_iter()) {
+        *o = x.0.expect("padding sorted past payload");
+    }
+}
+
+/// One stage of the full sorter: direction depends on bit `k` of `i`.
+fn bitonic_sort_stage<T: Ord + Copy + Send + Sync>(
+    v: &mut [Padded<T>],
+    j: usize,
+    k: usize,
+    p: usize,
+) {
+    let n = v.len();
+    let shared = SliceParts::new(v);
+    let pairs = n / 2;
+    let workers = p.min(pairs.max(1));
+    fork_join(workers, |tid| {
+        let lo = tid * pairs / workers;
+        let hi = (tid + 1) * pairs / workers;
+        for t in lo..hi {
+            let below = t & (j - 1);
+            let above = (t & !(j - 1)) << 1;
+            let i = above | below;
+            let l = i | j;
+            let ascending = i & k == 0;
+            // SAFETY: disjoint pairs per thread.
+            unsafe {
+                let a = shared.slice_mut(i, 1);
+                let b = shared.slice_mut(l, 1);
+                if (a[0] > b[0]) == ascending {
+                    std::mem::swap(&mut a[0], &mut b[0]);
+                }
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn oracle(a: &[i64], b: &[i64]) -> Vec<i64> {
+        let mut v: Vec<i64> = a.iter().chain(b.iter()).copied().collect();
+        v.sort();
+        v
+    }
+
+    fn random_sorted(rng: &mut Xoshiro256, n: usize, universe: u64) -> Vec<i64> {
+        let mut v: Vec<i64> = (0..n).map(|_| rng.below(universe) as i64).collect();
+        v.sort_unstable();
+        v
+    }
+
+    #[test]
+    fn merge_matches_oracle() {
+        let mut rng = Xoshiro256::seeded(0xB170);
+        for _ in 0..25 {
+            let n_a = rng.range(0, 200);
+            let a = random_sorted(&mut rng, n_a, 64);
+            let n_b = rng.range(0, 200);
+            let b = random_sorted(&mut rng, n_b, 64);
+            let expected = oracle(&a, &b);
+            for p in [1, 2, 4] {
+                let mut out = vec![0i64; a.len() + b.len()];
+                bitonic_merge(&a, &b, &mut out, p);
+                assert_eq!(out, expected, "p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn merge_power_of_two_exact() {
+        let a: Vec<i64> = (0..64).map(|x| x * 2).collect();
+        let b: Vec<i64> = (0..64).map(|x| x * 2 + 1).collect();
+        let mut out = vec![0i64; 128];
+        bitonic_merge(&a, &b, &mut out, 4);
+        assert_eq!(out, (0..128).collect::<Vec<i64>>());
+    }
+
+    #[test]
+    fn sort_matches_std() {
+        let mut rng = Xoshiro256::seeded(0xB171);
+        for _ in 0..15 {
+            let n = rng.range(0, 500);
+            let v: Vec<i64> = (0..n).map(|_| rng.next_i32() as i64).collect();
+            let mut expected = v.clone();
+            expected.sort();
+            for p in [1, 3, 8] {
+                let mut got = v.clone();
+                bitonic_sort(&mut got, p);
+                assert_eq!(got, expected, "n={n} p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn sort_edge_cases() {
+        let mut v: Vec<i64> = vec![];
+        bitonic_sort(&mut v, 4);
+        let mut v = vec![1i64];
+        bitonic_sort(&mut v, 4);
+        assert_eq!(v, vec![1]);
+        let mut v = vec![3i64, 1, 2]; // non-power-of-two
+        bitonic_sort(&mut v, 2);
+        assert_eq!(v, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn merge_empty_sides() {
+        let e: Vec<i64> = vec![];
+        let a: Vec<i64> = (0..37).collect();
+        let mut out = vec![0i64; 37];
+        bitonic_merge(&a, &e, &mut out, 3);
+        assert_eq!(out, a);
+        bitonic_merge(&e, &a, &mut out, 3);
+        assert_eq!(out, a);
+    }
+}

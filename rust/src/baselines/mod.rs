@@ -1,0 +1,29 @@
+//! Baseline parallel-merge algorithms from the paper's related work (§5)
+//! plus the naive strawman of §1.
+//!
+//! These exist so the benchmark harness can regenerate Table 1 (cache
+//! misses per algorithm) and provide speedup comparisons with identical
+//! workloads and the same execution substrate:
+//!
+//! - [`naive`] — equal split of both inputs (incorrect; kept as the §1
+//!   counter-example and as a teaching aid).
+//! - [`shiloach_vishkin`] — [9]: fragment-boundary ranking, load
+//!   imbalance up to `2N/p`.
+//! - [`akl_santoro`] — [8]: recursive median bisection, `log p` rounds,
+//!   EREW-friendly, `O(N/p + log N·log p)`.
+//! - [`deo_sarkar`] — [2]: equispaced k-th smallest selection,
+//!   `O(N/p + log N)` — the algorithm Merge Path is equivalent to, with
+//!   a different (non-geometric) derivation.
+//! - [`bitonic`] — [7]: Batcher's bitonic merge/sort networks.
+
+pub mod akl_santoro;
+pub mod bitonic;
+pub mod deo_sarkar;
+pub mod naive;
+pub mod shiloach_vishkin;
+
+pub use akl_santoro::akl_santoro_merge;
+pub use bitonic::{bitonic_merge, bitonic_sort};
+pub use deo_sarkar::{deo_sarkar_merge, kth_of_union};
+pub use naive::{concat_sort_merge, naive_equal_split_merge};
+pub use shiloach_vishkin::shiloach_vishkin_merge;

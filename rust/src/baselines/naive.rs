@@ -1,0 +1,127 @@
+//! The naive strawmen of §1.
+//!
+//! [`naive_equal_split_merge`] partitions *each input* into `p`
+//! equal-length contiguous sub-arrays, pairs them up positionally,
+//! merges each pair, and concatenates — which is **incorrect** in
+//! general (take all of `A` greater than all of `B`). It is retained
+//! because the paper opens with it as motivation; tests assert both the
+//! cases where it happens to work and a witness where it fails.
+//!
+//! [`concat_sort_merge`] is the trivially correct (but `O(N log N)`)
+//! fallback: concatenate and sort. It serves as the throughput floor in
+//! the hot-path benches.
+
+use crate::exec::fork_join;
+use crate::mergepath::merge::merge_into;
+use crate::mergepath::parallel::SliceParts;
+
+/// The incorrect naive parallel "merge": split `a` and `b` into `p`
+/// positional pairs, merge pairwise, concatenate. Returned so callers
+/// can inspect (and tests can falsify) the result.
+pub fn naive_equal_split_merge<T: Ord + Copy + Send + Sync>(
+    a: &[T],
+    b: &[T],
+    p: usize,
+) -> Vec<T> {
+    assert!(p > 0);
+    let n = a.len() + b.len();
+    let mut out = vec![];
+    out.reserve_exact(n);
+    // Build per-pair outputs, then concatenate in pair order.
+    let mut pieces: Vec<Vec<T>> = Vec::with_capacity(p);
+    for i in 0..p {
+        let (a0, a1) = (i * a.len() / p, (i + 1) * a.len() / p);
+        let (b0, b1) = (i * b.len() / p, (i + 1) * b.len() / p);
+        let mut piece = vec![];
+        piece.resize(a1 - a0 + (b1 - b0), a.first().copied().unwrap_or_else(|| b[0]));
+        merge_into(&a[a0..a1], &b[b0..b1], &mut piece);
+        pieces.push(piece);
+    }
+    for piece in pieces {
+        out.extend_from_slice(&piece);
+    }
+    out
+}
+
+/// Correct-but-slow baseline: copy both inputs into `out` and sort.
+/// `O(N log N)` work; used as the floor in `merge_hotpath` benches.
+pub fn concat_sort_merge<T: Ord + Copy + Send + Sync>(a: &[T], b: &[T], out: &mut [T]) {
+    assert_eq!(out.len(), a.len() + b.len());
+    out[..a.len()].copy_from_slice(a);
+    out[a.len()..].copy_from_slice(b);
+    out.sort();
+}
+
+/// Parallel copy helper used by several baselines: copy `src` into
+/// `dst` with `p` threads (bandwidth-bound stage of [9]'s description).
+pub fn parallel_copy<T: Copy + Send + Sync>(src: &[T], dst: &mut [T], p: usize) {
+    assert_eq!(src.len(), dst.len());
+    assert!(p > 0);
+    let n = src.len();
+    if n == 0 {
+        return;
+    }
+    let shared = SliceParts::new(dst);
+    fork_join(p.min(n), |tid| {
+        let p = p.min(n);
+        let (s, e) = (tid * n / p, (tid + 1) * n / p);
+        if e > s {
+            // SAFETY: ranges disjoint across tids.
+            let chunk = unsafe { shared.slice_mut(s, e - s) };
+            chunk.copy_from_slice(&src[s..e]);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn naive_split_fails_on_one_sided_input() {
+        // §1's counter-example: all of A greater than all of B.
+        let a = [10i64, 20, 30, 40];
+        let b = [1i64, 2, 3, 4];
+        let got = naive_equal_split_merge(&a, &b, 2);
+        let mut expected: Vec<i64> = a.iter().chain(b.iter()).copied().collect();
+        expected.sort();
+        assert_ne!(got, expected, "naive split should be wrong here");
+        // ... and the output is not even sorted:
+        assert!(got.windows(2).any(|w| w[0] > w[1]));
+    }
+
+    #[test]
+    fn naive_split_happens_to_work_when_interleaved_evenly() {
+        // Perfectly interleaved inputs make the naive split correct —
+        // the trap that makes the bug easy to miss.
+        let a = [0i64, 2, 4, 6];
+        let b = [1i64, 3, 5, 7];
+        let got = naive_equal_split_merge(&a, &b, 2);
+        assert_eq!(got, vec![0, 1, 2, 3, 4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn concat_sort_is_correct() {
+        let a = [5i64, 9, 12];
+        let b = [1i64, 9, 30, 31];
+        let mut out = [0i64; 7];
+        concat_sort_merge(&a, &b, &mut out);
+        assert_eq!(out, [1, 5, 9, 9, 12, 30, 31]);
+    }
+
+    #[test]
+    fn parallel_copy_matches() {
+        let src: Vec<u32> = (0..1000).collect();
+        let mut dst = vec![0u32; 1000];
+        parallel_copy(&src, &mut dst, 7);
+        assert_eq!(src, dst);
+        // degenerate: empty, p > n
+        let e: Vec<u32> = vec![];
+        let mut de: Vec<u32> = vec![];
+        parallel_copy(&e, &mut de, 4);
+        let one = vec![9u32];
+        let mut done = vec![0u32];
+        parallel_copy(&one, &mut done, 16);
+        assert_eq!(done, vec![9]);
+    }
+}

@@ -1,0 +1,252 @@
+//! Shiloach–Vishkin parallel merge ([9], CREW PRAM).
+//!
+//! Partitioning: cut **each input** into `p` equal fragments and rank
+//! every fragment boundary into the *other* array by binary search. The
+//! union of the `2(p−1)` boundary points cuts the output into `2p − 1`
+//! chunks; processor `i` is assigned chunks `2i` and `2i+1`. Each chunk
+//! is bounded by `N/p` *per originating array*, so a processor can
+//! receive up to `2N/p` output elements — the load imbalance the paper
+//! (§5) contrasts with Merge Path's exact `N/p`: "such a load imbalance
+//! can cause a 2X increase in latency".
+//!
+//! Time `O(N/p + log N)`; correct for CREW (fragment ranks are read
+//! concurrently, writes are disjoint).
+
+use crate::exec::fork_join;
+use crate::mergepath::merge::merge_into;
+use crate::mergepath::parallel::SliceParts;
+
+/// A work item: merge `a[a0..a1]` with `b[b0..b1]` into the output at
+/// `out0` (lengths always agree by construction).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SvChunk {
+    /// `A` sub-range.
+    pub a0: usize,
+    /// End of the `A` sub-range.
+    pub a1: usize,
+    /// `B` sub-range.
+    pub b0: usize,
+    /// End of the `B` sub-range.
+    pub b1: usize,
+    /// Output offset.
+    pub out0: usize,
+}
+
+/// Compute the Shiloach–Vishkin chunk decomposition (exposed for the
+/// cache simulator and the load-imbalance bench).
+pub fn sv_chunks<T: Ord>(a: &[T], b: &[T], p: usize) -> Vec<SvChunk> {
+    assert!(p > 0);
+    // Split points as (a_idx, b_idx) pairs on the merge path, from both
+    // arrays' fragment boundaries. A-boundary i: (i·|A|/p, rank of
+    // A-bound in B with A-priority ties); symmetrically for B.
+    let mut points: Vec<(usize, usize)> = Vec::with_capacity(2 * p);
+    points.push((0, 0));
+    for i in 1..p {
+        let ai = i * a.len() / p;
+        if ai > 0 && ai < a.len() {
+            // B elements strictly below A[ai] are consumed before it
+            // (ties in B lose to A ⇒ strictly-less rank).
+            let bi = lower_bound(b, &a[ai]);
+            points.push((ai, bi));
+        }
+        let bj = i * b.len() / p;
+        if bj > 0 && bj < b.len() {
+            // A elements ≤ B[bj] precede it (A wins ties) ⇒ upper rank.
+            let aj = upper_bound(a, &b[bj]);
+            points.push((aj, bj));
+        }
+    }
+    points.push((a.len(), b.len()));
+    // Both coordinates are monotone along the merge path; sorting by the
+    // pair orders points by their position on the path.
+    points.sort_unstable();
+    points.dedup();
+    let mut chunks = Vec::with_capacity(points.len() - 1);
+    let mut out0 = 0usize;
+    for w in points.windows(2) {
+        let (a0, b0) = w[0];
+        let (a1, b1) = w[1];
+        chunks.push(SvChunk { a0, a1, b0, b1, out0 });
+        out0 += (a1 - a0) + (b1 - b0);
+    }
+    debug_assert_eq!(out0, a.len() + b.len());
+    chunks
+}
+
+/// Chunk-to-processor assignment: the historical algorithm hands each
+/// processor **two consecutive** chunks (there are at most `2p`), so a
+/// processor can receive up to `2N/p` output elements — the paper's §5
+/// load-imbalance criticism. (A smarter deal would rebalance, but that
+/// is precisely what [9] does not do.)
+#[inline]
+pub fn sv_owner(chunk_idx: usize, p: usize) -> usize {
+    (chunk_idx / 2) % p
+}
+
+/// Merge `a` and `b` into `out` with the Shiloach–Vishkin decomposition
+/// on `p` threads (blocked two-chunks-per-processor assignment, see
+/// [`sv_owner`]).
+pub fn shiloach_vishkin_merge<T: Ord + Copy + Send + Sync>(
+    a: &[T],
+    b: &[T],
+    out: &mut [T],
+    p: usize,
+) {
+    assert_eq!(out.len(), a.len() + b.len());
+    assert!(p > 0);
+    let chunks = sv_chunks(a, b, p);
+    let shared = SliceParts::new(out);
+    fork_join(p, |tid| {
+        for (i, c) in chunks.iter().enumerate() {
+            if sv_owner(i, p) != tid {
+                continue;
+            }
+            let len = (c.a1 - c.a0) + (c.b1 - c.b0);
+            if len > 0 {
+                // SAFETY: chunk output ranges are disjoint by construction.
+                let dst = unsafe { shared.slice_mut(c.out0, len) };
+                merge_into(&a[c.a0..c.a1], &b[c.b0..c.b1], dst);
+            }
+        }
+    });
+}
+
+/// Max output elements assigned to any one thread under the blocked
+/// deal — the load-imbalance metric reported by the comparison bench.
+pub fn sv_max_load<T: Ord>(a: &[T], b: &[T], p: usize) -> usize {
+    let chunks = sv_chunks(a, b, p);
+    let mut loads = vec![0usize; p];
+    for (i, c) in chunks.iter().enumerate() {
+        loads[sv_owner(i, p)] += (c.a1 - c.a0) + (c.b1 - c.b0);
+    }
+    loads.into_iter().max().unwrap_or(0)
+}
+
+/// First index with `xs[i] >= key` (strict rank).
+fn lower_bound<T: Ord>(xs: &[T], key: &T) -> usize {
+    let (mut lo, mut hi) = (0, xs.len());
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if xs[mid] < *key {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// First index with `xs[i] > key`.
+fn upper_bound<T: Ord>(xs: &[T], key: &T) -> usize {
+    let (mut lo, mut hi) = (0, xs.len());
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if xs[mid] <= *key {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn oracle(a: &[i64], b: &[i64]) -> Vec<i64> {
+        let mut v: Vec<i64> = a.iter().chain(b.iter()).copied().collect();
+        v.sort();
+        v
+    }
+
+    fn random_sorted(rng: &mut Xoshiro256, n: usize, universe: u64) -> Vec<i64> {
+        let mut v: Vec<i64> = (0..n).map(|_| rng.below(universe) as i64).collect();
+        v.sort_unstable();
+        v
+    }
+
+    #[test]
+    fn matches_oracle_random() {
+        let mut rng = Xoshiro256::seeded(0x5111);
+        for _ in 0..30 {
+            let n_a = rng.range(0, 300);
+            let a = random_sorted(&mut rng, n_a, 100);
+            let n_b = rng.range(0, 300);
+            let b = random_sorted(&mut rng, n_b, 100);
+            let expected = oracle(&a, &b);
+            for p in [1, 2, 4, 7, 16] {
+                let mut out = vec![0i64; a.len() + b.len()];
+                shiloach_vishkin_merge(&a, &b, &mut out, p);
+                assert_eq!(out, expected, "p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunks_tile_output() {
+        let mut rng = Xoshiro256::seeded(0x5112);
+        let a = random_sorted(&mut rng, 200, 50);
+        let b = random_sorted(&mut rng, 150, 50);
+        let chunks = sv_chunks(&a, &b, 8);
+        let mut expect = 0usize;
+        for c in &chunks {
+            assert_eq!(c.out0, expect);
+            expect += (c.a1 - c.a0) + (c.b1 - c.b0);
+        }
+        assert_eq!(expect, 350);
+    }
+
+    #[test]
+    fn imbalance_witness() {
+        // Skewed data forces imbalance: all of B falls inside A's first
+        // fragment, so the chunks around that region are much larger
+        // than the rest — one processor ends up with well over the
+        // average load (the paper's §5 criticism of [9]), while Merge
+        // Path is exact by construction.
+        let n = 1 << 12;
+        let p = 8;
+        let a: Vec<i64> = (0..n as i64).collect();
+        let b: Vec<i64> = vec![100i64; n]; // inside A-fragment 0
+        let max = sv_max_load(&a, &b, p);
+        let avg = (2 * n) / p;
+        assert!(
+            max as f64 >= 1.25 * avg as f64,
+            "skewed imbalance should exceed average (got {max}, avg {avg})"
+        );
+        // Merge Path's partition of the same input is exactly equisized.
+        let segs = crate::mergepath::partition_merge_path(&a, &b, p);
+        let mp_max = segs.iter().map(|s| s.len()).max().unwrap();
+        assert_eq!(mp_max, avg);
+    }
+
+    #[test]
+    fn all_equal_keys() {
+        let a = vec![3i64; 97];
+        let b = vec![3i64; 103];
+        let mut out = vec![0i64; 200];
+        shiloach_vishkin_merge(&a, &b, &mut out, 6);
+        assert!(out.iter().all(|&x| x == 3));
+    }
+
+    #[test]
+    fn empty_sides() {
+        let e: Vec<i64> = vec![];
+        let a: Vec<i64> = (0..50).collect();
+        let mut out = vec![0i64; 50];
+        shiloach_vishkin_merge(&a, &e, &mut out, 4);
+        assert_eq!(out, a);
+        shiloach_vishkin_merge(&e, &a, &mut out, 4);
+        assert_eq!(out, a);
+    }
+
+    #[test]
+    fn bounds_helpers() {
+        let xs = [1i64, 3, 3, 5];
+        assert_eq!(lower_bound(&xs, &3), 1);
+        assert_eq!(upper_bound(&xs, &3), 3);
+        assert_eq!(lower_bound(&xs, &0), 0);
+        assert_eq!(upper_bound(&xs, &9), 4);
+    }
+}

@@ -1,0 +1,223 @@
+//! Micro-bench timing loop and an aligned-table printer: the in-tree
+//! replacement for criterion (unavailable offline). Keeps the output a
+//! stable, diff-able text format so EXPERIMENTS.md can quote it.
+
+use crate::metrics::{fmt_ns, fmt_throughput};
+use std::time::Instant;
+
+/// Adaptive timing loop: warms up, then runs enough iterations to
+/// cover a target measuring window, reporting min/mean ns per
+/// iteration. Min is the headline (least noise on a busy host).
+#[derive(Debug, Clone, Copy)]
+pub struct BenchTimer {
+    /// Target measurement window in nanoseconds.
+    pub window_ns: u64,
+    /// Warmup iterations.
+    pub warmup: u32,
+    /// Hard cap on measured iterations.
+    pub max_iters: u32,
+}
+
+impl Default for BenchTimer {
+    fn default() -> Self {
+        Self {
+            window_ns: 200_000_000, // 200 ms
+            warmup: 2,
+            max_iters: 1000,
+        }
+    }
+}
+
+/// One measurement.
+#[derive(Debug, Clone, Copy)]
+pub struct Measurement {
+    /// Fastest observed iteration (ns).
+    pub min_ns: u64,
+    /// Mean over measured iterations (ns).
+    pub mean_ns: u64,
+    /// Iterations measured.
+    pub iters: u32,
+}
+
+impl Measurement {
+    /// Throughput for `elems` elements processed per iteration.
+    pub fn throughput(&self, elems: u64) -> String {
+        fmt_throughput(elems, self.min_ns)
+    }
+}
+
+impl BenchTimer {
+    /// Fast preset for CI-ish runs.
+    pub fn quick() -> Self {
+        Self {
+            window_ns: 50_000_000,
+            warmup: 1,
+            max_iters: 200,
+        }
+    }
+
+    /// Time `f`, which must perform one full iteration per call.
+    pub fn measure<F: FnMut()>(&self, mut f: F) -> Measurement {
+        for _ in 0..self.warmup {
+            f();
+        }
+        // Estimate single-iteration cost.
+        let t0 = Instant::now();
+        f();
+        let first = t0.elapsed().as_nanos().max(1) as u64;
+        let iters = ((self.window_ns / first).clamp(1, self.max_iters as u64)) as u32;
+        let mut min_ns = first;
+        let mut total = first;
+        let mut measured = 1u32;
+        for _ in 1..iters {
+            let t = Instant::now();
+            f();
+            let ns = t.elapsed().as_nanos().max(1) as u64;
+            min_ns = min_ns.min(ns);
+            total += ns;
+            measured += 1;
+        }
+        Measurement {
+            min_ns,
+            mean_ns: total / measured as u64,
+            iters: measured,
+        }
+    }
+}
+
+/// Aligned plain-text table, printed in the style the paper's tables /
+/// figure series are quoted in EXPERIMENTS.md.
+#[derive(Debug, Default)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Table with a title and column headers.
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    /// Append a row (stringify everything up front).
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Convenience for mixed displayable cells.
+    pub fn row_disp(&mut self, cells: &[&dyn std::fmt::Display]) {
+        self.row(&cells.iter().map(|c| c.to_string()).collect::<Vec<_>>());
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!("{:>w$}  ", c, w = widths[i]));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a speedup cell.
+pub fn fmt_speedup(s: f64) -> String {
+    format!("{s:.2}x")
+}
+
+/// Format an element count the way the paper does (1M = 2^20).
+pub fn fmt_elems(n: usize) -> String {
+    if n >= (1 << 20) && n % (1 << 20) == 0 {
+        format!("{}M", n >> 20)
+    } else if n >= (1 << 10) && n % (1 << 10) == 0 {
+        format!("{}K", n >> 10)
+    } else {
+        n.to_string()
+    }
+}
+
+/// Human summary line for one measurement.
+pub fn report_line(name: &str, m: &Measurement, elems: u64) -> String {
+    format!(
+        "{name:<40} min {:>10}  mean {:>10}  {:>12}  ({} iters)",
+        fmt_ns(m.min_ns),
+        fmt_ns(m.mean_ns),
+        m.throughput(elems),
+        m.iters
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_iterations() {
+        let t = BenchTimer { window_ns: 1_000_000, warmup: 1, max_iters: 50 };
+        let mut count = 0u64;
+        let m = t.measure(|| {
+            count += 1;
+            std::hint::black_box(&count);
+        });
+        assert!(m.iters >= 1);
+        assert!(count as u32 >= m.iters); // warmup + estimate + measured
+        assert!(m.min_ns <= m.mean_ns);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["long-name".into(), "2222".into()]);
+        let r = t.render();
+        assert!(r.contains("== demo =="));
+        assert!(r.contains("long-name"));
+        let lines: Vec<&str> = r.lines().filter(|l| !l.is_empty()).collect();
+        assert_eq!(lines.len(), 5); // title, header, rule, 2 rows
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(fmt_elems(1 << 20), "1M");
+        assert_eq!(fmt_elems(10 << 20), "10M");
+        assert_eq!(fmt_elems(2048), "2K");
+        assert_eq!(fmt_elems(1000), "1000");
+        assert_eq!(fmt_speedup(11.73), "11.73x");
+    }
+}

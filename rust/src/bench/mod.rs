@@ -1,0 +1,11 @@
+//! Benchmark support: workload generators and the table/figure printer
+//! used by every `cargo bench` target (criterion is unavailable
+//! offline; the benches are `harness = false` binaries built on this
+//! module).
+
+pub mod figures;
+pub mod harness;
+pub mod workload;
+
+pub use harness::{BenchTimer, Table};
+pub use workload::{gen_sorted_pair, gen_unsorted, WorkloadKind};

@@ -1,0 +1,172 @@
+//! Workload generators for benches, examples and the simulator.
+//!
+//! All generators are deterministic in (kind, size, seed) so paper
+//! figures can be regenerated bit-for-bit.
+
+use crate::rng::Xoshiro256;
+
+/// Input distribution shapes used in the evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkloadKind {
+    /// i.i.d. uniform keys (the paper's primary workload).
+    Uniform,
+    /// Skewed: 90% of keys in 10% of the range (duplicates-heavy).
+    Skewed,
+    /// Disjoint ranges: all of `A` below all of `B` (naive-split
+    /// killer, worst case for Shiloach–Vishkin balance).
+    OneSided,
+    /// Perfectly interleaved: `A` holds evens, `B` odds.
+    Interleaved,
+    /// Long runs: alternating blocks of `A`-only / `B`-only keys
+    /// (galloping-friendly; LSM-compaction shape).
+    Runs,
+}
+
+impl WorkloadKind {
+    /// All kinds, for sweeps.
+    pub fn all() -> [WorkloadKind; 5] {
+        [
+            WorkloadKind::Uniform,
+            WorkloadKind::Skewed,
+            WorkloadKind::OneSided,
+            WorkloadKind::Interleaved,
+            WorkloadKind::Runs,
+        ]
+    }
+
+    /// Parse from a CLI string.
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "uniform" => WorkloadKind::Uniform,
+            "skewed" => WorkloadKind::Skewed,
+            "one-sided" | "onesided" => WorkloadKind::OneSided,
+            "interleaved" => WorkloadKind::Interleaved,
+            "runs" => WorkloadKind::Runs,
+            _ => return None,
+        })
+    }
+
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkloadKind::Uniform => "uniform",
+            WorkloadKind::Skewed => "skewed",
+            WorkloadKind::OneSided => "one-sided",
+            WorkloadKind::Interleaved => "interleaved",
+            WorkloadKind::Runs => "runs",
+        }
+    }
+}
+
+/// Generate a pair of sorted arrays of `na`/`nb` 32-bit keys.
+pub fn gen_sorted_pair(kind: WorkloadKind, na: usize, nb: usize, seed: u64) -> (Vec<i32>, Vec<i32>) {
+    let mut rng = Xoshiro256::seeded(seed);
+    let (mut a, mut b): (Vec<i32>, Vec<i32>) = match kind {
+        WorkloadKind::Uniform => {
+            let a = (0..na).map(|_| rng.next_i32()).collect();
+            let b = (0..nb).map(|_| rng.next_i32()).collect();
+            (a, b)
+        }
+        WorkloadKind::Skewed => {
+            let pick = |rng: &mut Xoshiro256| -> i32 {
+                if rng.chance(0.9) {
+                    (rng.below(1 << 16)) as i32
+                } else {
+                    rng.next_i32()
+                }
+            };
+            let a = (0..na).map(|_| pick(&mut rng)).collect();
+            let b = (0..nb).map(|_| pick(&mut rng)).collect();
+            (a, b)
+        }
+        WorkloadKind::OneSided => {
+            let a = (0..na).map(|_| -(rng.below(1 << 30) as i32) - 2).collect();
+            let b = (0..nb).map(|_| rng.below(1 << 30) as i32).collect();
+            (a, b)
+        }
+        WorkloadKind::Interleaved => {
+            let a = (0..na).map(|i| (i as i32) * 2).collect();
+            let b = (0..nb).map(|i| (i as i32) * 2 + 1).collect();
+            (a, b)
+        }
+        WorkloadKind::Runs => {
+            // Alternate 1024-key blocks between the arrays.
+            let block = 1024usize;
+            let mut a = Vec::with_capacity(na);
+            let mut b = Vec::with_capacity(nb);
+            let mut key = 0i32;
+            while a.len() < na || b.len() < nb {
+                for _ in 0..block {
+                    if a.len() < na {
+                        a.push(key);
+                        key = key.wrapping_add(1);
+                    }
+                }
+                for _ in 0..block {
+                    if b.len() < nb {
+                        b.push(key);
+                        key = key.wrapping_add(1);
+                    }
+                }
+            }
+            (a, b)
+        }
+    };
+    a.sort_unstable();
+    b.sort_unstable();
+    (a, b)
+}
+
+/// Generate an unsorted array for the sort benches.
+pub fn gen_unsorted(n: usize, seed: u64) -> Vec<i32> {
+    let mut rng = Xoshiro256::seeded(seed);
+    (0..n).map(|_| rng.next_i32()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outputs_are_sorted_and_sized() {
+        for kind in WorkloadKind::all() {
+            let (a, b) = gen_sorted_pair(kind, 1000, 777, 42);
+            assert_eq!(a.len(), 1000, "{kind:?}");
+            assert_eq!(b.len(), 777, "{kind:?}");
+            assert!(a.windows(2).all(|w| w[0] <= w[1]), "{kind:?}");
+            assert!(b.windows(2).all(|w| w[0] <= w[1]), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let (a1, b1) = gen_sorted_pair(WorkloadKind::Uniform, 500, 500, 7);
+        let (a2, b2) = gen_sorted_pair(WorkloadKind::Uniform, 500, 500, 7);
+        assert_eq!(a1, a2);
+        assert_eq!(b1, b2);
+        let (a3, _) = gen_sorted_pair(WorkloadKind::Uniform, 500, 500, 8);
+        assert_ne!(a1, a3);
+    }
+
+    #[test]
+    fn one_sided_is_disjoint() {
+        let (a, b) = gen_sorted_pair(WorkloadKind::OneSided, 100, 100, 1);
+        assert!(a.last().unwrap() < b.first().unwrap());
+    }
+
+    #[test]
+    fn skewed_has_duplicates() {
+        let (a, _) = gen_sorted_pair(WorkloadKind::Skewed, 100_000, 10, 1);
+        let mut uniq = a.clone();
+        uniq.dedup();
+        assert!(uniq.len() < a.len(), "skewed workload should repeat keys");
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for kind in WorkloadKind::all() {
+            assert_eq!(WorkloadKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(WorkloadKind::parse("nope"), None);
+    }
+}

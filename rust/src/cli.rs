@@ -1,0 +1,163 @@
+//! Hand-rolled CLI (clap is unavailable in the offline image).
+//!
+//! ```text
+//! mergeflow merge   --n 1M --kind uniform --threads 8 [--segment-len L]
+//! mergeflow sort    --n 16M --threads 8 [--cache-elems C]
+//! mergeflow serve   [--config mergeflow.toml] [--jobs N]
+//! mergeflow figure  fig4|fig5|fig7|fig8 [--scale S]
+//! mergeflow table   table1|table2 [--scale S]
+//! mergeflow probe   [--scale S]
+//! mergeflow artifacts [--dir artifacts]
+//! ```
+
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, flags (`--k v` / `--k`), positional
+/// arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Cli {
+    /// First positional token (the subcommand).
+    pub command: String,
+    /// `--key value` pairs (bare `--flag` maps to "true").
+    pub flags: BTreeMap<String, String>,
+    /// Remaining positionals.
+    pub positional: Vec<String>,
+}
+
+impl Cli {
+    /// Parse from an argv iterator (without the program name).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self> {
+        let mut it = args.into_iter().peekable();
+        let command = it.next().unwrap_or_default();
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err(Error::Config("empty flag `--`".into()));
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    flags.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(tok);
+            }
+        }
+        Ok(Self { command, flags, positional })
+    }
+
+    /// Flag lookup.
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    /// Size flag accepting `123`, `4K`, `16M` (binary powers, matching
+    /// the paper's "1M = 2^20 elements").
+    pub fn size_flag(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => parse_size(v),
+        }
+    }
+
+    /// Integer flag.
+    pub fn usize_flag(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name}: `{v}` is not an integer"))),
+        }
+    }
+
+    /// Boolean flag (present = true).
+    pub fn bool_flag(&self, name: &str) -> bool {
+        matches!(self.flag(name), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+/// Parse `123`, `64K`, `10M`, `1G` (binary suffixes).
+pub fn parse_size(v: &str) -> Result<usize> {
+    let v = v.trim();
+    let (num, mult) = match v.chars().last() {
+        Some('K') | Some('k') => (&v[..v.len() - 1], 1usize << 10),
+        Some('M') | Some('m') => (&v[..v.len() - 1], 1usize << 20),
+        Some('G') | Some('g') => (&v[..v.len() - 1], 1usize << 30),
+        _ => (v, 1usize),
+    };
+    num.parse::<usize>()
+        .map(|n| n * mult)
+        .map_err(|_| Error::Config(format!("bad size `{v}`")))
+}
+
+/// Top-level usage text.
+pub const USAGE: &str = "\
+mergeflow — Merge Path parallel merging & sorting framework
+
+USAGE:
+  mergeflow merge   --n <SIZE> [--kind uniform|skewed|one-sided|interleaved|runs]
+                    [--threads P] [--segment-len L] [--seed S]
+  mergeflow sort    --n <SIZE> [--threads P] [--cache-elems C] [--seed S]
+  mergeflow serve   [--config FILE] [--jobs N] [--job-size SIZE]
+  mergeflow figure  <fig4|fig5|fig7|fig8> [--scale S]
+  mergeflow table   <table1|table2> [--scale S]
+  mergeflow probe   [--scale S]
+  mergeflow artifacts [--dir DIR]
+  mergeflow help
+
+SIZE accepts binary suffixes: 64K, 1M, 10M (1M = 2^20 elements).
+MERGEFLOW_SIM_SCALE overrides the default figure simulation scale (64).
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli(args: &[&str]) -> Cli {
+        Cli::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_positionals() {
+        let c = cli(&["figure", "fig4", "--scale", "32", "--verbose"]);
+        assert_eq!(c.command, "figure");
+        assert_eq!(c.positional, vec!["fig4"]);
+        assert_eq!(c.flag("scale"), Some("32"));
+        assert!(c.bool_flag("verbose"));
+    }
+
+    #[test]
+    fn equals_style_flags() {
+        let c = cli(&["merge", "--n=4M", "--threads=8"]);
+        assert_eq!(c.size_flag("n", 0).unwrap(), 4 << 20);
+        assert_eq!(c.usize_flag("threads", 1).unwrap(), 8);
+    }
+
+    #[test]
+    fn size_parsing() {
+        assert_eq!(parse_size("123").unwrap(), 123);
+        assert_eq!(parse_size("64K").unwrap(), 64 << 10);
+        assert_eq!(parse_size("10M").unwrap(), 10 << 20);
+        assert_eq!(parse_size("1G").unwrap(), 1 << 30);
+        assert!(parse_size("ten").is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = cli(&["merge"]);
+        assert_eq!(c.size_flag("n", 1 << 20).unwrap(), 1 << 20);
+        assert_eq!(c.usize_flag("threads", 4).unwrap(), 4);
+        assert!(!c.bool_flag("verbose"));
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let c = cli(&["merge", "--threads", "many"]);
+        assert!(c.usize_flag("threads", 1).is_err());
+    }
+}

@@ -1,0 +1,282 @@
+//! Configuration system: a typed config struct, a TOML-subset parser
+//! (the offline image has no serde/toml crates), environment overrides
+//! and validation.
+//!
+//! Supported syntax: `[section]` headers, `key = value` with string
+//! (quoted), integer, float and boolean values, `#` comments. This
+//! covers everything `mergeflow.toml` needs.
+
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Parsed key-value view of a TOML-subset document: `section.key → raw
+/// value`.
+#[derive(Debug, Clone, Default)]
+pub struct RawConfig {
+    values: BTreeMap<String, String>,
+}
+
+impl RawConfig {
+    /// Parse from text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw_line) in text.lines().enumerate() {
+            let line = strip_comment(raw_line).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                if section.is_empty() {
+                    return Err(Error::Config(format!("line {}: empty section", lineno + 1)));
+                }
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                return Err(Error::Config(format!(
+                    "line {}: expected `key = value`, got `{line}`",
+                    lineno + 1
+                )));
+            };
+            let key = k.trim();
+            if key.is_empty() {
+                return Err(Error::Config(format!("line {}: empty key", lineno + 1)));
+            }
+            let full_key = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            values.insert(full_key, unquote(v.trim()).to_string());
+        }
+        Ok(Self { values })
+    }
+
+    /// Load from a file.
+    pub fn from_file(path: &std::path::Path) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Raw string lookup.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    /// Typed lookup with default.
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("{key}: `{v}` is not an integer"))),
+        }
+    }
+
+    /// Typed bool lookup with default.
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") => Ok(true),
+            Some("false") => Ok(false),
+            Some(v) => Err(Error::Config(format!("{key}: `{v}` is not a bool"))),
+        }
+    }
+
+    /// Typed string lookup with default.
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect `#` inside quotes.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn unquote(v: &str) -> &str {
+    v.strip_prefix('"')
+        .and_then(|s| s.strip_suffix('"'))
+        .unwrap_or(v)
+}
+
+/// Backend used to execute merge jobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Native rust Merge Path.
+    Native,
+    /// AOT-compiled JAX/Pallas kernel via PJRT.
+    Xla,
+    /// Route by job size: small jobs native, fixed-size batches to XLA.
+    Auto,
+}
+
+impl std::str::FromStr for Backend {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "native" => Ok(Backend::Native),
+            "xla" => Ok(Backend::Xla),
+            "auto" => Ok(Backend::Auto),
+            other => Err(Error::Config(format!("unknown backend `{other}`"))),
+        }
+    }
+}
+
+/// Full service configuration.
+#[derive(Debug, Clone)]
+pub struct MergeflowConfig {
+    /// Worker threads in the coordinator pool.
+    pub workers: usize,
+    /// Threads used per merge/sort job.
+    pub threads_per_job: usize,
+    /// Maximum queued jobs before back-pressure rejects.
+    pub queue_capacity: usize,
+    /// Dynamic batcher: max jobs per batch.
+    pub max_batch: usize,
+    /// Dynamic batcher: max wait before dispatching a partial batch (µs).
+    pub batch_timeout_us: u64,
+    /// Execution backend.
+    pub backend: Backend,
+    /// Segment length for cache-efficient merging (elements); 0 = off.
+    pub segment_len: usize,
+    /// Directory holding AOT artifacts.
+    pub artifacts_dir: String,
+}
+
+impl Default for MergeflowConfig {
+    fn default() -> Self {
+        Self {
+            workers: 4,
+            threads_per_job: 4,
+            queue_capacity: 1024,
+            max_batch: 32,
+            batch_timeout_us: 200,
+            backend: Backend::Native,
+            segment_len: 0,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl MergeflowConfig {
+    /// Build from a parsed raw config.
+    pub fn from_raw(raw: &RawConfig) -> Result<Self> {
+        let d = Self::default();
+        let cfg = Self {
+            workers: raw.get_usize("service.workers", d.workers)?,
+            threads_per_job: raw.get_usize("service.threads_per_job", d.threads_per_job)?,
+            queue_capacity: raw.get_usize("service.queue_capacity", d.queue_capacity)?,
+            max_batch: raw.get_usize("batcher.max_batch", d.max_batch)?,
+            batch_timeout_us: raw.get_usize("batcher.timeout_us", d.batch_timeout_us as usize)?
+                as u64,
+            backend: raw.get_str("service.backend", "native").parse()?,
+            segment_len: raw.get_usize("merge.segment_len", d.segment_len)?,
+            artifacts_dir: raw.get_str("service.artifacts_dir", &d.artifacts_dir),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a TOML file.
+    pub fn from_file(path: &std::path::Path) -> Result<Self> {
+        Self::from_raw(&RawConfig::from_file(path)?)
+    }
+
+    /// Check invariants.
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 {
+            return Err(Error::Config("service.workers must be >= 1".into()));
+        }
+        if self.threads_per_job == 0 {
+            return Err(Error::Config("service.threads_per_job must be >= 1".into()));
+        }
+        if self.queue_capacity == 0 {
+            return Err(Error::Config("service.queue_capacity must be >= 1".into()));
+        }
+        if self.max_batch == 0 {
+            return Err(Error::Config("batcher.max_batch must be >= 1".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# mergeflow sample config
+[service]
+workers = 8
+threads_per_job = 4
+backend = "auto"   # route by size
+artifacts_dir = "artifacts"
+
+[batcher]
+max_batch = 64
+timeout_us = 150
+
+[merge]
+segment_len = 4096
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let raw = RawConfig::parse(SAMPLE).unwrap();
+        assert_eq!(raw.get("service.workers"), Some("8"));
+        assert_eq!(raw.get("service.backend"), Some("auto"));
+        assert_eq!(raw.get("batcher.max_batch"), Some("64"));
+        let cfg = MergeflowConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.workers, 8);
+        assert_eq!(cfg.backend, Backend::Auto);
+        assert_eq!(cfg.segment_len, 4096);
+        assert_eq!(cfg.batch_timeout_us, 150);
+    }
+
+    #[test]
+    fn defaults_apply_when_missing() {
+        let cfg = MergeflowConfig::from_raw(&RawConfig::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.workers, MergeflowConfig::default().workers);
+        assert_eq!(cfg.backend, Backend::Native);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let raw = RawConfig::parse("[service]\nworkers = zero\n").unwrap();
+        assert!(MergeflowConfig::from_raw(&raw).is_err());
+        let raw = RawConfig::parse("[service]\nworkers = 0\n").unwrap();
+        assert!(MergeflowConfig::from_raw(&raw).is_err());
+        let raw = RawConfig::parse("[service]\nbackend = \"gpu\"\n").unwrap();
+        assert!(MergeflowConfig::from_raw(&raw).is_err());
+    }
+
+    #[test]
+    fn parse_errors_carry_line_numbers() {
+        let err = RawConfig::parse("key_without_value\n").unwrap_err();
+        assert!(err.to_string().contains("line 1"));
+        let err = RawConfig::parse("[]\n").unwrap_err();
+        assert!(err.to_string().contains("empty section"));
+    }
+
+    #[test]
+    fn comments_and_quotes() {
+        let raw = RawConfig::parse("name = \"a # not comment\" # real comment\n").unwrap();
+        assert_eq!(raw.get("name"), Some("a # not comment"));
+    }
+
+    #[test]
+    fn backend_parsing() {
+        assert_eq!("native".parse::<Backend>().unwrap(), Backend::Native);
+        assert_eq!("xla".parse::<Backend>().unwrap(), Backend::Xla);
+        assert!("tpu".parse::<Backend>().is_err());
+    }
+}

@@ -1,0 +1,137 @@
+//! Job types flowing through the coordinator.
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::time::Instant;
+
+/// What a client asks the service to do. Keys are `i32` (the paper's
+/// 32-bit integer workloads).
+#[derive(Debug, Clone)]
+pub enum JobKind {
+    /// Merge two sorted arrays.
+    Merge {
+        /// Sorted input A.
+        a: Vec<i32>,
+        /// Sorted input B.
+        b: Vec<i32>,
+    },
+    /// Sort one unsorted array.
+    Sort {
+        /// Input data.
+        data: Vec<i32>,
+    },
+    /// Compact several sorted runs into one (LSM-style k-way merge,
+    /// executed as a tree of pairwise Merge-Path merges).
+    Compact {
+        /// The sorted runs.
+        runs: Vec<Vec<i32>>,
+    },
+}
+
+impl JobKind {
+    /// Total number of input elements.
+    pub fn input_len(&self) -> usize {
+        match self {
+            JobKind::Merge { a, b } => a.len() + b.len(),
+            JobKind::Sort { data } => data.len(),
+            JobKind::Compact { runs } => runs.iter().map(|r| r.len()).sum(),
+        }
+    }
+
+    /// Validate sortedness preconditions (merge/compact inputs must be
+    /// sorted); returns a human-readable violation if any.
+    pub fn validate(&self) -> Result<(), String> {
+        let sorted = |v: &[i32]| v.windows(2).all(|w| w[0] <= w[1]);
+        match self {
+            JobKind::Merge { a, b } => {
+                if !sorted(a) {
+                    return Err("merge input A is not sorted".into());
+                }
+                if !sorted(b) {
+                    return Err("merge input B is not sorted".into());
+                }
+            }
+            JobKind::Compact { runs } => {
+                for (i, r) in runs.iter().enumerate() {
+                    if !sorted(r) {
+                        return Err(format!("compaction run {i} is not sorted"));
+                    }
+                }
+            }
+            JobKind::Sort { .. } => {}
+        }
+        Ok(())
+    }
+}
+
+/// An admitted job.
+#[derive(Debug)]
+pub struct Job {
+    /// Monotonic id.
+    pub id: u64,
+    /// Payload.
+    pub kind: JobKind,
+    /// Admission time (for queueing-latency metrics).
+    pub enqueued_at: Instant,
+    /// Completion channel.
+    pub reply: Sender<JobResult>,
+}
+
+/// Completed job.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    /// Job id.
+    pub id: u64,
+    /// Sorted output.
+    pub output: Vec<i32>,
+    /// Which backend executed it ("native", "native-segmented", "xla").
+    pub backend: &'static str,
+    /// End-to-end latency (ns, from admission).
+    pub latency_ns: u64,
+}
+
+/// Client-side handle to await a result.
+#[derive(Debug)]
+pub struct JobHandle {
+    /// Job id.
+    pub id: u64,
+    rx: Receiver<JobResult>,
+}
+
+impl JobHandle {
+    pub(crate) fn new(id: u64, rx: Receiver<JobResult>) -> Self {
+        Self { id, rx }
+    }
+
+    /// Block until the job completes.
+    pub fn wait(self) -> crate::Result<JobResult> {
+        self.rx
+            .recv()
+            .map_err(|_| crate::Error::Service(format!("job {} dropped by service", self.id)))
+    }
+
+    /// Non-blocking poll.
+    pub fn try_wait(&self) -> Option<JobResult> {
+        self.rx.try_recv().ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn input_len_sums() {
+        let j = JobKind::Merge { a: vec![1, 2], b: vec![3] };
+        assert_eq!(j.input_len(), 3);
+        let j = JobKind::Compact { runs: vec![vec![1], vec![2, 3], vec![]] };
+        assert_eq!(j.input_len(), 3);
+    }
+
+    #[test]
+    fn validation_catches_unsorted() {
+        assert!(JobKind::Merge { a: vec![2, 1], b: vec![] }.validate().is_err());
+        assert!(JobKind::Merge { a: vec![1, 2], b: vec![0, 5] }.validate().is_ok());
+        assert!(JobKind::Compact { runs: vec![vec![1, 0]] }.validate().is_err());
+        assert!(JobKind::Sort { data: vec![5, 1] }.validate().is_ok());
+    }
+}

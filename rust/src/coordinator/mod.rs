@@ -1,0 +1,20 @@
+//! The serving layer (L3): a merge/sort/compaction job service in the
+//! style of an inference-serving router — bounded admission queue,
+//! dynamic batcher, size-aware backend router (native Merge Path vs
+//! AOT XLA executable), persistent worker pool, and service metrics.
+//!
+//! The paper's contribution (Merge Path partitioning) is the *kernel*
+//! this service schedules: every merge job is executed with perfectly
+//! load-balanced segments across `threads_per_job` threads, and large
+//! jobs can use the cache-efficient segmented variant (§4.3) by
+//! setting `merge.segment_len`.
+
+pub mod job;
+pub mod queue;
+pub mod service;
+pub mod stats;
+
+pub use job::{Job, JobHandle, JobKind, JobResult};
+pub use queue::{BoundedQueue, PushError};
+pub use service::MergeService;
+pub use stats::ServiceStats;

@@ -1,0 +1,220 @@
+//! Bounded MPMC admission queue with back-pressure.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// Why a push was refused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PushError {
+    /// Queue at capacity (reject-mode push).
+    Full,
+    /// Queue closed for shutdown.
+    Closed,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded multi-producer multi-consumer queue.
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+impl<T> std::fmt::Debug for BoundedQueue<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("BoundedQueue")
+            .field("capacity", &self.capacity)
+            .field("len", &self.len())
+            .finish()
+    }
+}
+
+impl<T> BoundedQueue<T> {
+    /// Queue with the given capacity (≥ 1).
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1);
+        Self {
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Current length.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    /// Whether the queue is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Reject-mode push: fails fast when full (service back-pressure).
+    pub fn try_push(&self, item: T) -> Result<(), PushError> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(PushError::Closed);
+        }
+        if g.items.len() >= self.capacity {
+            return Err(PushError::Full);
+        }
+        g.items.push_back(item);
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking push: waits for space (or closure).
+    pub fn push(&self, item: T) -> Result<(), PushError> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(PushError::Closed);
+            }
+            if g.items.len() < self.capacity {
+                g.items.push_back(item);
+                drop(g);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            g = self.not_full.wait(g).unwrap();
+        }
+    }
+
+    /// Pop one item, waiting up to `timeout`. `None` on timeout or when
+    /// closed-and-drained.
+    pub fn pop_timeout(&self, timeout: Duration) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            let (guard, res) = self.not_empty.wait_timeout(g, timeout).unwrap();
+            g = guard;
+            if res.timed_out() {
+                // One last check before giving up.
+                return g.items.pop_front().inspect(|_| {
+                    self.not_full.notify_one();
+                });
+            }
+        }
+    }
+
+    /// Drain up to `max` items without blocking (batch assembly).
+    pub fn drain_up_to(&self, max: usize) -> Vec<T> {
+        let mut g = self.inner.lock().unwrap();
+        let take = g.items.len().min(max);
+        let out: Vec<T> = g.items.drain(..take).collect();
+        drop(g);
+        if !out.is_empty() {
+            self.not_full.notify_all();
+        }
+        out
+    }
+
+    /// Close the queue: pending items remain poppable, new pushes fail.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Whether `close` was called.
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order() {
+        let q = BoundedQueue::new(10);
+        for i in 0..5 {
+            q.try_push(i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(q.pop_timeout(Duration::from_millis(1)), Some(i));
+        }
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), None);
+    }
+
+    #[test]
+    fn try_push_rejects_when_full() {
+        let q = BoundedQueue::new(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert_eq!(q.try_push(3), Err(PushError::Full));
+        q.pop_timeout(Duration::from_millis(1));
+        q.try_push(3).unwrap();
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = BoundedQueue::new(4);
+        q.try_push(7).unwrap();
+        q.close();
+        assert_eq!(q.try_push(8), Err(PushError::Closed));
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), Some(7));
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), None);
+    }
+
+    #[test]
+    fn blocking_push_unblocks_on_pop() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.try_push(1).unwrap();
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.push(2));
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(q.pop_timeout(Duration::from_millis(100)), Some(1));
+        h.join().unwrap().unwrap();
+        assert_eq!(q.pop_timeout(Duration::from_millis(100)), Some(2));
+    }
+
+    #[test]
+    fn drain_up_to_takes_at_most_max() {
+        let q = BoundedQueue::new(10);
+        for i in 0..7 {
+            q.try_push(i).unwrap();
+        }
+        let batch = q.drain_up_to(4);
+        assert_eq!(batch, vec![0, 1, 2, 3]);
+        assert_eq!(q.len(), 3);
+        assert!(q.drain_up_to(0).is_empty());
+    }
+
+    #[test]
+    fn producer_consumer_threads() {
+        let q = Arc::new(BoundedQueue::new(8));
+        let total = 200;
+        let qp = Arc::clone(&q);
+        let producer = std::thread::spawn(move || {
+            for i in 0..total {
+                qp.push(i).unwrap();
+            }
+            qp.close();
+        });
+        let mut got = vec![];
+        while let Some(x) = q.pop_timeout(Duration::from_millis(200)) {
+            got.push(x);
+        }
+        producer.join().unwrap();
+        assert_eq!(got, (0..total).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,451 @@
+//! The coordinator service: admission → dynamic batching → routing →
+//! execution → reply.
+//!
+//! One dispatcher thread assembles batches from the admission queue
+//! (dispatch on `max_batch` or `batch_timeout_us`, whichever first) and
+//! hands jobs to the worker pool. The router sends a merge job to the
+//! XLA backend when an AOT artifact with the exact baked shape exists
+//! (`Backend::Xla`/`Auto`), to the segmented native path when
+//! `segment_len` is configured and the job is large, and to the plain
+//! native Merge Path otherwise.
+
+use super::job::{Job, JobHandle, JobKind, JobResult};
+use super::queue::{BoundedQueue, PushError};
+use super::stats::ServiceStats;
+use crate::config::{Backend, MergeflowConfig};
+use crate::exec::WorkerPool;
+use crate::mergepath::{
+    parallel_merge, parallel_merge_sort, segmented_parallel_merge, SegmentedConfig,
+};
+use crate::runtime::XlaExecutor;
+use crate::{Error, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Counting semaphore bounding in-flight (dispatched, not yet
+/// completed) jobs — this is what propagates back-pressure from slow
+/// workers to the admission queue.
+#[derive(Debug)]
+struct InFlight {
+    limit: usize,
+    count: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl InFlight {
+    fn new(limit: usize) -> Self {
+        Self { limit: limit.max(1), count: Mutex::new(0), cv: Condvar::new() }
+    }
+
+    fn acquire(&self) {
+        let mut c = self.count.lock().unwrap();
+        while *c >= self.limit {
+            c = self.cv.wait(c).unwrap();
+        }
+        *c += 1;
+    }
+
+    fn release(&self) {
+        let mut c = self.count.lock().unwrap();
+        *c -= 1;
+        self.cv.notify_one();
+    }
+}
+
+/// A running merge/sort service.
+pub struct MergeService {
+    cfg: MergeflowConfig,
+    queue: Arc<BoundedQueue<Job>>,
+    stats: Arc<ServiceStats>,
+    runtime: Option<Arc<XlaExecutor>>,
+    next_id: AtomicU64,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for MergeService {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MergeService")
+            .field("workers", &self.cfg.workers)
+            .field("backend", &self.cfg.backend)
+            .finish()
+    }
+}
+
+impl MergeService {
+    /// Start the service. If the configured backend wants XLA, the
+    /// artifact directory is opened now (fail fast); `Auto` degrades to
+    /// native silently when artifacts are missing.
+    pub fn start(cfg: MergeflowConfig) -> Result<Self> {
+        cfg.validate()?;
+        let runtime = match cfg.backend {
+            Backend::Native => None,
+            Backend::Xla => {
+                Some(XlaExecutor::start(std::path::Path::new(&cfg.artifacts_dir))?)
+            }
+            Backend::Auto => {
+                XlaExecutor::start(std::path::Path::new(&cfg.artifacts_dir)).ok()
+            }
+        };
+        let queue = Arc::new(BoundedQueue::<Job>::new(cfg.queue_capacity));
+        let stats = Arc::new(ServiceStats::new());
+        let pool = Arc::new(WorkerPool::new(cfg.workers));
+
+        let dispatcher = {
+            let queue = Arc::clone(&queue);
+            let stats = Arc::clone(&stats);
+            let cfg2 = cfg.clone();
+            let runtime = runtime.clone();
+            std::thread::Builder::new()
+                .name("mergeflow-dispatcher".into())
+                .spawn(move || dispatcher_loop(cfg2, queue, pool, runtime, stats))
+                .expect("spawn dispatcher")
+        };
+
+        Ok(Self {
+            cfg,
+            queue,
+            stats,
+            runtime,
+            next_id: AtomicU64::new(1),
+            dispatcher: Some(dispatcher),
+        })
+    }
+
+    /// Block until the XLA backend has compiled all artifacts (no-op /
+    /// `false` when no XLA backend is configured). Useful before
+    /// latency-sensitive load or in tests asserting the XLA route.
+    pub fn wait_xla_warm(&self, timeout: Duration) -> bool {
+        self.runtime
+            .as_ref()
+            .map_or(false, |rt| rt.wait_warm(timeout))
+    }
+
+    /// Service configuration.
+    pub fn config(&self) -> &MergeflowConfig {
+        &self.cfg
+    }
+
+    /// Live statistics.
+    pub fn stats(&self) -> &ServiceStats {
+        &self.stats
+    }
+
+    /// Submit a job; fails fast with back-pressure when the queue is
+    /// full or the input violates preconditions.
+    pub fn submit(&self, kind: JobKind) -> Result<JobHandle> {
+        if let Err(msg) = kind.validate() {
+            self.stats.rejected.inc();
+            return Err(Error::InvalidInput(msg));
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        let job = Job { id, kind, enqueued_at: Instant::now(), reply: tx };
+        match self.queue.try_push(job) {
+            Ok(()) => {
+                self.stats.submitted.inc();
+                Ok(JobHandle::new(id, rx))
+            }
+            Err(PushError::Full) => {
+                self.stats.rejected.inc();
+                Err(Error::Service("queue full (back-pressure)".into()))
+            }
+            Err(PushError::Closed) => {
+                self.stats.rejected.inc();
+                Err(Error::Service("service shut down".into()))
+            }
+        }
+    }
+
+    /// Submit and wait.
+    pub fn submit_blocking(&self, kind: JobKind) -> Result<JobResult> {
+        self.submit(kind)?.wait()
+    }
+
+    /// Drain and stop. Pending jobs are completed first.
+    pub fn shutdown(mut self) {
+        self.queue.close();
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MergeService {
+    fn drop(&mut self) {
+        self.queue.close();
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn dispatcher_loop(
+    cfg: MergeflowConfig,
+    queue: Arc<BoundedQueue<Job>>,
+    pool: Arc<WorkerPool>,
+    runtime: Option<Arc<XlaExecutor>>,
+    stats: Arc<ServiceStats>,
+) {
+    let timeout = Duration::from_micros(cfg.batch_timeout_us.max(1));
+    let in_flight = Arc::new(InFlight::new(cfg.workers * 2));
+    loop {
+        // Block for the first job of a batch.
+        let Some(first) = queue.pop_timeout(Duration::from_millis(50)) else {
+            if queue.is_closed() && queue.is_empty() {
+                return;
+            }
+            continue;
+        };
+        // Assemble the rest of the batch: wait at most `timeout` for
+        // stragglers, cap at max_batch.
+        let mut batch = vec![first];
+        let deadline = Instant::now() + timeout;
+        while batch.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match queue.pop_timeout(deadline - now) {
+                Some(j) => batch.push(j),
+                None => break,
+            }
+        }
+        stats.batches.inc();
+
+        // Execute the batch on the pool: jobs own their data, so they
+        // can be moved into 'static closures; a latch in run_scoped
+        // style is unnecessary (each job replies on its own channel).
+        // The in-flight semaphore keeps dispatch from outrunning the
+        // workers, so a full admission queue means the system really is
+        // saturated (back-pressure reaches the client).
+        for job in batch {
+            in_flight.acquire();
+            let cfg = cfg.clone();
+            let runtime = runtime.clone();
+            let stats = Arc::clone(&stats);
+            let in_flight2 = Arc::clone(&in_flight);
+            pool.submit(move || {
+                execute_job(&cfg, runtime.as_deref(), &stats, job);
+                in_flight2.release();
+            });
+        }
+    }
+}
+
+/// Run one job to completion and reply.
+fn execute_job(
+    cfg: &MergeflowConfig,
+    runtime: Option<&XlaExecutor>,
+    stats: &ServiceStats,
+    job: Job,
+) {
+    let wait_ns =
+        u64::try_from(job.enqueued_at.elapsed().as_nanos()).unwrap_or(u64::MAX);
+    let t0 = Instant::now();
+    let elements = job.kind.input_len() as u64;
+    let (output, backend) = match job.kind {
+        JobKind::Merge { a, b } => run_merge(cfg, runtime, a, b),
+        JobKind::Sort { mut data } => {
+            parallel_merge_sort(&mut data, cfg.threads_per_job);
+            (data, "native")
+        }
+        JobKind::Compact { runs } => (run_compaction(cfg, runs), "native"),
+    };
+    let latency_ns = wait_ns
+        + u64::try_from(t0.elapsed().as_nanos()).unwrap_or(u64::MAX);
+    stats.record_completion(backend, elements, latency_ns, wait_ns);
+    // Receiver may have been dropped (client gave up) — that's fine.
+    let _ = job.reply.send(JobResult { id: job.id, output, backend, latency_ns });
+}
+
+/// Route and run a merge.
+fn run_merge(
+    cfg: &MergeflowConfig,
+    runtime: Option<&XlaExecutor>,
+    a: Vec<i32>,
+    b: Vec<i32>,
+) -> (Vec<i32>, &'static str) {
+    // XLA route: exact-shape artifact required (XLA shapes are static).
+    if matches!(cfg.backend, Backend::Xla | Backend::Auto) {
+        if let Some(rt) = runtime {
+            // Route to XLA only when the executable is already warm —
+            // a cold compile (~1s) must never land on a job's latency.
+            if let Some(meta) = rt.find_for_sizes(a.len(), b.len()) {
+                if rt.is_compiled(&meta.name) {
+                    let name = meta.name.clone();
+                    match rt.merge(&name, a.clone(), b.clone()) {
+                        Ok(out) => return (out, "xla"),
+                        Err(e) => log::warn!("xla merge failed, falling back: {e}"),
+                    }
+                }
+            }
+            if cfg.backend == Backend::Xla {
+                // Explicit XLA mode with no fitting artifact: still
+                // serve (degrade to native) but tag it, so operators
+                // can see the misconfiguration in stats.
+                log::warn!(
+                    "no XLA artifact for sizes ({}, {}); falling back to native",
+                    a.len(),
+                    b.len()
+                );
+            }
+        }
+    }
+    let mut out = vec![0i32; a.len() + b.len()];
+    if cfg.segment_len > 0 && out.len() >= 2 * cfg.segment_len {
+        segmented_parallel_merge(
+            &a,
+            &b,
+            &mut out,
+            SegmentedConfig { segment_len: cfg.segment_len, threads: cfg.threads_per_job },
+        );
+        (out, "native-segmented")
+    } else {
+        parallel_merge(&a, &b, &mut out, cfg.threads_per_job);
+        (out, "native")
+    }
+}
+
+/// Tree compaction: k-way merge via the Merge-Path pairwise tree
+/// (`mergepath::kway`); small jobs use the sequential loser tree.
+fn run_compaction(cfg: &MergeflowConfig, mut runs: Vec<Vec<i32>>) -> Vec<i32> {
+    runs.retain(|r| !r.is_empty());
+    if runs.is_empty() {
+        return vec![];
+    }
+    let total: usize = runs.iter().map(|r| r.len()).sum();
+    if total < 4096 || cfg.threads_per_job == 1 {
+        // Small compactions: one sequential k-way pass beats log k
+        // fork-join rounds.
+        let refs: Vec<&[i32]> = runs.iter().map(|r| r.as_slice()).collect();
+        let mut out = vec![0i32; total];
+        crate::mergepath::kway::loser_tree_merge(&refs, &mut out);
+        return out;
+    }
+    crate::mergepath::kway::parallel_tree_merge(runs, cfg.threads_per_job, None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::workload::{gen_sorted_pair, gen_unsorted, WorkloadKind};
+
+    fn test_config() -> MergeflowConfig {
+        MergeflowConfig {
+            workers: 2,
+            threads_per_job: 2,
+            queue_capacity: 64,
+            max_batch: 8,
+            batch_timeout_us: 100,
+            backend: Backend::Native,
+            segment_len: 0,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+
+    #[test]
+    fn merge_job_end_to_end() {
+        let svc = MergeService::start(test_config()).unwrap();
+        let (a, b) = gen_sorted_pair(WorkloadKind::Uniform, 1000, 900, 1);
+        let mut expected: Vec<i32> = a.iter().chain(b.iter()).copied().collect();
+        expected.sort_unstable();
+        let res = svc.submit_blocking(JobKind::Merge { a, b }).unwrap();
+        assert_eq!(res.output, expected);
+        assert_eq!(res.backend, "native");
+        assert_eq!(svc.stats().completed.get(), 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn sort_job_end_to_end() {
+        let svc = MergeService::start(test_config()).unwrap();
+        let data = gen_unsorted(5000, 2);
+        let mut expected = data.clone();
+        expected.sort_unstable();
+        let res = svc.submit_blocking(JobKind::Sort { data }).unwrap();
+        assert_eq!(res.output, expected);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn compaction_job_merges_runs() {
+        let svc = MergeService::start(test_config()).unwrap();
+        let runs: Vec<Vec<i32>> = (0..5)
+            .map(|i| {
+                let (r, _) = gen_sorted_pair(WorkloadKind::Uniform, 200 + i * 13, 1, i as u64);
+                r
+            })
+            .collect();
+        let mut expected: Vec<i32> = runs.iter().flatten().copied().collect();
+        expected.sort_unstable();
+        let res = svc.submit_blocking(JobKind::Compact { runs }).unwrap();
+        assert_eq!(res.output, expected);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn unsorted_merge_rejected_at_admission() {
+        let svc = MergeService::start(test_config()).unwrap();
+        let err = svc
+            .submit(JobKind::Merge { a: vec![3, 1], b: vec![] })
+            .unwrap_err();
+        assert!(matches!(err, Error::InvalidInput(_)));
+        assert_eq!(svc.stats().rejected.get(), 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn segmented_route_for_large_jobs() {
+        let mut cfg = test_config();
+        cfg.segment_len = 256;
+        let svc = MergeService::start(cfg).unwrap();
+        let (a, b) = gen_sorted_pair(WorkloadKind::Uniform, 4000, 4000, 3);
+        let res = svc.submit_blocking(JobKind::Merge { a, b }).unwrap();
+        assert_eq!(res.backend, "native-segmented");
+        // Small job still takes the plain path.
+        let (a, b) = gen_sorted_pair(WorkloadKind::Uniform, 50, 50, 4);
+        let res = svc.submit_blocking(JobKind::Merge { a, b }).unwrap();
+        assert_eq!(res.backend, "native");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn many_concurrent_jobs() {
+        let svc = MergeService::start(test_config()).unwrap();
+        let handles: Vec<_> = (0..40)
+            .map(|i| {
+                let (a, b) =
+                    gen_sorted_pair(WorkloadKind::Uniform, 100 + i, 80 + i, i as u64);
+                svc.submit(JobKind::Merge { a, b }).unwrap()
+            })
+            .collect();
+        for h in handles {
+            let res = h.wait().unwrap();
+            assert!(res.output.windows(2).all(|w| w[0] <= w[1]));
+        }
+        assert_eq!(svc.stats().completed.get(), 40);
+        assert!(svc.stats().batches.get() >= 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn shutdown_completes_pending() {
+        let svc = MergeService::start(test_config()).unwrap();
+        let (a, b) = gen_sorted_pair(WorkloadKind::Uniform, 2000, 2000, 9);
+        let h = svc.submit(JobKind::Merge { a, b }).unwrap();
+        svc.shutdown(); // drains the queue first
+        assert!(h.wait().is_ok());
+    }
+
+    #[test]
+    fn empty_compaction() {
+        let svc = MergeService::start(test_config()).unwrap();
+        let res = svc
+            .submit_blocking(JobKind::Compact { runs: vec![vec![], vec![]] })
+            .unwrap();
+        assert!(res.output.is_empty());
+        svc.shutdown();
+    }
+}

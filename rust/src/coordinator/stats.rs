@@ -1,0 +1,90 @@
+//! Service-level metrics.
+
+use crate::metrics::{fmt_ns, Counter, Histogram};
+
+/// Counters + latency histogram for the running service.
+#[derive(Debug, Default)]
+pub struct ServiceStats {
+    /// Jobs admitted.
+    pub submitted: Counter,
+    /// Jobs completed.
+    pub completed: Counter,
+    /// Jobs rejected at admission (queue full / invalid input).
+    pub rejected: Counter,
+    /// Jobs executed on the native backend.
+    pub native_jobs: Counter,
+    /// Jobs executed on the segmented native backend.
+    pub segmented_jobs: Counter,
+    /// Jobs executed on the XLA backend.
+    pub xla_jobs: Counter,
+    /// Elements processed in total.
+    pub elements: Counter,
+    /// Batches dispatched.
+    pub batches: Counter,
+    /// End-to-end job latency (ns).
+    pub latency: Histogram,
+    /// Queue wait latency (ns).
+    pub queue_wait: Histogram,
+}
+
+impl ServiceStats {
+    /// New zeroed stats block.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a completed job.
+    pub fn record_completion(&self, backend: &str, elements: u64, latency_ns: u64, wait_ns: u64) {
+        self.completed.inc();
+        self.elements.add(elements);
+        self.latency.record(latency_ns.max(1));
+        self.queue_wait.record(wait_ns.max(1));
+        match backend {
+            "xla" => self.xla_jobs.inc(),
+            "native-segmented" => self.segmented_jobs.inc(),
+            _ => self.native_jobs.inc(),
+        }
+    }
+
+    /// Human-readable snapshot (the `serve` CLI's stats dump).
+    pub fn snapshot(&self) -> String {
+        format!(
+            "jobs: submitted={} completed={} rejected={} | backends: native={} segmented={} xla={} | \
+             batches={} elements={} | latency p50={} p95={} p99={} max={} | queue-wait p50={}",
+            self.submitted.get(),
+            self.completed.get(),
+            self.rejected.get(),
+            self.native_jobs.get(),
+            self.segmented_jobs.get(),
+            self.xla_jobs.get(),
+            self.batches.get(),
+            self.elements.get(),
+            fmt_ns(self.latency.quantile(0.5)),
+            fmt_ns(self.latency.quantile(0.95)),
+            fmt_ns(self.latency.quantile(0.99)),
+            fmt_ns(self.latency.max()),
+            fmt_ns(self.queue_wait.quantile(0.5)),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn completion_routing() {
+        let s = ServiceStats::new();
+        s.record_completion("native", 100, 1000, 10);
+        s.record_completion("xla", 200, 2000, 20);
+        s.record_completion("native-segmented", 300, 3000, 30);
+        assert_eq!(s.completed.get(), 3);
+        assert_eq!(s.native_jobs.get(), 1);
+        assert_eq!(s.xla_jobs.get(), 1);
+        assert_eq!(s.segmented_jobs.get(), 1);
+        assert_eq!(s.elements.get(), 600);
+        let snap = s.snapshot();
+        assert!(snap.contains("completed=3"));
+        assert!(snap.contains("xla=1"));
+    }
+}

@@ -1,0 +1,138 @@
+//! Sense-reversing centralized barrier.
+//!
+//! Algorithm 1 and Algorithm 3 of the paper end each parallel region
+//! with a `Barrier`. `std::sync::Barrier` exists, but the
+//! sense-reversing variant is the one whose cost the simulator models
+//! (one atomic RMW per participant per phase + a broadcast flip), so we
+//! implement it explicitly and expose phase counters for the metrics.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+/// A reusable sense-reversing barrier for a fixed number of parties.
+#[derive(Debug)]
+pub struct SenseBarrier {
+    parties: usize,
+    count: AtomicUsize,
+    sense: AtomicBool,
+    /// Completed phases (generations); useful for tests and metrics.
+    generations: AtomicUsize,
+}
+
+impl SenseBarrier {
+    /// Barrier for `parties` threads (must be ≥ 1).
+    pub fn new(parties: usize) -> Self {
+        assert!(parties > 0);
+        Self {
+            parties,
+            count: AtomicUsize::new(0),
+            sense: AtomicBool::new(false),
+            generations: AtomicUsize::new(0),
+        }
+    }
+
+    /// Number of participating threads.
+    pub fn parties(&self) -> usize {
+        self.parties
+    }
+
+    /// Completed generations so far.
+    pub fn generations(&self) -> usize {
+        self.generations.load(Ordering::Acquire)
+    }
+
+    /// Block until all `parties` threads have called `wait` for this
+    /// generation. Returns `true` for exactly one "leader" thread per
+    /// generation (the last arriver), mirroring
+    /// `std::sync::BarrierWaitResult::is_leader`.
+    pub fn wait(&self) -> bool {
+        let local_sense = !self.sense.load(Ordering::Acquire);
+        let arrived = self.count.fetch_add(1, Ordering::AcqRel) + 1;
+        if arrived == self.parties {
+            // Last arriver: reset and release everyone.
+            self.count.store(0, Ordering::Release);
+            self.generations.fetch_add(1, Ordering::AcqRel);
+            self.sense.store(local_sense, Ordering::Release);
+            true
+        } else {
+            // Spin with yield; parties are expected to arrive promptly in
+            // fork-join regions (and the host may be single-core).
+            let mut spins = 0u32;
+            while self.sense.load(Ordering::Acquire) != local_sense {
+                spins += 1;
+                if spins < 64 {
+                    std::hint::spin_loop();
+                } else {
+                    std::thread::yield_now();
+                }
+            }
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn single_party_never_blocks() {
+        let b = SenseBarrier::new(1);
+        for _ in 0..10 {
+            assert!(b.wait());
+        }
+        assert_eq!(b.generations(), 10);
+    }
+
+    #[test]
+    fn synchronizes_phases() {
+        const P: usize = 4;
+        const ROUNDS: usize = 25;
+        let barrier = Arc::new(SenseBarrier::new(P));
+        let counter = Arc::new(AtomicUsize::new(0));
+        let mut handles = vec![];
+        for _ in 0..P {
+            let barrier = Arc::clone(&barrier);
+            let counter = Arc::clone(&counter);
+            handles.push(std::thread::spawn(move || {
+                for round in 0..ROUNDS {
+                    counter.fetch_add(1, Ordering::SeqCst);
+                    barrier.wait();
+                    // After the barrier every thread must observe all P
+                    // increments of this round.
+                    assert!(counter.load(Ordering::SeqCst) >= (round + 1) * P);
+                    barrier.wait();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), P * ROUNDS);
+        assert_eq!(barrier.generations(), 2 * ROUNDS);
+    }
+
+    #[test]
+    fn exactly_one_leader_per_generation() {
+        const P: usize = 6;
+        let barrier = Arc::new(SenseBarrier::new(P));
+        let leaders = Arc::new(AtomicUsize::new(0));
+        let mut handles = vec![];
+        for _ in 0..P {
+            let barrier = Arc::clone(&barrier);
+            let leaders = Arc::clone(&leaders);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..10 {
+                    if barrier.wait() {
+                        leaders.fetch_add(1, Ordering::SeqCst);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(leaders.load(Ordering::SeqCst), 10);
+    }
+}

@@ -1,0 +1,145 @@
+//! PRAM-style execution substrate: a persistent worker pool, a
+//! sense-reversing barrier, and scoped fork-join helpers.
+//!
+//! The paper assumes CREW PRAM with OpenMP-style fork-join regions; this
+//! module provides the equivalent on `std::thread`. (rayon/tokio are not
+//! available in the offline build image — see DESIGN.md §2.)
+
+pub mod barrier;
+pub mod pool;
+
+pub use barrier::SenseBarrier;
+pub use pool::WorkerPool;
+
+/// Run `f(tid)` on `p` OS threads (fork-join), borrowing the caller's
+/// stack data. Thread 0 runs on the calling thread to save one spawn.
+///
+/// Panics in any worker propagate to the caller after all workers
+/// complete (no detached threads left behind).
+pub fn fork_join<F>(p: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    assert!(p > 0);
+    if p == 1 {
+        f(0);
+        return;
+    }
+    std::thread::scope(|s| {
+        let f = &f;
+        let handles: Vec<_> = (1..p)
+            .map(|tid| s.spawn(move || f(tid)))
+            .collect();
+        f(0);
+        for h in handles {
+            // Propagate worker panics (join returns Err on panic).
+            if let Err(e) = h.join() {
+                std::panic::resume_unwind(e);
+            }
+        }
+    });
+}
+
+/// Split `data` into `p` near-equal contiguous chunks and run
+/// `f(tid, chunk)` on `p` threads. Chunk `i` covers
+/// `[i·n/p, (i+1)·n/p)`, matching the partitioning convention used by
+/// [`crate::mergepath::partition::partition_merge_path`].
+pub fn parallel_chunks<T, F>(data: &mut [T], p: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(p > 0);
+    let n = data.len();
+    let mut rest = data;
+    let mut parts: Vec<(usize, &mut [T])> = Vec::with_capacity(p);
+    let mut start = 0usize;
+    for i in 0..p {
+        let end = (i + 1) * n / p;
+        let (head, tail) = rest.split_at_mut(end - start);
+        parts.push((i, head));
+        rest = tail;
+        start = end;
+    }
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut handles = Vec::with_capacity(p.saturating_sub(1));
+        let mut first: Option<(usize, &mut [T])> = None;
+        for (i, chunk) in parts {
+            if i == 0 {
+                first = Some((i, chunk));
+            } else {
+                handles.push(s.spawn(move || f(i, chunk)));
+            }
+        }
+        if let Some((i, chunk)) = first {
+            f(i, chunk);
+        }
+        for h in handles {
+            if let Err(e) = h.join() {
+                std::panic::resume_unwind(e);
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn fork_join_runs_all_tids() {
+        let hit = AtomicUsize::new(0);
+        fork_join(8, |tid| {
+            hit.fetch_or(1 << tid, Ordering::SeqCst);
+        });
+        assert_eq!(hit.load(Ordering::SeqCst), 0xFF);
+    }
+
+    #[test]
+    fn fork_join_single_thread() {
+        let hit = AtomicUsize::new(0);
+        fork_join(1, |tid| {
+            assert_eq!(tid, 0);
+            hit.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hit.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "worker boom")]
+    fn fork_join_propagates_panics() {
+        fork_join(4, |tid| {
+            if tid == 2 {
+                panic!("worker boom");
+            }
+        });
+    }
+
+    #[test]
+    fn parallel_chunks_disjoint_cover() {
+        let mut v = vec![0usize; 103];
+        parallel_chunks(&mut v, 7, |tid, chunk| {
+            for x in chunk.iter_mut() {
+                *x += tid + 1; // every cell written exactly once
+            }
+        });
+        // All cells written exactly once (no cell left 0, none doubled).
+        assert!(v.iter().all(|&x| (1..=7).contains(&x)));
+        // Sizes near-equal: each chunk is 103/7 = 14 or 15.
+        let mut counts = [0usize; 8];
+        for &x in &v {
+            counts[x] += 1;
+        }
+        for c in &counts[1..] {
+            assert!((14..=15).contains(c));
+        }
+    }
+
+    #[test]
+    fn parallel_chunks_empty() {
+        let mut v: Vec<u8> = vec![];
+        parallel_chunks(&mut v, 4, |_, chunk| assert!(chunk.is_empty()));
+    }
+}

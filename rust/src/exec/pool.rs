@@ -1,0 +1,235 @@
+//! Persistent worker pool.
+//!
+//! The coordinator ([`crate::coordinator`]) keeps long-lived workers so
+//! per-job latency does not pay thread-spawn cost, and the parallel
+//! merge/sort entry points accept a pool to amortize spawning across
+//! merge rounds (`*_with_pool` variants).
+//!
+//! Scoped (borrowing) tasks are executed with a completion latch: the
+//! submitting call does not return until every task of the batch has
+//! run, which is what makes the lifetime erasure sound. A panicking
+//! task poisons the pool and the panic is re-raised on the submitter.
+
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// Latch counting outstanding tasks of one `run_scoped` batch.
+struct Latch {
+    remaining: Mutex<usize>,
+    cv: Condvar,
+    panics: AtomicUsize,
+}
+
+impl Latch {
+    fn new(n: usize) -> Self {
+        Self {
+            remaining: Mutex::new(n),
+            cv: Condvar::new(),
+            panics: AtomicUsize::new(0),
+        }
+    }
+
+    fn count_down(&self, panicked: bool) {
+        if panicked {
+            self.panics.fetch_add(1, Ordering::SeqCst);
+        }
+        let mut rem = self.remaining.lock().unwrap();
+        *rem -= 1;
+        if *rem == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut rem = self.remaining.lock().unwrap();
+        while *rem > 0 {
+            rem = self.cv.wait(rem).unwrap();
+        }
+    }
+}
+
+struct Shared {
+    queue: Mutex<Option<Receiver<Task>>>, // receiver is moved out by workers
+}
+
+/// A fixed-size pool of OS threads executing submitted closures.
+pub struct WorkerPool {
+    sender: Option<Sender<Task>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    size: usize,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool").field("size", &self.size).finish()
+    }
+}
+
+impl WorkerPool {
+    /// Spawn a pool with `size` worker threads (≥ 1).
+    pub fn new(size: usize) -> Self {
+        assert!(size > 0);
+        let (tx, rx) = channel::<Task>();
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Some(rx)),
+        });
+        // A single shared receiver guarded by a mutex: workers take turns
+        // pulling tasks. Contention is negligible at our task granularity
+        // (tasks are whole merge segments, not elements).
+        let rx = shared.queue.lock().unwrap().take().unwrap();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::with_capacity(size);
+        for worker_id in 0..size {
+            let rx = Arc::clone(&rx);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("mergeflow-worker-{worker_id}"))
+                    .spawn(move || loop {
+                        let task = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match task {
+                            Ok(task) => task(),
+                            Err(_) => break, // channel closed: shut down
+                        }
+                    })
+                    .expect("failed to spawn worker thread"),
+            );
+        }
+        Self {
+            sender: Some(tx),
+            handles,
+            size,
+        }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Submit a `'static` fire-and-forget task.
+    pub fn submit(&self, task: impl FnOnce() + Send + 'static) {
+        self.sender
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(task))
+            .expect("worker channel closed");
+    }
+
+    /// Run `n` borrowed closures to completion on the pool (fork-join).
+    ///
+    /// Blocks until all `n` tasks finish; panics (re-raised here) if any
+    /// task panicked. Soundness of the lifetime erasure: tasks cannot
+    /// outlive this call because of the latch wait.
+    pub fn run_scoped<'env, F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Sync + 'env,
+    {
+        if n == 0 {
+            return;
+        }
+        let latch = Arc::new(Latch::new(n));
+        // Erase lifetimes: we guarantee `f` outlives all tasks by waiting
+        // on the latch before returning.
+        let f_ptr: &(dyn Fn(usize) + Sync) = &f;
+        let f_static: &'static (dyn Fn(usize) + Sync) =
+            unsafe { std::mem::transmute(f_ptr) };
+        for i in 0..n {
+            let latch = Arc::clone(&latch);
+            self.submit(move || {
+                let result =
+                    std::panic::catch_unwind(AssertUnwindSafe(|| f_static(i)));
+                latch.count_down(result.is_err());
+            });
+        }
+        latch.wait();
+        if latch.panics.load(Ordering::SeqCst) > 0 {
+            panic!("worker task panicked in run_scoped");
+        }
+    }
+
+    /// Gracefully shut the pool down, joining all workers.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.sender.take(); // close channel → workers exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn submit_runs_tasks() {
+        let pool = WorkerPool::new(3);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..32 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.shutdown();
+        assert_eq!(counter.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    fn run_scoped_borrows_stack_data() {
+        let pool = WorkerPool::new(4);
+        let data: Vec<usize> = (0..100).collect();
+        let sum = AtomicUsize::new(0);
+        pool.run_scoped(10, |i| {
+            let chunk = &data[i * 10..(i + 1) * 10];
+            sum.fetch_add(chunk.iter().sum::<usize>(), Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 4950);
+    }
+
+    #[test]
+    fn run_scoped_zero_tasks() {
+        let pool = WorkerPool::new(2);
+        pool.run_scoped(0, |_| unreachable!());
+    }
+
+    #[test]
+    #[should_panic(expected = "worker task panicked")]
+    fn run_scoped_propagates_panic() {
+        let pool = WorkerPool::new(2);
+        pool.run_scoped(4, |i| {
+            if i == 3 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn pool_reusable_across_batches() {
+        let pool = WorkerPool::new(2);
+        let counter = AtomicUsize::new(0);
+        for _ in 0..5 {
+            pool.run_scoped(8, |_| {
+                counter.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 40);
+    }
+}

@@ -1,0 +1,67 @@
+//! # mergeflow
+//!
+//! A production-oriented reproduction of **"Merge Path — A Visually
+//! Intuitive Approach to Parallel Merging"** (Green, Odeh, Birk, 2014).
+//!
+//! The crate provides, as a layered framework:
+//!
+//! - [`mergepath`] — the paper's core contribution: cross-diagonal
+//!   partitioning of the merge path (Alg 2 / Thm 14), lock-free perfectly
+//!   load-balanced parallel merge (Alg 1), the cache-efficient *Segmented
+//!   Parallel Merge* (Alg 3 / §4), and the parallel + cache-efficient
+//!   sorts built on them (§3, §4.4).
+//! - [`baselines`] — the comparison algorithms of §5: Shiloach–Vishkin,
+//!   Akl–Santoro, Deo–Sarkar, bitonic networks, and the (incorrect) naive
+//!   equal split.
+//! - [`exec`] — the PRAM-style execution substrate: persistent worker
+//!   pool, sense-reversing barrier, scoped parallel-for.
+//! - [`sim`] — deterministic machine simulators used to regenerate the
+//!   paper's evaluation on hardware we do not have: set-associative
+//!   cache + MESI-lite coherence (x86, Table 2) and the Plurality
+//!   HyperCore banked shared cache (§6.2), driven by real access traces
+//!   through a virtual-time engine.
+//! - [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
+//!   merge kernels (`artifacts/*.hlo.txt`), L1/L2 of the stack.
+//! - [`coordinator`] — the serving layer: merge/sort/compaction job
+//!   queue, dynamic batcher, backend router, worker pool, metrics.
+//! - [`bench`] — workload generators and the table/figure harness that
+//!   regenerates every table and figure of the paper's §6.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod baselines;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod exec;
+pub mod mergepath;
+pub mod metrics;
+pub mod rng;
+pub mod runtime;
+pub mod sim;
+pub mod testutil;
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Input arrays violated a documented precondition (e.g. unsorted).
+    #[error("invalid input: {0}")]
+    InvalidInput(String),
+    /// Configuration file / CLI errors.
+    #[error("config error: {0}")]
+    Config(String),
+    /// PJRT / XLA runtime errors.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    /// Coordinator service errors (queue closed, job rejected, ...).
+    #[error("service error: {0}")]
+    Service(String),
+    /// I/O errors (artifact loading, config files).
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

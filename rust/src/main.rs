@@ -1,0 +1,217 @@
+//! `mergeflow` binary — leader entrypoint / CLI.
+
+use mergeflow::bench::figures;
+use mergeflow::bench::harness::report_line;
+use mergeflow::bench::workload::{gen_sorted_pair, gen_unsorted, WorkloadKind};
+use mergeflow::bench::BenchTimer;
+use mergeflow::cli::{Cli, USAGE};
+use mergeflow::config::MergeflowConfig;
+use mergeflow::coordinator::{JobKind, MergeService};
+use mergeflow::mergepath::{
+    cache_efficient_sort, parallel_merge, parallel_merge_sort, segmented_parallel_merge,
+    CacheSortConfig, SegmentedConfig,
+};
+use mergeflow::metrics::{fmt_ns, fmt_throughput, Timer};
+use mergeflow::{Error, Result};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(args) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn run(args: Vec<String>) -> Result<()> {
+    let cli = Cli::parse(args)?;
+    match cli.command.as_str() {
+        "merge" => cmd_merge(&cli),
+        "sort" => cmd_sort(&cli),
+        "serve" => cmd_serve(&cli),
+        "figure" => cmd_figure(&cli),
+        "table" => cmd_table(&cli),
+        "probe" => {
+            figures::partition_probe(scale_of(&cli)).print();
+            Ok(())
+        }
+        "artifacts" => cmd_artifacts(&cli),
+        "" | "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => Err(Error::Config(format!(
+            "unknown command `{other}` (try `mergeflow help`)"
+        ))),
+    }
+}
+
+fn scale_of(cli: &Cli) -> usize {
+    cli.usize_flag("scale", figures::sim_scale()).unwrap_or(64).max(1)
+}
+
+fn cmd_merge(cli: &Cli) -> Result<()> {
+    let n = cli.size_flag("n", 1 << 20)?;
+    let threads = cli.usize_flag("threads", 4)?;
+    let seed = cli.usize_flag("seed", 42)? as u64;
+    let seg = cli.size_flag("segment-len", 0)?;
+    let kind = WorkloadKind::parse(&cli.flag("kind").unwrap_or("uniform").to_string())
+        .ok_or_else(|| Error::Config("unknown --kind".into()))?;
+    let (a, b) = gen_sorted_pair(kind, n / 2, n / 2, seed);
+    let mut out = vec![0i32; a.len() + b.len()];
+    let t = Timer::start();
+    if seg > 0 {
+        segmented_parallel_merge(
+            &a,
+            &b,
+            &mut out,
+            SegmentedConfig { segment_len: seg, threads },
+        );
+    } else {
+        parallel_merge(&a, &b, &mut out, threads);
+    }
+    let ns = t.elapsed_ns();
+    assert!(out.windows(2).all(|w| w[0] <= w[1]), "output not sorted");
+    println!(
+        "merged {} elements ({} workload) with {} threads{} in {} ({})",
+        out.len(),
+        kind.name(),
+        threads,
+        if seg > 0 { format!(", segment_len={seg}") } else { String::new() },
+        fmt_ns(ns),
+        fmt_throughput(out.len() as u64, ns)
+    );
+    Ok(())
+}
+
+fn cmd_sort(cli: &Cli) -> Result<()> {
+    let n = cli.size_flag("n", 1 << 20)?;
+    let threads = cli.usize_flag("threads", 4)?;
+    let seed = cli.usize_flag("seed", 42)? as u64;
+    let cache_elems = cli.size_flag("cache-elems", 0)?;
+    let mut data = gen_unsorted(n, seed);
+    let t = Timer::start();
+    if cache_elems > 0 {
+        cache_efficient_sort(&mut data, CacheSortConfig { cache_elems, threads });
+    } else {
+        parallel_merge_sort(&mut data, threads);
+    }
+    let ns = t.elapsed_ns();
+    assert!(data.windows(2).all(|w| w[0] <= w[1]), "output not sorted");
+    println!(
+        "sorted {} elements with {} threads{} in {} ({})",
+        n,
+        threads,
+        if cache_elems > 0 { format!(", cache-efficient C={cache_elems}") } else { String::new() },
+        fmt_ns(ns),
+        fmt_throughput(n as u64, ns)
+    );
+    Ok(())
+}
+
+fn cmd_serve(cli: &Cli) -> Result<()> {
+    let cfg = match cli.flag("config") {
+        Some(path) => MergeflowConfig::from_file(std::path::Path::new(path))?,
+        None => MergeflowConfig::default(),
+    };
+    let jobs = cli.usize_flag("jobs", 64)?;
+    let job_size = cli.size_flag("job-size", 64 << 10)?;
+    println!("starting service: {cfg:?}");
+    let svc = MergeService::start(cfg)?;
+    let timer = Timer::start();
+    let handles: Vec<_> = (0..jobs)
+        .map(|i| {
+            let (a, b) = gen_sorted_pair(
+                WorkloadKind::Uniform,
+                job_size / 2,
+                job_size / 2,
+                i as u64,
+            );
+            svc.submit(JobKind::Merge { a, b })
+        })
+        .collect::<Result<_>>()?;
+    for h in handles {
+        let r = h.wait()?;
+        debug_assert!(r.output.windows(2).all(|w| w[0] <= w[1]));
+    }
+    let ns = timer.elapsed_ns();
+    println!(
+        "served {jobs} merge jobs x {job_size} elements in {} ({})",
+        fmt_ns(ns),
+        fmt_throughput((jobs * job_size) as u64, ns)
+    );
+    println!("{}", svc.stats().snapshot());
+    svc.shutdown();
+    Ok(())
+}
+
+fn cmd_figure(cli: &Cli) -> Result<()> {
+    let scale = scale_of(cli);
+    let which = cli.positional.first().map(|s| s.as_str()).unwrap_or("");
+    match which {
+        "fig4" => figures::fig4(scale).print(),
+        "fig5" => figures::fig5(scale).iter().for_each(|t| t.print()),
+        "fig7" => figures::fig7(scale).iter().for_each(|t| t.print()),
+        "fig8" => figures::fig8(scale).print(),
+        "all" => {
+            figures::fig4(scale).print();
+            figures::fig5(scale).iter().for_each(|t| t.print());
+            figures::fig7(scale).iter().for_each(|t| t.print());
+            figures::fig8(scale).print();
+        }
+        other => {
+            return Err(Error::Config(format!(
+                "unknown figure `{other}` (fig4|fig5|fig7|fig8|all)"
+            )))
+        }
+    }
+    Ok(())
+}
+
+fn cmd_table(cli: &Cli) -> Result<()> {
+    let scale = scale_of(cli);
+    match cli.positional.first().map(|s| s.as_str()).unwrap_or("") {
+        "table1" => figures::table1(scale).print(),
+        "table2" => figures::table2().print(),
+        other => {
+            return Err(Error::Config(format!(
+                "unknown table `{other}` (table1|table2)"
+            )))
+        }
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(cli: &Cli) -> Result<()> {
+    let dir = cli.flag("dir").unwrap_or("artifacts");
+    let rt = mergeflow::runtime::XlaRuntime::open(std::path::Path::new(dir))?;
+    println!("platform: {}", rt.platform());
+    for m in rt.manifest().entries() {
+        println!(
+            "{:<24} {:<28} op={:<6} |A|={:<8} |B|={:<8} {}",
+            m.name, m.file, m.op, m.n_a, m.n_b, m.dtype
+        );
+    }
+    // Smoke-execute the largest artifact to prove the runtime path.
+    if let Some(meta) = rt.largest_merge().cloned() {
+        let exe = rt.merge_executable(&meta.name)?;
+        let a: Vec<i32> = (0..meta.n_a as i32).map(|x| 2 * x).collect();
+        let b: Vec<i32> = (0..meta.n_b as i32).map(|x| 2 * x + 1).collect();
+        let timer = BenchTimer::quick();
+        let m = timer.measure(|| {
+            let out = exe.merge(&a, &b).expect("merge artifact failed");
+            std::hint::black_box(&out);
+        });
+        println!(
+            "{}",
+            report_line(
+                &format!("xla merge {}", meta.name),
+                &m,
+                (meta.n_a + meta.n_b) as u64
+            )
+        );
+    }
+    Ok(())
+}

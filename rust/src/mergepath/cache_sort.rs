@@ -1,0 +1,173 @@
+//! Cache-efficient parallel sort (§4.4 of the paper).
+//!
+//! Three stages:
+//! 1. Partition the unsorted input into blocks of (a fraction of) the
+//!    cache size `C`.
+//! 2. Sort the blocks **one by one**, each with the full `p`-thread
+//!    parallel sort — sorting blocks one at a time keeps the cache
+//!    footprint to a single block (the paper explicitly rejects sorting
+//!    them concurrently for this reason).
+//! 3. Merge rounds: pairs of sorted blocks are merged with the
+//!    cache-efficient [`segmented_parallel_merge`] until one run remains.
+//!
+//! Time `O(N/p·log N + N/C·log p·log C)` — slightly more work than the
+//! plain parallel sort, traded for `Θ(N)` cache misses.
+
+use super::segmented::{segmented_parallel_merge, SegmentedConfig};
+use super::sort::parallel_merge_sort;
+
+/// Tuning for [`cache_efficient_sort`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheSortConfig {
+    /// Cache capacity in *elements* (the paper's `C`).
+    pub cache_elems: usize,
+    /// Threads used in every stage.
+    pub threads: usize,
+}
+
+impl CacheSortConfig {
+    /// Initial block size: the paper sizes stage-1 blocks as a fraction
+    /// of `C`; we use `C/2` so a block plus its sort scratch fits.
+    pub fn block_len(&self) -> usize {
+        (self.cache_elems / 2).max(1)
+    }
+
+    /// Merge-stage segment config per Prop. 15 (`L = C/3`).
+    pub fn merge_config(&self) -> SegmentedConfig {
+        SegmentedConfig::for_cache(self.cache_elems, self.threads)
+    }
+}
+
+/// Sort `data` in place with the cache-efficient parallel sort.
+pub fn cache_efficient_sort<T: Ord + Copy + Send + Sync>(
+    data: &mut [T],
+    cfg: CacheSortConfig,
+) {
+    assert!(cfg.threads > 0);
+    assert!(cfg.cache_elems > 0);
+    let n = data.len();
+    if n <= 1 {
+        return;
+    }
+    let block = cfg.block_len();
+
+    // Stage 1+2: sort cache-sized blocks one after another, each with
+    // all p threads (cache footprint = one block).
+    let mut starts: Vec<usize> = (0..n).step_by(block).collect();
+    starts.push(n);
+    for w in starts.windows(2) {
+        parallel_merge_sort(&mut data[w[0]..w[1]], cfg.threads);
+    }
+
+    // Stage 3: pairwise SPM merge rounds over a ping-pong buffer.
+    let mut bounds = starts;
+    if bounds.len() <= 2 {
+        return; // single block: already sorted
+    }
+    let mut buf: Vec<T> = Vec::with_capacity(n);
+    #[allow(clippy::uninit_vec)]
+    unsafe {
+        buf.set_len(n);
+    }
+    let mcfg = cfg.merge_config();
+    let mut src_is_data = true;
+    while bounds.len() > 2 {
+        let pairs = (bounds.len() - 1) / 2;
+        {
+            let (src, dst): (&[T], &mut [T]) = if src_is_data {
+                (&*data, &mut buf)
+            } else {
+                (&*buf, data)
+            };
+            for k in 0..pairs {
+                let (s0, s1, s2) = (bounds[2 * k], bounds[2 * k + 1], bounds[2 * k + 2]);
+                segmented_parallel_merge(
+                    &src[s0..s1],
+                    &src[s1..s2],
+                    &mut dst[s0..s2],
+                    mcfg,
+                );
+            }
+            if (bounds.len() - 1) % 2 == 1 {
+                let s = bounds[bounds.len() - 2];
+                let e = bounds[bounds.len() - 1];
+                dst[s..e].copy_from_slice(&src[s..e]);
+            }
+        }
+        let mut nb = Vec::with_capacity(bounds.len() / 2 + 1);
+        let mut i = 0;
+        while i < bounds.len() {
+            nb.push(bounds[i]);
+            i += 2;
+        }
+        if *nb.last().unwrap() != n {
+            nb.push(n);
+        }
+        bounds = nb;
+        src_is_data = !src_is_data;
+    }
+    if !src_is_data {
+        data.copy_from_slice(&buf);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn check(v: Vec<i64>, cache: usize, p: usize) {
+        let mut expected = v.clone();
+        expected.sort();
+        let mut got = v;
+        cache_efficient_sort(&mut got, CacheSortConfig { cache_elems: cache, threads: p });
+        assert_eq!(got, expected, "C={cache} p={p}");
+    }
+
+    #[test]
+    fn sorts_random_across_cache_sizes() {
+        let mut rng = Xoshiro256::seeded(0xCAC4E);
+        for _ in 0..8 {
+            let n = rng.range(0, 3000);
+            let v: Vec<i64> = (0..n).map(|_| rng.next_i32() as i64).collect();
+            for cache in [4, 64, 1024, 1 << 20] {
+                for p in [1, 4] {
+                    check(v.clone(), cache, p);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_cache_still_correct() {
+        let mut rng = Xoshiro256::seeded(0x71);
+        let v: Vec<i64> = (0..511).map(|_| rng.next_i32() as i64).collect();
+        check(v, 1, 2); // pathological: 1-element "cache"
+    }
+
+    #[test]
+    fn block_count_edge_cases() {
+        // Exactly one block, exactly two, odd number of blocks.
+        let mut rng = Xoshiro256::seeded(0x72);
+        let mk = |n: usize, rng: &mut Xoshiro256| -> Vec<i64> {
+            (0..n).map(|_| rng.next_i32() as i64).collect()
+        };
+        check(mk(100, &mut rng), 400, 4); // one block (block=200 > 100)
+        check(mk(200, &mut rng), 200, 4); // two blocks of 100
+        check(mk(500, &mut rng), 200, 4); // five blocks of 100
+    }
+
+    #[test]
+    fn config_derivation() {
+        let cfg = CacheSortConfig { cache_elems: 3000, threads: 8 };
+        assert_eq!(cfg.block_len(), 1500);
+        assert_eq!(cfg.merge_config().segment_len, 1000);
+        assert_eq!(cfg.merge_config().threads, 8);
+    }
+
+    #[test]
+    fn presorted_and_reverse() {
+        check((0..2500).collect(), 512, 4);
+        check((0..2500).rev().collect(), 512, 4);
+    }
+}

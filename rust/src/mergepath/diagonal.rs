@@ -1,0 +1,216 @@
+//! Intersection of the Merge Path with a cross diagonal (paper Alg 2).
+//!
+//! The *Merge Path* of sorted arrays `A`, `B` is the monotone staircase
+//! walk on the `|A|×|B|` grid taken by the two-finger merge: at point
+//! `(i, j)` move **down** (consume `A[i]`) if `A[i] <= B[j]`, else move
+//! **right** (consume `B[j]`). (The paper states the equivalent
+//! "`A[i] > B[j]` ⇒ right"; ties go to `A`, which makes the merge
+//! *stable* with `A`-priority.)
+//!
+//! Lemma 8: the `d`-th point of the path lies on the `d`-th cross
+//! diagonal `{(i, j) : i + j = d}`. Prop. 13 + Cor. 12: along a cross
+//! diagonal the binary merge-matrix entries `M[i,j] = (A[i] > B[j])` are
+//! monotone, so the path's crossing point is the unique `1 → 0`
+//! transition and can be found by **binary search** in
+//! `O(log min(|A|,|B|))` comparisons — without materialising either the
+//! matrix or the path (Thm 14).
+
+/// A point on the merge path expressed as *consumed element counts*:
+/// after this point, `a` elements of `A` and `b` elements of `B` have
+/// been emitted (`a + b` = output index = diagonal number).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PathPoint {
+    /// Number of `A` elements consumed (row coordinate on the grid).
+    pub a: usize,
+    /// Number of `B` elements consumed (column coordinate on the grid).
+    pub b: usize,
+}
+
+impl PathPoint {
+    /// The diagonal this point lies on (= its output index).
+    #[inline]
+    pub fn diagonal(&self) -> usize {
+        self.a + self.b
+    }
+}
+
+/// Find the intersection of the Merge Path of `a`/`b` with cross
+/// diagonal `diag` (Algorithm 2 of the paper, with the indexing bugs of
+/// the pseudocode fixed).
+///
+/// Returns the unique [`PathPoint`] `(ai, bi)` with `ai + bi == diag`
+/// such that the stable (`A`-priority) merge emits exactly the first
+/// `ai` elements of `a` and the first `bi` elements of `b` in its first
+/// `diag` outputs. Equivalently (Prop. 13): the `1→0` transition of the
+/// merge matrix along the diagonal.
+///
+/// # Preconditions
+/// `a` and `b` are sorted ascending; `diag <= a.len() + b.len()`.
+/// Violations are caught in debug builds; in release the result is
+/// unspecified but memory-safe.
+///
+/// # Complexity
+/// `O(log min(diag, a.len(), b.len()))` comparisons, no allocation.
+#[inline]
+pub fn diagonal_intersection<T: Ord>(a: &[T], b: &[T], diag: usize) -> PathPoint {
+    debug_assert!(diag <= a.len() + b.len(), "diagonal out of range");
+    // Feasible range of the A-coordinate on this diagonal.
+    let mut lo = diag.saturating_sub(b.len());
+    let mut hi = diag.min(a.len());
+    // Invariant: the answer `ai` lies in [lo, hi].
+    // Predicate (monotone in mid): `A[mid]` is among the first `diag`
+    // outputs ⟺ A[mid] <= B[diag - 1 - mid] (its output position is then
+    // at most diag-1). While true, the split point is to the right.
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        // Safe: mid < hi <= a.len(); and mid >= lo >= diag - b.len(), so
+        // diag - 1 - mid <= b.len() - 1. mid < diag because mid < hi <= diag
+        // and if mid == diag then lo == hi already.
+        if a[mid] <= b[diag - 1 - mid] {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    PathPoint { a: lo, b: diag - lo }
+}
+
+/// Reference O(diag) implementation: walk the merge path step by step.
+/// Used by tests and the simulator's ground-truth checks; also handy for
+/// very short diagonals where the branchy binary search does not pay off.
+pub fn diagonal_intersection_walk<T: Ord>(a: &[T], b: &[T], diag: usize) -> PathPoint {
+    debug_assert!(diag <= a.len() + b.len(), "diagonal out of range");
+    let (mut ai, mut bi) = (0usize, 0usize);
+    while ai + bi < diag {
+        if ai < a.len() && (bi >= b.len() || a[ai] <= b[bi]) {
+            ai += 1;
+        } else {
+            bi += 1;
+        }
+    }
+    PathPoint { a: ai, b: bi }
+}
+
+/// Validity check used in tests and debug assertions: `(ai, bi)` is a
+/// legal split of the stable A-priority merge at output index `ai+bi`.
+pub fn is_valid_split<T: Ord>(a: &[T], b: &[T], p: PathPoint) -> bool {
+    let PathPoint { a: ai, b: bi } = p;
+    if ai > a.len() || bi > b.len() {
+        return false;
+    }
+    // Every consumed A element precedes every remaining B element
+    // (ties allow the A element to go first):
+    let cond1 = ai == 0 || bi == b.len() || a[ai - 1] <= b[bi];
+    // Every consumed B element strictly precedes every remaining A
+    // element (on a tie A would have been consumed first):
+    let cond2 = bi == 0 || ai == a.len() || b[bi - 1] < a[ai];
+    cond1 && cond2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn check_all_diagonals(a: &[i64], b: &[i64]) {
+        for d in 0..=(a.len() + b.len()) {
+            let fast = diagonal_intersection(a, b, d);
+            let slow = diagonal_intersection_walk(a, b, d);
+            assert_eq!(fast, slow, "diag {d} on a={a:?} b={b:?}");
+            assert_eq!(fast.diagonal(), d);
+            assert!(is_valid_split(a, b, fast));
+        }
+    }
+
+    #[test]
+    fn paper_figure1_example() {
+        // Fig. 1 of the paper.
+        let a = [17, 29, 35, 73, 86, 90, 95, 99];
+        let b = [3, 5, 12, 22, 45, 64, 69, 82];
+        check_all_diagonals(&a, &b);
+        // Middle diagonal (d = 8): merge of the first 8 outputs is
+        // [3,5,12,17,22,29,35,45] → 3 from A, 5 from B.
+        let p = diagonal_intersection(&a[..], &b[..], 8);
+        assert_eq!((p.a, p.b), (3, 5));
+    }
+
+    #[test]
+    fn all_a_greater_than_b() {
+        // The case that breaks the naive equal split (paper §1).
+        let a = [100, 101, 102, 103];
+        let b = [1, 2, 3, 4];
+        check_all_diagonals(&a, &b);
+        let p = diagonal_intersection(&a[..], &b[..], 4);
+        assert_eq!((p.a, p.b), (0, 4));
+    }
+
+    #[test]
+    fn empty_arrays() {
+        let e: [i64; 0] = [];
+        let b = [1i64, 2, 3];
+        check_all_diagonals(&e, &b);
+        check_all_diagonals(&b, &e);
+        check_all_diagonals(&e, &e);
+    }
+
+    #[test]
+    fn unequal_lengths() {
+        let a = [5i64];
+        let b = [1i64, 2, 3, 4, 5, 6, 7, 8, 9];
+        check_all_diagonals(&a, &b);
+        check_all_diagonals(&b, &a);
+    }
+
+    #[test]
+    fn ties_go_to_a() {
+        let a = [5i64, 5, 5];
+        let b = [5i64, 5, 5];
+        // First 3 outputs must all come from A (stability).
+        let p = diagonal_intersection(&a[..], &b[..], 3);
+        assert_eq!((p.a, p.b), (3, 0));
+        check_all_diagonals(&a, &b);
+    }
+
+    #[test]
+    fn all_equal_long() {
+        let a = vec![7i64; 100];
+        let b = vec![7i64; 57];
+        check_all_diagonals(&a, &b);
+    }
+
+    #[test]
+    fn random_arrays_match_walk() {
+        let mut rng = Xoshiro256::seeded(0xC0FFEE);
+        for trial in 0..50 {
+            let la = rng.range(0, 40);
+            let lb = rng.range(0, 40);
+            let mut a: Vec<i64> = (0..la).map(|_| rng.below(20) as i64).collect();
+            let mut b: Vec<i64> = (0..lb).map(|_| rng.below(20) as i64).collect();
+            a.sort_unstable();
+            b.sort_unstable();
+            for d in 0..=(la + lb) {
+                let fast = diagonal_intersection(&a, &b, d);
+                let slow = diagonal_intersection_walk(&a, &b, d);
+                assert_eq!(fast, slow, "trial {trial} diag {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn extreme_diagonals() {
+        let a = [1i64, 3, 5];
+        let b = [2i64, 4, 6];
+        assert_eq!(diagonal_intersection(&a[..], &b[..], 0), PathPoint { a: 0, b: 0 });
+        assert_eq!(
+            diagonal_intersection(&a[..], &b[..], 6),
+            PathPoint { a: 3, b: 3 }
+        );
+    }
+
+    #[test]
+    fn i32_min_max_values() {
+        let a = [i64::MIN, 0, i64::MAX];
+        let b = [i64::MIN, i64::MAX];
+        check_all_diagonals(&a, &b);
+    }
+}

@@ -1,0 +1,35 @@
+//! The paper's core contribution: Merge Path partitioning and the
+//! parallel merge / sort algorithms built on it.
+//!
+//! Layout follows the paper:
+//!
+//! - [`diagonal`] — §2.2–2.4, Alg 2: intersection of the Merge Path with
+//!   a cross diagonal by binary search.
+//! - [`partition`] — Thm 14: `p`-way equisized partition of the path.
+//! - [`merge`] — sequential merge primitives (the per-segment kernels).
+//! - [`parallel`] — Alg 1: `ParallelMerge`.
+//! - [`segmented`] — Alg 3: `SegmentedParallelMerge` (cache-efficient, §4.3).
+//! - [`sort`] — §3: parallel merge sort.
+//! - [`cache_sort`] — §4.4: cache-efficient parallel sort.
+//! - [`kway`] — k-way merging (loser tree + parallel pairwise tree).
+//! - [`select`] — multiselection on the merge path ([10], §5).
+
+pub mod cache_sort;
+pub mod diagonal;
+pub mod kway;
+pub mod merge;
+pub mod parallel;
+pub mod partition;
+pub mod segmented;
+pub mod select;
+pub mod sort;
+
+pub use diagonal::{diagonal_intersection, PathPoint};
+pub use merge::{gallop_merge_into, hybrid_merge_bounded, merge_bounded, merge_into};
+pub use parallel::{parallel_merge, parallel_merge_with_pool};
+pub use partition::{partition_merge_path, MergeSegment};
+pub use segmented::{segmented_parallel_merge, SegmentedConfig};
+pub use sort::{parallel_merge_sort, parallel_merge_sort_with_pool};
+pub use cache_sort::{cache_efficient_sort, CacheSortConfig};
+pub use kway::{loser_tree_merge, parallel_tree_merge};
+pub use select::{multiselect, multiselect_independent};

@@ -1,0 +1,225 @@
+//! `ParallelMerge` — Algorithm 1 of the paper.
+//!
+//! Each of the `p` cores independently binary-searches its starting
+//! cross diagonal (Alg 2, [`super::diagonal`]), then merges exactly
+//! `N/p` output elements with the sequential kernel
+//! ([`super::merge::merge_bounded`]). No locks, no inter-core
+//! communication; cores write disjoint output ranges (Thm 5), so the
+//! only shared state is read-only input. Time `O(N/p + log N)`, work
+//! `O(N + p·log N)`.
+
+use super::diagonal::diagonal_intersection;
+use super::merge::hybrid_merge_bounded;
+use crate::exec::{fork_join, WorkerPool};
+
+/// Merge sorted `a` and `b` into `out` using `p` threads.
+///
+/// Stable with `A`-priority (equal keys from `a` precede those from
+/// `b`), identical to [`super::merge::merge_into`] output for every `p`.
+///
+/// # Panics
+/// If `out.len() != a.len() + b.len()` or `p == 0`.
+pub fn parallel_merge<T: Ord + Copy + Send + Sync>(
+    a: &[T],
+    b: &[T],
+    out: &mut [T],
+    p: usize,
+) {
+    assert_eq!(out.len(), a.len() + b.len());
+    assert!(p > 0);
+    let n = out.len();
+    if p == 1 || n < 2 * p {
+        // Degenerate sizes: sequential is both correct and faster.
+        hybrid_merge_bounded(a, b, out, n);
+        return;
+    }
+    let shared = SliceParts::new(out);
+    fork_join(p, |tid| {
+        merge_segment(a, b, &shared, n, p, tid);
+    });
+}
+
+/// Pool-based variant: identical semantics to [`parallel_merge`] but
+/// runs segments on a persistent [`WorkerPool`] (≥ `p` workers
+/// recommended) to amortize thread-spawn cost across merge rounds.
+pub fn parallel_merge_with_pool<T: Ord + Copy + Send + Sync>(
+    pool: &WorkerPool,
+    a: &[T],
+    b: &[T],
+    out: &mut [T],
+    p: usize,
+) {
+    assert_eq!(out.len(), a.len() + b.len());
+    assert!(p > 0);
+    let n = out.len();
+    if p == 1 || n < 2 * p {
+        hybrid_merge_bounded(a, b, out, n);
+        return;
+    }
+    let shared = SliceParts::new(out);
+    pool.run_scoped(p, |tid| {
+        merge_segment(a, b, &shared, n, p, tid);
+    });
+}
+
+/// One core's work in Algorithm 1: find the start point on diagonal
+/// `tid·N/p`, then emit `(tid+1)·N/p − tid·N/p` outputs.
+#[inline]
+fn merge_segment<T: Ord + Copy>(
+    a: &[T],
+    b: &[T],
+    out: &SliceParts<T>,
+    n: usize,
+    p: usize,
+    tid: usize,
+) {
+    let d_start = tid * n / p;
+    let d_end = (tid + 1) * n / p;
+    if d_start == d_end {
+        return;
+    }
+    let start = diagonal_intersection(a, b, d_start);
+    // SAFETY: output ranges [d_start, d_end) are disjoint across tids
+    // and tile [0, n) (Thm 9), so each thread gets an exclusive window.
+    let chunk = unsafe { out.slice_mut(d_start, d_end - d_start) };
+    hybrid_merge_bounded(&a[start.a..], &b[start.b..], chunk, d_end - d_start);
+}
+
+/// Shared-output helper: hands out *disjoint* mutable windows of one
+/// slice to multiple threads. Disjointness is the caller's obligation
+/// (guaranteed here by the equispaced-diagonal partition).
+pub(crate) struct SliceParts<T> {
+    ptr: *mut T,
+    len: usize,
+}
+
+unsafe impl<T: Send> Send for SliceParts<T> {}
+unsafe impl<T: Send> Sync for SliceParts<T> {}
+
+impl<T> SliceParts<T> {
+    pub(crate) fn new(slice: &mut [T]) -> Self {
+        Self {
+            ptr: slice.as_mut_ptr(),
+            len: slice.len(),
+        }
+    }
+
+    /// # Safety
+    /// Callers must ensure `[start, start+len)` windows never overlap
+    /// across concurrently live borrows.
+    #[inline]
+    pub(crate) unsafe fn slice_mut(&self, start: usize, len: usize) -> &mut [T] {
+        assert!(start + len <= self.len, "window out of bounds");
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn oracle(a: &[i64], b: &[i64]) -> Vec<i64> {
+        let mut v: Vec<i64> = a.iter().chain(b.iter()).copied().collect();
+        v.sort();
+        v
+    }
+
+    fn random_sorted(rng: &mut Xoshiro256, n: usize, universe: u64) -> Vec<i64> {
+        let mut v: Vec<i64> = (0..n).map(|_| rng.below(universe) as i64).collect();
+        v.sort_unstable();
+        v
+    }
+
+    #[test]
+    fn matches_sequential_for_all_p() {
+        let mut rng = Xoshiro256::seeded(0xF00D);
+        for _ in 0..20 {
+            let n_a = rng.range(0, 300);
+            let a = random_sorted(&mut rng, n_a, 100);
+            let n_b = rng.range(0, 300);
+            let b = random_sorted(&mut rng, n_b, 100);
+            let expected = oracle(&a, &b);
+            for p in [1, 2, 3, 4, 7, 8, 16, 33] {
+                let mut out = vec![0i64; a.len() + b.len()];
+                parallel_merge(&a, &b, &mut out, p);
+                assert_eq!(out, expected, "p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn paper_example() {
+        let a = [17i64, 29, 35, 73, 86, 90, 95, 99];
+        let b = [3i64, 5, 12, 22, 45, 64, 69, 82];
+        let mut out = [0i64; 16];
+        parallel_merge(&a, &b, &mut out, 4);
+        assert_eq!(
+            out,
+            [3, 5, 12, 17, 22, 29, 35, 45, 64, 69, 73, 82, 86, 90, 95, 99]
+        );
+    }
+
+    #[test]
+    fn adversarial_one_sided() {
+        // All of A greater than all of B — the naive-split killer (§1).
+        let a: Vec<i64> = (1000..2000).collect();
+        let b: Vec<i64> = (0..1000).collect();
+        let expected = oracle(&a, &b);
+        for p in [2, 8, 40] {
+            let mut out = vec![0i64; 2000];
+            parallel_merge(&a, &b, &mut out, p);
+            assert_eq!(out, expected);
+        }
+    }
+
+    #[test]
+    fn empty_and_tiny() {
+        let e: Vec<i64> = vec![];
+        let a = vec![1i64];
+        let mut out = vec![0i64; 1];
+        parallel_merge(&a, &e, &mut out, 8);
+        assert_eq!(out, vec![1]);
+        let mut out0: Vec<i64> = vec![];
+        parallel_merge(&e, &e, &mut out0, 8);
+        assert!(out0.is_empty());
+    }
+
+    #[test]
+    fn duplicates_heavy() {
+        let a = vec![42i64; 500];
+        let mut b = vec![42i64; 300];
+        b.extend(vec![43i64; 200]);
+        let expected = oracle(&a, &b);
+        let mut out = vec![0i64; 1000];
+        parallel_merge(&a, &b, &mut out, 12);
+        assert_eq!(out, expected);
+    }
+
+    #[test]
+    fn pool_variant_matches() {
+        let pool = WorkerPool::new(4);
+        let mut rng = Xoshiro256::seeded(0xBEEF);
+        for _ in 0..10 {
+            let n_a = rng.range(0, 300);
+            let a = random_sorted(&mut rng, n_a, 100);
+            let n_b = rng.range(0, 300);
+            let b = random_sorted(&mut rng, n_b, 100);
+            let expected = oracle(&a, &b);
+            let mut out = vec![0i64; a.len() + b.len()];
+            parallel_merge_with_pool(&pool, &a, &b, &mut out, 4);
+            assert_eq!(out, expected);
+        }
+    }
+
+    #[test]
+    fn unequal_lengths() {
+        let mut rng = Xoshiro256::seeded(0x5EED);
+        let a = random_sorted(&mut rng, 1000, 500);
+        let b = random_sorted(&mut rng, 13, 500);
+        let expected = oracle(&a, &b);
+        let mut out = vec![0i64; 1013];
+        parallel_merge(&a, &b, &mut out, 6);
+        assert_eq!(out, expected);
+    }
+}

@@ -1,0 +1,202 @@
+//! `p`-way equisized partition of the Merge Path (paper Thm 14).
+//!
+//! The output array of length `N = |A| + |B|` is cut at `p − 1`
+//! equispaced cross diagonals; each diagonal's intersection with the
+//! Merge Path is found independently by binary search
+//! ([`super::diagonal`]). The result is `p` [`MergeSegment`] descriptors
+//! — contiguous sub-slices of `A` and `B` whose merger lands in a
+//! contiguous, disjoint range of the output (Thm 5 / Cor. 6, 7) —
+//! enabling lock-free, perfectly balanced parallel merging.
+
+use super::diagonal::diagonal_intersection;
+
+/// One core's share of a merge: merge `a[a_range]` with `b[b_range]`
+/// into `out[out_range]`. Produced by [`partition_merge_path`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MergeSegment {
+    /// Sub-range of `A` feeding this segment.
+    pub a_range: std::ops::Range<usize>,
+    /// Sub-range of `B` feeding this segment.
+    pub b_range: std::ops::Range<usize>,
+    /// Output range; `out_range.len() == a_range.len() + b_range.len()`.
+    pub out_range: std::ops::Range<usize>,
+}
+
+impl MergeSegment {
+    /// Number of output elements this segment produces.
+    pub fn len(&self) -> usize {
+        self.out_range.len()
+    }
+
+    /// True iff the segment produces no output.
+    pub fn is_empty(&self) -> bool {
+        self.out_range.is_empty()
+    }
+}
+
+/// Partition the merge of `a` and `b` into `p` segments of (near-)equal
+/// output length. Segment `i` covers output indices
+/// `[i·N/p, (i+1)·N/p)` (computed with the balanced `(i·N)/p` split so
+/// lengths differ by at most one when `p ∤ N`).
+///
+/// Each of the `p − 1` interior split points costs one
+/// `O(log min(|A|,|B|))` binary search and they are mutually
+/// independent — Alg 1 computes them concurrently, one per core.
+///
+/// # Panics
+/// If `p == 0`.
+pub fn partition_merge_path<T: Ord>(a: &[T], b: &[T], p: usize) -> Vec<MergeSegment> {
+    assert!(p > 0, "need at least one partition");
+    let n = a.len() + b.len();
+    let mut segments = Vec::with_capacity(p);
+    let mut prev = diagonal_intersection(a, b, 0); // (0, 0)
+    let mut prev_d = 0usize;
+    for i in 1..=p {
+        let d = i * n / p;
+        let point = if i == p {
+            // Last diagonal is the full merge — no search needed.
+            super::diagonal::PathPoint { a: a.len(), b: b.len() }
+        } else {
+            diagonal_intersection(a, b, d)
+        };
+        segments.push(MergeSegment {
+            a_range: prev.a..point.a,
+            b_range: prev.b..point.b,
+            out_range: prev_d..d,
+        });
+        prev = point;
+        prev_d = d;
+    }
+    segments
+}
+
+/// The split diagonals used by [`partition_merge_path`], exposed so the
+/// simulator and benches can time the partition stage in isolation
+/// (the paper's §6.1 synchronization probe).
+pub fn split_diagonals(n: usize, p: usize) -> Vec<usize> {
+    (1..p).map(|i| i * n / p).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mergepath::merge::merge_into;
+    use crate::rng::Xoshiro256;
+
+    fn random_sorted(rng: &mut Xoshiro256, n: usize, universe: u64) -> Vec<i64> {
+        let mut v: Vec<i64> = (0..n).map(|_| rng.below(universe) as i64).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Check the three partition invariants of Thm 5/9/14.
+    fn check_partition(a: &[i64], b: &[i64], p: usize) {
+        let segs = partition_merge_path(a, b, p);
+        assert_eq!(segs.len(), p);
+        let n = a.len() + b.len();
+
+        // 1. Segments tile the output exactly and are equisized ±1.
+        let mut expect_start = 0usize;
+        for (i, s) in segs.iter().enumerate() {
+            assert_eq!(s.out_range.start, expect_start, "segment {i} not contiguous");
+            assert_eq!(s.out_range.len(), s.a_range.len() + s.b_range.len());
+            let lo = n / p;
+            let hi = n.div_ceil(p);
+            assert!(
+                (lo..=hi).contains(&s.out_range.len()),
+                "segment {i} len {} outside [{lo}, {hi}]",
+                s.out_range.len()
+            );
+            expect_start = s.out_range.end;
+        }
+        assert_eq!(expect_start, n);
+
+        // 2. A- and B- ranges tile their arrays.
+        assert_eq!(segs.first().unwrap().a_range.start, 0);
+        assert_eq!(segs.last().unwrap().a_range.end, a.len());
+        assert_eq!(segs.first().unwrap().b_range.start, 0);
+        assert_eq!(segs.last().unwrap().b_range.end, b.len());
+        for w in segs.windows(2) {
+            assert_eq!(w[0].a_range.end, w[1].a_range.start);
+            assert_eq!(w[0].b_range.end, w[1].b_range.start);
+        }
+
+        // 3. Merging each segment independently and concatenating equals
+        //    the sequential merge (Cor. 6).
+        let mut expected = vec![0i64; n];
+        merge_into(a, b, &mut expected);
+        let mut got = vec![0i64; n];
+        for s in &segs {
+            merge_into(
+                &a[s.a_range.clone()],
+                &b[s.b_range.clone()],
+                &mut got[s.out_range.clone()],
+            );
+        }
+        assert_eq!(got, expected);
+    }
+
+    #[test]
+    fn paper_example_partitions() {
+        let a = [17i64, 29, 35, 73, 86, 90, 95, 99];
+        let b = [3i64, 5, 12, 22, 45, 64, 69, 82];
+        for p in 1..=16 {
+            check_partition(&a, &b, p);
+        }
+    }
+
+    #[test]
+    fn random_partitions() {
+        let mut rng = Xoshiro256::seeded(0xAB);
+        for _ in 0..40 {
+            let n_a = rng.range(0, 200);
+            let a = random_sorted(&mut rng, n_a, 50);
+            let n_b = rng.range(0, 200);
+            let b = random_sorted(&mut rng, n_b, 50);
+            for p in [1, 2, 3, 5, 8, 13] {
+                check_partition(&a, &b, p);
+            }
+        }
+    }
+
+    #[test]
+    fn more_partitions_than_elements() {
+        let a = [1i64, 3];
+        let b = [2i64];
+        check_partition(&a, &b, 10);
+    }
+
+    #[test]
+    fn one_sided_inputs() {
+        let a: Vec<i64> = (0..100).collect();
+        let e: [i64; 0] = [];
+        check_partition(&a, &e, 7);
+        check_partition(&e, &a, 7);
+    }
+
+    #[test]
+    fn heavy_duplicates() {
+        let a = vec![5i64; 64];
+        let b = vec![5i64; 64];
+        for p in [2, 4, 7] {
+            check_partition(&a, &b, p);
+        }
+    }
+
+    #[test]
+    fn split_diagonals_equispaced() {
+        let d = split_diagonals(100, 4);
+        assert_eq!(d, vec![25, 50, 75]);
+        let d = split_diagonals(10, 3);
+        assert_eq!(d, vec![3, 6]);
+        assert!(split_diagonals(10, 1).is_empty());
+    }
+
+    #[test]
+    fn adversarial_all_a_less() {
+        let a: Vec<i64> = (0..128).collect();
+        let b: Vec<i64> = (1000..1128).collect();
+        check_partition(&a, &b, 8);
+        check_partition(&b, &a, 8);
+    }
+}

@@ -1,0 +1,151 @@
+//! Multiselection on the merge path — the [10] extension ("An Optimal
+//! Parallel Algorithm for Merging using Multiselection", §5 of the
+//! paper).
+//!
+//! Given sorted `A`, `B` and a set of output ranks, find all the
+//! corresponding path points. Beyond the independent-searches approach
+//! of Alg 1 (each rank costs `O(log min(|A|,|B|))`), sorted rank sets
+//! admit a divide-and-conquer that shares work between neighbouring
+//! ranks: select the middle rank first, then recurse into the two
+//! sub-rectangles of the merge matrix — total
+//! `O(Σ log)` with strictly shrinking search ranges, and a convenient
+//! EREW schedule (no two searches touch the same sub-rectangle).
+
+use super::diagonal::{diagonal_intersection, PathPoint};
+
+/// Find the path points for several ranks by independent binary
+/// searches (the Alg 1 / CREW approach).
+pub fn multiselect_independent<T: Ord>(a: &[T], b: &[T], ranks: &[usize]) -> Vec<PathPoint> {
+    ranks
+        .iter()
+        .map(|&r| diagonal_intersection(a, b, r))
+        .collect()
+}
+
+/// Divide-and-conquer multiselection for a **sorted** list of ranks:
+/// selects the median rank on the full arrays, then recurses left of
+/// it (on the consumed prefixes) and right of it (on the suffixes),
+/// so each recursion level's searches run over disjoint, shrinking
+/// windows — the EREW-friendly schedule of [10].
+///
+/// # Panics
+/// If `ranks` is not sorted or contains a rank `> |A| + |B|`.
+pub fn multiselect<T: Ord>(a: &[T], b: &[T], ranks: &[usize]) -> Vec<PathPoint> {
+    assert!(
+        ranks.windows(2).all(|w| w[0] <= w[1]),
+        "ranks must be sorted"
+    );
+    if let Some(&max) = ranks.last() {
+        assert!(max <= a.len() + b.len(), "rank out of range");
+    }
+    let mut out = vec![PathPoint { a: 0, b: 0 }; ranks.len()];
+    rec(a, b, ranks, 0, 0, &mut out);
+    out
+}
+
+/// Solve `ranks` (global) against the sub-arrays `a`, `b` whose global
+/// offsets are `(a0, b0)`; write results at the matching positions of
+/// `out` (parallel array to `ranks`).
+fn rec<T: Ord>(
+    a: &[T],
+    b: &[T],
+    ranks: &[usize],
+    a0: usize,
+    b0: usize,
+    out: &mut [PathPoint],
+) {
+    if ranks.is_empty() {
+        return;
+    }
+    let mid = ranks.len() / 2;
+    // Local rank inside this sub-rectangle.
+    let local = ranks[mid] - (a0 + b0);
+    let pt = diagonal_intersection(a, b, local);
+    out[mid] = PathPoint { a: a0 + pt.a, b: b0 + pt.b };
+    // Left ranks live in the consumed prefixes; right ranks in the
+    // suffixes. Equal ranks resolve identically, so strict split is
+    // fine (duplicates of ranks[mid] in the left half recurse onto the
+    // same point through a zero-length window).
+    let (left_ranks, rest) = ranks.split_at(mid);
+    let right_ranks = &rest[1..];
+    let (left_out, rest_out) = out.split_at_mut(mid);
+    let right_out = &mut rest_out[1..];
+    rec(&a[..pt.a], &b[..pt.b], left_ranks, a0, b0, left_out);
+    rec(&a[pt.a..], &b[pt.b..], right_ranks, a0 + pt.a, b0 + pt.b, right_out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn random_sorted(rng: &mut Xoshiro256, n: usize, universe: u64) -> Vec<i64> {
+        let mut v: Vec<i64> = (0..n).map(|_| rng.below(universe) as i64).collect();
+        v.sort_unstable();
+        v
+    }
+
+    #[test]
+    fn agrees_with_independent_searches() {
+        let mut rng = Xoshiro256::seeded(0x3E1);
+        for _ in 0..40 {
+            let n_a = rng.range(0, 150);
+            let a = random_sorted(&mut rng, n_a, 60);
+            let n_b = rng.range(0, 150);
+            let b = random_sorted(&mut rng, n_b, 60);
+            let n = a.len() + b.len();
+            let mut ranks: Vec<usize> =
+                (0..rng.range(0, 20)).map(|_| rng.range(0, n + 1)).collect();
+            ranks.sort_unstable();
+            let dc = multiselect(&a, &b, &ranks);
+            let ind = multiselect_independent(&a, &b, &ranks);
+            assert_eq!(dc, ind, "a={a:?} b={b:?} ranks={ranks:?}");
+        }
+    }
+
+    #[test]
+    fn duplicate_and_extreme_ranks() {
+        let a: Vec<i64> = (0..50).collect();
+        let b: Vec<i64> = (25..75).collect();
+        let ranks = vec![0, 0, 50, 50, 50, 100, 100];
+        let pts = multiselect(&a, &b, &ranks);
+        assert_eq!(pts[0], PathPoint { a: 0, b: 0 });
+        assert_eq!(pts[6], PathPoint { a: 50, b: 50 });
+        for (r, pt) in ranks.iter().zip(&pts) {
+            assert_eq!(pt.diagonal(), *r);
+        }
+    }
+
+    #[test]
+    fn empty_ranks_and_empty_arrays() {
+        let a: Vec<i64> = vec![1, 2, 3];
+        let e: Vec<i64> = vec![];
+        assert!(multiselect(&a, &e, &[]).is_empty());
+        let pts = multiselect(&e, &a, &[0, 2, 3]);
+        assert_eq!(pts[1], PathPoint { a: 0, b: 2 });
+    }
+
+    #[test]
+    #[should_panic(expected = "ranks must be sorted")]
+    fn unsorted_ranks_rejected() {
+        let a: Vec<i64> = vec![1];
+        multiselect(&a, &a, &[1, 0]);
+    }
+
+    #[test]
+    fn equispaced_ranks_match_partition() {
+        // multiselect at i·N/p equals partition_merge_path boundaries.
+        let mut rng = Xoshiro256::seeded(0x3E2);
+        let a = random_sorted(&mut rng, 200, 90);
+        let b = random_sorted(&mut rng, 170, 90);
+        let n = a.len() + b.len();
+        let p = 8;
+        let ranks: Vec<usize> = (1..p).map(|i| i * n / p).collect();
+        let pts = multiselect(&a, &b, &ranks);
+        let segs = crate::mergepath::partition_merge_path(&a, &b, p);
+        for (pt, seg) in pts.iter().zip(segs.iter().skip(1)) {
+            assert_eq!(pt.a, seg.a_range.start);
+            assert_eq!(pt.b, seg.b_range.start);
+        }
+    }
+}

@@ -1,0 +1,243 @@
+//! Parallel merge sort (§3 of the paper).
+//!
+//! Structure: each core sequentially sorts an `N/p` chunk, then
+//! `⌈log₂ p⌉` rounds of merging follow. While more than `p` merge pairs
+//! remain the pairs themselves run in parallel (each merge sequential);
+//! once pairs are scarce every merge runs as a Merge-Path
+//! [`parallel_merge`](super::parallel::parallel_merge) across all `p`
+//! cores — this is exactly the regime the paper motivates (§1: "the
+//! early rounds are trivially parallelizable … no longer the case in
+//! later rounds").
+//!
+//! Time `O(N/p·log N + log p·log N)`.
+
+use super::parallel::{parallel_merge, SliceParts};
+use crate::exec::{fork_join, WorkerPool};
+
+/// Sort `data` in place (stable) using `p` threads.
+pub fn parallel_merge_sort<T: Ord + Copy + Send + Sync>(data: &mut [T], p: usize) {
+    assert!(p > 0);
+    let n = data.len();
+    if n <= 1 {
+        return;
+    }
+    if p == 1 || n < 4 * p {
+        data.sort();
+        return;
+    }
+    let mut buf: Vec<T> = Vec::with_capacity(n);
+    // SAFETY: fully overwritten before any read (ping-pong buffer).
+    #[allow(clippy::uninit_vec)]
+    unsafe {
+        buf.set_len(n);
+    }
+    sort_rounds(data, &mut buf, p, None);
+}
+
+/// Pool variant of [`parallel_merge_sort`].
+pub fn parallel_merge_sort_with_pool<T: Ord + Copy + Send + Sync>(
+    pool: &WorkerPool,
+    data: &mut [T],
+    p: usize,
+) {
+    assert!(p > 0);
+    let n = data.len();
+    if n <= 1 {
+        return;
+    }
+    if p == 1 || n < 4 * p {
+        data.sort();
+        return;
+    }
+    let mut buf: Vec<T> = Vec::with_capacity(n);
+    #[allow(clippy::uninit_vec)]
+    unsafe {
+        buf.set_len(n);
+    }
+    sort_rounds(data, &mut buf, p, Some(pool));
+}
+
+/// Chunk boundaries `i·n/p` used for the base sorting stage.
+fn boundaries(n: usize, parts: usize) -> Vec<usize> {
+    (0..=parts).map(|i| i * n / parts).collect()
+}
+
+fn sort_rounds<T: Ord + Copy + Send + Sync>(
+    data: &mut [T],
+    buf: &mut [T],
+    p: usize,
+    pool: Option<&WorkerPool>,
+) {
+    let n = data.len();
+    // Round up the leaf count to a power of two so the merge tree is a
+    // clean binary tree; empty leaves cost nothing.
+    let leaves = p.next_power_of_two();
+    let mut bounds = boundaries(n, leaves);
+
+    // Stage 1: sort each leaf chunk, chunks in parallel (p at a time).
+    {
+        let shared = SliceParts::new(data);
+        let bounds_ref = &bounds;
+        let body = |tid: usize| {
+            // Leaf i handled by thread tid = i % p in a strided loop.
+            let mut i = tid;
+            while i < leaves {
+                let (s, e) = (bounds_ref[i], bounds_ref[i + 1]);
+                if e > s {
+                    // SAFETY: leaf ranges are disjoint.
+                    let chunk = unsafe { shared.slice_mut(s, e - s) };
+                    chunk.sort();
+                }
+                i += p;
+            }
+        };
+        match pool {
+            Some(pl) => pl.run_scoped(p, body),
+            None => fork_join(p, body),
+        }
+    }
+
+    // Stage 2: merge rounds over the ping-pong buffers.
+    let mut src_is_data = true;
+    while bounds.len() > 2 {
+        let pairs = (bounds.len() - 1) / 2;
+        let (src, dst): (&mut [T], &mut [T]) = if src_is_data {
+            (data, &mut *buf)
+        } else {
+            (&mut *buf, data)
+        };
+        let src = &*src; // merges read src, write dst
+        if pairs >= p {
+            // Many pairs: one (sequential) merge per task, p at a time.
+            let shared = SliceParts::new(dst);
+            let bounds_ref = &bounds;
+            let body = |tid: usize| {
+                let mut k = tid;
+                while k < pairs {
+                    let (s0, s1, s2) =
+                        (bounds_ref[2 * k], bounds_ref[2 * k + 1], bounds_ref[2 * k + 2]);
+                    // SAFETY: output ranges [s0, s2) disjoint across pairs.
+                    let out = unsafe { shared.slice_mut(s0, s2 - s0) };
+                    super::merge::hybrid_merge_bounded(
+                        &src[s0..s1],
+                        &src[s1..s2],
+                        out,
+                        s2 - s0,
+                    );
+                    k += p;
+                }
+            };
+            match pool {
+                Some(pl) => pl.run_scoped(p, body),
+                None => fork_join(p, body),
+            }
+        } else {
+            // Few pairs: each merge is itself a p-way Merge-Path merge.
+            for k in 0..pairs {
+                let (s0, s1, s2) = (bounds[2 * k], bounds[2 * k + 1], bounds[2 * k + 2]);
+                let out = &mut dst[s0..s2];
+                match pool {
+                    Some(pl) => super::parallel::parallel_merge_with_pool(
+                        pl,
+                        &src[s0..s1],
+                        &src[s1..s2],
+                        out,
+                        p,
+                    ),
+                    None => parallel_merge(&src[s0..s1], &src[s1..s2], out, p),
+                }
+            }
+        }
+        // Odd trailing chunk (only possible while bounds count is odd):
+        if (bounds.len() - 1) % 2 == 1 {
+            let s = bounds[bounds.len() - 2];
+            let e = bounds[bounds.len() - 1];
+            dst[s..e].copy_from_slice(&src[s..e]);
+        }
+        // Collapse bounds: keep every second boundary.
+        let mut nb = Vec::with_capacity(bounds.len() / 2 + 1);
+        let mut i = 0;
+        while i < bounds.len() {
+            nb.push(bounds[i]);
+            i += 2;
+        }
+        if *nb.last().unwrap() != n {
+            nb.push(n);
+        }
+        bounds = nb;
+        src_is_data = !src_is_data;
+    }
+
+    if !src_is_data {
+        // Result currently lives in buf; copy back.
+        data.copy_from_slice(buf);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn check(v: Vec<i64>, p: usize) {
+        let mut expected = v.clone();
+        expected.sort();
+        let mut got = v;
+        parallel_merge_sort(&mut got, p);
+        assert_eq!(got, expected, "p={p}");
+    }
+
+    #[test]
+    fn sorts_random_inputs_all_p() {
+        let mut rng = Xoshiro256::seeded(0x5047);
+        for _ in 0..10 {
+            let n = rng.range(0, 2000);
+            let v: Vec<i64> = (0..n).map(|_| rng.next_i32() as i64).collect();
+            for p in [1, 2, 3, 4, 8, 13] {
+                check(v.clone(), p);
+            }
+        }
+    }
+
+    #[test]
+    fn sorts_edge_shapes() {
+        check(vec![], 4);
+        check(vec![1], 4);
+        check(vec![2, 1], 4);
+        check((0..100).rev().collect(), 8); // descending
+        check((0..100).collect(), 8); // ascending
+        check(vec![5; 1000], 8); // constant
+    }
+
+    #[test]
+    fn sorts_sawtooth_and_organpipe() {
+        let saw: Vec<i64> = (0..997).map(|i| (i % 13) as i64).collect();
+        check(saw, 6);
+        let organ: Vec<i64> = (0..500).chain((0..500).rev()).map(|x| x as i64).collect();
+        check(organ, 6);
+    }
+
+    #[test]
+    fn pool_variant_matches() {
+        let pool = WorkerPool::new(4);
+        let mut rng = Xoshiro256::seeded(0x7001);
+        for _ in 0..5 {
+            let n = rng.range(100, 3000);
+            let v: Vec<i64> = (0..n).map(|_| rng.next_i32() as i64).collect();
+            let mut expected = v.clone();
+            expected.sort();
+            let mut got = v;
+            parallel_merge_sort_with_pool(&pool, &mut got, 4);
+            assert_eq!(got, expected);
+        }
+    }
+
+    #[test]
+    fn non_power_of_two_threads() {
+        let mut rng = Xoshiro256::seeded(0x99);
+        let v: Vec<i64> = (0..5000).map(|_| rng.next_i32() as i64).collect();
+        for p in [3, 5, 6, 7, 12, 40] {
+            check(v.clone(), p);
+        }
+    }
+}

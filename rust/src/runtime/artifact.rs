@@ -1,0 +1,117 @@
+//! Artifact manifest: the contract between `python/compile/aot.py`
+//! (writer) and the rust runtime (reader).
+//!
+//! `artifacts/manifest.txt` is a line-oriented text file (no serde in
+//! the offline image):
+//!
+//! ```text
+//! # name  file  op  n_a  n_b  dtype
+//! merge_4096x4096  merge_4096x4096.hlo.txt  merge  4096  4096  i32
+//! ```
+
+use crate::{Error, Result};
+use std::path::Path;
+
+/// One artifact entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactMeta {
+    /// Unique name (cache key).
+    pub name: String,
+    /// File name inside the artifact directory.
+    pub file: String,
+    /// Operation kind: currently `merge` (sorted-merge of two arrays)
+    /// or `sort` (full sort of one array).
+    pub op: String,
+    /// First input length.
+    pub n_a: usize,
+    /// Second input length (0 for single-input ops).
+    pub n_b: usize,
+    /// Element dtype (only `i32` today).
+    pub dtype: String,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactManifest {
+    entries: Vec<ArtifactMeta>,
+}
+
+impl ArtifactManifest {
+    /// Parse manifest text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut entries = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() != 6 {
+                return Err(Error::Runtime(format!(
+                    "manifest line {}: expected 6 fields, got {}",
+                    lineno + 1,
+                    parts.len()
+                )));
+            }
+            let parse_n = |s: &str| -> Result<usize> {
+                s.parse()
+                    .map_err(|_| Error::Runtime(format!("manifest line {}: bad size `{s}`", lineno + 1)))
+            };
+            entries.push(ArtifactMeta {
+                name: parts[0].to_string(),
+                file: parts[1].to_string(),
+                op: parts[2].to_string(),
+                n_a: parse_n(parts[3])?,
+                n_b: parse_n(parts[4])?,
+                dtype: parts[5].to_string(),
+            });
+        }
+        Ok(Self { entries })
+    }
+
+    /// Load from file.
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// All entries.
+    pub fn entries(&self) -> &[ArtifactMeta] {
+        &self.entries
+    }
+
+    /// Lookup by name.
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        let text = "# comment\n\nmerge_4k merge_4k.hlo.txt merge 4096 4096 i32\nsort_8k sort_8k.hlo.txt sort 8192 0 i32\n";
+        let m = ArtifactManifest::parse(text).unwrap();
+        assert_eq!(m.entries().len(), 2);
+        let e = m.get("merge_4k").unwrap();
+        assert_eq!(e.n_a, 4096);
+        assert_eq!(e.op, "merge");
+        assert_eq!(m.get("sort_8k").unwrap().n_b, 0);
+        assert!(m.get("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(ArtifactManifest::parse("just three fields\n").is_err());
+        assert!(
+            ArtifactManifest::parse("n f merge not_a_number 0 i32\n").is_err()
+        );
+    }
+
+    #[test]
+    fn empty_manifest_ok() {
+        let m = ArtifactManifest::parse("# empty\n").unwrap();
+        assert!(m.entries().is_empty());
+    }
+}

@@ -1,0 +1,271 @@
+//! Thread-confined XLA executor.
+//!
+//! The `xla` crate's PJRT client is `!Send` (`Rc` internals), so the
+//! coordinator cannot share an [`super::XlaRuntime`] across its worker
+//! threads. Instead, one dedicated executor thread owns the runtime
+//! and serves merge requests over a channel; the [`XlaExecutor`]
+//! handle is `Send + Sync` and cheap to clone. This also matches how
+//! the CPU PJRT client behaves best (serialized dispatch).
+
+use super::artifact::{ArtifactManifest, ArtifactMeta};
+use crate::{Error, Result};
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+enum Req {
+    Merge {
+        name: String,
+        a: Vec<i32>,
+        b: Vec<i32>,
+        reply: Sender<Result<Vec<i32>>>,
+    },
+    Shutdown,
+}
+
+/// Send+Sync handle to the executor thread.
+pub struct XlaExecutor {
+    tx: Mutex<Sender<Req>>,
+    manifest: ArtifactManifest,
+    join: Mutex<Option<std::thread::JoinHandle<()>>>,
+    /// Names whose PJRT compilation has completed. The coordinator's
+    /// router only offloads to XLA when the artifact is already warm,
+    /// so background warmup never blocks the serving path (§Perf L3).
+    compiled: Arc<(Mutex<HashSet<String>>, Condvar)>,
+}
+
+impl std::fmt::Debug for XlaExecutor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("XlaExecutor")
+            .field("artifacts", &self.manifest.entries().len())
+            .finish()
+    }
+}
+
+impl XlaExecutor {
+    /// Start the executor over an artifact directory. Fails if the
+    /// manifest is missing or the PJRT client cannot start.
+    pub fn start(dir: &Path) -> Result<Arc<Self>> {
+        // Parse the manifest on the caller thread (pure file I/O) so
+        // `find_for_sizes` never needs a round-trip.
+        let manifest = ArtifactManifest::load(&dir.join("manifest.txt"))?;
+        let (tx, rx) = channel::<Req>();
+        let dir: PathBuf = dir.to_path_buf();
+        let compiled: Arc<(Mutex<HashSet<String>>, Condvar)> =
+            Arc::new((Mutex::new(HashSet::new()), Condvar::new()));
+        let compiled_thread = Arc::clone(&compiled);
+        // Runtime construction happens on the executor thread; report
+        // startup failure back through a one-shot channel.
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("mergeflow-xla".into())
+            .spawn(move || {
+                let mark_compiled = |name: &str| {
+                    let (set, cv) = &*compiled_thread;
+                    set.lock().unwrap().insert(name.to_string());
+                    cv.notify_all();
+                };
+                let runtime = match super::XlaRuntime::open(&dir) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                // Warm the compile cache eagerly, but *between* requests:
+                // PJRT compilation of a Pallas-lowered module takes ~1s,
+                // which must land neither on a job's latency nor block
+                // jobs queued behind warmup — compile one artifact, then
+                // drain any pending requests, repeat.
+                let mut warm_queue: Vec<String> = runtime
+                    .manifest()
+                    .entries()
+                    .iter()
+                    .filter(|m| m.op == "merge")
+                    .map(|m| m.name.clone())
+                    .collect();
+                loop {
+                    // Serve everything pending first.
+                    loop {
+                        let req = if warm_queue.is_empty() {
+                            // Fully warm: block on the channel.
+                            match rx.recv() {
+                                Ok(r) => r,
+                                Err(_) => return,
+                            }
+                        } else {
+                            match rx.try_recv() {
+                                Ok(r) => r,
+                                Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                                Err(std::sync::mpsc::TryRecvError::Disconnected) => return,
+                            }
+                        };
+                        match req {
+                            Req::Merge { name, a, b, reply } => {
+                                let result = runtime
+                                    .merge_executable(&name)
+                                    .and_then(|exe| exe.merge(&a, &b));
+                                if result.is_ok() {
+                                    mark_compiled(&name);
+                                }
+                                let _ = reply.send(result);
+                            }
+                            Req::Shutdown => return,
+                        }
+                    }
+                    // One warmup compile, then loop back to the queue.
+                    if let Some(name) = warm_queue.pop() {
+                        match runtime.merge_executable(&name) {
+                            Ok(_) => mark_compiled(&name),
+                            Err(e) => log::warn!("warmup compile {name} failed: {e}"),
+                        }
+                    }
+                }
+            })
+            .map_err(|e| Error::Runtime(format!("spawn xla thread: {e}")))?;
+        ready_rx
+            .recv()
+            .map_err(|_| Error::Runtime("xla executor died during startup".into()))??;
+        Ok(Arc::new(Self {
+            tx: Mutex::new(tx),
+            manifest,
+            join: Mutex::new(Some(join)),
+            compiled,
+        }))
+    }
+
+    /// Whether `name`'s PJRT compilation has completed — the router's
+    /// non-blocking warm check.
+    pub fn is_compiled(&self, name: &str) -> bool {
+        self.compiled.0.lock().unwrap().contains(name)
+    }
+
+    /// Block until every merge artifact is compiled (or timeout).
+    /// Returns `true` when fully warm.
+    pub fn wait_warm(&self, timeout: Duration) -> bool {
+        let total = self
+            .manifest
+            .entries()
+            .iter()
+            .filter(|m| m.op == "merge")
+            .count();
+        let (set, cv) = &*self.compiled;
+        let deadline = std::time::Instant::now() + timeout;
+        let mut guard = set.lock().unwrap();
+        loop {
+            if guard.len() >= total {
+                return true;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (g, res) = cv.wait_timeout(guard, deadline - now).unwrap();
+            guard = g;
+            if res.timed_out() && guard.len() < total {
+                return false;
+            }
+        }
+    }
+
+    /// Artifact manifest (parsed locally; no thread hop).
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    /// Find an artifact that exactly fits the given input sizes.
+    pub fn find_for_sizes(&self, n_a: usize, n_b: usize) -> Option<&ArtifactMeta> {
+        self.manifest
+            .entries()
+            .iter()
+            .find(|m| m.op == "merge" && m.n_a == n_a && m.n_b == n_b)
+    }
+
+    /// Execute a merge on the executor thread (blocking rendezvous).
+    pub fn merge(&self, name: &str, a: Vec<i32>, b: Vec<i32>) -> Result<Vec<i32>> {
+        let (reply, rx) = channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Req::Merge { name: name.to_string(), a, b, reply })
+            .map_err(|_| Error::Runtime("xla executor stopped".into()))?;
+        rx.recv()
+            .map_err(|_| Error::Runtime("xla executor dropped request".into()))?
+    }
+
+    /// Stop the executor thread.
+    pub fn shutdown(&self) {
+        let _ = self.tx.lock().unwrap().send(Req::Shutdown);
+        if let Some(h) = self.join.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for XlaExecutor {
+    fn drop(&mut self) {
+        let _ = self.tx.lock().unwrap().send(Req::Shutdown);
+        if let Some(h) = self.join.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn executor_if_built() -> Option<Arc<XlaExecutor>> {
+        let dir = PathBuf::from("artifacts");
+        if dir.join("manifest.txt").exists() {
+            Some(XlaExecutor::start(&dir).expect("executor failed to start"))
+        } else {
+            eprintln!("skipping: run `make artifacts` first");
+            None
+        }
+    }
+
+    #[test]
+    fn merge_through_executor_thread() {
+        let Some(ex) = executor_if_built() else { return };
+        let Some(meta) = ex
+            .manifest()
+            .entries()
+            .iter()
+            .find(|m| m.op == "merge")
+            .cloned()
+        else {
+            return;
+        };
+        let a: Vec<i32> = (0..meta.n_a as i32).map(|x| x * 2).collect();
+        let b: Vec<i32> = (0..meta.n_b as i32).map(|x| x * 2 + 1).collect();
+        let got = ex.merge(&meta.name, a.clone(), b.clone()).unwrap();
+        let mut expected: Vec<i32> = a.iter().chain(b.iter()).copied().collect();
+        expected.sort_unstable();
+        assert_eq!(got, expected);
+        // Callable from multiple threads.
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let ex = &ex;
+                let meta = &meta;
+                let a = &a;
+                let b = &b;
+                s.spawn(move || {
+                    let got = ex.merge(&meta.name, a.clone(), b.clone()).unwrap();
+                    assert!(got.windows(2).all(|w| w[0] <= w[1]));
+                });
+            }
+        });
+        ex.shutdown();
+    }
+
+    #[test]
+    fn missing_dir_fails_fast() {
+        assert!(XlaExecutor::start(Path::new("/nonexistent-dir-xyz")).is_err());
+    }
+}

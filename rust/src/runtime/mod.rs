@@ -1,0 +1,236 @@
+//! PJRT runtime: loads AOT-compiled HLO artifacts (produced once by
+//! `python/compile/aot.py`) and executes them from the rust hot path.
+//!
+//! Interchange is **HLO text** — the image's xla_extension 0.5.1
+//! rejects jax ≥ 0.5 serialized protos (64-bit instruction ids), while
+//! the text parser reassigns ids (see /opt/xla-example/README.md).
+//! Python never runs at serve time: after `make artifacts`, the
+//! `mergeflow` binary is self-contained.
+
+pub mod artifact;
+pub mod executor;
+
+pub use artifact::{ArtifactManifest, ArtifactMeta};
+pub use executor::XlaExecutor;
+
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// A compiled merge executable: merges two fixed-size sorted `i32`
+/// arrays (shape baked in at AOT time, like any XLA program).
+pub struct MergeExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Expected |A|.
+    pub n_a: usize,
+    /// Expected |B|.
+    pub n_b: usize,
+    /// Artifact name.
+    pub name: String,
+}
+
+impl std::fmt::Debug for MergeExecutable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MergeExecutable")
+            .field("name", &self.name)
+            .field("n_a", &self.n_a)
+            .field("n_b", &self.n_b)
+            .finish()
+    }
+}
+
+impl MergeExecutable {
+    /// Run the merge. Inputs must match the baked shapes exactly.
+    pub fn merge(&self, a: &[i32], b: &[i32]) -> Result<Vec<i32>> {
+        if a.len() != self.n_a || b.len() != self.n_b {
+            return Err(Error::Runtime(format!(
+                "artifact {} expects |A|={}, |B|={}; got {}, {}",
+                self.name,
+                self.n_a,
+                self.n_b,
+                a.len(),
+                b.len()
+            )));
+        }
+        let la = xla::Literal::vec1(a);
+        let lb = xla::Literal::vec1(b);
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[la, lb])
+            .map_err(wrap)?[0][0]
+            .to_literal_sync()
+            .map_err(wrap)?;
+        // aot.py lowers with return_tuple=True → 1-tuple.
+        let out = result.to_tuple1().map_err(wrap)?;
+        out.to_vec::<i32>().map_err(wrap)
+    }
+}
+
+fn wrap(e: xla::Error) -> Error {
+    Error::Runtime(e.to_string())
+}
+
+/// The PJRT runtime: one CPU client plus a cache of compiled
+/// executables keyed by artifact name.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: ArtifactManifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<MergeExecutable>>>,
+}
+
+impl std::fmt::Debug for XlaRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("XlaRuntime")
+            .field("dir", &self.dir)
+            .field("artifacts", &self.manifest.entries().len())
+            .finish()
+    }
+}
+
+impl XlaRuntime {
+    /// Open the runtime over an artifact directory (expects
+    /// `manifest.txt` inside, written by `make artifacts`).
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest = ArtifactManifest::load(&dir.join("manifest.txt"))?;
+        let client = xla::PjRtClient::cpu().map_err(wrap)?;
+        Ok(Self {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// PJRT platform name (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Artifact manifest.
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    /// Load + compile an artifact by name (cached).
+    pub fn merge_executable(&self, name: &str) -> Result<std::sync::Arc<MergeExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let meta = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("no artifact named `{name}`")))?;
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Runtime("non-utf8 artifact path".into()))?,
+        )
+        .map_err(wrap)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(wrap)?;
+        let wrapped = std::sync::Arc::new(MergeExecutable {
+            exe,
+            n_a: meta.n_a,
+            n_b: meta.n_b,
+            name: name.to_string(),
+        });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), wrapped.clone());
+        Ok(wrapped)
+    }
+
+    /// Find an artifact that exactly fits the given input sizes.
+    pub fn find_for_sizes(&self, n_a: usize, n_b: usize) -> Option<&ArtifactMeta> {
+        self.manifest
+            .entries()
+            .iter()
+            .find(|m| m.op == "merge" && m.n_a == n_a && m.n_b == n_b)
+    }
+
+    /// Largest merge artifact (used by the batcher to pick its bucket
+    /// size).
+    pub fn largest_merge(&self) -> Option<&ArtifactMeta> {
+        self.manifest
+            .entries()
+            .iter()
+            .filter(|m| m.op == "merge")
+            .max_by_key(|m| m.n_a + m.n_b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        // Tests run from the crate root.
+        PathBuf::from("artifacts")
+    }
+
+    fn runtime_if_built() -> Option<XlaRuntime> {
+        let dir = artifacts_dir();
+        if dir.join("manifest.txt").exists() {
+            Some(XlaRuntime::open(&dir).expect("manifest exists but runtime failed to open"))
+        } else {
+            eprintln!("skipping: run `make artifacts` first");
+            None
+        }
+    }
+
+    #[test]
+    fn open_and_list() {
+        let Some(rt) = runtime_if_built() else { return };
+        assert_eq!(rt.platform().to_lowercase(), "cpu");
+        assert!(!rt.manifest().entries().is_empty());
+    }
+
+    #[test]
+    fn merge_artifact_correct_numerics() {
+        let Some(rt) = runtime_if_built() else { return };
+        let Some(meta) = rt.largest_merge().cloned() else { return };
+        let exe = rt.merge_executable(&meta.name).unwrap();
+        // Interleaved inputs of the baked size.
+        let a: Vec<i32> = (0..meta.n_a as i32).map(|x| x * 2).collect();
+        let b: Vec<i32> = (0..meta.n_b as i32).map(|x| x * 2 + 1).collect();
+        let got = exe.merge(&a, &b).unwrap();
+        let mut expected: Vec<i32> = a.iter().chain(b.iter()).copied().collect();
+        expected.sort_unstable();
+        assert_eq!(got, expected);
+    }
+
+    #[test]
+    fn merge_artifact_matches_native_on_random() {
+        let Some(rt) = runtime_if_built() else { return };
+        let Some(meta) = rt.largest_merge().cloned() else { return };
+        let exe = rt.merge_executable(&meta.name).unwrap();
+        let (a, b) = crate::bench::workload::gen_sorted_pair(
+            crate::bench::workload::WorkloadKind::Uniform,
+            meta.n_a,
+            meta.n_b,
+            0x1234,
+        );
+        let got = exe.merge(&a, &b).unwrap();
+        let mut expected = vec![0i32; a.len() + b.len()];
+        crate::mergepath::merge::merge_into(&a, &b, &mut expected);
+        assert_eq!(got, expected);
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        let Some(rt) = runtime_if_built() else { return };
+        let Some(meta) = rt.largest_merge().cloned() else { return };
+        let exe = rt.merge_executable(&meta.name).unwrap();
+        let err = exe.merge(&[1, 2, 3], &[4]).unwrap_err();
+        assert!(err.to_string().contains("expects"));
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        let Some(rt) = runtime_if_built() else { return };
+        assert!(rt.merge_executable("does-not-exist").is_err());
+    }
+}

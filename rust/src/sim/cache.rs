@@ -1,0 +1,426 @@
+//! Set-associative cache model with LRU/FIFO replacement and the §4.2
+//! miss taxonomy (compulsory / capacity / conflict).
+//!
+//! Addresses are byte addresses; the cache operates on lines. Miss
+//! classification follows Hill's standard method: a miss is
+//! *compulsory* if the line was never referenced before, *capacity* if
+//! a fully-associative LRU cache of the same size would also miss, and
+//! *conflict* otherwise. The fully-associative shadow is maintained
+//! lazily (an ordered recency list over line ids), which is exact and
+//! costs `O(1)` amortized via a hash map + sequence numbers.
+
+use std::collections::HashMap;
+
+/// Replacement policy (§4.2 "Cache replacement policy").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplacementPolicy {
+    /// Least-recently-used.
+    Lru,
+    /// First-in-first-out.
+    Fifo,
+}
+
+/// Geometry + policy of one cache level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheConfig {
+    /// Total capacity in bytes.
+    pub capacity: usize,
+    /// Line size in bytes.
+    pub line: usize,
+    /// Associativity (ways); `capacity / line / ways` sets must be ≥ 1.
+    pub ways: usize,
+    /// Replacement policy.
+    pub policy: ReplacementPolicy,
+}
+
+impl CacheConfig {
+    /// Number of sets.
+    pub fn sets(&self) -> usize {
+        (self.capacity / self.line / self.ways).max(1)
+    }
+
+    /// Capacity in lines.
+    pub fn lines(&self) -> usize {
+        self.capacity / self.line
+    }
+}
+
+/// Hit/miss counters, split by the §4.2 taxonomy.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Accesses that hit.
+    pub hits: u64,
+    /// Compulsory (cold) misses.
+    pub compulsory: u64,
+    /// Capacity misses (fully-associative shadow also missed).
+    pub capacity: u64,
+    /// Conflict misses (shadow would have hit).
+    pub conflict: u64,
+    /// Dirty lines written back on eviction.
+    pub writebacks: u64,
+}
+
+impl CacheStats {
+    /// Total misses.
+    pub fn misses(&self) -> u64 {
+        self.compulsory + self.capacity + self.conflict
+    }
+
+    /// Total accesses.
+    pub fn accesses(&self) -> u64 {
+        self.hits + self.misses()
+    }
+
+    /// Miss rate in [0, 1].
+    pub fn miss_rate(&self) -> f64 {
+        let a = self.accesses();
+        if a == 0 {
+            0.0
+        } else {
+            self.misses() as f64 / a as f64
+        }
+    }
+
+    /// Accumulate another stats block.
+    pub fn merge(&mut self, o: &CacheStats) {
+        self.hits += o.hits;
+        self.compulsory += o.compulsory;
+        self.capacity += o.capacity;
+        self.conflict += o.conflict;
+        self.writebacks += o.writebacks;
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Way {
+    tag: u64, // full line id (addr / line); u64::MAX = invalid
+    stamp: u64, // recency (LRU) or insertion (FIFO) sequence number
+    dirty: bool,
+}
+
+const INVALID: u64 = u64::MAX;
+
+/// One set-associative cache level.
+#[derive(Debug)]
+pub struct SetAssocCache {
+    cfg: CacheConfig,
+    sets: Vec<Vec<Way>>, // sets × ways
+    seq: u64,
+    stats: CacheStats,
+    // Miss classification state:
+    seen: HashMap<u64, ()>, // lines ever referenced (compulsory check)
+    shadow: ShadowLru,      // fully-associative same-capacity LRU
+}
+
+impl SetAssocCache {
+    /// Build an empty cache.
+    pub fn new(cfg: CacheConfig) -> Self {
+        assert!(cfg.line.is_power_of_two(), "line size must be a power of two");
+        assert!(cfg.ways >= 1);
+        let sets = cfg.sets();
+        Self {
+            cfg,
+            sets: vec![
+                vec![Way { tag: INVALID, stamp: 0, dirty: false }; cfg.ways];
+                sets
+            ],
+            seq: 0,
+            stats: CacheStats::default(),
+            seen: HashMap::new(),
+            shadow: ShadowLru::new(cfg.lines()),
+        }
+    }
+
+    /// Geometry.
+    pub fn config(&self) -> CacheConfig {
+        self.cfg
+    }
+
+    /// Counters so far.
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    /// Reset counters (not contents).
+    pub fn reset_stats(&mut self) {
+        self.stats = CacheStats::default();
+    }
+
+    /// Line id for a byte address.
+    #[inline]
+    pub fn line_of(&self, addr: u64) -> u64 {
+        addr / self.cfg.line as u64
+    }
+
+    /// Access `addr`; returns `true` on hit. On miss the line is
+    /// filled (allocate-on-write too: write-allocate policy). `write`
+    /// marks the line dirty; evicting a dirty line counts a writeback.
+    pub fn access(&mut self, addr: u64, write: bool) -> bool {
+        let line = self.line_of(addr);
+        let set_idx = (line % self.sets.len() as u64) as usize;
+        self.seq += 1;
+        let seq = self.seq;
+        let policy = self.cfg.policy;
+
+        let shadow_hit = self.shadow.touch(line);
+
+        let set = &mut self.sets[set_idx];
+        if let Some(way) = set.iter_mut().find(|w| w.tag == line) {
+            if policy == ReplacementPolicy::Lru {
+                way.stamp = seq;
+            }
+            way.dirty |= write;
+            self.stats.hits += 1;
+            return true;
+        }
+
+        // Miss: classify.
+        if self.seen.insert(line, ()).is_none() {
+            self.stats.compulsory += 1;
+        } else if shadow_hit {
+            self.stats.conflict += 1;
+        } else {
+            self.stats.capacity += 1;
+        }
+
+        // Fill: pick victim (invalid first, else min stamp).
+        let victim = set
+            .iter_mut()
+            .min_by_key(|w| if w.tag == INVALID { (0, 0) } else { (1, w.stamp) })
+            .expect("ways >= 1");
+        if victim.tag != INVALID && victim.dirty {
+            self.stats.writebacks += 1;
+        }
+        victim.tag = line;
+        victim.stamp = seq;
+        victim.dirty = write;
+        false
+    }
+
+    /// Invalidate a line if present (coherence); returns `true` if the
+    /// line was present and dirty (owner must write back).
+    pub fn invalidate(&mut self, addr: u64) -> bool {
+        let line = self.line_of(addr);
+        let set_idx = (line % self.sets.len() as u64) as usize;
+        let set = &mut self.sets[set_idx];
+        if let Some(way) = set.iter_mut().find(|w| w.tag == line) {
+            let was_dirty = way.dirty;
+            way.tag = INVALID;
+            way.dirty = false;
+            if was_dirty {
+                self.stats.writebacks += 1;
+            }
+            return was_dirty;
+        }
+        false
+    }
+
+    /// Whether the line holding `addr` is resident.
+    pub fn contains(&self, addr: u64) -> bool {
+        let line = addr / self.cfg.line as u64;
+        let set_idx = (line % self.sets.len() as u64) as usize;
+        self.sets[set_idx].iter().any(|w| w.tag == line)
+    }
+
+    /// Flush everything, counting writebacks of dirty lines. Models the
+    /// paper's "write backs" measurement mode (Fig 5a/5b include the
+    /// final traffic, 5c/5d do not).
+    pub fn flush(&mut self) -> u64 {
+        let mut wb = 0;
+        for set in &mut self.sets {
+            for way in set.iter_mut() {
+                if way.tag != INVALID && way.dirty {
+                    wb += 1;
+                }
+                way.tag = INVALID;
+                way.dirty = false;
+            }
+        }
+        self.stats.writebacks += wb;
+        wb
+    }
+}
+
+/// Exact fully-associative LRU shadow for conflict/capacity
+/// classification: a hash map from line → recency stamp plus a BTreeMap
+/// from stamp → line for O(log n) eviction of the oldest.
+#[derive(Debug)]
+struct ShadowLru {
+    capacity_lines: usize,
+    stamp_of: HashMap<u64, u64>,
+    by_stamp: std::collections::BTreeMap<u64, u64>,
+    seq: u64,
+}
+
+impl ShadowLru {
+    fn new(capacity_lines: usize) -> Self {
+        Self {
+            capacity_lines: capacity_lines.max(1),
+            stamp_of: HashMap::new(),
+            by_stamp: std::collections::BTreeMap::new(),
+            seq: 0,
+        }
+    }
+
+    /// Touch a line; returns `true` if it was resident (shadow hit).
+    fn touch(&mut self, line: u64) -> bool {
+        self.seq += 1;
+        let hit = if let Some(old) = self.stamp_of.insert(line, self.seq) {
+            self.by_stamp.remove(&old);
+            true
+        } else {
+            false
+        };
+        self.by_stamp.insert(self.seq, line);
+        if self.stamp_of.len() > self.capacity_lines {
+            // Evict LRU.
+            let (&oldest, &victim) = self.by_stamp.iter().next().expect("non-empty");
+            self.by_stamp.remove(&oldest);
+            self.stamp_of.remove(&victim);
+        }
+        hit
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(capacity: usize, line: usize, ways: usize, policy: ReplacementPolicy) -> CacheConfig {
+        CacheConfig { capacity, line, ways, policy }
+    }
+
+    #[test]
+    fn geometry() {
+        let c = cfg(32 * 1024, 64, 8, ReplacementPolicy::Lru);
+        assert_eq!(c.sets(), 64);
+        assert_eq!(c.lines(), 512);
+    }
+
+    #[test]
+    fn first_access_is_compulsory_miss_then_hit() {
+        let mut c = SetAssocCache::new(cfg(1024, 64, 2, ReplacementPolicy::Lru));
+        assert!(!c.access(0, false));
+        assert!(c.access(0, false));
+        assert!(c.access(63, false)); // same line
+        assert!(!c.access(64, false)); // next line
+        let s = c.stats();
+        assert_eq!(s.compulsory, 2);
+        assert_eq!(s.hits, 2);
+        assert_eq!(s.capacity + s.conflict, 0);
+    }
+
+    #[test]
+    fn lru_evicts_least_recent() {
+        // 2 ways, 1 set (capacity 128B, line 64B).
+        let mut c = SetAssocCache::new(cfg(128, 64, 2, ReplacementPolicy::Lru));
+        c.access(0, false); // line 0
+        c.access(64, false); // line 1
+        c.access(0, false); // touch line 0 → line 1 is LRU
+        c.access(128, false); // evicts line 1
+        assert!(c.contains(0));
+        assert!(!c.contains(64));
+        assert!(c.contains(128));
+    }
+
+    #[test]
+    fn fifo_evicts_first_in() {
+        let mut c = SetAssocCache::new(cfg(128, 64, 2, ReplacementPolicy::Fifo));
+        c.access(0, false);
+        c.access(64, false);
+        c.access(0, false); // FIFO ignores recency
+        c.access(128, false); // evicts line 0 (first in)
+        assert!(!c.contains(0));
+        assert!(c.contains(64));
+        assert!(c.contains(128));
+    }
+
+    #[test]
+    fn conflict_miss_classification() {
+        // Direct-mapped, 2 sets (128B, 64B lines, 1 way): lines 0 and 2
+        // collide in set 0 while capacity (2 lines) is sufficient.
+        let mut c = SetAssocCache::new(cfg(128, 64, 1, ReplacementPolicy::Lru));
+        c.access(0, false); // line 0 compulsory
+        c.access(128, false); // line 2 compulsory (set 0 conflict with line 0)
+        c.access(0, false); // line 0 again: shadow (2-line LRU) still holds it
+        let s = c.stats();
+        assert_eq!(s.compulsory, 2);
+        assert_eq!(s.conflict, 1);
+        assert_eq!(s.capacity, 0);
+    }
+
+    #[test]
+    fn capacity_miss_classification() {
+        // 1 line total; stream over 3 lines → revisits are capacity misses.
+        let mut c = SetAssocCache::new(cfg(64, 64, 1, ReplacementPolicy::Lru));
+        for round in 0..2 {
+            for line in 0..3u64 {
+                c.access(line * 64, false);
+                let _ = round;
+            }
+        }
+        let s = c.stats();
+        assert_eq!(s.compulsory, 3);
+        assert_eq!(s.capacity, 3);
+        assert_eq!(s.conflict, 0);
+    }
+
+    #[test]
+    fn writeback_on_dirty_eviction_and_flush() {
+        let mut c = SetAssocCache::new(cfg(64, 64, 1, ReplacementPolicy::Lru));
+        c.access(0, true); // dirty line 0
+        c.access(64, false); // evicts dirty line 0 → writeback
+        assert_eq!(c.stats().writebacks, 1);
+        c.access(128, true); // dirty line 2 (evicts clean line 1, no wb)
+        assert_eq!(c.stats().writebacks, 1);
+        let wb = c.flush();
+        assert_eq!(wb, 1); // line 2 flushed dirty
+        assert_eq!(c.stats().writebacks, 2);
+        assert!(!c.contains(128));
+    }
+
+    #[test]
+    fn invalidate_reports_dirtiness() {
+        let mut c = SetAssocCache::new(cfg(256, 64, 4, ReplacementPolicy::Lru));
+        c.access(0, true);
+        c.access(64, false);
+        assert!(c.invalidate(0)); // dirty
+        assert!(!c.invalidate(64)); // clean
+        assert!(!c.invalidate(192)); // absent
+        assert!(!c.contains(0));
+    }
+
+    #[test]
+    fn streaming_miss_rate_is_one_per_line() {
+        // Sequential scan of 4096 bytes with 64B lines: 1 miss per 16
+        // 4-byte elements (the §4.2 "contiguous data" observation).
+        let mut c = SetAssocCache::new(cfg(8 * 1024, 64, 8, ReplacementPolicy::Lru));
+        for i in 0..1024u64 {
+            c.access(i * 4, false);
+        }
+        let s = c.stats();
+        assert_eq!(s.misses(), 1024 * 4 / 64);
+        assert_eq!(s.hits, 1024 - 64);
+    }
+
+    #[test]
+    fn three_way_associativity_avoids_merge_conflicts() {
+        // Prop. 15: three streams (A, B, S) at arbitrary bases, each
+        // C/3 long, cannot conflict in a 3-way cache. Simulate the SPM
+        // window access pattern and assert zero conflict misses.
+        let line = 64usize;
+        let capacity = 3 * 1024 * line; // 3072 lines, 1024 sets of 3
+        let mut c = SetAssocCache::new(cfg(capacity, line, 3, ReplacementPolicy::Lru));
+        let l = capacity / 3; // window bytes per array = C/3
+        // Awkward, unaligned bases:
+        let base_a = 0u64;
+        let base_b = 10_000_000 + 64 * 7;
+        let base_s = 99_000_000 + 64 * 13;
+        for i in 0..(l as u64 / 4) {
+            c.access(base_a + i * 4, false);
+            c.access(base_b + i * 4, false);
+            c.access(base_s + i * 4, true);
+        }
+        assert_eq!(c.stats().conflict, 0, "{:?}", c.stats());
+    }
+}

@@ -1,0 +1,379 @@
+//! Virtual-time engine: interleaves per-thread event streams through
+//! the memory hierarchy in clock order (a discrete-event simulation)
+//! and reports makespan, bandwidth-bounded cycles and cache statistics.
+//!
+//! This regenerates the paper's speedup figures without the paper's
+//! hardware: `speedup(p) = cycles(1) / cycles(p)` with every term
+//! derived from the algorithms' real access traces.
+
+use super::machine::MachineSpec;
+use super::mem::{AccessKind, MemHierarchy, MemStats};
+use super::stream::{self, Ev, Layout, Stage};
+
+/// Which merge algorithm to simulate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MergeAlgo {
+    /// Regular Merge Path (paper Alg 1).
+    MergePath,
+    /// Segmented Parallel Merge with the given path-segment length
+    /// (paper Alg 3); the figure benches derive `segment_len` from the
+    /// paper's "#segments" parameter as `N / segments`.
+    Segmented {
+        /// Path-segment length `L` in elements.
+        segment_len: usize,
+    },
+    /// Shiloach–Vishkin [9].
+    ShiloachVishkin,
+    /// Akl–Santoro [8].
+    AklSantoro,
+}
+
+impl MergeAlgo {
+    /// Short name for tables.
+    pub fn name(&self) -> String {
+        match self {
+            MergeAlgo::MergePath => "merge-path".into(),
+            MergeAlgo::Segmented { segment_len } => format!("spm(L={segment_len})"),
+            MergeAlgo::ShiloachVishkin => "shiloach-vishkin".into(),
+            MergeAlgo::AklSantoro => "akl-santoro".into(),
+        }
+    }
+}
+
+/// Inputs for one simulation run.
+#[derive(Debug, Clone)]
+pub struct SimWorkload<'a> {
+    /// Sorted input `A` (32-bit keys, as in the paper's experiments).
+    pub a: &'a [i32],
+    /// Sorted input `B`.
+    pub b: &'a [i32],
+    /// Whether merged output is written to memory (Fig 5a/b) or kept
+    /// in a register (Fig 5c/d).
+    pub writeback: bool,
+    /// Stage filter (Table 1 separates partition and merge stages).
+    pub stage: Stage,
+}
+
+/// Result of one simulated run.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Final cycle count: `max(compute makespan, bandwidth bound)` plus
+    /// fork overhead.
+    pub cycles: u64,
+    /// Compute/latency makespan (max over threads).
+    pub makespan: u64,
+    /// Per-socket bandwidth bound in cycles.
+    pub bw_bound: u64,
+    /// Per-thread finish times.
+    pub per_thread: Vec<u64>,
+    /// Memory statistics.
+    pub mem: MemStats,
+    /// Number of barrier episodes executed.
+    pub barriers: u64,
+}
+
+impl SimReport {
+    /// Total cache misses at the given level ("l1"/"l2"/"l3").
+    pub fn misses(&self, level: &str) -> u64 {
+        match level {
+            "l1" => self.mem.l1.misses(),
+            "l2" => self.mem.l2.misses(),
+            "l3" => self.mem.l3.misses(),
+            _ => panic!("unknown level {level}"),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ThreadState {
+    Running,
+    AtBarrier,
+    Done,
+}
+
+/// Run `p` event streams through the hierarchy of `machine`.
+pub fn run_streams(machine: &MachineSpec, streams: Vec<Vec<Ev>>, writeback: bool) -> SimReport {
+    let p = streams.len();
+    assert!(p >= 1);
+    assert!(
+        p <= machine.cores(),
+        "requested {p} threads on a {}-core machine",
+        machine.cores()
+    );
+    // Threads are scattered round-robin across sockets (NUMA
+    // interleave); with fewer threads than sockets only the occupied
+    // sockets are instantiated so per-socket bandwidth aggregates
+    // correctly.
+    let spanned_sockets = p.min(machine.sockets);
+    let mut mem = MemHierarchy::new(machine.mem, p, spanned_sockets);
+
+    let mut clocks = vec![0u64; p];
+    let mut cursors = vec![0usize; p];
+    let mut states = vec![ThreadState::Running; p];
+    let mut barriers_done = 0u64;
+
+    loop {
+        // Pick the running thread with the smallest clock (deterministic
+        // tie-break by tid).
+        let mut next: Option<usize> = None;
+        for tid in 0..p {
+            if states[tid] == ThreadState::Running
+                && next.map_or(true, |n| clocks[tid] < clocks[n])
+            {
+                next = Some(tid);
+            }
+        }
+        let Some(tid) = next else {
+            // No runnable thread: either all done, or all at a barrier.
+            let waiting: Vec<usize> = (0..p)
+                .filter(|&t| states[t] == ThreadState::AtBarrier)
+                .collect();
+            if waiting.is_empty() {
+                break; // all done
+            }
+            // Release the barrier: everyone resumes at the max clock
+            // plus the barrier cost.
+            let release = waiting
+                .iter()
+                .map(|&t| clocks[t])
+                .max()
+                .unwrap()
+                .saturating_add(machine.barrier_cost(p));
+            for &t in &waiting {
+                clocks[t] = release.max(clocks[t]);
+                states[t] = ThreadState::Running;
+            }
+            barriers_done += 1;
+            continue;
+        };
+
+        let stream = &streams[tid];
+        if cursors[tid] >= stream.len() {
+            states[tid] = ThreadState::Done;
+            continue;
+        }
+        let ev = stream[cursors[tid]];
+        cursors[tid] += 1;
+        match ev {
+            Ev::Read(addr) => {
+                clocks[tid] +=
+                    mem.access(tid, addr, AccessKind::Read) + machine.cpi_step;
+            }
+            Ev::ReadRand(addr) => {
+                clocks[tid] +=
+                    mem.access(tid, addr, AccessKind::ReadRand) + machine.cpi_probe;
+            }
+            Ev::Write(addr) => {
+                clocks[tid] +=
+                    mem.access(tid, addr, AccessKind::Write) + machine.cpi_step;
+            }
+            Ev::Barrier => {
+                states[tid] = ThreadState::AtBarrier;
+            }
+        }
+    }
+
+    if writeback {
+        mem.flush_all();
+    }
+    let stats = mem.stats();
+    let makespan = clocks.iter().copied().max().unwrap_or(0);
+    let bw_bound = stats
+        .dram_bytes_per_socket
+        .iter()
+        .map(|&bytes| (bytes as f64 / machine.dram_bytes_per_cycle) as u64)
+        .max()
+        .unwrap_or(0);
+    let cycles = makespan.max(bw_bound) + machine.fork_cost + machine.barrier_cost(p);
+    SimReport {
+        cycles,
+        makespan,
+        bw_bound,
+        per_thread: clocks,
+        mem: stats,
+        barriers: barriers_done,
+    }
+}
+
+/// Simulate one merge with `p` threads on `machine`.
+pub fn simulate_merge(
+    machine: &MachineSpec,
+    algo: MergeAlgo,
+    w: &SimWorkload<'_>,
+    p: usize,
+) -> SimReport {
+    let layout = Layout::contiguous(w.a.len(), w.b.len());
+    let streams: Vec<Vec<Ev>> = (0..p)
+        .map(|tid| match algo {
+            MergeAlgo::MergePath => {
+                stream::merge_path_events(w.a, w.b, p, tid, w.writeback, w.stage, &layout)
+            }
+            MergeAlgo::Segmented { segment_len } => stream::spm_events(
+                w.a,
+                w.b,
+                segment_len,
+                p,
+                tid,
+                w.writeback,
+                w.stage,
+                &layout,
+            ),
+            MergeAlgo::ShiloachVishkin => {
+                stream::sv_events(w.a, w.b, p, tid, w.writeback, w.stage, &layout)
+            }
+            MergeAlgo::AklSantoro => {
+                stream::akl_santoro_events(w.a, w.b, p, tid, w.writeback, w.stage, &layout)
+            }
+        })
+        .collect();
+    run_streams(machine, streams, w.writeback)
+}
+
+/// Convenience: speedup curve `cycles(1)/cycles(p)` over `ps`.
+pub fn speedup_curve(
+    machine: &MachineSpec,
+    algo: MergeAlgo,
+    w: &SimWorkload<'_>,
+    ps: &[usize],
+) -> Vec<(usize, f64)> {
+    let base = simulate_merge(machine, algo, w, 1).cycles.max(1);
+    ps.iter()
+        .map(|&p| {
+            let c = simulate_merge(machine, algo, w, p).cycles.max(1);
+            (p, base as f64 / c as f64)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+    use crate::sim::machine::x5670_12;
+
+    fn random_sorted(rng: &mut Xoshiro256, n: usize, universe: u64) -> Vec<i32> {
+        let mut v: Vec<i32> = (0..n).map(|_| rng.below(universe) as i32).collect();
+        v.sort_unstable();
+        v
+    }
+
+    fn workload(a: &[i32], b: &[i32], writeback: bool) -> SimWorkload<'static> {
+        // Tests leak the arrays deliberately (tiny, test-only).
+        let a: &'static [i32] = Box::leak(a.to_vec().into_boxed_slice());
+        let b: &'static [i32] = Box::leak(b.to_vec().into_boxed_slice());
+        SimWorkload { a, b, writeback, stage: Stage::Both }
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut rng = Xoshiro256::seeded(0x11);
+        let a = random_sorted(&mut rng, 5000, 1 << 20);
+        let b = random_sorted(&mut rng, 5000, 1 << 20);
+        let m = x5670_12().scaled_caches(64);
+        let w = workload(&a, &b, true);
+        let r1 = simulate_merge(&m, MergeAlgo::MergePath, &w, 4);
+        let r2 = simulate_merge(&m, MergeAlgo::MergePath, &w, 4);
+        assert_eq!(r1.cycles, r2.cycles);
+        assert_eq!(r1.mem.l1.misses(), r2.mem.l1.misses());
+    }
+
+    #[test]
+    fn speedup_with_more_threads() {
+        let mut rng = Xoshiro256::seeded(0x12);
+        let a = random_sorted(&mut rng, 200_000, 1 << 28);
+        let b = random_sorted(&mut rng, 200_000, 1 << 28);
+        let m = x5670_12().scaled_caches(16);
+        let w = workload(&a, &b, true);
+        let curve = speedup_curve(&m, MergeAlgo::MergePath, &w, &[2, 4, 8, 12]);
+        // Monotone-ish increase and near-linear at small p.
+        assert!(curve[0].1 > 1.5, "2-thread speedup {curve:?}");
+        assert!(curve[1].1 > curve[0].1, "{curve:?}");
+        let s12 = curve.last().unwrap().1;
+        assert!(s12 > 4.0, "12-thread speedup too low: {curve:?}");
+    }
+
+    #[test]
+    fn register_mode_moves_fewer_bytes() {
+        let mut rng = Xoshiro256::seeded(0x13);
+        let a = random_sorted(&mut rng, 50_000, 1 << 28);
+        let b = random_sorted(&mut rng, 50_000, 1 << 28);
+        let m = x5670_12().scaled_caches(16);
+        let wb = simulate_merge(&m, MergeAlgo::MergePath, &workload(&a, &b, true), 4);
+        let reg = simulate_merge(&m, MergeAlgo::MergePath, &workload(&a, &b, false), 4);
+        assert!(reg.mem.dram_bytes() < wb.mem.dram_bytes());
+        assert!(reg.cycles <= wb.cycles);
+    }
+
+    #[test]
+    fn spm_has_no_more_l3_misses_than_regular_on_big_arrays() {
+        let mut rng = Xoshiro256::seeded(0x14);
+        // Arrays several times the (scaled) L3.
+        let n = 400_000usize;
+        let a = random_sorted(&mut rng, n, 1 << 28);
+        let b = random_sorted(&mut rng, n, 1 << 28);
+        let m = x5670_12().scaled_caches(64); // L3 = 192 KiB = 48K elems
+        let l3_elems = m.mem.l3.capacity / 4;
+        let w = workload(&a, &b, true);
+        let reg = simulate_merge(&m, MergeAlgo::MergePath, &w, 8);
+        let spm = simulate_merge(
+            &m,
+            MergeAlgo::Segmented { segment_len: l3_elems / 3 },
+            &w,
+            8,
+        );
+        assert!(
+            spm.mem.l3.misses() <= reg.mem.l3.misses() + (n as u64 / 100),
+            "spm {} vs regular {}",
+            spm.mem.l3.misses(),
+            reg.mem.l3.misses()
+        );
+    }
+
+    #[test]
+    fn barriers_counted_for_spm() {
+        let mut rng = Xoshiro256::seeded(0x15);
+        let a = random_sorted(&mut rng, 10_000, 1 << 20);
+        let b = random_sorted(&mut rng, 10_000, 1 << 20);
+        let m = x5670_12().scaled_caches(64);
+        let w = workload(&a, &b, true);
+        let r = simulate_merge(&m, MergeAlgo::Segmented { segment_len: 1000 }, &w, 4);
+        assert_eq!(r.barriers, 20, "one barrier per segment");
+    }
+
+    #[test]
+    fn partition_stage_is_cheap() {
+        let mut rng = Xoshiro256::seeded(0x16);
+        let a = random_sorted(&mut rng, 100_000, 1 << 28);
+        let b = random_sorted(&mut rng, 100_000, 1 << 28);
+        let m = x5670_12().scaled_caches(16);
+        let part = SimWorkload { a: &a, b: &b, writeback: true, stage: Stage::Partition };
+        let both = SimWorkload { a: &a, b: &b, writeback: true, stage: Stage::Both };
+        let rp = simulate_merge(&m, MergeAlgo::MergePath, &part, 8);
+        let rb = simulate_merge(&m, MergeAlgo::MergePath, &both, 8);
+        assert!(
+            rp.makespan * 10 < rb.makespan,
+            "partition {} vs total {}",
+            rp.makespan,
+            rb.makespan
+        );
+    }
+
+    #[test]
+    fn sv_imbalance_slower_than_merge_path() {
+        // Skewed arrays (all of B inside A's first fragment): SV hands
+        // one thread far more than N/p while Merge Path stays exact.
+        let n = 100_000;
+        let a: Vec<i32> = (0..n).collect();
+        let b: Vec<i32> = vec![100i32; n as usize];
+        let m = x5670_12().scaled_caches(16);
+        let w = workload(&a, &b, true);
+        let mp = simulate_merge(&m, MergeAlgo::MergePath, &w, 8);
+        let sv = simulate_merge(&m, MergeAlgo::ShiloachVishkin, &w, 8);
+        assert!(
+            sv.makespan as f64 >= 1.3 * mp.makespan as f64,
+            "sv {} vs mp {}",
+            sv.makespan,
+            mp.makespan
+        );
+    }
+}

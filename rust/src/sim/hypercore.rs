@@ -1,0 +1,317 @@
+//! Plurality HyperCore model (§6.2): a UMA many-core with **no private
+//! caches** — all cores reach a shared, multi-bank cache through a
+//! low-latency combinational interconnect, plus off-chip DRAM.
+//!
+//! Modeled mechanisms (exactly the ones the paper attributes results
+//! to):
+//! - shared cache, so **no coherence traffic at all** (CREW algorithms
+//!   pay nothing for sharing);
+//! - more banks than cores with line-interleaved addresses → conflicts
+//!   only when two cores hit the same bank in the same cycle, which the
+//!   model serializes (bank busy-until times);
+//! - the FPGA version's **direct-mapped** 1MB cache (so collision
+//!   freedom cannot be guaranteed — the paper's Fig 7b caveat);
+//! - a hardware scheduler that dispatches a task "within a handful of
+//!   cycles" → tiny fork/barrier costs.
+
+use super::cache::{CacheConfig, ReplacementPolicy, SetAssocCache};
+use super::engine::{MergeAlgo, SimWorkload};
+use super::stream::{Ev, Layout};
+
+/// HyperCore geometry/latency parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct HyperCoreSpec {
+    /// Number of cores (the FPGA version: 32).
+    pub cores: usize,
+    /// Shared cache capacity in bytes (FPGA: 1MB).
+    pub cache_capacity: usize,
+    /// Shared cache associativity (FPGA: direct-mapped = 1).
+    pub cache_ways: usize,
+    /// Line size in bytes.
+    pub line: usize,
+    /// Number of cache banks (more banks than cores).
+    pub banks: usize,
+    /// Shared-cache hit latency (cycles).
+    pub hit_latency: u64,
+    /// Off-chip miss latency (cycles).
+    pub miss_latency: u64,
+    /// Scheduler dispatch cost per parallel region ("handful of cycles").
+    pub dispatch: u64,
+    /// Barrier cost (synchronizer/scheduler, very fast).
+    pub barrier: u64,
+    /// Compute cycles per merge step.
+    pub cpi_step: u64,
+    /// Compute cycles per search probe.
+    pub cpi_probe: u64,
+}
+
+/// The FPGA configuration used in §6.2: 32 cores, 1MB direct-mapped
+/// shared cache.
+pub fn hypercore_fpga32() -> HyperCoreSpec {
+    HyperCoreSpec {
+        cores: 32,
+        cache_capacity: 1024 * 1024,
+        cache_ways: 1,
+        line: 64,
+        banks: 64,
+        hit_latency: 3,
+        miss_latency: 250,
+        dispatch: 8,
+        barrier: 12,
+        cpi_step: 3,
+        cpi_probe: 4,
+    }
+}
+
+/// Result of a HyperCore run.
+#[derive(Debug, Clone)]
+pub struct HyperCoreReport {
+    /// Total cycles (makespan + dispatch).
+    pub cycles: u64,
+    /// Per-thread finish times.
+    pub per_thread: Vec<u64>,
+    /// Shared-cache stats.
+    pub cache: super::cache::CacheStats,
+    /// Accesses delayed by a busy bank.
+    pub bank_conflicts: u64,
+    /// Barriers executed.
+    pub barriers: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum St {
+    Running,
+    AtBarrier,
+    Done,
+}
+
+/// Run per-thread event streams on the HyperCore model.
+pub fn run_hypercore(spec: &HyperCoreSpec, streams: Vec<Vec<Ev>>) -> HyperCoreReport {
+    let p = streams.len();
+    assert!(p >= 1 && p <= spec.cores);
+    let mut cache = SetAssocCache::new(CacheConfig {
+        capacity: spec.cache_capacity,
+        line: spec.line,
+        ways: spec.cache_ways,
+        policy: ReplacementPolicy::Lru, // direct-mapped when ways = 1
+    });
+    let mut bank_free = vec![0u64; spec.banks];
+    let mut clocks = vec![0u64; p];
+    let mut cursors = vec![0usize; p];
+    let mut states = vec![St::Running; p];
+    let mut conflicts = 0u64;
+    let mut barriers = 0u64;
+
+    loop {
+        let mut next: Option<usize> = None;
+        for tid in 0..p {
+            if states[tid] == St::Running && next.map_or(true, |n| clocks[tid] < clocks[n]) {
+                next = Some(tid);
+            }
+        }
+        let Some(tid) = next else {
+            let waiting: Vec<usize> =
+                (0..p).filter(|&t| states[t] == St::AtBarrier).collect();
+            if waiting.is_empty() {
+                break;
+            }
+            let release = waiting.iter().map(|&t| clocks[t]).max().unwrap() + spec.barrier;
+            for &t in &waiting {
+                clocks[t] = release;
+                states[t] = St::Running;
+            }
+            barriers += 1;
+            continue;
+        };
+        let s = &streams[tid];
+        if cursors[tid] >= s.len() {
+            states[tid] = St::Done;
+            continue;
+        }
+        let ev = s[cursors[tid]];
+        cursors[tid] += 1;
+        match ev {
+            Ev::Read(addr) | Ev::ReadRand(addr) | Ev::Write(addr) => {
+                let line = addr / spec.line as u64;
+                let bank = (line % spec.banks as u64) as usize;
+                // Bank serialization: wait for the bank, then occupy it
+                // for one cycle.
+                let start = clocks[tid].max(bank_free[bank]);
+                if start > clocks[tid] {
+                    conflicts += 1;
+                }
+                bank_free[bank] = start + 1;
+                let write = matches!(ev, Ev::Write(_));
+                let hit = cache.access(addr, write);
+                let lat = if hit { spec.hit_latency } else { spec.miss_latency };
+                let cpi = if matches!(ev, Ev::ReadRand(_)) {
+                    spec.cpi_probe
+                } else {
+                    spec.cpi_step
+                };
+                clocks[tid] = start + lat + cpi;
+            }
+            Ev::Barrier => states[tid] = St::AtBarrier,
+        }
+    }
+
+    let makespan = clocks.iter().copied().max().unwrap_or(0);
+    HyperCoreReport {
+        cycles: makespan + spec.dispatch,
+        per_thread: clocks,
+        cache: cache.stats(),
+        bank_conflicts: conflicts,
+        barriers,
+    }
+}
+
+/// Simulate one merge on the HyperCore (register-sink mode — §6.2: the
+/// FPGA "has a latency issue on memory write back", so the paper's runs
+/// stored results to a register; we default to the same).
+pub fn simulate_hypercore(
+    spec: &HyperCoreSpec,
+    algo: MergeAlgo,
+    w: &SimWorkload<'_>,
+    p: usize,
+) -> HyperCoreReport {
+    let layout = Layout::contiguous(w.a.len(), w.b.len());
+    let streams: Vec<Vec<Ev>> = (0..p)
+        .map(|tid| match algo {
+            MergeAlgo::MergePath => super::stream::merge_path_events(
+                w.a, w.b, p, tid, w.writeback, w.stage, &layout,
+            ),
+            MergeAlgo::Segmented { segment_len } => super::stream::spm_events(
+                w.a, w.b, segment_len, p, tid, w.writeback, w.stage, &layout,
+            ),
+            MergeAlgo::ShiloachVishkin => super::stream::sv_events(
+                w.a, w.b, p, tid, w.writeback, w.stage, &layout,
+            ),
+            MergeAlgo::AklSantoro => super::stream::akl_santoro_events(
+                w.a, w.b, p, tid, w.writeback, w.stage, &layout,
+            ),
+        })
+        .collect();
+    run_hypercore(spec, streams)
+}
+
+/// Speedup curve on the HyperCore.
+pub fn hypercore_speedup_curve(
+    spec: &HyperCoreSpec,
+    algo: MergeAlgo,
+    w: &SimWorkload<'_>,
+    ps: &[usize],
+) -> Vec<(usize, f64)> {
+    let base = simulate_hypercore(spec, algo, w, 1).cycles.max(1);
+    ps.iter()
+        .map(|&p| {
+            let c = simulate_hypercore(spec, algo, w, p).cycles.max(1);
+            (p, base as f64 / c as f64)
+        })
+        .collect()
+}
+
+/// MachineSpec-compatible description row for Table 2 extensions.
+pub fn hypercore_row(spec: &HyperCoreSpec) -> [String; 8] {
+    [
+        "Plurality HyperCore (FPGA)".into(),
+        "1".into(),
+        spec.cores.to_string(),
+        spec.cores.to_string(),
+        "-".into(),
+        "-".into(),
+        format!("{}MB shared, {}-way", spec.cache_capacity / 1024 / 1024, spec.cache_ways),
+        format!("{} banks", spec.banks),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+    use crate::sim::stream::Stage;
+
+    fn random_sorted(rng: &mut Xoshiro256, n: usize, universe: u64) -> Vec<i32> {
+        let mut v: Vec<i32> = (0..n).map(|_| rng.below(universe) as i32).collect();
+        v.sort_unstable();
+        v
+    }
+
+    fn wl<'x>(a: &'x [i32], b: &'x [i32]) -> SimWorkload<'x> {
+        SimWorkload { a, b, writeback: false, stage: Stage::Both }
+    }
+
+    #[test]
+    fn near_linear_to_16_cores_small_arrays() {
+        let mut rng = Xoshiro256::seeded(0x21);
+        // 32K elements per array — fits the 1MB shared cache (§6.2).
+        let a = random_sorted(&mut rng, 32 * 1024, 1 << 28);
+        let b = random_sorted(&mut rng, 32 * 1024, 1 << 28);
+        let spec = hypercore_fpga32();
+        let w = wl(&a, &b);
+        let curve =
+            hypercore_speedup_curve(&spec, MergeAlgo::MergePath, &w, &[2, 4, 8, 16]);
+        for (p, s) in &curve {
+            assert!(
+                *s > 0.7 * *p as f64,
+                "speedup at p={p} is {s:.2}, expected near-linear ({curve:?})"
+            );
+        }
+    }
+
+    #[test]
+    fn segmented_beats_regular_on_large_arrays_at_32() {
+        let mut rng = Xoshiro256::seeded(0x22);
+        // 1M elements per array — 8MB total footprint ≫ 1MB cache.
+        let n = 1 << 19; // scaled to keep test time sane
+        let a = random_sorted(&mut rng, n, 1 << 30);
+        let b = random_sorted(&mut rng, n, 1 << 30);
+        let mut spec = hypercore_fpga32();
+        spec.cache_capacity /= 4; // keep N/C of the paper's 1M case
+        let w = wl(&a, &b);
+        let cache_elems = spec.cache_capacity / 4;
+        let reg = simulate_hypercore(&spec, MergeAlgo::MergePath, &w, 32);
+        let seg = simulate_hypercore(
+            &spec,
+            MergeAlgo::Segmented { segment_len: cache_elems / 3 },
+            &w,
+            32,
+        );
+        assert!(
+            seg.cache.misses() <= reg.cache.misses(),
+            "segmented misses {} > regular {}",
+            seg.cache.misses(),
+            reg.cache.misses()
+        );
+    }
+
+    #[test]
+    fn bank_conflicts_grow_with_cores() {
+        let mut rng = Xoshiro256::seeded(0x23);
+        let a = random_sorted(&mut rng, 64 * 1024, 1 << 28);
+        let b = random_sorted(&mut rng, 64 * 1024, 1 << 28);
+        let spec = hypercore_fpga32();
+        let w = wl(&a, &b);
+        let r4 = simulate_hypercore(&spec, MergeAlgo::MergePath, &w, 4);
+        let r32 = simulate_hypercore(&spec, MergeAlgo::MergePath, &w, 32);
+        assert!(r32.bank_conflicts >= r4.bank_conflicts);
+    }
+
+    #[test]
+    fn dispatch_overhead_is_tiny() {
+        let spec = hypercore_fpga32();
+        assert!(spec.dispatch < 20);
+        assert!(spec.barrier < 50);
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut rng = Xoshiro256::seeded(0x24);
+        let a = random_sorted(&mut rng, 10_000, 1 << 20);
+        let b = random_sorted(&mut rng, 10_000, 1 << 20);
+        let spec = hypercore_fpga32();
+        let w = wl(&a, &b);
+        let r1 = simulate_hypercore(&spec, MergeAlgo::MergePath, &w, 8);
+        let r2 = simulate_hypercore(&spec, MergeAlgo::MergePath, &w, 8);
+        assert_eq!(r1.cycles, r2.cycles);
+    }
+}

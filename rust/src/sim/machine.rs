@@ -1,0 +1,202 @@
+//! Machine models — the paper's Table 2 systems plus defaults used by
+//! the figure benches.
+
+use super::cache::{CacheConfig, ReplacementPolicy};
+use super::mem::MemSpec;
+
+/// A simulated shared-memory x86 machine (Table 2 geometry).
+#[derive(Debug, Clone, Copy)]
+pub struct MachineSpec {
+    /// Human-readable name (appears in the bench tables).
+    pub name: &'static str,
+    /// Number of sockets (each with its own L3 + memory channels).
+    pub sockets: usize,
+    /// Cores per socket.
+    pub cores_per_socket: usize,
+    /// Memory hierarchy parameters.
+    pub mem: MemSpec,
+    /// Per-socket DRAM bandwidth in bytes/cycle.
+    pub dram_bytes_per_cycle: f64,
+    /// Barrier cost model: `base + per_level · ⌈log₂ p⌉` cycles.
+    pub barrier_base: u64,
+    /// Per-tree-level barrier cost.
+    pub barrier_per_level: u64,
+    /// One-time parallel-region fork cost (OpenMP dispatch).
+    pub fork_cost: u64,
+    /// Non-memory cycles per merge step (compare + branch + bump).
+    pub cpi_step: u64,
+    /// Non-memory cycles per binary-search probe.
+    pub cpi_probe: u64,
+}
+
+impl MachineSpec {
+    /// Total cores.
+    pub fn cores(&self) -> usize {
+        self.sockets * self.cores_per_socket
+    }
+
+    /// Barrier cost for `p` participants.
+    pub fn barrier_cost(&self, p: usize) -> u64 {
+        if p <= 1 {
+            return 0;
+        }
+        let levels = usize::BITS - (p - 1).leading_zeros();
+        self.barrier_base + self.barrier_per_level * levels as u64
+    }
+
+    /// Scale the machine for `1/scale`-size simulations: the benches
+    /// shrink the paper's array sizes by `scale` to keep simulation
+    /// time sane; shrinking cache capacities by the same factor
+    /// preserves every N/C ratio, and shrinking the fixed
+    /// synchronization costs (barrier, fork) preserves every
+    /// sync-to-work ratio — see DESIGN.md §2. Associativity, line size
+    /// and per-access latencies are unchanged.
+    pub fn scaled_caches(mut self, scale: usize) -> Self {
+        assert!(scale >= 1);
+        let fix = |c: &mut CacheConfig| {
+            c.capacity = (c.capacity / scale).max(c.line * c.ways);
+        };
+        fix(&mut self.mem.l1);
+        fix(&mut self.mem.l2);
+        fix(&mut self.mem.l3);
+        self.barrier_base = (self.barrier_base / scale as u64).max(1);
+        self.barrier_per_level = (self.barrier_per_level / scale as u64).max(1);
+        self.fork_cost = (self.fork_cost / scale as u64).max(1);
+        self
+    }
+}
+
+const LINE: usize = 64;
+
+fn cache(capacity: usize, ways: usize) -> CacheConfig {
+    CacheConfig {
+        capacity,
+        line: LINE,
+        ways,
+        policy: ReplacementPolicy::Lru,
+    }
+}
+
+/// 12-core system of Fig. 4: 2 × Intel X5670 (6 cores/socket),
+/// 32KB L1, 256KB L2, 12MB shared L3, 12GB DDR3 (Table 2, row 1).
+pub fn x5670_12() -> MachineSpec {
+    MachineSpec {
+        name: "2x X5670 (12 cores)",
+        sockets: 2,
+        cores_per_socket: 6,
+        mem: MemSpec {
+            l1: cache(32 * 1024, 8),
+            l1_latency: 4,
+            l2: cache(256 * 1024, 8),
+            l2_latency: 11,
+            l3: cache(12 * 1024 * 1024, 16),
+            l3_latency: 40,
+            dram_latency: 180,
+            stream_fill: 24,
+            invalidation_cost: 120,
+        },
+        // Effective achievable stream bandwidth per socket (mixed
+        // read/write streams reach well below the 32 GB/s peak):
+        // ~16 GB/s at 2.93 GHz ≈ 5.5 B/cycle.
+        dram_bytes_per_cycle: 5.5,
+        barrier_base: 1200,
+        barrier_per_level: 600,
+        fork_cost: 8000,
+        cpi_step: 3,
+        cpi_probe: 4,
+    }
+}
+
+/// 40-core system of Fig. 5: 4 × Intel E7-8870 (10 cores/socket),
+/// 32KB L1, 256KB L2, 30MB shared L3, 256GB (Table 2, row 2).
+/// Cross-socket coherence is pricier (4-socket ring).
+pub fn e7_8870_40() -> MachineSpec {
+    MachineSpec {
+        name: "4x E7-8870 (40 cores)",
+        sockets: 4,
+        cores_per_socket: 10,
+        mem: MemSpec {
+            l1: cache(32 * 1024, 8),
+            l1_latency: 4,
+            l2: cache(256 * 1024, 8),
+            l2_latency: 12,
+            l3: cache(30 * 1024 * 1024, 20),
+            l3_latency: 45,
+            dram_latency: 220,
+            stream_fill: 26,
+            invalidation_cost: 300,
+        },
+        // Effective achievable stream bandwidth per socket: ~8 GB/s
+        // at 2.4 GHz ≈ 3.5 B/cycle (Westmere-EX mixed read/write
+        // streams under full-socket load reach a fraction of peak).
+        dram_bytes_per_cycle: 3.5,
+        barrier_base: 2000,
+        barrier_per_level: 900,
+        fork_cost: 12000,
+        cpi_step: 3,
+        cpi_probe: 4,
+    }
+}
+
+/// Table 2 as printed by the `table2_systems` bench.
+pub fn table2_rows() -> Vec<[String; 8]> {
+    let specs = [x5670_12(), e7_8870_40()];
+    specs
+        .iter()
+        .map(|s| {
+            [
+                s.name.to_string(),
+                s.sockets.to_string(),
+                s.cores_per_socket.to_string(),
+                s.cores().to_string(),
+                format!("{}KB", s.mem.l1.capacity / 1024),
+                format!("{}KB", s.mem.l2.capacity / 1024),
+                format!("{}MB", s.mem.l3.capacity / 1024 / 1024),
+                format!("{:.0} B/cyc/socket", s.dram_bytes_per_cycle),
+            ]
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_geometry_matches_paper() {
+        let a = x5670_12();
+        assert_eq!(a.cores(), 12);
+        assert_eq!(a.mem.l1.capacity, 32 * 1024);
+        assert_eq!(a.mem.l2.capacity, 256 * 1024);
+        assert_eq!(a.mem.l3.capacity, 12 * 1024 * 1024);
+        let b = e7_8870_40();
+        assert_eq!(b.cores(), 40);
+        assert_eq!(b.mem.l3.capacity, 30 * 1024 * 1024);
+    }
+
+    #[test]
+    fn barrier_cost_grows_with_p() {
+        let m = x5670_12();
+        assert_eq!(m.barrier_cost(1), 0);
+        assert!(m.barrier_cost(2) < m.barrier_cost(12));
+        assert!(m.barrier_cost(12) > 0);
+    }
+
+    #[test]
+    fn scaled_caches_preserve_ratio() {
+        let m = e7_8870_40().scaled_caches(16);
+        assert_eq!(m.mem.l3.capacity, 30 * 1024 * 1024 / 16);
+        assert_eq!(m.mem.l1.capacity, 2 * 1024);
+        // Never below one full set row.
+        let tiny = x5670_12().scaled_caches(1 << 20);
+        assert!(tiny.mem.l1.capacity >= 64 * 8);
+    }
+
+    #[test]
+    fn table2_rows_shape() {
+        let rows = table2_rows();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0][3], "12");
+        assert_eq!(rows[1][3], "40");
+    }
+}

@@ -1,0 +1,339 @@
+//! Multi-level memory hierarchy: private L1/L2 per core, shared L3 per
+//! socket, MESI-lite directory coherence, and per-socket DRAM traffic
+//! accounting.
+//!
+//! Cost model notes (see DESIGN.md §2):
+//! - Sequential-stream DRAM fills are charged a *stream* cost
+//!   (`stream_fill` cycles) — hardware prefetchers hide most of the
+//!   latency for the merge loop's three sequential streams.
+//! - Random accesses (the partition stage's binary-search probes) pay
+//!   the full `dram_latency`.
+//! - Writes are write-allocate; dirty evictions from L3 count as DRAM
+//!   writeback bytes. The paper's "with write backs" mode additionally
+//!   flushes at the end ([`MemHierarchy::flush_all`]).
+//! - A write to a line resident in another core's private cache sends
+//!   invalidations (false sharing shows up here at line granularity).
+
+use super::cache::{CacheConfig, CacheStats, SetAssocCache};
+use std::collections::HashMap;
+
+/// Read or write, sequential (prefetchable) or random.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessKind {
+    /// Sequential-stream read (prefetch-friendly).
+    Read,
+    /// Random-access read (binary-search probe).
+    ReadRand,
+    /// Sequential-stream write (write-allocate).
+    Write,
+}
+
+impl AccessKind {
+    /// Whether this access dirties the line.
+    pub fn is_write(&self) -> bool {
+        matches!(self, AccessKind::Write)
+    }
+}
+
+/// Latency/geometry parameters for the hierarchy.
+#[derive(Debug, Clone, Copy)]
+pub struct MemSpec {
+    /// Private L1 per core.
+    pub l1: CacheConfig,
+    /// L1 hit latency (cycles).
+    pub l1_latency: u64,
+    /// Private L2 per core.
+    pub l2: CacheConfig,
+    /// L2 hit latency.
+    pub l2_latency: u64,
+    /// Shared L3 per socket.
+    pub l3: CacheConfig,
+    /// L3 hit latency.
+    pub l3_latency: u64,
+    /// DRAM latency for random accesses.
+    pub dram_latency: u64,
+    /// Effective cycles per line fill for sequential streams
+    /// (prefetcher-hidden latency).
+    pub stream_fill: u64,
+    /// Cost (cycles, charged to the writer) per coherence invalidation.
+    pub invalidation_cost: u64,
+}
+
+/// Aggregated statistics.
+#[derive(Debug, Clone, Default)]
+pub struct MemStats {
+    /// L1 stats summed over cores.
+    pub l1: CacheStats,
+    /// L2 stats summed over cores.
+    pub l2: CacheStats,
+    /// L3 stats summed over sockets.
+    pub l3: CacheStats,
+    /// DRAM line fills.
+    pub dram_fills: u64,
+    /// DRAM bytes moved (fills + writebacks), per socket.
+    pub dram_bytes_per_socket: Vec<u64>,
+    /// Coherence invalidations sent.
+    pub invalidations: u64,
+}
+
+impl MemStats {
+    /// Total DRAM bytes over all sockets.
+    pub fn dram_bytes(&self) -> u64 {
+        self.dram_bytes_per_socket.iter().sum()
+    }
+}
+
+struct CorePrivate {
+    l1: SetAssocCache,
+    l2: SetAssocCache,
+}
+
+/// The full hierarchy for one machine.
+pub struct MemHierarchy {
+    spec: MemSpec,
+    cores: Vec<CorePrivate>,
+    sockets: Vec<SetAssocCache>,
+    core_socket: Vec<usize>,
+    /// line id → bitmask of cores whose private caches may hold it.
+    directory: HashMap<u64, u64>,
+    invalidations: u64,
+    dram_fills: u64,
+    dram_bytes_per_socket: Vec<u64>,
+    line: u64,
+}
+
+impl MemHierarchy {
+    /// Build a hierarchy for `cores` cores spread over `sockets`
+    /// sockets. Mapping is *scatter* (round-robin: core `i` → socket
+    /// `i % sockets`), matching the NUMA-interleaved thread placement
+    /// the paper's 40-core runs used ("NUMA Contral package") — it
+    /// spreads memory traffic across all sockets' channels at every
+    /// thread count.
+    pub fn new(spec: MemSpec, cores: usize, sockets: usize) -> Self {
+        assert!(cores >= 1 && sockets >= 1);
+        let core_socket: Vec<usize> = (0..cores).map(|c| c % sockets).collect();
+        Self {
+            spec,
+            cores: (0..cores)
+                .map(|_| CorePrivate {
+                    l1: SetAssocCache::new(spec.l1),
+                    l2: SetAssocCache::new(spec.l2),
+                })
+                .collect(),
+            sockets: (0..sockets).map(|_| SetAssocCache::new(spec.l3)).collect(),
+            core_socket,
+            directory: HashMap::new(),
+            invalidations: 0,
+            dram_fills: 0,
+            dram_bytes_per_socket: vec![0; sockets],
+            line: spec.l1.line as u64,
+        }
+    }
+
+    /// Socket of a core.
+    pub fn socket_of(&self, core: usize) -> usize {
+        self.core_socket[core]
+    }
+
+    /// Simulate one access by `core`; returns its cost in cycles.
+    pub fn access(&mut self, core: usize, addr: u64, kind: AccessKind) -> u64 {
+        let spec = self.spec;
+        let line_id = addr / self.line;
+        let mut cost = 0u64;
+
+        // Coherence: writes invalidate other cores' private copies.
+        if kind.is_write() {
+            let mask = self.directory.entry(line_id).or_insert(0);
+            let others = *mask & !(1u64 << core);
+            if others != 0 {
+                let mut m = others;
+                while m != 0 {
+                    let other = m.trailing_zeros() as usize;
+                    m &= m - 1;
+                    self.cores[other].l1.invalidate(addr);
+                    self.cores[other].l2.invalidate(addr);
+                    self.invalidations += 1;
+                    cost += spec.invalidation_cost;
+                }
+            }
+            *self.directory.get_mut(&line_id).unwrap() = 1u64 << core;
+        }
+
+        // L1.
+        let l1_hit = self.cores[core].l1.access(addr, kind.is_write());
+        cost += spec.l1_latency;
+        if l1_hit {
+            return cost;
+        }
+        // Register this core as a sharer (fill on the way back).
+        if !kind.is_write() {
+            *self.directory.entry(line_id).or_insert(0) |= 1u64 << core;
+        }
+
+        // L2.
+        let l2_hit = self.cores[core].l2.access(addr, kind.is_write());
+        cost += spec.l2_latency;
+        if l2_hit {
+            return cost;
+        }
+
+        // L3 (shared per socket).
+        let socket = self.core_socket[core];
+        let l3_before_wb = self.sockets[socket].stats().writebacks;
+        let l3_hit = self.sockets[socket].access(addr, kind.is_write());
+        cost += spec.l3_latency;
+        // L3 dirty evictions go to DRAM.
+        let wb = self.sockets[socket].stats().writebacks - l3_before_wb;
+        self.dram_bytes_per_socket[socket] += wb * self.line;
+        if l3_hit {
+            return cost;
+        }
+
+        // DRAM.
+        self.dram_fills += 1;
+        self.dram_bytes_per_socket[socket] += self.line;
+        cost += match kind {
+            AccessKind::ReadRand => spec.dram_latency,
+            _ => spec.stream_fill,
+        };
+        cost
+    }
+
+    /// Flush all caches (writeback mode end-of-run accounting). Returns
+    /// total lines written back from L3s to DRAM.
+    pub fn flush_all(&mut self) -> u64 {
+        // Private-cache dirty lines drain into L3 (not counted as DRAM),
+        // then L3 flush counts DRAM bytes.
+        for core in &mut self.cores {
+            core.l1.flush();
+            core.l2.flush();
+        }
+        let mut total = 0u64;
+        for (s, l3) in self.sockets.iter_mut().enumerate() {
+            let wb = l3.flush();
+            self.dram_bytes_per_socket[s] += wb * self.line;
+            total += wb;
+        }
+        total
+    }
+
+    /// Aggregate statistics.
+    pub fn stats(&self) -> MemStats {
+        let mut st = MemStats {
+            dram_fills: self.dram_fills,
+            dram_bytes_per_socket: self.dram_bytes_per_socket.clone(),
+            invalidations: self.invalidations,
+            ..Default::default()
+        };
+        for c in &self.cores {
+            st.l1.merge(&c.l1.stats());
+            st.l2.merge(&c.l2.stats());
+        }
+        for s in &self.sockets {
+            st.l3.merge(&s.stats());
+        }
+        st
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::cache::ReplacementPolicy;
+
+    fn tiny_spec() -> MemSpec {
+        let mk = |cap: usize, ways: usize| CacheConfig {
+            capacity: cap,
+            line: 64,
+            ways,
+            policy: ReplacementPolicy::Lru,
+        };
+        MemSpec {
+            l1: mk(512, 2),
+            l1_latency: 4,
+            l2: mk(2048, 4),
+            l2_latency: 12,
+            l3: mk(8192, 8),
+            l3_latency: 40,
+            dram_latency: 200,
+            stream_fill: 30,
+            invalidation_cost: 80,
+        }
+    }
+
+    #[test]
+    fn hit_path_costs_add_up() {
+        let mut m = MemHierarchy::new(tiny_spec(), 2, 1);
+        // Cold miss: L1+L2+L3+stream fill.
+        let c0 = m.access(0, 0, AccessKind::Read);
+        assert_eq!(c0, 4 + 12 + 40 + 30);
+        // Now in L1.
+        let c1 = m.access(0, 0, AccessKind::Read);
+        assert_eq!(c1, 4);
+        // Random cold miss pays full DRAM latency.
+        let c2 = m.access(0, 4096, AccessKind::ReadRand);
+        assert_eq!(c2, 4 + 12 + 40 + 200);
+    }
+
+    #[test]
+    fn l3_shared_within_socket() {
+        let mut m = MemHierarchy::new(tiny_spec(), 2, 1);
+        m.access(0, 0, AccessKind::Read); // core 0 pulls into shared L3
+        let c = m.access(1, 0, AccessKind::Read); // core 1: L3 hit
+        assert_eq!(c, 4 + 12 + 40);
+    }
+
+    #[test]
+    fn l3_not_shared_across_sockets() {
+        let mut m = MemHierarchy::new(tiny_spec(), 2, 2);
+        m.access(0, 0, AccessKind::Read);
+        let c = m.access(1, 0, AccessKind::Read); // other socket: DRAM again
+        assert_eq!(c, 4 + 12 + 40 + 30);
+        assert_eq!(m.stats().dram_fills, 2);
+    }
+
+    #[test]
+    fn write_invalidates_other_cores() {
+        let mut m = MemHierarchy::new(tiny_spec(), 2, 1);
+        m.access(0, 0, AccessKind::Read); // core 0 caches line
+        m.access(1, 0, AccessKind::Read); // core 1 caches line
+        let c = m.access(1, 0, AccessKind::Write); // invalidate core 0
+        assert!(c >= 80, "writer pays invalidation cost, got {c}");
+        assert_eq!(m.stats().invalidations, 1);
+        // Core 0 must re-fetch.
+        let c0 = m.access(0, 0, AccessKind::Read);
+        assert!(c0 > 4, "core 0's copy was invalidated");
+    }
+
+    #[test]
+    fn false_sharing_same_line_different_addrs() {
+        let mut m = MemHierarchy::new(tiny_spec(), 2, 1);
+        m.access(0, 0, AccessKind::Write); // core 0 writes byte 0
+        let c = m.access(1, 32, AccessKind::Write); // core 1, same 64B line!
+        assert!(c >= 80);
+        assert_eq!(m.stats().invalidations, 1);
+    }
+
+    #[test]
+    fn dram_byte_accounting_and_flush() {
+        let mut m = MemHierarchy::new(tiny_spec(), 1, 1);
+        for i in 0..64u64 {
+            m.access(0, i * 64, AccessKind::Write); // 64 dirty lines
+        }
+        let before = m.stats().dram_bytes();
+        assert!(before >= 64 * 64); // all fills counted
+        m.flush_all();
+        let after = m.stats().dram_bytes();
+        // Flush adds writeback bytes for dirty lines still resident.
+        assert!(after > before);
+    }
+
+    #[test]
+    fn socket_mapping_scatter() {
+        let m = MemHierarchy::new(tiny_spec(), 8, 2);
+        assert_eq!(m.socket_of(0), 0);
+        assert_eq!(m.socket_of(1), 1);
+        assert_eq!(m.socket_of(2), 0);
+        assert_eq!(m.socket_of(7), 1);
+    }
+}

@@ -1,0 +1,40 @@
+//! Deterministic machine simulators.
+//!
+//! The paper's evaluation ran on hardware this build environment does
+//! not have (12-core X5670, 40-core E7-8870, Plurality HyperCore FPGA —
+//! Table 2) and the build host exposes a single core, so *speedup*
+//! cannot be measured as wallclock. Instead, every figure is
+//! regenerated through a virtual-time execution model driven by the
+//! **real access patterns** of the algorithms:
+//!
+//! - [`cache`] — set-associative cache with LRU/FIFO replacement and
+//!   compulsory/capacity/conflict miss classification (§4.2).
+//! - [`mem`] — a full private-L1/L2 + shared-per-socket-L3 hierarchy
+//!   with a MESI-lite directory (invalidations, false sharing) and
+//!   per-socket DRAM bandwidth accounting.
+//! - [`machine`] — the Table 2 machine models plus the HyperCore.
+//! - [`stream`] — per-thread memory access streams for each algorithm
+//!   (Merge Path, SPM, Shiloach–Vishkin, Akl–Santoro, bitonic), built
+//!   from the same partition code the real implementations use.
+//! - [`engine`] — the virtual-time engine: round-robin interleaving of
+//!   thread streams through the hierarchy, makespan + bandwidth bound.
+//! - [`hypercore`] — the Plurality shared banked-cache UMA model
+//!   (§6.2): bank-conflict serialization, no private caches,
+//!   few-cycle dispatch.
+//!
+//! Approximations are documented in DESIGN.md §2; every simulated
+//! algorithm's *output* is asserted equal to the real implementation's
+//! in tests, so the access streams are faithful by construction.
+
+pub mod cache;
+pub mod engine;
+pub mod hypercore;
+pub mod machine;
+pub mod mem;
+pub mod stream;
+
+pub use cache::{CacheConfig, CacheStats, ReplacementPolicy, SetAssocCache};
+pub use engine::{simulate_merge, MergeAlgo, SimReport, SimWorkload};
+pub use hypercore::{simulate_hypercore, HyperCoreSpec};
+pub use machine::MachineSpec;
+pub use mem::{AccessKind, MemHierarchy, MemStats};

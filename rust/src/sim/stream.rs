@@ -1,0 +1,476 @@
+//! Per-thread memory access streams for the simulated algorithms.
+//!
+//! Each function replays one thread's work — steering on the *real*
+//! data with the *same* partition routines the live implementations
+//! use — and records the memory events. The virtual-time engine then
+//! charges them against the machine model.
+//!
+//! Event conventions (cf. §4.2 of the paper): the two-finger merge
+//! reads one new element per step (the loser of the previous comparison
+//! stays in a register) and writes one output element; binary-search
+//! probes are random accesses (2 reads per probe: one in `A`, one in
+//! `B`).
+
+use crate::mergepath::diagonal::{diagonal_intersection, PathPoint};
+
+/// One memory event (addresses are simulated byte addresses).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Ev {
+    /// Sequential read.
+    Read(u64),
+    /// Random (binary-search) read.
+    ReadRand(u64),
+    /// Sequential write.
+    Write(u64),
+    /// Synchronization point (all threads of the region).
+    Barrier,
+}
+
+/// Which pipeline stage to record (Table 1 splits partition vs merge).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Only the partition-stage probes.
+    Partition,
+    /// Only the merge loop.
+    Merge,
+    /// Everything.
+    Both,
+}
+
+impl Stage {
+    fn partition(&self) -> bool {
+        matches!(self, Stage::Partition | Stage::Both)
+    }
+    fn merge(&self) -> bool {
+        matches!(self, Stage::Merge | Stage::Both)
+    }
+}
+
+/// Address layout of the three arrays in simulated memory.
+#[derive(Debug, Clone, Copy)]
+pub struct Layout {
+    /// Base address of `A`.
+    pub base_a: u64,
+    /// Base address of `B`.
+    pub base_b: u64,
+    /// Base address of the output `S`.
+    pub base_s: u64,
+    /// Element size in bytes (the paper's experiments use 32-bit ints).
+    pub elem: u64,
+}
+
+impl Layout {
+    /// A, B, S laid out consecutively, each base aligned to a 64-byte
+    /// cache line (as any real allocator returns for large arrays),
+    /// 4-byte elements.
+    pub fn contiguous(na: usize, nb: usize) -> Self {
+        let elem = 4u64;
+        let align = |x: u64| x.div_ceil(64) * 64;
+        let base_b = align(na as u64 * elem);
+        let base_s = align(base_b + nb as u64 * elem);
+        Self { base_a: 0, base_b, base_s, elem }
+    }
+
+    #[inline]
+    fn a(&self, i: usize) -> u64 {
+        self.base_a + i as u64 * self.elem
+    }
+    #[inline]
+    fn b(&self, j: usize) -> u64 {
+        self.base_b + j as u64 * self.elem
+    }
+    #[inline]
+    fn s(&self, k: usize) -> u64 {
+        self.base_s + k as u64 * self.elem
+    }
+}
+
+/// Mirror of [`diagonal_intersection`]'s binary search that records its
+/// probe pattern. Debug-asserted to agree with the real routine.
+fn emit_diagonal_search(
+    a: &[i32],
+    b: &[i32],
+    diag: usize,
+    layout: &Layout,
+    out: &mut Vec<Ev>,
+) -> PathPoint {
+    let mut lo = diag.saturating_sub(b.len());
+    let mut hi = diag.min(a.len());
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        out.push(Ev::ReadRand(layout.a(mid)));
+        out.push(Ev::ReadRand(layout.b(diag - 1 - mid)));
+        if a[mid] <= b[diag - 1 - mid] {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    let pt = PathPoint { a: lo, b: diag - lo };
+    debug_assert_eq!(pt, diagonal_intersection(a, b, diag));
+    pt
+}
+
+/// Replay a bounded two-finger merge of `len` outputs starting at
+/// `(a0, b0)` (global indices) writing to output index `out0`.
+/// One sequential read per consumed element, one write per output
+/// (skipped when `writeback` is false — the paper's register mode).
+#[allow(clippy::too_many_arguments)]
+fn emit_merge(
+    a: &[i32],
+    b: &[i32],
+    a0: usize,
+    b0: usize,
+    out0: usize,
+    len: usize,
+    writeback: bool,
+    layout: &Layout,
+    out: &mut Vec<Ev>,
+) {
+    let (mut i, mut j) = (a0, b0);
+    for k in 0..len {
+        let take_a = i < a.len() && (j >= b.len() || a[i] <= b[j]);
+        if take_a {
+            out.push(Ev::Read(layout.a(i)));
+            i += 1;
+        } else {
+            out.push(Ev::Read(layout.b(j)));
+            j += 1;
+        }
+        if writeback {
+            out.push(Ev::Write(layout.s(out0 + k)));
+        }
+    }
+}
+
+/// Thread `tid`'s events for the regular Merge Path (Alg 1).
+pub fn merge_path_events(
+    a: &[i32],
+    b: &[i32],
+    p: usize,
+    tid: usize,
+    writeback: bool,
+    stage: Stage,
+    layout: &Layout,
+) -> Vec<Ev> {
+    assert!(p > 0 && tid < p);
+    let n = a.len() + b.len();
+    let d0 = tid * n / p;
+    let d1 = (tid + 1) * n / p;
+    let mut out = Vec::new();
+    let start = if stage.partition() {
+        emit_diagonal_search(a, b, d0, layout, &mut out)
+    } else {
+        diagonal_intersection(a, b, d0)
+    };
+    if stage.merge() {
+        emit_merge(a, b, start.a, start.b, d0, d1 - d0, writeback, layout, &mut out);
+    }
+    out
+}
+
+/// Thread `tid`'s events for Segmented Parallel Merge (Alg 3) with
+/// path-segment length `l`. A [`Ev::Barrier`] separates segments.
+#[allow(clippy::too_many_arguments)]
+pub fn spm_events(
+    a: &[i32],
+    b: &[i32],
+    l: usize,
+    p: usize,
+    tid: usize,
+    writeback: bool,
+    stage: Stage,
+    layout: &Layout,
+) -> Vec<Ev> {
+    assert!(p > 0 && tid < p && l > 0);
+    let n = a.len() + b.len();
+    let mut out = Vec::new();
+    let (mut a0, mut b0, mut done) = (0usize, 0usize, 0usize);
+    while done < n {
+        let wlen = l.min(n - done);
+        let a_win = &a[a0..(a0 + wlen).min(a.len())];
+        let b_win = &b[b0..(b0 + wlen).min(b.len())];
+        let wl = Layout {
+            base_a: layout.a(a0),
+            base_b: layout.b(b0),
+            base_s: layout.s(done),
+            elem: layout.elem,
+        };
+        let d0 = tid * wlen / p;
+        let d1 = (tid + 1) * wlen / p;
+        let start = if stage.partition() {
+            emit_diagonal_search(a_win, b_win, d0, &wl, &mut out)
+        } else {
+            diagonal_intersection(a_win, b_win, d0)
+        };
+        if stage.merge() {
+            emit_merge(
+                a_win, b_win, start.a, start.b, d0, d1 - d0, writeback, &wl, &mut out,
+            );
+        }
+        // Advance the cursor. §4.3: "each of the p cores must compute
+        // its starting points (in A and in B) independently" — every
+        // thread replicates the window-end search (CREW reads), which
+        // keeps the per-segment load symmetric instead of creating a
+        // leader straggler at the barrier.
+        let end = if stage.partition() {
+            emit_diagonal_search(a_win, b_win, wlen, &wl, &mut out)
+        } else {
+            diagonal_intersection(a_win, b_win, wlen)
+        };
+        a0 += end.a;
+        b0 += end.b;
+        done += wlen;
+        out.push(Ev::Barrier);
+    }
+    out
+}
+
+/// Thread `tid`'s events for Shiloach–Vishkin (round-robin chunk deal,
+/// same decomposition as [`crate::baselines::shiloach_vishkin`]).
+pub fn sv_events(
+    a: &[i32],
+    b: &[i32],
+    p: usize,
+    tid: usize,
+    writeback: bool,
+    stage: Stage,
+    layout: &Layout,
+) -> Vec<Ev> {
+    assert!(p > 0 && tid < p);
+    let chunks = crate::baselines::shiloach_vishkin::sv_chunks(a, b, p);
+    let mut out = Vec::new();
+    if stage.partition() && tid < p.saturating_sub(1).max(1) {
+        // Fragment-boundary ranking: boundary i+1 is searched by thread
+        // i — one lower_bound in B for the A boundary, one upper_bound
+        // in A for the B boundary. Emit the probe pattern (log₂ n each).
+        let i = tid + 1;
+        if i < p {
+            let ai = i * a.len() / p;
+            if ai > 0 && ai < a.len() {
+                emit_binary_probes(b.len(), |m| layout.b(m), &mut out);
+                out.push(Ev::ReadRand(layout.a(ai)));
+            }
+            let bj = i * b.len() / p;
+            if bj > 0 && bj < b.len() {
+                emit_binary_probes(a.len(), |m| layout.a(m), &mut out);
+                out.push(Ev::ReadRand(layout.b(bj)));
+            }
+        }
+    }
+    if stage.merge() {
+        for (idx, c) in chunks.iter().enumerate() {
+            if crate::baselines::shiloach_vishkin::sv_owner(idx, p) != tid {
+                continue;
+            }
+            emit_merge(
+                a,
+                b,
+                c.a0,
+                c.b0,
+                c.out0,
+                (c.a1 - c.a0) + (c.b1 - c.b0),
+                writeback,
+                layout,
+                &mut out,
+            );
+        }
+    }
+    out
+}
+
+/// Thread `tid`'s events for Akl–Santoro: `⌈log₂ p⌉` *dependent*
+/// bisection rounds (a barrier after each), then sequential merges of
+/// the assigned parts.
+pub fn akl_santoro_events(
+    a: &[i32],
+    b: &[i32],
+    p: usize,
+    tid: usize,
+    writeback: bool,
+    stage: Stage,
+    layout: &Layout,
+) -> Vec<Ev> {
+    assert!(p > 0 && tid < p);
+    let (parts, rounds) = crate::baselines::akl_santoro::as_partitions(a, b, p);
+    let mut out = Vec::new();
+    if stage.partition() {
+        // Round r has 2^r median searches; thread `tid` performs those
+        // with index ≡ tid (mod p). Each search is ~log₂(part length)
+        // probes; we charge probes over the whole arrays as an upper
+        // bound on the first rounds, halving each round.
+        let mut span = a.len() + b.len();
+        for r in 0..rounds {
+            let searches = 1usize << r;
+            let mut s = tid;
+            while s < searches {
+                emit_binary_probes(span.max(2), |m| layout.a(m % a.len().max(1)), &mut out);
+                s += p;
+            }
+            span = (span / 2).max(2);
+            out.push(Ev::Barrier);
+        }
+    }
+    if stage.merge() {
+        let mut idx = tid;
+        while idx < parts.len() {
+            let pt = parts[idx];
+            emit_merge(
+                a,
+                b,
+                pt.a0,
+                pt.b0,
+                pt.out0,
+                (pt.a1 - pt.a0) + (pt.b1 - pt.b0),
+                writeback,
+                layout,
+                &mut out,
+            );
+            idx += p;
+        }
+    }
+    out
+}
+
+/// Emit the access pattern of a binary search over `n` slots.
+fn emit_binary_probes(n: usize, addr_of: impl Fn(usize) -> u64, out: &mut Vec<Ev>) {
+    let (mut lo, mut hi) = (0usize, n);
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        out.push(Ev::ReadRand(addr_of(mid)));
+        // Probe pattern only; direction is irrelevant for cost, pick one
+        // deterministically to terminate.
+        if mid % 2 == 0 {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn random_sorted(rng: &mut Xoshiro256, n: usize, universe: u64) -> Vec<i32> {
+        let mut v: Vec<i32> = (0..n).map(|_| rng.below(universe) as i32).collect();
+        v.sort_unstable();
+        v
+    }
+
+    fn count_reads(evs: &[Ev]) -> usize {
+        evs.iter().filter(|e| matches!(e, Ev::Read(_))).count()
+    }
+    fn count_writes(evs: &[Ev]) -> usize {
+        evs.iter().filter(|e| matches!(e, Ev::Write(_))).count()
+    }
+
+    #[test]
+    fn merge_path_streams_cover_exactly_n() {
+        let mut rng = Xoshiro256::seeded(0xE1);
+        let a = random_sorted(&mut rng, 503, 1000);
+        let b = random_sorted(&mut rng, 301, 1000);
+        let layout = Layout::contiguous(a.len(), b.len());
+        let n = a.len() + b.len();
+        for p in [1, 4, 7] {
+            let mut reads = 0;
+            let mut writes = 0;
+            for tid in 0..p {
+                let evs = merge_path_events(&a, &b, p, tid, true, Stage::Both, &layout);
+                reads += count_reads(&evs);
+                writes += count_writes(&evs);
+            }
+            assert_eq!(reads, n, "p={p}");
+            assert_eq!(writes, n, "p={p}");
+        }
+    }
+
+    #[test]
+    fn register_mode_has_no_writes() {
+        let mut rng = Xoshiro256::seeded(0xE2);
+        let a = random_sorted(&mut rng, 100, 50);
+        let b = random_sorted(&mut rng, 100, 50);
+        let layout = Layout::contiguous(100, 100);
+        for tid in 0..4 {
+            let evs = merge_path_events(&a, &b, 4, tid, false, Stage::Both, &layout);
+            assert_eq!(count_writes(&evs), 0);
+        }
+    }
+
+    #[test]
+    fn spm_streams_cover_exactly_n_and_barrier_per_segment() {
+        let mut rng = Xoshiro256::seeded(0xE3);
+        let a = random_sorted(&mut rng, 400, 500);
+        let b = random_sorted(&mut rng, 330, 500);
+        let layout = Layout::contiguous(a.len(), b.len());
+        let n = a.len() + b.len();
+        let l = 100;
+        let p = 4;
+        let mut reads = 0;
+        let mut writes = 0;
+        for tid in 0..p {
+            let evs = spm_events(&a, &b, l, p, tid, true, Stage::Both, &layout);
+            reads += count_reads(&evs);
+            writes += count_writes(&evs);
+            let barriers = evs.iter().filter(|e| matches!(e, Ev::Barrier)).count();
+            assert_eq!(barriers, n.div_ceil(l), "tid={tid}");
+        }
+        assert_eq!(reads, n);
+        assert_eq!(writes, n);
+    }
+
+    #[test]
+    fn partition_stage_probe_counts_are_logarithmic() {
+        let mut rng = Xoshiro256::seeded(0xE4);
+        let a = random_sorted(&mut rng, 1 << 12, 1 << 20);
+        let b = random_sorted(&mut rng, 1 << 12, 1 << 20);
+        let layout = Layout::contiguous(a.len(), b.len());
+        // Thread p/2 searches the main diagonal: ≤ 2·log₂(min) probes.
+        let evs = merge_path_events(&a, &b, 8, 4, true, Stage::Partition, &layout);
+        let probes = evs.iter().filter(|e| matches!(e, Ev::ReadRand(_))).count();
+        assert!(probes <= 2 * 13, "probes={probes}");
+        assert!(probes >= 2, "main diagonal needs at least one probe");
+        assert_eq!(count_reads(&evs), 0);
+        assert_eq!(count_writes(&evs), 0);
+    }
+
+    #[test]
+    fn sv_and_as_streams_cover_exactly_n() {
+        let mut rng = Xoshiro256::seeded(0xE5);
+        let a = random_sorted(&mut rng, 511, 300);
+        let b = random_sorted(&mut rng, 257, 300);
+        let layout = Layout::contiguous(a.len(), b.len());
+        let n = a.len() + b.len();
+        for p in [1, 3, 8] {
+            let (mut r_sv, mut w_sv, mut r_as, mut w_as) = (0, 0, 0, 0);
+            for tid in 0..p {
+                let evs = sv_events(&a, &b, p, tid, true, Stage::Merge, &layout);
+                r_sv += count_reads(&evs);
+                w_sv += count_writes(&evs);
+                let evs = akl_santoro_events(&a, &b, p, tid, true, Stage::Merge, &layout);
+                r_as += count_reads(&evs);
+                w_as += count_writes(&evs);
+            }
+            assert_eq!((r_sv, w_sv), (n, n), "sv p={p}");
+            assert_eq!((r_as, w_as), (n, n), "as p={p}");
+        }
+    }
+
+    #[test]
+    fn addresses_land_in_the_right_arrays() {
+        let a = vec![1i32, 3, 5];
+        let b = vec![2i32, 4, 6];
+        let layout = Layout::contiguous(3, 3);
+        let evs = merge_path_events(&a, &b, 1, 0, true, Stage::Both, &layout);
+        for e in &evs {
+            match e {
+                Ev::Read(addr) => assert!(*addr < layout.base_s),
+                Ev::Write(addr) => {
+                    assert!(*addr >= layout.base_s && *addr < layout.base_s + 24)
+                }
+                _ => {}
+            }
+        }
+    }
+}

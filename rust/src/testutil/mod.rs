@@ -1,0 +1,262 @@
+//! In-tree property-testing runner (proptest is unavailable offline).
+//!
+//! Minimal but honest: seeded generation, configurable case count, and
+//! greedy input shrinking on failure. Used by the `proptests.rs`
+//! integration suite to check the paper's invariants over thousands of
+//! random instances.
+//!
+//! ```no_run
+//! // (no_run: rustdoc test binaries lack the libxla rpath in this
+//! // offline image; the same code runs in rust/tests/proptests.rs)
+//! use mergeflow::testutil::{Prop, sorted_vec};
+//! Prop::new(0xDEAD_BEEF).cases(200).run(
+//!     |rng| sorted_vec(rng, 0..100, 0..50),
+//!     |v| v.windows(2).all(|w| w[0] <= w[1]),
+//! );
+//! ```
+
+use crate::rng::Xoshiro256;
+
+/// Property runner: generates `cases` inputs from a seeded RNG, checks
+/// the property, and shrinks on failure.
+#[derive(Debug, Clone)]
+pub struct Prop {
+    seed: u64,
+    cases: usize,
+}
+
+impl Prop {
+    /// New runner with the given seed (printed on failure for replay).
+    pub fn new(seed: u64) -> Self {
+        Self { seed, cases: 100 }
+    }
+
+    /// Set the number of generated cases.
+    pub fn cases(mut self, cases: usize) -> Self {
+        self.cases = cases;
+        self
+    }
+
+    /// Run `check` on `cases` inputs produced by `gen`. On failure,
+    /// greedily shrinks via [`Shrink`] and panics with the minimal
+    /// counterexample found.
+    pub fn run<T, G, C>(&self, mut generate: G, check: C)
+    where
+        T: Shrink + std::fmt::Debug,
+        G: FnMut(&mut Xoshiro256) -> T,
+        C: Fn(&T) -> bool,
+    {
+        let mut rng = Xoshiro256::seeded(self.seed);
+        for case in 0..self.cases {
+            let input = generate(&mut rng);
+            if !check(&input) {
+                let minimal = shrink_loop(input, &check);
+                panic!(
+                    "property failed (seed={:#x}, case={case}); minimal counterexample: {minimal:?}",
+                    self.seed
+                );
+            }
+        }
+    }
+}
+
+/// Greedy shrink: repeatedly take the first shrink candidate that still
+/// fails, until none fails.
+fn shrink_loop<T: Shrink + std::fmt::Debug, C: Fn(&T) -> bool>(mut failing: T, check: &C) -> T {
+    let mut budget = 10_000usize; // hard cap against pathological shrinkers
+    'outer: while budget > 0 {
+        for cand in failing.shrink_candidates() {
+            budget -= 1;
+            if !check(&cand) {
+                failing = cand;
+                continue 'outer;
+            }
+            if budget == 0 {
+                break;
+            }
+        }
+        break;
+    }
+    failing
+}
+
+/// Types that can propose smaller versions of themselves.
+pub trait Shrink: Sized {
+    /// Candidate shrinks, roughly in decreasing aggressiveness.
+    fn shrink_candidates(&self) -> Vec<Self>;
+}
+
+impl Shrink for Vec<i64> {
+    fn shrink_candidates(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        let n = self.len();
+        if n == 0 {
+            return out;
+        }
+        // Halves.
+        out.push(self[..n / 2].to_vec());
+        out.push(self[n / 2..].to_vec());
+        // Drop one element (first, middle, last).
+        for idx in [0, n / 2, n - 1] {
+            if idx < n {
+                let mut v = self.clone();
+                v.remove(idx);
+                out.push(v);
+            }
+        }
+        // Move values toward zero.
+        if let Some(first_nonzero) = self.iter().position(|&x| x != 0) {
+            let mut v = self.clone();
+            v[first_nonzero] /= 2;
+            out.push(v);
+        }
+        out
+    }
+}
+
+impl<A: Shrink + Clone, B: Shrink + Clone> Shrink for (A, B) {
+    fn shrink_candidates(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink_candidates()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(
+            self.1
+                .shrink_candidates()
+                .into_iter()
+                .map(|b| (self.0.clone(), b)),
+        );
+        out
+    }
+}
+
+impl<A, B, C> Shrink for (A, B, C)
+where
+    A: Shrink + Clone,
+    B: Shrink + Clone,
+    C: Shrink + Clone,
+{
+    fn shrink_candidates(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink_candidates()
+            .into_iter()
+            .map(|a| (a, self.1.clone(), self.2.clone()))
+            .collect();
+        out.extend(
+            self.1
+                .shrink_candidates()
+                .into_iter()
+                .map(|b| (self.0.clone(), b, self.2.clone())),
+        );
+        out.extend(
+            self.2
+                .shrink_candidates()
+                .into_iter()
+                .map(|c| (self.0.clone(), self.1.clone(), c)),
+        );
+        out
+    }
+}
+
+impl Shrink for usize {
+    fn shrink_candidates(&self) -> Vec<Self> {
+        match *self {
+            0 => vec![],
+            1 => vec![],
+            n => vec![1, n / 2, n - 1],
+        }
+    }
+}
+
+/// Generate a sorted `Vec<i64>` with length drawn from `len_range` and
+/// values from `val_range`.
+pub fn sorted_vec(
+    rng: &mut Xoshiro256,
+    len_range: std::ops::Range<usize>,
+    val_range: std::ops::Range<i64>,
+) -> Vec<i64> {
+    let n = if len_range.is_empty() {
+        len_range.start
+    } else {
+        rng.range(len_range.start, len_range.end)
+    };
+    let span = (val_range.end - val_range.start).max(1) as u64;
+    let mut v: Vec<i64> = (0..n)
+        .map(|_| val_range.start + rng.below(span) as i64)
+        .collect();
+    v.sort_unstable();
+    v
+}
+
+/// Generate an arbitrary (unsorted) `Vec<i64>`.
+pub fn any_vec(
+    rng: &mut Xoshiro256,
+    len_range: std::ops::Range<usize>,
+    val_range: std::ops::Range<i64>,
+) -> Vec<i64> {
+    let n = if len_range.is_empty() {
+        len_range.start
+    } else {
+        rng.range(len_range.start, len_range.end)
+    };
+    let span = (val_range.end - val_range.start).max(1) as u64;
+    (0..n)
+        .map(|_| val_range.start + rng.below(span) as i64)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        Prop::new(1).cases(50).run(
+            |rng| sorted_vec(rng, 0..20, -5..5),
+            |v| v.windows(2).all(|w| w[0] <= w[1]),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_shrunk_input() {
+        Prop::new(2).cases(100).run(
+            |rng| any_vec(rng, 0..50, -100..100),
+            // False whenever the vec contains a negative number.
+            |v| v.iter().all(|&x| x >= 0),
+        );
+    }
+
+    #[test]
+    fn shrink_vec_produces_smaller() {
+        let v: Vec<i64> = (0..10).collect();
+        for c in v.shrink_candidates() {
+            assert!(c.len() < v.len() || c.iter().sum::<i64>() < v.iter().sum::<i64>());
+        }
+        assert!(Vec::<i64>::new().shrink_candidates().is_empty());
+    }
+
+    #[test]
+    fn shrink_finds_small_counterexample() {
+        // The minimal failing input for "no element equals 7" should be
+        // a short vector; verify the shrinker reduces length.
+        let failing = vec![3i64, 9, 7, 2, 8, 7, 1];
+        let minimal = shrink_loop(failing, &|v: &Vec<i64>| !v.contains(&7));
+        assert!(minimal.len() <= 2, "shrunk to {minimal:?}");
+        assert!(minimal.contains(&7));
+    }
+
+    #[test]
+    fn generators_respect_ranges() {
+        let mut rng = Xoshiro256::seeded(3);
+        for _ in 0..50 {
+            let v = sorted_vec(&mut rng, 5..10, -3..3);
+            assert!((5..10).contains(&v.len()));
+            assert!(v.iter().all(|&x| (-3..3).contains(&x)));
+            assert!(v.windows(2).all(|w| w[0] <= w[1]));
+        }
+    }
+}

@@ -1,0 +1,185 @@
+//! Cross-module integration: coordinator + runtime + algorithms
+//! working together, including the XLA route when artifacts exist.
+
+use mergeflow::bench::workload::{gen_sorted_pair, gen_unsorted, WorkloadKind};
+use mergeflow::config::{Backend, MergeflowConfig, RawConfig};
+use mergeflow::coordinator::{JobKind, MergeService};
+use mergeflow::runtime::{ArtifactManifest, XlaExecutor};
+use std::path::Path;
+
+fn artifacts_present() -> bool {
+    Path::new("artifacts/manifest.txt").exists()
+}
+
+fn base_config() -> MergeflowConfig {
+    MergeflowConfig {
+        workers: 2,
+        threads_per_job: 2,
+        queue_capacity: 128,
+        max_batch: 8,
+        batch_timeout_us: 100,
+        backend: Backend::Native,
+        segment_len: 0,
+        artifacts_dir: "artifacts".into(),
+    }
+}
+
+#[test]
+fn service_xla_route_used_for_artifact_shapes() {
+    if !artifacts_present() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut cfg = base_config();
+    cfg.backend = Backend::Auto;
+    let svc = MergeService::start(cfg).unwrap();
+    assert!(
+        svc.wait_xla_warm(std::time::Duration::from_secs(120)),
+        "XLA warmup did not complete"
+    );
+
+    // Exact artifact shape → must route to XLA.
+    let manifest = ArtifactManifest::load(Path::new("artifacts/manifest.txt")).unwrap();
+    let meta = manifest
+        .entries()
+        .iter()
+        .find(|m| m.op == "merge")
+        .expect("at least one merge artifact")
+        .clone();
+    let (a, b) = gen_sorted_pair(WorkloadKind::Uniform, meta.n_a, meta.n_b, 7);
+    let mut expected: Vec<i32> = a.iter().chain(b.iter()).copied().collect();
+    expected.sort_unstable();
+    let res = svc.submit_blocking(JobKind::Merge { a, b }).unwrap();
+    assert_eq!(res.backend, "xla", "artifact-shaped job should go to XLA");
+    assert_eq!(res.output, expected);
+
+    // Off-shape job → native, still correct.
+    let (a, b) = gen_sorted_pair(WorkloadKind::Uniform, meta.n_a + 1, meta.n_b, 8);
+    let mut expected: Vec<i32> = a.iter().chain(b.iter()).copied().collect();
+    expected.sort_unstable();
+    let res = svc.submit_blocking(JobKind::Merge { a, b }).unwrap();
+    assert_eq!(res.backend, "native");
+    assert_eq!(res.output, expected);
+    assert_eq!(svc.stats().xla_jobs.get(), 1);
+    svc.shutdown();
+}
+
+#[test]
+fn xla_and_native_agree_over_many_seeds() {
+    if !artifacts_present() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let ex = XlaExecutor::start(Path::new("artifacts")).unwrap();
+    let meta = ex
+        .manifest()
+        .entries()
+        .iter()
+        .find(|m| m.op == "merge")
+        .unwrap()
+        .clone();
+    for seed in 0..6u64 {
+        for kind in [WorkloadKind::Uniform, WorkloadKind::OneSided, WorkloadKind::Skewed] {
+            let (a, b) = gen_sorted_pair(kind, meta.n_a, meta.n_b, seed);
+            let got = ex.merge(&meta.name, a.clone(), b.clone()).unwrap();
+            let mut expected = vec![0i32; a.len() + b.len()];
+            mergeflow::mergepath::merge_into(&a, &b, &mut expected);
+            assert_eq!(got, expected, "{:?} seed {seed}", kind);
+        }
+    }
+    ex.shutdown();
+}
+
+#[test]
+fn service_under_sustained_load_with_mixed_jobs() {
+    let svc = MergeService::start(base_config()).unwrap();
+    let mut handles = Vec::new();
+    for i in 0..30u64 {
+        let h = match i % 3 {
+            0 => {
+                let (a, b) =
+                    gen_sorted_pair(WorkloadKind::Uniform, 500 + i as usize, 300, i);
+                svc.submit(JobKind::Merge { a, b })
+            }
+            1 => svc.submit(JobKind::Sort { data: gen_unsorted(700, i) }),
+            _ => {
+                let runs = (0..4)
+                    .map(|j| {
+                        let (r, _) =
+                            gen_sorted_pair(WorkloadKind::Uniform, 200, 1, i * 10 + j);
+                        r
+                    })
+                    .collect();
+                svc.submit(JobKind::Compact { runs })
+            }
+        }
+        .unwrap();
+        handles.push(h);
+    }
+    for h in handles {
+        let r = h.wait().unwrap();
+        assert!(r.output.windows(2).all(|w| w[0] <= w[1]));
+    }
+    assert_eq!(svc.stats().completed.get(), 30);
+    svc.shutdown();
+}
+
+#[test]
+fn backpressure_rejects_when_queue_full() {
+    let mut cfg = base_config();
+    cfg.queue_capacity = 1;
+    cfg.workers = 1;
+    cfg.max_batch = 1;
+    let svc = MergeService::start(cfg).unwrap();
+    // Pre-generate the jobs, then slam the queue in a tight loop: with
+    // capacity 1 and a single slow worker, admission must reject some.
+    // Sort jobs are used because their submit-time validation is O(1)
+    // (no sortedness scan), so the producer is strictly faster than
+    // the consumer in both debug and release builds.
+    let jobs: Vec<JobKind> = (0..50u64)
+        .map(|i| JobKind::Sort { data: gen_unsorted(512 << 10, i) })
+        .collect();
+    let mut rejected = 0;
+    let mut handles = Vec::new();
+    for job in jobs {
+        match svc.submit(job) {
+            Ok(h) => handles.push(h),
+            Err(_) => rejected += 1,
+        }
+    }
+    for h in handles {
+        h.wait().unwrap();
+    }
+    assert!(rejected > 0, "expected back-pressure rejections");
+    assert_eq!(svc.stats().rejected.get(), rejected);
+    svc.shutdown();
+}
+
+#[test]
+fn config_file_round_trip_drives_service() {
+    let toml = r#"
+[service]
+workers = 3
+threads_per_job = 2
+backend = "native"
+
+[merge]
+segment_len = 512
+"#;
+    let cfg = MergeflowConfig::from_raw(&RawConfig::parse(toml).unwrap()).unwrap();
+    assert_eq!(cfg.workers, 3);
+    let svc = MergeService::start(cfg).unwrap();
+    let (a, b) = gen_sorted_pair(WorkloadKind::Uniform, 2000, 2000, 1);
+    let res = svc.submit_blocking(JobKind::Merge { a, b }).unwrap();
+    assert_eq!(res.backend, "native-segmented"); // 4000 >= 2*512
+    svc.shutdown();
+}
+
+#[test]
+fn figures_pipeline_smoke() {
+    // The full figure pipeline at a tiny scale — everything composes.
+    let t = mergeflow::bench::figures::fig4(4096);
+    assert!(t.render().contains("Fig 4"));
+    let t = mergeflow::bench::figures::table2();
+    assert!(t.render().contains("HyperCore"));
+}

@@ -1,0 +1,181 @@
+//! Property-based invariants (in-tree mini-proptest; see
+//! `mergeflow::testutil`) over the paper's core claims:
+//!
+//! - every parallel algorithm ≡ the sequential merge, for every p;
+//! - SPM ≡ regular for every (L, p);
+//! - partition points are exact-equisized and consistent;
+//! - sorts ≡ std sort;
+//! - merge output is sorted and a permutation of the inputs.
+
+use mergeflow::baselines::{
+    akl_santoro_merge, bitonic_merge, bitonic_sort, deo_sarkar_merge, shiloach_vishkin_merge,
+};
+use mergeflow::mergepath::diagonal::{
+    diagonal_intersection, diagonal_intersection_walk, is_valid_split,
+};
+use mergeflow::mergepath::{
+    cache_efficient_sort, merge_into, parallel_merge, parallel_merge_sort,
+    partition_merge_path, segmented_parallel_merge, CacheSortConfig, SegmentedConfig,
+};
+use mergeflow::rng::Xoshiro256;
+use mergeflow::testutil::{any_vec, sorted_vec, Prop};
+
+fn oracle(a: &[i64], b: &[i64]) -> Vec<i64> {
+    let mut v: Vec<i64> = a.iter().chain(b.iter()).copied().collect();
+    v.sort();
+    v
+}
+
+fn gen_pair(rng: &mut Xoshiro256) -> (Vec<i64>, Vec<i64>) {
+    // Mix of value densities: heavy duplicates to nearly unique.
+    let universe = [4i64, 64, 1 << 20][rng.range(0, 3)];
+    (
+        sorted_vec(rng, 0..200, -universe..universe),
+        sorted_vec(rng, 0..200, -universe..universe),
+    )
+}
+
+#[test]
+fn prop_all_parallel_merges_agree_with_sequential() {
+    Prop::new(0x1001).cases(150).run(
+        |rng| {
+            let (a, b) = gen_pair(rng);
+            let p = rng.range(1, 17);
+            (a, b, p)
+        },
+        |(a, b, p)| {
+            let expected = oracle(a, b);
+            let n = a.len() + b.len();
+            let run = |f: &dyn Fn(&[i64], &[i64], &mut [i64], usize)| {
+                let mut out = vec![0i64; n];
+                f(a, b, &mut out, *p);
+                out == expected
+            };
+            run(&parallel_merge)
+                && run(&shiloach_vishkin_merge)
+                && run(&akl_santoro_merge)
+                && run(&deo_sarkar_merge)
+                && run(&bitonic_merge)
+        },
+    );
+}
+
+#[test]
+fn prop_segmented_equals_regular_for_all_configs() {
+    Prop::new(0x1002).cases(120).run(
+        |rng| {
+            let (a, b) = gen_pair(rng);
+            let l = rng.range(1, 100);
+            let p = rng.range(1, 9);
+            (a, b, (l, p))
+        },
+        |(a, b, (l, p))| {
+            let expected = oracle(a, b);
+            let mut out = vec![0i64; a.len() + b.len()];
+            segmented_parallel_merge(
+                a,
+                b,
+                &mut out,
+                SegmentedConfig { segment_len: *l, threads: *p },
+            );
+            out == expected
+        },
+    );
+}
+
+#[test]
+fn prop_partition_is_exact_and_consistent() {
+    Prop::new(0x1003).cases(200).run(
+        |rng| {
+            let (a, b) = gen_pair(rng);
+            let p = rng.range(1, 33);
+            (a, b, p)
+        },
+        |(a, b, p)| {
+            let n = a.len() + b.len();
+            let segs = partition_merge_path(a, b, *p);
+            // Equisized ±1, contiguous, covering.
+            let mut ok = segs.len() == *p;
+            let (lo, hi) = (n / *p, n.div_ceil(*p));
+            let mut at = 0usize;
+            for s in &segs {
+                ok &= s.out_range.start == at;
+                ok &= (lo..=hi).contains(&s.out_range.len());
+                ok &= s.out_range.len() == s.a_range.len() + s.b_range.len();
+                at = s.out_range.end;
+            }
+            ok && at == n
+        },
+    );
+}
+
+#[test]
+fn prop_diagonal_search_matches_walk_and_is_valid() {
+    Prop::new(0x1004).cases(200).run(
+        |rng| {
+            let (a, b) = gen_pair(rng);
+            let d = rng.range(0, a.len() + b.len() + 2).min(a.len() + b.len());
+            (a, b, d)
+        },
+        |(a, b, d)| {
+            let fast = diagonal_intersection(a, b, *d);
+            let slow = diagonal_intersection_walk(a, b, *d);
+            fast == slow && is_valid_split(a, b, fast) && fast.diagonal() == *d
+        },
+    );
+}
+
+#[test]
+fn prop_sorts_agree_with_std() {
+    Prop::new(0x1005).cases(60).run(
+        |rng| {
+            let v = any_vec(rng, 0..800, -1000..1000);
+            let p = rng.range(1, 9);
+            (v, p)
+        },
+        |(v, p)| {
+            let mut expected = v.clone();
+            expected.sort();
+            let mut s1 = v.clone();
+            parallel_merge_sort(&mut s1, *p);
+            let mut s2 = v.clone();
+            cache_efficient_sort(
+                &mut s2,
+                CacheSortConfig { cache_elems: 128, threads: *p },
+            );
+            let mut s3 = v.clone();
+            bitonic_sort(&mut s3, *p);
+            s1 == expected && s2 == expected && s3 == expected
+        },
+    );
+}
+
+#[test]
+fn prop_merge_output_sorted_permutation() {
+    Prop::new(0x1006).cases(150).run(
+        |rng| gen_pair(rng),
+        |(a, b)| {
+            let mut out = vec![0i64; a.len() + b.len()];
+            merge_into(a, b, &mut out);
+            let sorted = out.windows(2).all(|w| w[0] <= w[1]);
+            let mut expected: Vec<i64> = a.iter().chain(b.iter()).copied().collect();
+            expected.sort();
+            sorted && out == expected
+        },
+    );
+}
+
+#[test]
+fn prop_merge_idempotent_under_split_merge() {
+    // Merging the two halves of a sorted array reproduces it — a
+    // round-trip invariant connecting partition and merge.
+    Prop::new(0x1007).cases(100).run(
+        |rng| sorted_vec(rng, 0..400, -500..500),
+        |v| {
+            let mid = v.len() / 2;
+            let mut out = vec![0i64; v.len()];
+            parallel_merge(&v[..mid], &v[mid..], &mut out, 4);
+            out == *v
+        },
+    );
+}
