@@ -36,7 +36,8 @@ fn main() {
         max_batch: 16,
         batch_timeout_us: 100,
         backend: Backend::Auto, // uses XLA artifacts when shapes fit
-        segment_len: 1 << 20,   // cache-efficient path for big compactions
+        segment_len: 1 << 20,   // cache-efficient path for big merges
+        kway_flat_max_k: 64,    // flat single-pass engine for k-way compactions
         artifacts_dir: "artifacts".into(),
     };
     println!("config: {cfg:?}");
@@ -96,24 +97,30 @@ fn main() {
         }
     }
 
-    // Phase 2 — k-way compaction of a fresh batch through one job.
-    let kway: Vec<Vec<i32>> = (0..7)
-        .map(|_| sorted_run(rng.next_u64(), 32 << 10))
-        .collect();
-    let kway_total: usize = kway.iter().map(|r| r.len()).sum();
-    total_elems += kway_total as u64;
-    let mut expected: Vec<i32> = kway.iter().flatten().copied().collect();
-    expected.sort_unstable();
-    let res = svc
-        .submit_blocking(JobKind::Compact { runs: kway })
-        .expect("compact job");
-    assert_eq!(res.output, expected, "compaction output mismatch");
-    println!(
-        "k-way compaction: {} keys in {} via {}",
-        kway_total,
-        fmt_ns(res.latency_ns),
-        res.backend
-    );
+    // Phase 2 — k-way compactions of fresh batches through single jobs.
+    // Both shapes take the flat single-pass engine (k ≤ kway_flat_max_k):
+    // every worker thread merges its equisized slice of the output in
+    // one pass instead of the ⌈log₂ k⌉ passes of the old pairwise tree.
+    for k in [7usize, 16] {
+        let kway: Vec<Vec<i32>> = (0..k)
+            .map(|_| sorted_run(rng.next_u64(), 32 << 10))
+            .collect();
+        let kway_total: usize = kway.iter().map(|r| r.len()).sum();
+        total_elems += kway_total as u64;
+        let mut expected: Vec<i32> = kway.iter().flatten().copied().collect();
+        expected.sort_unstable();
+        let res = svc
+            .submit_blocking(JobKind::Compact { runs: kway })
+            .expect("compact job");
+        assert_eq!(res.output, expected, "compaction output mismatch (k={k})");
+        assert_eq!(res.backend, "native-kway", "expected the flat k-way engine");
+        println!(
+            "{k}-way compaction: {} keys in {} via {} (single pass)",
+            kway_total,
+            fmt_ns(res.latency_ns),
+            res.backend
+        );
+    }
 
     // Collect the artifact-sized jobs (XLA route when artifacts exist).
     for h in small_jobs {

@@ -1,0 +1,66 @@
+//! Flat single-pass k-way Merge Path vs the pairwise-tree engine for
+//! LSM-style compaction shapes: k ∈ {4, 8, 16, 64} sorted runs,
+//! p ∈ {1..16} threads.
+//!
+//! The tree makes ⌈log₂ k⌉ full read+write passes over memory; the flat
+//! engine makes exactly one, at the price of a k-way (loser-tree) inner
+//! loop. Expectation: the flat engine pulls ahead as k grows (more tree
+//! passes to amortise) — the §4.3 memory-traffic argument applied to
+//! compaction.
+//!
+//! Env: MERGEFLOW_BENCH_N = total merged elements (default 4M),
+//!      MERGEFLOW_BENCH_KIND = uniform|skewed|one-sided|interleaved|runs.
+use mergeflow::bench::harness::{report_line, BenchTimer};
+use mergeflow::bench::workload::{gen_sorted_runs, WorkloadKind};
+use mergeflow::mergepath::{loser_tree_merge, parallel_kway_merge, parallel_tree_merge_refs};
+
+fn main() {
+    let n_total: usize = std::env::var("MERGEFLOW_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4usize << 20);
+    let kind = std::env::var("MERGEFLOW_BENCH_KIND")
+        .ok()
+        .and_then(|v| WorkloadKind::parse(&v))
+        .unwrap_or(WorkloadKind::Uniform);
+    let timer = BenchTimer::quick();
+    println!("workload: {} x {n_total} total elements", kind.name());
+    for k in [4usize, 8, 16, 64] {
+        let runs = gen_sorted_runs(kind, k, n_total / k, 42);
+        let refs: Vec<&[i32]> = runs.iter().map(|r| r.as_slice()).collect();
+        let total: usize = refs.iter().map(|r| r.len()).sum();
+        println!("\n--- k = {k} runs of {} ({total} total) ---", total / k);
+        // Every engine allocates its output inside the timed region, as
+        // the coordinator does per job. (The flat/seq closures also pay
+        // a zero fill that `run_compaction`'s uninit buffers avoid —
+        // a bias *against* the flat engine, so its wins are conservative.)
+        let m = timer.measure(|| {
+            let mut out = vec![0i32; total];
+            loser_tree_merge(&refs, &mut out);
+            std::hint::black_box(&out);
+        });
+        println!("{}", report_line("loser_tree (seq, 1 pass)", &m, total as u64));
+        let tree_passes = k.next_power_of_two().trailing_zeros();
+        for p in [1usize, 2, 4, 8, 16] {
+            let m = timer.measure(|| {
+                let v = parallel_tree_merge_refs(&refs, p, None);
+                std::hint::black_box(&v);
+            });
+            let name = format!("tree  p={p} ({tree_passes} passes)");
+            println!("{}", report_line(&name, &m, total as u64));
+            let m = timer.measure(|| {
+                let mut out = vec![0i32; total];
+                parallel_kway_merge(&refs, &mut out, p, None);
+                std::hint::black_box(&out);
+            });
+            let name = format!("flat  p={p} (1 pass)");
+            println!("{}", report_line(&name, &m, total as u64));
+        }
+        // Cross-check once per shape: flat == sequential loser tree.
+        let mut seq = vec![0i32; total];
+        loser_tree_merge(&refs, &mut seq);
+        let mut out = vec![0i32; total];
+        parallel_kway_merge(&refs, &mut out, 8, None);
+        assert_eq!(seq, out, "flat engine diverged from the loser tree at k={k}");
+    }
+}

@@ -34,6 +34,6 @@ fn main() {
         println!("{}", report_line(&format!("xla {}", meta.name), &m, total));
         let mut out = vec![0i32; meta.n_a + meta.n_b];
         let m = timer.measure(|| merge_into(&a, &b, &mut out));
-        println!("{}", report_line(&format!("native same shape"), &m, total));
+        println!("{}", report_line("native same shape", &m, total));
     }
 }

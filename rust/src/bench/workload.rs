@@ -59,7 +59,12 @@ impl WorkloadKind {
 }
 
 /// Generate a pair of sorted arrays of `na`/`nb` 32-bit keys.
-pub fn gen_sorted_pair(kind: WorkloadKind, na: usize, nb: usize, seed: u64) -> (Vec<i32>, Vec<i32>) {
+pub fn gen_sorted_pair(
+    kind: WorkloadKind,
+    na: usize,
+    nb: usize,
+    seed: u64,
+) -> (Vec<i32>, Vec<i32>) {
     let mut rng = Xoshiro256::seeded(seed);
     let (mut a, mut b): (Vec<i32>, Vec<i32>) = match kind {
         WorkloadKind::Uniform => {
@@ -123,6 +128,58 @@ pub fn gen_unsorted(n: usize, seed: u64) -> Vec<i32> {
     (0..n).map(|_| rng.next_i32()).collect()
 }
 
+/// Generate `k` distinct sorted runs of `run_len` keys each — the
+/// LSM-compaction input shape used by `JobKind::Compact` and the
+/// `kway_flat_vs_tree` bench. Deterministic in `(kind, k, run_len,
+/// seed)`.
+///
+/// Random kinds (`Uniform`, `Skewed`) draw run `i` from seed
+/// `seed + i`. The remaining kinds get proper k-way analogues instead
+/// of the pairwise generator (which would make every run identical —
+/// `Interleaved`/`Runs` ignore the seed — or lose the kind's point):
+/// `OneSided` gives run `i` a private value band entirely below run
+/// `i + 1`'s (the naive-split killer, k-way version); `Interleaved`
+/// deals keys round-robin across runs (run `i` holds `j·k + i`); and
+/// `Runs` deals 1024-key blocks round-robin (long single-run
+/// stretches, the galloping-friendly compaction shape).
+pub fn gen_sorted_runs(kind: WorkloadKind, k: usize, run_len: usize, seed: u64) -> Vec<Vec<i32>> {
+    match kind {
+        WorkloadKind::OneSided => {
+            let band = (i32::MAX as usize / k.max(1)).max(1);
+            (0..k)
+                .map(|i| {
+                    let mut rng = Xoshiro256::seeded(seed.wrapping_add(i as u64));
+                    let lo = (i * band) as i64;
+                    let mut v: Vec<i32> = (0..run_len)
+                        .map(|_| (lo + rng.below(band as u64) as i64) as i32)
+                        .collect();
+                    v.sort_unstable();
+                    v
+                })
+                .collect()
+        }
+        WorkloadKind::Interleaved => (0..k)
+            .map(|i| (0..run_len).map(|j| (j * k + i) as i32).collect())
+            .collect(),
+        WorkloadKind::Runs => {
+            let block = 1024usize;
+            (0..k)
+                .map(|i| {
+                    (0..run_len)
+                        .map(|j| {
+                            let (blk, off) = (j / block, j % block);
+                            ((blk * k + i) * block + off) as i32
+                        })
+                        .collect()
+                })
+                .collect()
+        }
+        _ => (0..k)
+            .map(|i| gen_sorted_pair(kind, run_len, 0, seed.wrapping_add(i as u64)).0)
+            .collect(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -160,6 +217,45 @@ mod tests {
         let mut uniq = a.clone();
         uniq.dedup();
         assert!(uniq.len() < a.len(), "skewed workload should repeat keys");
+    }
+
+    #[test]
+    fn sorted_runs_shape_and_determinism() {
+        for kind in WorkloadKind::all() {
+            let runs = gen_sorted_runs(kind, 5, 300, 9);
+            assert_eq!(runs.len(), 5, "{kind:?}");
+            for r in &runs {
+                assert_eq!(r.len(), 300, "{kind:?}");
+                assert!(r.windows(2).all(|w| w[0] <= w[1]), "{kind:?}");
+            }
+            assert_eq!(runs, gen_sorted_runs(kind, 5, 300, 9), "{kind:?}");
+            assert_ne!(runs[0], runs[1], "{kind:?}: runs must be distinct");
+        }
+    }
+
+    #[test]
+    fn sorted_runs_deterministic_kinds_tile_key_space() {
+        // Interleaved: the k runs merge to 0..k*run_len exactly.
+        let runs = gen_sorted_runs(WorkloadKind::Interleaved, 4, 100, 0);
+        let mut all: Vec<i32> = runs.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..400).collect::<Vec<i32>>());
+        // Runs: block-cyclic deal also tiles the key space.
+        let runs = gen_sorted_runs(WorkloadKind::Runs, 2, 2048, 0);
+        let mut all: Vec<i32> = runs.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..4096).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn sorted_runs_one_sided_bands_are_disjoint() {
+        let runs = gen_sorted_runs(WorkloadKind::OneSided, 6, 500, 3);
+        for w in runs.windows(2) {
+            assert!(
+                w[0].last().unwrap() < w[1].first().unwrap(),
+                "run bands must be strictly increasing"
+            );
+        }
     }
 
     #[test]

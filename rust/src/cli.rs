@@ -39,7 +39,7 @@ impl Cli {
                 }
                 if let Some((k, v)) = name.split_once('=') {
                     flags.insert(k.to_string(), v.to_string());
-                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
                     flags.insert(name.to_string(), it.next().unwrap());
                 } else {
                     flags.insert(name.to_string(), "true".to_string());

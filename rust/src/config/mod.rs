@@ -148,6 +148,10 @@ pub struct MergeflowConfig {
     pub backend: Backend,
     /// Segment length for cache-efficient merging (elements); 0 = off.
     pub segment_len: usize,
+    /// Largest run count `k` served by the flat single-pass k-way merge
+    /// engine (`mergepath::kway_path`); compactions with more runs fall
+    /// back to the pairwise-tree engine. 0 disables the flat engine.
+    pub kway_flat_max_k: usize,
     /// Directory holding AOT artifacts.
     pub artifacts_dir: String,
 }
@@ -162,6 +166,7 @@ impl Default for MergeflowConfig {
             batch_timeout_us: 200,
             backend: Backend::Native,
             segment_len: 0,
+            kway_flat_max_k: 64,
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -180,6 +185,7 @@ impl MergeflowConfig {
                 as u64,
             backend: raw.get_str("service.backend", "native").parse()?,
             segment_len: raw.get_usize("merge.segment_len", d.segment_len)?,
+            kway_flat_max_k: raw.get_usize("merge.kway_flat_max_k", d.kway_flat_max_k)?,
             artifacts_dir: raw.get_str("service.artifacts_dir", &d.artifacts_dir),
         };
         cfg.validate()?;
@@ -227,6 +233,7 @@ timeout_us = 150
 
 [merge]
 segment_len = 4096
+kway_flat_max_k = 32
 "#;
 
     #[test]
@@ -239,6 +246,7 @@ segment_len = 4096
         assert_eq!(cfg.workers, 8);
         assert_eq!(cfg.backend, Backend::Auto);
         assert_eq!(cfg.segment_len, 4096);
+        assert_eq!(cfg.kway_flat_max_k, 32);
         assert_eq!(cfg.batch_timeout_us, 150);
     }
 

@@ -2,7 +2,7 @@
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Why a push was refused.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -91,7 +91,15 @@ impl<T> BoundedQueue<T> {
 
     /// Pop one item, waiting up to `timeout`. `None` on timeout or when
     /// closed-and-drained.
+    ///
+    /// The deadline is computed once up front and each condvar wait only
+    /// covers the *remaining* time — a spurious wakeup (or a racing
+    /// consumer winning the item) must not re-arm the full timeout, or
+    /// total blocking time would be unbounded under contention.
     pub fn pop_timeout(&self, timeout: Duration) -> Option<T> {
+        // `Instant + Duration` panics on overflow, so a huge timeout
+        // (e.g. `Duration::MAX` as block-forever) maps to "no deadline".
+        let deadline = Instant::now().checked_add(timeout);
         let mut g = self.inner.lock().unwrap();
         loop {
             if let Some(item) = g.items.pop_front() {
@@ -102,13 +110,18 @@ impl<T> BoundedQueue<T> {
             if g.closed {
                 return None;
             }
-            let (guard, res) = self.not_empty.wait_timeout(g, timeout).unwrap();
-            g = guard;
-            if res.timed_out() {
-                // One last check before giving up.
-                return g.items.pop_front().inspect(|_| {
-                    self.not_full.notify_one();
-                });
+            match deadline {
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        return None;
+                    }
+                    let (guard, _res) = self.not_empty.wait_timeout(g, d - now).unwrap();
+                    // Loop re-checks the queue first, so a wakeup that
+                    // races the deadline still gets one final pop.
+                    g = guard;
+                }
+                None => g = self.not_empty.wait(g).unwrap(),
             }
         }
     }
@@ -197,6 +210,16 @@ mod tests {
         assert_eq!(batch, vec![0, 1, 2, 3]);
         assert_eq!(q.len(), 3);
         assert!(q.drain_up_to(0).is_empty());
+    }
+
+    #[test]
+    fn pop_timeout_respects_deadline() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(2);
+        let t0 = std::time::Instant::now();
+        assert_eq!(q.pop_timeout(Duration::from_millis(50)), None);
+        let waited = t0.elapsed();
+        assert!(waited >= Duration::from_millis(40), "returned early: {waited:?}");
+        assert!(waited < Duration::from_millis(2000), "deadline overshot: {waited:?}");
     }
 
     #[test]

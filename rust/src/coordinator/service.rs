@@ -15,7 +15,8 @@ use super::stats::ServiceStats;
 use crate::config::{Backend, MergeflowConfig};
 use crate::exec::WorkerPool;
 use crate::mergepath::{
-    parallel_merge, parallel_merge_sort, segmented_parallel_merge, SegmentedConfig,
+    parallel_kway_merge, parallel_merge, parallel_merge_sort, segmented_parallel_merge,
+    SegmentedConfig,
 };
 use crate::runtime::XlaExecutor;
 use crate::{Error, Result};
@@ -113,13 +114,21 @@ impl MergeService {
         })
     }
 
+    /// Whether an XLA runtime actually started for this service.
+    /// `false` under `Backend::Native`, when `Backend::Auto` degraded
+    /// (artifacts missing or the PJRT binding is the offline stub) —
+    /// lets tests distinguish "no runtime" from "runtime still cold".
+    pub fn xla_available(&self) -> bool {
+        self.runtime.is_some()
+    }
+
     /// Block until the XLA backend has compiled all artifacts (no-op /
     /// `false` when no XLA backend is configured). Useful before
     /// latency-sensitive load or in tests asserting the XLA route.
     pub fn wait_xla_warm(&self, timeout: Duration) -> bool {
         self.runtime
             .as_ref()
-            .map_or(false, |rt| rt.wait_warm(timeout))
+            .is_some_and(|rt| rt.wait_warm(timeout))
     }
 
     /// Service configuration.
@@ -251,7 +260,7 @@ fn execute_job(
             parallel_merge_sort(&mut data, cfg.threads_per_job);
             (data, "native")
         }
-        JobKind::Compact { runs } => (run_compaction(cfg, runs), "native"),
+        JobKind::Compact { runs } => run_compaction(cfg, runs),
     };
     let latency_ns = wait_ns
         + u64::try_from(t0.elapsed().as_nanos()).unwrap_or(u64::MAX);
@@ -260,7 +269,10 @@ fn execute_job(
     let _ = job.reply.send(JobResult { id: job.id, output, backend, latency_ns });
 }
 
-/// Route and run a merge.
+/// Route and run a merge. The inputs stay owned here so the native
+/// paths merge straight out of them — no clones on the hot path; the
+/// XLA route copies once, inside [`XlaExecutor::merge`], and only when
+/// it is actually taken.
 fn run_merge(
     cfg: &MergeflowConfig,
     runtime: Option<&XlaExecutor>,
@@ -275,9 +287,11 @@ fn run_merge(
             if let Some(meta) = rt.find_for_sizes(a.len(), b.len()) {
                 if rt.is_compiled(&meta.name) {
                     let name = meta.name.clone();
-                    match rt.merge(&name, a.clone(), b.clone()) {
+                    match rt.merge(&name, &a, &b) {
                         Ok(out) => return (out, "xla"),
-                        Err(e) => log::warn!("xla merge failed, falling back: {e}"),
+                        Err(e) => {
+                            eprintln!("mergeflow: xla merge failed, falling back: {e}")
+                        }
                     }
                 }
             }
@@ -285,8 +299,8 @@ fn run_merge(
                 // Explicit XLA mode with no fitting artifact: still
                 // serve (degrade to native) but tag it, so operators
                 // can see the misconfiguration in stats.
-                log::warn!(
-                    "no XLA artifact for sizes ({}, {}); falling back to native",
+                eprintln!(
+                    "mergeflow: no XLA artifact for sizes ({}, {}); falling back to native",
                     a.len(),
                     b.len()
                 );
@@ -308,23 +322,49 @@ fn run_merge(
     }
 }
 
-/// Tree compaction: k-way merge via the Merge-Path pairwise tree
-/// (`mergepath::kway`); small jobs use the sequential loser tree.
-fn run_compaction(cfg: &MergeflowConfig, mut runs: Vec<Vec<i32>>) -> Vec<i32> {
+/// Compaction router. In preference order:
+///
+/// 1. sequential loser tree for small jobs or `threads_per_job == 1`
+///    (one pass, no parallel setup cost) — backend `"native"`;
+/// 2. the flat single-pass k-way engine
+///    ([`mergepath::kway_path`](crate::mergepath::kway_path)) for
+///    `2 ≤ k ≤ kway_flat_max_k` — one pass over memory instead of the
+///    tree's `⌈log₂ k⌉`, backend `"native-kway"`;
+/// 3. the pairwise Merge-Path tree beyond the flat engine's configured
+///    range — backend `"native"`.
+fn run_compaction(cfg: &MergeflowConfig, mut runs: Vec<Vec<i32>>) -> (Vec<i32>, &'static str) {
     runs.retain(|r| !r.is_empty());
     if runs.is_empty() {
-        return vec![];
+        return (vec![], "native");
+    }
+    if runs.len() == 1 {
+        // Single surviving run: already sorted, return it by move.
+        return (runs.pop().unwrap(), "native");
     }
     let total: usize = runs.iter().map(|r| r.len()).sum();
+    let refs: Vec<&[i32]> = runs.iter().map(|r| r.as_slice()).collect();
     if total < 4096 || cfg.threads_per_job == 1 {
-        // Small compactions: one sequential k-way pass beats log k
-        // fork-join rounds.
-        let refs: Vec<&[i32]> = runs.iter().map(|r| r.as_slice()).collect();
+        // Small compactions: one sequential k-way pass beats any
+        // parallel setup cost. Not hot enough to warrant the uninit
+        // buffer idiom — a plain zeroed Vec keeps this path boring.
         let mut out = vec![0i32; total];
         crate::mergepath::kway::loser_tree_merge(&refs, &mut out);
-        return out;
+        return (out, "native");
     }
-    crate::mergepath::kway::parallel_tree_merge(runs, cfg.threads_per_job, None)
+    if cfg.kway_flat_max_k > 0 && refs.len() <= cfg.kway_flat_max_k {
+        // Flat engine's segments tile [0, total): every slot written.
+        let mut out = crate::uninit_vec(total);
+        parallel_kway_merge(&refs, &mut out, cfg.threads_per_job, None);
+        return (out, "native-kway");
+    }
+    // The job owns `runs`, so hand them to the consuming tree variant:
+    // it frees each run buffer as its first-round merge completes,
+    // keeping peak memory lower than merging out of borrows.
+    drop(refs);
+    (
+        crate::mergepath::kway::parallel_tree_merge(runs, cfg.threads_per_job, None),
+        "native",
+    )
 }
 
 #[cfg(test)]
@@ -341,6 +381,7 @@ mod tests {
             batch_timeout_us: 100,
             backend: Backend::Native,
             segment_len: 0,
+            kway_flat_max_k: 64,
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -382,6 +423,40 @@ mod tests {
         expected.sort_unstable();
         let res = svc.submit_blocking(JobKind::Compact { runs }).unwrap();
         assert_eq!(res.output, expected);
+        // Small compaction (< 4096 keys): sequential loser-tree path.
+        assert_eq!(res.backend, "native");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn large_compaction_uses_flat_kway_engine() {
+        let svc = MergeService::start(test_config()).unwrap();
+        let runs: Vec<Vec<i32>> = (0..8u64)
+            .map(|i| gen_sorted_pair(WorkloadKind::Uniform, 2000, 1, 100 + i).0)
+            .collect();
+        let mut expected: Vec<i32> = runs.iter().flatten().copied().collect();
+        expected.sort_unstable();
+        let res = svc.submit_blocking(JobKind::Compact { runs }).unwrap();
+        assert_eq!(res.backend, "native-kway");
+        assert_eq!(res.output, expected);
+        assert_eq!(svc.stats().kway_jobs.get(), 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn oversized_k_falls_back_to_tree() {
+        let mut cfg = test_config();
+        cfg.kway_flat_max_k = 4;
+        let svc = MergeService::start(cfg).unwrap();
+        let runs: Vec<Vec<i32>> = (0..6u64)
+            .map(|i| gen_sorted_pair(WorkloadKind::Uniform, 1500, 1, 200 + i).0)
+            .collect();
+        let mut expected: Vec<i32> = runs.iter().flatten().copied().collect();
+        expected.sort_unstable();
+        let res = svc.submit_blocking(JobKind::Compact { runs }).unwrap();
+        assert_eq!(res.backend, "native");
+        assert_eq!(res.output, expected);
+        assert_eq!(svc.stats().kway_jobs.get(), 0);
         svc.shutdown();
     }
 

@@ -15,6 +15,8 @@ pub struct ServiceStats {
     pub native_jobs: Counter,
     /// Jobs executed on the segmented native backend.
     pub segmented_jobs: Counter,
+    /// Compactions executed on the flat single-pass k-way engine.
+    pub kway_jobs: Counter,
     /// Jobs executed on the XLA backend.
     pub xla_jobs: Counter,
     /// Elements processed in total.
@@ -42,6 +44,7 @@ impl ServiceStats {
         match backend {
             "xla" => self.xla_jobs.inc(),
             "native-segmented" => self.segmented_jobs.inc(),
+            "native-kway" => self.kway_jobs.inc(),
             _ => self.native_jobs.inc(),
         }
     }
@@ -49,13 +52,14 @@ impl ServiceStats {
     /// Human-readable snapshot (the `serve` CLI's stats dump).
     pub fn snapshot(&self) -> String {
         format!(
-            "jobs: submitted={} completed={} rejected={} | backends: native={} segmented={} xla={} | \
+            "jobs: submitted={} completed={} rejected={} | backends: native={} segmented={} kway={} xla={} | \
              batches={} elements={} | latency p50={} p95={} p99={} max={} | queue-wait p50={}",
             self.submitted.get(),
             self.completed.get(),
             self.rejected.get(),
             self.native_jobs.get(),
             self.segmented_jobs.get(),
+            self.kway_jobs.get(),
             self.xla_jobs.get(),
             self.batches.get(),
             self.elements.get(),
@@ -78,13 +82,16 @@ mod tests {
         s.record_completion("native", 100, 1000, 10);
         s.record_completion("xla", 200, 2000, 20);
         s.record_completion("native-segmented", 300, 3000, 30);
-        assert_eq!(s.completed.get(), 3);
+        s.record_completion("native-kway", 400, 4000, 40);
+        assert_eq!(s.completed.get(), 4);
         assert_eq!(s.native_jobs.get(), 1);
         assert_eq!(s.xla_jobs.get(), 1);
         assert_eq!(s.segmented_jobs.get(), 1);
-        assert_eq!(s.elements.get(), 600);
+        assert_eq!(s.kway_jobs.get(), 1);
+        assert_eq!(s.elements.get(), 1000);
         let snap = s.snapshot();
-        assert!(snap.contains("completed=3"));
+        assert!(snap.contains("completed=4"));
+        assert!(snap.contains("kway=1"));
         assert!(snap.contains("xla=1"));
     }
 }

@@ -43,24 +43,64 @@ pub mod runtime;
 pub mod sim;
 pub mod testutil;
 
-/// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+/// Crate-wide error type. Display/Error/From are hand-implemented —
+/// the offline image has no crates.io access, so no `thiserror`.
+#[derive(Debug)]
 pub enum Error {
     /// Input arrays violated a documented precondition (e.g. unsorted).
-    #[error("invalid input: {0}")]
     InvalidInput(String),
     /// Configuration file / CLI errors.
-    #[error("config error: {0}")]
     Config(String),
     /// PJRT / XLA runtime errors.
-    #[error("runtime error: {0}")]
     Runtime(String),
     /// Coordinator service errors (queue closed, job rejected, ...).
-    #[error("service error: {0}")]
     Service(String),
     /// I/O errors (artifact loading, config files).
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::InvalidInput(m) => write!(f, "invalid input: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Service(m) => write!(f, "service error: {m}"),
+            Error::Io(e) => e.fmt(f),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+/// Allocate a `Vec<T>` of `len` uninitialized elements — the shared
+/// write-only merge-output buffer idiom (a zero fill would be a full
+/// extra write pass over output memory).
+///
+/// # Safety contract (by convention, not the type system)
+/// The caller must overwrite every element before any read; only use
+/// with `Copy` payloads on outputs that an engine fully tiles.
+pub(crate) fn uninit_vec<T: Copy>(len: usize) -> Vec<T> {
+    let mut v = Vec::with_capacity(len);
+    // SAFETY: callers overwrite all `len` elements before reading.
+    #[allow(clippy::uninit_vec)]
+    unsafe {
+        v.set_len(len);
+    }
+    v
 }
 
 /// Crate-wide result alias.

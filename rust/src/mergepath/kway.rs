@@ -11,6 +11,12 @@
 //!   `O(N/p·log k + log N·log k)` time. Every level's pairwise merges
 //!   are Merge-Path partitioned, so load balance is exact at every
 //!   level (Cor. 7 applied per pair).
+//!
+//! The tree makes `⌈log₂ k⌉` full passes over memory; the flat
+//! single-pass engine in [`super::kway_path`] avoids that and is the
+//! coordinator's default for moderate `k`. The tree remains as the
+//! large-`k` fallback and as the oracle the flat engine is benchmarked
+//! against (`benches/kway_flat_vs_tree.rs`).
 
 use super::parallel::parallel_merge;
 use crate::exec::WorkerPool;
@@ -44,7 +50,11 @@ pub fn loser_tree_merge<T: Ord + Copy>(runs: &[&[T]], out: &mut [T]) {
             let mut best_key: Option<T> = None;
             for i in 0..k {
                 if let Some(v) = key(runs, &cursors, i) {
-                    if best_key.map_or(true, |b| v < b) {
+                    let better = match best_key {
+                        Some(b) => v < b,
+                        None => true,
+                    };
+                    if better {
                         best = i;
                         best_key = Some(v);
                     }
@@ -75,9 +85,29 @@ pub fn loser_tree_merge<T: Ord + Copy>(runs: &[&[T]], out: &mut [T]) {
     }
 }
 
+/// One tree-level pair merge into a freshly allocated buffer, routed
+/// through the pool when one is provided. Shared by both tree entry
+/// points so the uninit-buffer handling lives in exactly one place.
+fn merge_pair<T: Ord + Copy + Send + Sync>(
+    x: &[T],
+    y: &[T],
+    p: usize,
+    pool: Option<&WorkerPool>,
+) -> Vec<T> {
+    // Fully overwritten by the merge below (see crate::uninit_vec).
+    let mut out = crate::uninit_vec(x.len() + y.len());
+    match pool {
+        Some(pl) => super::parallel::parallel_merge_with_pool(pl, x, y, &mut out, p),
+        None => parallel_merge(x, y, &mut out, p),
+    }
+    out
+}
+
 /// Parallel k-way merge: balanced tree of pairwise Merge-Path merges.
-/// `pool`: optional persistent worker pool (spawns scoped threads
-/// otherwise). Returns the merged vector.
+/// Consumes the runs, freeing each buffer as its first-round merge
+/// completes — the coordinator's large-`k` fallback. `pool`: optional
+/// persistent worker pool (spawns scoped threads otherwise). Returns
+/// the merged vector.
 pub fn parallel_tree_merge<T: Ord + Copy + Send + Sync>(
     mut runs: Vec<Vec<T>>,
     p: usize,
@@ -93,28 +123,43 @@ pub fn parallel_tree_merge<T: Ord + Copy + Send + Sync>(
         let mut it = runs.into_iter();
         while let Some(x) = it.next() {
             match it.next() {
-                Some(y) => {
-                    let mut out = vec![];
-                    out.reserve_exact(x.len() + y.len());
-                    // SAFETY: fully overwritten by the merge below.
-                    #[allow(clippy::uninit_vec)]
-                    unsafe {
-                        out.set_len(x.len() + y.len());
-                    }
-                    match pool {
-                        Some(pl) => super::parallel::parallel_merge_with_pool(
-                            pl, &x, &y, &mut out, p,
-                        ),
-                        None => parallel_merge(&x, &y, &mut out, p),
-                    }
-                    next.push(out);
-                }
+                Some(y) => next.push(merge_pair(&x, &y, p, pool)),
                 None => next.push(x),
             }
         }
         runs = next;
     }
     runs.pop().unwrap()
+}
+
+/// Tree merge starting from *borrowed* runs: the first round merges
+/// pairs of input slices into freshly allocated buffers (work any tree
+/// engine must do anyway), then [`parallel_tree_merge`] consumes the
+/// intermediates. For callers that only hold `&[&[T]]` — the
+/// flat-vs-tree bench and other oracle comparisons. (The coordinator's
+/// large-`k` fallback uses the owning [`parallel_tree_merge`] instead,
+/// which can free run buffers progressively.)
+pub fn parallel_tree_merge_refs<T: Ord + Copy + Send + Sync>(
+    runs: &[&[T]],
+    p: usize,
+    pool: Option<&WorkerPool>,
+) -> Vec<T> {
+    assert!(p > 0);
+    let runs: Vec<&[T]> = runs.iter().copied().filter(|r| !r.is_empty()).collect();
+    if runs.is_empty() {
+        return vec![];
+    }
+    if runs.len() == 1 {
+        return runs[0].to_vec();
+    }
+    let mut next: Vec<Vec<T>> = Vec::with_capacity(runs.len().div_ceil(2));
+    for pair in runs.chunks(2) {
+        match pair {
+            [single] => next.push(single.to_vec()),
+            _ => next.push(merge_pair(pair[0], pair[1], p, pool)),
+        }
+    }
+    parallel_tree_merge(next, p, pool)
 }
 
 #[cfg(test)]
@@ -203,6 +248,19 @@ mod tests {
         let expected = oracle(&runs);
         let got = parallel_tree_merge(runs, 4, Some(&pool));
         assert_eq!(got, expected);
+    }
+
+    #[test]
+    fn tree_refs_matches_owned() {
+        let mut rng = Xoshiro256::seeded(0x50);
+        for k in [0usize, 1, 2, 5, 9, 17] {
+            let runs = random_runs(&mut rng, k, 70);
+            let refs: Vec<&[i64]> = runs.iter().map(|r| r.as_slice()).collect();
+            let owned = parallel_tree_merge(runs.clone(), 4, None);
+            let borrowed = parallel_tree_merge_refs(&refs, 4, None);
+            assert_eq!(owned, borrowed, "k={k}");
+            assert_eq!(borrowed, oracle(&runs), "k={k}");
+        }
     }
 
     #[test]

@@ -1,0 +1,480 @@
+//! Flat single-pass k-way Merge Path: the §5 multiselection idea
+//! generalised from two sorted sequences to `k`.
+//!
+//! The paper's [10] extension ([`super::select`]) finds the point of the
+//! *pairwise* merge path at an arbitrary output rank. Siebert & Träff
+//! ("Perfectly load-balanced, optimal, stable, parallel merge") and
+//! Träff ("Simplified, stable parallel merging") show the same
+//! rank-splitting idea works for `k` sequences: for a global output
+//! rank `r` there is a unique *stable* cut — one position per run —
+//! such that the selected elements are exactly the first `r` outputs of
+//! the stable k-way merge. Computing those cuts at the `p` equispaced
+//! ranks `i·N/p` yields `p` [`KwaySegment`] descriptors with the same
+//! guarantees as the pairwise partition (Thm 5/9/14 generalised):
+//! segments tile the output, are equisized ±1, each run is consumed in
+//! `p` contiguous pieces, and every segment can be merged independently
+//! with zero synchronization.
+//!
+//! [`parallel_kway_merge`] uses this to merge all `k` runs in **exactly
+//! one pass** over memory — each of the `p` cores loser-tree-merges its
+//! private per-run slices into its exclusive output window, like Alg 1.
+//! This replaces the `⌈log₂ k⌉` full read+write passes of the pairwise
+//! tree ([`super::kway::parallel_tree_merge`]) for the `JobKind::Compact`
+//! path — exactly the memory-traffic waste §4.3 of the paper warns
+//! about, paid `log k` times over by the tree.
+//!
+//! ## Stable merge order
+//!
+//! Ties across runs resolve to the lower-indexed run, and elements
+//! within a run keep their order — i.e. elements are ordered by the key
+//! `(value, run index, index in run)`. This matches
+//! [`super::kway::loser_tree_merge`] exactly, so segment merges
+//! concatenate into a bit-identical result.
+//!
+//! ## Selection algorithm
+//!
+//! [`kway_rank_split`] maintains per-run bounds `lo[j] ≤ x_j ≤ hi[j]`
+//! on the true cut `x` and repeatedly probes the middle element of the
+//! widest undecided run as a pivot. One `O(k log n)` counting round
+//! locates the pivot's global rank; every run then tightens toward its
+//! side of the pivot (prefix property of stable merges), so the probed
+//! run's interval at least halves each iteration —
+//! `O(k log max|run|)` iterations of `O(k log n)` work, independent of
+//! `N`. With `p` independent searches (the Alg 1 / CREW schedule) the
+//! partition stage costs `O(p · k² log² n)` comparisons, vanishing
+//! against the `Θ(N)` merge for any realistic compaction shape.
+
+use super::parallel::SliceParts;
+use crate::exec::{fork_join, WorkerPool};
+use std::ops::Range;
+
+/// One core's share of a k-way merge: loser-tree-merge
+/// `runs[j][run_ranges[j]]` for every `j` into `out[out_range]`.
+/// Produced by [`partition_kway_merge_path`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KwaySegment {
+    /// Sub-range of each run feeding this segment
+    /// (`run_ranges.len() == k`).
+    pub run_ranges: Vec<Range<usize>>,
+    /// Output range;
+    /// `out_range.len() == Σ run_ranges[j].len()`.
+    pub out_range: Range<usize>,
+}
+
+impl KwaySegment {
+    /// Number of output elements this segment produces.
+    pub fn len(&self) -> usize {
+        self.out_range.len()
+    }
+
+    /// True iff the segment produces no output.
+    pub fn is_empty(&self) -> bool {
+        self.out_range.is_empty()
+    }
+}
+
+/// Multi-sequence selection: how many elements of each run belong to
+/// the first `rank` outputs of the stable k-way merge (ties to the
+/// lower-indexed run). Returns one cut position per run; the cuts sum
+/// to `rank`.
+///
+/// # Panics
+/// If `rank` exceeds the total input length.
+pub fn kway_rank_split<T: Ord>(runs: &[&[T]], rank: usize) -> Vec<usize> {
+    let k = runs.len();
+    let total: usize = runs.iter().map(|r| r.len()).sum();
+    assert!(rank <= total, "rank {rank} out of range (total {total})");
+    // Invariant: the true cut x satisfies lo[j] <= x[j] <= hi[j] ∀j.
+    let mut lo = vec![0usize; k];
+    let mut hi: Vec<usize> = runs.iter().map(|r| r.len().min(rank)).collect();
+    let mut before = vec![0usize; k];
+    loop {
+        let mut sum_lo = 0usize;
+        let mut sum_hi = 0usize;
+        let mut jp = usize::MAX;
+        let mut widest = 0usize;
+        for j in 0..k {
+            sum_lo += lo[j];
+            sum_hi += hi[j];
+            let w = hi[j] - lo[j];
+            if w > widest {
+                widest = w;
+                jp = j;
+            }
+        }
+        // Either bound meeting the rank pins the whole cut (x is
+        // componentwise between them and sums to `rank`).
+        if sum_lo == rank {
+            return lo;
+        }
+        if sum_hi == rank {
+            return hi;
+        }
+        assert!(jp != usize::MAX, "selection bounds collapsed inconsistently");
+        // Pivot: middle undecided element of the widest run.
+        let m = lo[jp] + (hi[jp] - lo[jp] - 1) / 2;
+        let pv = &runs[jp][m];
+        // before[j] = elements of run j ordered strictly before the
+        // pivot element under (value, run, index) order. The pivot's own
+        // run contributes exactly the m elements preceding it; ties in
+        // higher-priority runs (j < jp) count, ties in lower-priority
+        // runs do not.
+        let mut pos = 0usize; // global rank of the pivot element
+        for j in 0..k {
+            before[j] = if j == jp {
+                m
+            } else if j < jp {
+                runs[j].partition_point(|x| x <= pv)
+            } else {
+                runs[j].partition_point(|x| x < pv)
+            };
+            pos += before[j];
+        }
+        if pos < rank {
+            // Pivot is inside the first `rank` outputs — so is every
+            // element ordered before it (prefix property).
+            for j in 0..k {
+                if j == jp {
+                    lo[jp] = lo[jp].max(m + 1);
+                } else {
+                    lo[j] = lo[j].max(before[j].min(hi[j]));
+                }
+            }
+        } else {
+            // Pivot is outside — so is every element ordered after it.
+            for j in 0..k {
+                if j == jp {
+                    hi[jp] = hi[jp].min(m);
+                } else {
+                    hi[j] = hi[j].min(before[j].max(lo[j]));
+                }
+            }
+        }
+    }
+}
+
+/// Partition the stable k-way merge of `runs` into `p` segments of
+/// (near-)equal output length: segment `i` covers output ranks
+/// `[i·N/p, (i+1)·N/p)` — the same balanced split as
+/// [`super::partition::partition_merge_path`], lengths differing by at
+/// most one.
+///
+/// # Panics
+/// If `p == 0`.
+pub fn partition_kway_merge_path<T: Ord>(runs: &[&[T]], p: usize) -> Vec<KwaySegment> {
+    assert!(p > 0, "need at least one partition");
+    let k = runs.len();
+    let n: usize = runs.iter().map(|r| r.len()).sum();
+    let mut segments = Vec::with_capacity(p);
+    let mut prev = vec![0usize; k];
+    let mut prev_d = 0usize;
+    for i in 1..=p {
+        let d = i * n / p;
+        let cut = if i == p {
+            // Last cut is the full input — no search needed.
+            runs.iter().map(|r| r.len()).collect()
+        } else {
+            kway_rank_split(runs, d)
+        };
+        segments.push(KwaySegment {
+            run_ranges: prev.iter().zip(cut.iter()).map(|(&s, &e)| s..e).collect(),
+            out_range: prev_d..d,
+        });
+        prev = cut;
+        prev_d = d;
+    }
+    segments
+}
+
+/// Merge `k` sorted runs into `out` in a single pass using `p` threads:
+/// partition at the `p − 1` interior ranks, then every core
+/// loser-tree-merges its per-run slices into its exclusive output
+/// window. Output is bit-identical to
+/// [`super::kway::loser_tree_merge`] over the same runs (stable, ties
+/// to the lower-indexed run) for every `p`.
+///
+/// `pool`: optional persistent worker pool (scoped threads otherwise).
+///
+/// # Panics
+/// If `out.len()` differs from the total input length or `p == 0`.
+pub fn parallel_kway_merge<T: Ord + Copy + Send + Sync>(
+    runs: &[&[T]],
+    out: &mut [T],
+    p: usize,
+    pool: Option<&WorkerPool>,
+) {
+    let total: usize = runs.iter().map(|r| r.len()).sum();
+    assert_eq!(out.len(), total, "output must hold all input elements");
+    assert!(p > 0);
+    if total == 0 {
+        return;
+    }
+    if p == 1 || total < 2 * p || runs.len() < 2 {
+        // Degenerate shapes: one sequential pass is both correct and
+        // faster than any parallel setup.
+        super::kway::loser_tree_merge(runs, out);
+        return;
+    }
+    let segments = partition_kway_merge_path(runs, p);
+    let shared = SliceParts::new(out);
+    let body = |tid: usize| {
+        let seg = &segments[tid];
+        if seg.is_empty() {
+            return;
+        }
+        let parts: Vec<&[T]> = seg
+            .run_ranges
+            .iter()
+            .zip(runs)
+            .map(|(r, run)| &run[r.clone()])
+            .collect();
+        // SAFETY: out_ranges are disjoint across tids and tile
+        // [0, total) by construction, so each thread gets an exclusive
+        // window.
+        let chunk = unsafe { shared.slice_mut(seg.out_range.start, seg.out_range.len()) };
+        super::kway::loser_tree_merge(&parts, chunk);
+    };
+    match pool {
+        Some(pl) => pl.run_scoped(p, body),
+        None => fork_join(p, body),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mergepath::kway::loser_tree_merge;
+    use crate::rng::Xoshiro256;
+
+    fn random_runs(rng: &mut Xoshiro256, k: usize, max_len: usize) -> Vec<Vec<i64>> {
+        (0..k)
+            .map(|_| {
+                let n = rng.range(0, max_len.max(1));
+                let mut v: Vec<i64> = (0..n).map(|_| rng.below(400) as i64).collect();
+                v.sort_unstable();
+                v
+            })
+            .collect()
+    }
+
+    fn oracle(runs: &[Vec<i64>]) -> Vec<i64> {
+        let mut v: Vec<i64> = runs.iter().flatten().copied().collect();
+        v.sort();
+        v
+    }
+
+    fn refs(runs: &[Vec<i64>]) -> Vec<&[i64]> {
+        runs.iter().map(|r| r.as_slice()).collect()
+    }
+
+    /// The k-way analogue of `partition.rs::check_partition`: tiling,
+    /// equisize ±1, per-run tiling, and concatenation == sequential.
+    fn check_partition(runs: &[Vec<i64>], p: usize) {
+        let refs = refs(runs);
+        let k = refs.len();
+        let n: usize = refs.iter().map(|r| r.len()).sum();
+        let segs = partition_kway_merge_path(&refs, p);
+        assert_eq!(segs.len(), p);
+
+        // 1. Segments tile the output exactly and are equisized ±1.
+        let (min_len, max_len) = (n / p, n.div_ceil(p));
+        let mut at = 0usize;
+        for (i, s) in segs.iter().enumerate() {
+            assert_eq!(s.out_range.start, at, "segment {i} not contiguous");
+            assert_eq!(s.run_ranges.len(), k);
+            assert_eq!(
+                s.out_range.len(),
+                s.run_ranges.iter().map(|r| r.len()).sum::<usize>(),
+                "segment {i} length inconsistent"
+            );
+            assert!(
+                (min_len..=max_len).contains(&s.out_range.len()),
+                "segment {i} len {} outside [{min_len}, {max_len}]",
+                s.out_range.len()
+            );
+            at = s.out_range.end;
+        }
+        assert_eq!(at, n);
+
+        // 2. Each run's ranges tile that run.
+        for j in 0..k {
+            assert_eq!(segs.first().unwrap().run_ranges[j].start, 0);
+            assert_eq!(segs.last().unwrap().run_ranges[j].end, refs[j].len());
+            for w in segs.windows(2) {
+                assert_eq!(w[0].run_ranges[j].end, w[1].run_ranges[j].start);
+            }
+        }
+
+        // 3. Merging each segment independently and concatenating equals
+        //    the sequential k-way merge.
+        let mut expected = vec![0i64; n];
+        loser_tree_merge(&refs, &mut expected);
+        assert_eq!(expected, oracle(runs));
+        let mut got = vec![0i64; n];
+        for s in &segs {
+            let parts: Vec<&[i64]> = s
+                .run_ranges
+                .iter()
+                .zip(&refs)
+                .map(|(r, run)| &run[r.clone()])
+                .collect();
+            loser_tree_merge(&parts, &mut got[s.out_range.clone()]);
+        }
+        assert_eq!(got, expected);
+    }
+
+    #[test]
+    fn rank_split_explicit_example() {
+        let a: Vec<i64> = vec![1, 4, 7];
+        let b: Vec<i64> = vec![2, 4, 9];
+        let c: Vec<i64> = vec![4, 4];
+        let runs: Vec<&[i64]> = vec![&a, &b, &c];
+        // Stable order: 1a 2b 4a 4b 4c 4c 7a 9b.
+        assert_eq!(kway_rank_split(&runs, 0), vec![0, 0, 0]);
+        assert_eq!(kway_rank_split(&runs, 2), vec![1, 1, 0]);
+        assert_eq!(kway_rank_split(&runs, 3), vec![2, 1, 0]);
+        assert_eq!(kway_rank_split(&runs, 4), vec![2, 2, 0]);
+        assert_eq!(kway_rank_split(&runs, 5), vec![2, 2, 1]);
+        assert_eq!(kway_rank_split(&runs, 6), vec![2, 2, 2]);
+        assert_eq!(kway_rank_split(&runs, 8), vec![3, 3, 2]);
+    }
+
+    #[test]
+    fn rank_split_sums_and_nests() {
+        let mut rng = Xoshiro256::seeded(0x6B01);
+        for _ in 0..20 {
+            let k = rng.range(1, 9);
+            let runs = random_runs(&mut rng, k, 50);
+            let rr = refs(&runs);
+            let n: usize = rr.iter().map(|r| r.len()).sum();
+            let mut prev = vec![0usize; k];
+            for rank in 0..=n {
+                let cut = kway_rank_split(&rr, rank);
+                assert_eq!(cut.iter().sum::<usize>(), rank);
+                for j in 0..k {
+                    assert!(cut[j] >= prev[j], "cuts must be nested");
+                    assert!(cut[j] <= rr[j].len());
+                }
+                prev = cut;
+            }
+        }
+    }
+
+    #[test]
+    fn partition_random_shapes() {
+        let mut rng = Xoshiro256::seeded(0x6B02);
+        for _ in 0..25 {
+            let k = rng.range(0, 10);
+            let runs = random_runs(&mut rng, k, 80);
+            for p in [1, 2, 3, 5, 8, 13] {
+                check_partition(&runs, p);
+            }
+        }
+    }
+
+    #[test]
+    fn partition_edge_shapes() {
+        // Empty run set, all-empty runs, single run, more parts than
+        // elements.
+        check_partition(&[], 4);
+        check_partition(&[vec![], vec![], vec![]], 3);
+        check_partition(&[(0..100).collect::<Vec<i64>>()], 7);
+        check_partition(&[vec![1i64], vec![2i64], vec![3i64]], 10);
+    }
+
+    #[test]
+    fn partition_heavy_duplicates() {
+        let runs: Vec<Vec<i64>> = (0..6).map(|_| vec![5i64; 40]).collect();
+        for p in [2, 4, 7] {
+            check_partition(&runs, p);
+        }
+        // Duplicates split across runs with distinct fills.
+        let runs = vec![vec![5i64; 30], vec![3i64; 10], vec![5i64; 25], vec![7i64; 5]];
+        check_partition(&runs, 8);
+    }
+
+    #[test]
+    fn partition_one_sided_runs() {
+        // Disjoint value ranges: the naive-split killer, k-way version.
+        let runs: Vec<Vec<i64>> = (0..5)
+            .map(|i| ((i * 1000)..(i * 1000 + 128)).collect())
+            .collect();
+        check_partition(&runs, 8);
+        let rev: Vec<Vec<i64>> = runs.into_iter().rev().collect();
+        check_partition(&rev, 8);
+    }
+
+    #[test]
+    fn parallel_matches_loser_tree_all_p() {
+        let mut rng = Xoshiro256::seeded(0x6B03);
+        for _ in 0..15 {
+            let k = rng.range(0, 12);
+            let runs = random_runs(&mut rng, k, 120);
+            let rr = refs(&runs);
+            let n: usize = rr.iter().map(|r| r.len()).sum();
+            let mut expected = vec![0i64; n];
+            loser_tree_merge(&rr, &mut expected);
+            for p in [1, 2, 3, 4, 8, 16, 33] {
+                let mut out = vec![0i64; n];
+                parallel_kway_merge(&rr, &mut out, p, None);
+                assert_eq!(out, expected, "k={k} p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_k_exceeding_p() {
+        let mut rng = Xoshiro256::seeded(0x6B04);
+        let runs = random_runs(&mut rng, 64, 60);
+        let rr = refs(&runs);
+        let n: usize = rr.iter().map(|r| r.len()).sum();
+        let mut out = vec![0i64; n];
+        parallel_kway_merge(&rr, &mut out, 4, None);
+        assert_eq!(out, oracle(&runs));
+    }
+
+    #[test]
+    fn parallel_with_pool() {
+        let pool = WorkerPool::new(4);
+        let mut rng = Xoshiro256::seeded(0x6B05);
+        let runs = random_runs(&mut rng, 9, 300);
+        let rr = refs(&runs);
+        let n: usize = rr.iter().map(|r| r.len()).sum();
+        let mut out = vec![0i64; n];
+        parallel_kway_merge(&rr, &mut out, 4, Some(&pool));
+        assert_eq!(out, oracle(&runs));
+    }
+
+    #[test]
+    fn stability_ties_ordered_by_run_index() {
+        // (key, origin) pairs where Ord only inspects the key; the flat
+        // engine must order tied keys by run index, like the loser tree.
+        #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+        struct K(i64, u8);
+        impl PartialOrd for K {
+            fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+                Some(self.cmp(o))
+            }
+        }
+        impl Ord for K {
+            fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+                self.0.cmp(&o.0)
+            }
+        }
+        let r0: Vec<K> = (0..40i64).map(|i| K(i / 4, 0)).collect();
+        let r1: Vec<K> = (0..40i64).map(|i| K(i / 4, 1)).collect();
+        let r2: Vec<K> = (0..40i64).map(|i| K(i / 4, 2)).collect();
+        let rr: Vec<&[K]> = vec![&r0, &r1, &r2];
+        let mut expected = vec![K(0, 9); 120];
+        loser_tree_merge(&rr, &mut expected);
+        for p in [2, 5, 8] {
+            let mut out = vec![K(0, 9); 120];
+            parallel_kway_merge(&rr, &mut out, p, None);
+            assert_eq!(
+                out.iter().map(|k| (k.0, k.1)).collect::<Vec<_>>(),
+                expected.iter().map(|k| (k.0, k.1)).collect::<Vec<_>>(),
+                "p={p}"
+            );
+        }
+    }
+}

@@ -196,7 +196,11 @@ fn gallop_right<T: Ord>(xs: &[T], key: &T) -> usize {
     // Invariant: everything < lo satisfies <= key; everything >= hi doesn't.
     if xs.is_empty() || xs[0] > *key {
         // Caller guarantees xs[0] <= key, but stay safe.
-        return if xs.first().map_or(true, |x| x > key) { 0 } else { 1 };
+        return match xs.first() {
+            None => 0,
+            Some(x) if x > key => 0,
+            Some(_) => 1,
+        };
     }
     let mut step = 1usize;
     let mut lo = 0usize; // xs[lo] <= key known

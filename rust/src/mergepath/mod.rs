@@ -12,11 +12,14 @@
 //! - [`sort`] — §3: parallel merge sort.
 //! - [`cache_sort`] — §4.4: cache-efficient parallel sort.
 //! - [`kway`] — k-way merging (loser tree + parallel pairwise tree).
+//! - [`kway_path`] — flat single-pass k-way merge via multi-sequence
+//!   selection (§5 generalised to k runs, after Siebert & Träff).
 //! - [`select`] — multiselection on the merge path ([10], §5).
 
 pub mod cache_sort;
 pub mod diagonal;
 pub mod kway;
+pub mod kway_path;
 pub mod merge;
 pub mod parallel;
 pub mod partition;
@@ -31,5 +34,8 @@ pub use partition::{partition_merge_path, MergeSegment};
 pub use segmented::{segmented_parallel_merge, SegmentedConfig};
 pub use sort::{parallel_merge_sort, parallel_merge_sort_with_pool};
 pub use cache_sort::{cache_efficient_sort, CacheSortConfig};
-pub use kway::{loser_tree_merge, parallel_tree_merge};
+pub use kway::{loser_tree_merge, parallel_tree_merge, parallel_tree_merge_refs};
+pub use kway_path::{
+    kway_rank_split, parallel_kway_merge, partition_kway_merge_path, KwaySegment,
+};
 pub use select::{multiselect, multiselect_independent};

@@ -117,9 +117,11 @@ pub fn run_streams(machine: &MachineSpec, streams: Vec<Vec<Ev>>, writeback: bool
         // tie-break by tid).
         let mut next: Option<usize> = None;
         for tid in 0..p {
-            if states[tid] == ThreadState::Running
-                && next.map_or(true, |n| clocks[tid] < clocks[n])
-            {
+            let earlier = match next {
+                Some(n) => clocks[tid] < clocks[n],
+                None => true,
+            };
+            if states[tid] == ThreadState::Running && earlier {
                 next = Some(tid);
             }
         }

@@ -105,7 +105,11 @@ pub fn run_hypercore(spec: &HyperCoreSpec, streams: Vec<Vec<Ev>>) -> HyperCoreRe
     loop {
         let mut next: Option<usize> = None;
         for tid in 0..p {
-            if states[tid] == St::Running && next.map_or(true, |n| clocks[tid] < clocks[n]) {
+            let earlier = match next {
+                Some(n) => clocks[tid] < clocks[n],
+                None => true,
+            };
+            if states[tid] == St::Running && earlier {
                 next = Some(tid);
             }
         }

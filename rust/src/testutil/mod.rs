@@ -93,9 +93,12 @@ impl Shrink for Vec<i64> {
         if n == 0 {
             return out;
         }
-        // Halves.
-        out.push(self[..n / 2].to_vec());
-        out.push(self[n / 2..].to_vec());
+        // Halves (skip for n == 1: the upper "half" would be an
+        // identical clone, a no-op candidate that stalls the shrinker).
+        if n > 1 {
+            out.push(self[..n / 2].to_vec());
+            out.push(self[n / 2..].to_vec());
+        }
         // Drop one element (first, middle, last).
         for idx in [0, n / 2, n - 1] {
             if idx < n {
@@ -109,6 +112,39 @@ impl Shrink for Vec<i64> {
             let mut v = self.clone();
             v[first_nonzero] /= 2;
             out.push(v);
+        }
+        out
+    }
+}
+
+impl Shrink for Vec<Vec<i64>> {
+    fn shrink_candidates(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        let n = self.len();
+        if n == 0 {
+            return out;
+        }
+        // Halve the run count (n == 1 would just clone the original,
+        // which stalls the greedy shrinker on a no-op candidate).
+        if n > 1 {
+            out.push(self[..n / 2].to_vec());
+            out.push(self[n / 2..].to_vec());
+        }
+        // Drop one run (first, middle, last).
+        for idx in [0, n / 2, n - 1] {
+            if idx < n {
+                let mut v = self.clone();
+                v.remove(idx);
+                out.push(v);
+            }
+        }
+        // Shrink the first non-empty run in place.
+        if let Some(i) = self.iter().position(|r| !r.is_empty()) {
+            for cand in self[i].shrink_candidates() {
+                let mut v = self.clone();
+                v[i] = cand;
+                out.push(v);
+            }
         }
         out
     }
@@ -247,6 +283,24 @@ mod tests {
         let minimal = shrink_loop(failing, &|v: &Vec<i64>| !v.contains(&7));
         assert!(minimal.len() <= 2, "shrunk to {minimal:?}");
         assert!(minimal.contains(&7));
+    }
+
+    #[test]
+    fn shrink_run_sets_reduces() {
+        let runs: Vec<Vec<i64>> = vec![vec![1, 2], vec![3, 4, 5], vec![]];
+        let cands = runs.shrink_candidates();
+        assert!(!cands.is_empty());
+        for c in &cands {
+            let cells: usize = c.iter().map(|r| r.len()).sum();
+            let orig: usize = runs.iter().map(|r| r.len()).sum();
+            let sum: i64 = c.iter().flatten().sum();
+            let orig_sum: i64 = runs.iter().flatten().sum();
+            assert!(
+                c.len() < runs.len() || cells < orig || sum < orig_sum,
+                "candidate {c:?} is not smaller"
+            );
+        }
+        assert!(Vec::<Vec<i64>>::new().shrink_candidates().is_empty());
     }
 
     #[test]

