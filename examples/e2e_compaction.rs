@@ -37,7 +37,8 @@ fn main() {
         batch_timeout_us: 100,
         backend: Backend::Auto, // uses XLA artifacts when shapes fit
         segment_len: 1 << 20,   // cache-efficient path for big merges
-        kway_flat_max_k: 64,    // flat single-pass engine for k-way compactions
+        kway_flat_max_k: 128,   // flat single-pass engine for k-way compactions
+        compact_shard_min_len: 512 << 10, // rank-shard compactions above 1M keys
         artifacts_dir: "artifacts".into(),
     };
     println!("config: {cfg:?}");
@@ -119,6 +120,34 @@ fn main() {
             kway_total,
             fmt_ns(res.latency_ns),
             res.backend
+        );
+    }
+
+    // Phase 3 — one oversized compaction: the dispatcher splits it by
+    // output rank into independent CompactShard sub-jobs (output is
+    // 1.5M keys ≥ 2 × compact_shard_min_len → 3 shards), which the
+    // pool executes like any other jobs; the last shard to finish
+    // replies with the stitched result.
+    {
+        let k = 24usize;
+        let giant: Vec<Vec<i32>> = (0..k)
+            .map(|_| sorted_run(rng.next_u64(), run_len))
+            .collect();
+        let giant_total: usize = giant.iter().map(|r| r.len()).sum();
+        total_elems += giant_total as u64;
+        let mut expected: Vec<i32> = giant.iter().flatten().copied().collect();
+        expected.sort_unstable();
+        let res = svc
+            .submit_blocking(JobKind::Compact { runs: giant })
+            .expect("sharded compact job");
+        assert_eq!(res.output, expected, "sharded compaction output mismatch");
+        assert_eq!(res.backend, "native-kway-sharded", "expected the rank-sharded path");
+        println!(
+            "{k}-way compaction: {} keys in {} via {} ({} shards)",
+            giant_total,
+            fmt_ns(res.latency_ns),
+            res.backend,
+            svc.stats().compact_shards.get(),
         );
     }
 

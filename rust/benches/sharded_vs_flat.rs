@@ -1,0 +1,115 @@
+//! Rank-sharded compaction vs the single-job flat k-way engine,
+//! end to end through the coordinator.
+//!
+//! Both paths do the same Θ(N) merge work over the same runs; what
+//! changes is the execution shape. The flat engine runs one job whose
+//! `threads_per_job` segments fork-join inside a single worker slot;
+//! the sharded path splits the job by output rank into `S` independent
+//! sub-jobs that the pool schedules like any other work. Sharding is
+//! expected to win when jobs are much larger than
+//! `compact_shard_min_len` (more schedulable units than workers →
+//! better overlap with concurrent traffic, and per-shard loser-tree
+//! merges instead of a partition + fork-join round per job), and to
+//! cost a little on borderline sizes (planning + per-shard dispatch
+//! overhead). This bench locates that boundary.
+//!
+//! Env: MERGEFLOW_BENCH_N    = total merged elements (default 8M),
+//!      MERGEFLOW_BENCH_K    = runs per compaction (default 16),
+//!      MERGEFLOW_BENCH_KIND = uniform|skewed|one-sided|interleaved|runs.
+
+use mergeflow::bench::harness::{report_line, BenchTimer};
+use mergeflow::bench::workload::{gen_sorted_runs, WorkloadKind};
+use mergeflow::config::{Backend, MergeflowConfig};
+use mergeflow::coordinator::{JobKind, MergeService};
+
+fn service(compact_shard_min_len: usize) -> MergeService {
+    let cfg = MergeflowConfig {
+        workers: 8,
+        // threads_per_job = 2 keeps S = total/min_len exact for the
+        // labels below (the threads floor in shard_count never kicks
+        // in), and makes the contrast representative: per-job threads
+        // for the flat engine vs job-level parallelism for shards.
+        threads_per_job: 2,
+        queue_capacity: 1024,
+        max_batch: 32,
+        batch_timeout_us: 100,
+        backend: Backend::Native,
+        segment_len: 0,
+        kway_flat_max_k: 128,
+        compact_shard_min_len,
+        artifacts_dir: "artifacts".into(),
+    };
+    MergeService::start(cfg).expect("service start")
+}
+
+fn main() {
+    let n_total: usize = std::env::var("MERGEFLOW_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8usize << 20);
+    let k: usize = std::env::var("MERGEFLOW_BENCH_K")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(16);
+    let kind = std::env::var("MERGEFLOW_BENCH_KIND")
+        .ok()
+        .and_then(|v| WorkloadKind::parse(&v))
+        .unwrap_or(WorkloadKind::Uniform);
+    let timer = BenchTimer::quick();
+    println!("workload: {} x {n_total} total elements, k = {k} runs", kind.name());
+
+    let runs = gen_sorted_runs(kind, k, n_total / k, 42);
+    let total: usize = runs.iter().map(|r| r.len()).sum();
+
+    // Every timed iteration below pays one runs.clone() to build the
+    // owned job (JobKind::Compact consumes its input, and pre-building
+    // up to max_iters copies of the working set is not viable). The
+    // clone is the same additive constant for every row; this baseline
+    // measures it so readers can subtract it when comparing rows near
+    // the crossover.
+    let m = timer.measure(|| {
+        let c = runs.clone();
+        std::hint::black_box(&c);
+    });
+    println!("{}", report_line("input clone (bias in all rows)", &m, total as u64));
+
+    // min_len = 0 is the unsharded flat engine; the rest sweep the
+    // shard size from "2 shards" down to "64 shards".
+    for (label, min_len) in [
+        ("flat      (1 job)", 0usize),
+        ("sharded   S≈2", total / 2),
+        ("sharded   S≈4", total / 4),
+        ("sharded   S≈8", total / 8),
+        ("sharded   S≈16", total / 16),
+        ("sharded   S≈64", total / 64),
+    ] {
+        let svc = service(min_len);
+        // One warm-up + correctness probe per configuration.
+        let probe = svc
+            .submit_blocking(JobKind::Compact { runs: runs.clone() })
+            .expect("probe job");
+        let expected_backend =
+            if min_len == 0 { "native-kway" } else { "native-kway-sharded" };
+        assert_eq!(probe.backend, expected_backend, "{label}");
+        let m = timer.measure(|| {
+            let res = svc
+                .submit_blocking(JobKind::Compact { runs: runs.clone() })
+                .expect("bench job");
+            std::hint::black_box(&res.output);
+        });
+        println!("{}", report_line(label, &m, total as u64));
+        svc.shutdown();
+    }
+
+    // Cross-check once: sharded output == flat output, bit for bit.
+    let flat = service(0)
+        .submit_blocking(JobKind::Compact { runs: runs.clone() })
+        .expect("flat job")
+        .output;
+    let sharded = service(total / 8)
+        .submit_blocking(JobKind::Compact { runs })
+        .expect("sharded job")
+        .output;
+    assert_eq!(flat, sharded, "sharded compaction diverged from the flat engine");
+    println!("cross-check ok: sharded == flat ({total} elements)");
+}

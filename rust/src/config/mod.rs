@@ -149,9 +149,26 @@ pub struct MergeflowConfig {
     /// Segment length for cache-efficient merging (elements); 0 = off.
     pub segment_len: usize,
     /// Largest run count `k` served by the flat single-pass k-way merge
-    /// engine (`mergepath::kway_path`); compactions with more runs fall
-    /// back to the pairwise-tree engine. 0 disables the flat engine.
+    /// engine (`mergepath::kway_path`) — and by the rank-sharded route,
+    /// which runs the same per-shard k-way kernel; compactions with
+    /// more runs fall back to the pairwise-tree engine. 0 disables the
+    /// flat engine (and sharding with it).
+    ///
+    /// The default comes from the crossover *model* documented in
+    /// `docs/ARCHITECTURE.md` §5, anchored by
+    /// `benches/kway_flat_vs_tree.rs` runs at `k ≤ 64` (the flat
+    /// engine won at every swept k; 128 sits past the sweep but well
+    /// below the stream-thrash regime). Re-derive it per deployment by
+    /// running the bench with larger k.
     pub kway_flat_max_k: usize,
+    /// Minimum output elements per shard of a rank-sharded compaction
+    /// (`coordinator::shard`). A `Compact` job whose total output is at
+    /// least twice this value — and whose run count is within
+    /// `kway_flat_max_k` — is split by output rank into independent
+    /// `CompactShard` sub-jobs of roughly this size each (floored at
+    /// `threads_per_job` shards, so sharding never reduces a job's
+    /// parallelism). 0 disables sharding.
+    pub compact_shard_min_len: usize,
     /// Directory holding AOT artifacts.
     pub artifacts_dir: String,
 }
@@ -166,7 +183,8 @@ impl Default for MergeflowConfig {
             batch_timeout_us: 200,
             backend: Backend::Native,
             segment_len: 0,
-            kway_flat_max_k: 64,
+            kway_flat_max_k: 128,
+            compact_shard_min_len: 2 << 20,
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -186,6 +204,8 @@ impl MergeflowConfig {
             backend: raw.get_str("service.backend", "native").parse()?,
             segment_len: raw.get_usize("merge.segment_len", d.segment_len)?,
             kway_flat_max_k: raw.get_usize("merge.kway_flat_max_k", d.kway_flat_max_k)?,
+            compact_shard_min_len: raw
+                .get_usize("merge.compact_shard_min_len", d.compact_shard_min_len)?,
             artifacts_dir: raw.get_str("service.artifacts_dir", &d.artifacts_dir),
         };
         cfg.validate()?;
@@ -234,6 +254,7 @@ timeout_us = 150
 [merge]
 segment_len = 4096
 kway_flat_max_k = 32
+compact_shard_min_len = 65536
 "#;
 
     #[test]
@@ -247,6 +268,7 @@ kway_flat_max_k = 32
         assert_eq!(cfg.backend, Backend::Auto);
         assert_eq!(cfg.segment_len, 4096);
         assert_eq!(cfg.kway_flat_max_k, 32);
+        assert_eq!(cfg.compact_shard_min_len, 65536);
         assert_eq!(cfg.batch_timeout_us, 150);
     }
 
@@ -255,6 +277,10 @@ kway_flat_max_k = 32
         let cfg = MergeflowConfig::from_raw(&RawConfig::parse("").unwrap()).unwrap();
         assert_eq!(cfg.workers, MergeflowConfig::default().workers);
         assert_eq!(cfg.backend, Backend::Native);
+        assert_eq!(
+            cfg.compact_shard_min_len,
+            MergeflowConfig::default().compact_shard_min_len
+        );
     }
 
     #[test]

@@ -19,11 +19,21 @@ pub enum JobKind {
         /// Input data.
         data: Vec<i32>,
     },
-    /// Compact several sorted runs into one (LSM-style k-way merge,
-    /// executed as a tree of pairwise Merge-Path merges).
+    /// Compact several sorted runs into one (LSM-style k-way merge).
+    /// Routed to the flat single-pass k-way engine, the pairwise tree,
+    /// or — when the output is large enough — expanded by the
+    /// dispatcher into rank shards (see [`JobKind::CompactShard`]).
     Compact {
         /// The sorted runs.
         runs: Vec<Vec<i32>>,
+    },
+    /// One rank-shard of a large compaction. Internal: produced by the
+    /// dispatcher's shard expansion ([`super::shard`]); clients cannot
+    /// construct a [`super::shard::ShardTask`] and so cannot submit
+    /// this kind directly.
+    CompactShard {
+        /// Which segment of the group's shard plan this job executes.
+        shard: super::shard::ShardTask,
     },
 }
 
@@ -34,6 +44,7 @@ impl JobKind {
             JobKind::Merge { a, b } => a.len() + b.len(),
             JobKind::Sort { data } => data.len(),
             JobKind::Compact { runs } => runs.iter().map(|r| r.len()).sum(),
+            JobKind::CompactShard { shard } => shard.len(),
         }
     }
 
@@ -58,6 +69,9 @@ impl JobKind {
                 }
             }
             JobKind::Sort { .. } => {}
+            // Shards carry slices of runs their parent job already
+            // validated at admission.
+            JobKind::CompactShard { .. } => {}
         }
         Ok(())
     }
@@ -83,7 +97,8 @@ pub struct JobResult {
     pub id: u64,
     /// Sorted output.
     pub output: Vec<i32>,
-    /// Which backend executed it ("native", "native-segmented", "xla").
+    /// Which backend executed it ("native", "native-segmented",
+    /// "native-kway", "native-kway-sharded", "xla").
     pub backend: &'static str,
     /// End-to-end latency (ns, from admission).
     pub latency_ns: u64,

@@ -7,14 +7,21 @@
 //! this service schedules: every merge job is executed with perfectly
 //! load-balanced segments across `threads_per_job` threads, and large
 //! jobs can use the cache-efficient segmented variant (§4.3) by
-//! setting `merge.segment_len`.
+//! setting `merge.segment_len`. Large compactions are additionally
+//! split by output rank into independent [`shard`] sub-jobs — the
+//! paper's equipartition property applied at the job level.
+//!
+//! See `docs/ARCHITECTURE.md` for the full job flow
+//! (`submit → queue → execute_job → shard / flat / tree`).
 
 pub mod job;
 pub mod queue;
 pub mod service;
+pub mod shard;
 pub mod stats;
 
 pub use job::{Job, JobHandle, JobKind, JobResult};
 pub use queue::{BoundedQueue, PushError};
 pub use service::MergeService;
+pub use shard::ShardTask;
 pub use stats::ServiceStats;

@@ -1,4 +1,13 @@
 //! Bounded MPMC admission queue with back-pressure.
+//!
+//! This is the *client-facing* half of the coordinator's flow control:
+//! [`BoundedQueue::try_push`] rejects when full, so overload surfaces
+//! at `submit` instead of growing unbounded memory. The second half is
+//! the dispatcher's in-flight semaphore, which stops dispatch from
+//! outrunning the workers — note that a `Compact` job may expand into
+//! several `CompactShard` sub-jobs *after* popping (see
+//! [`super::shard`]), each taking its own in-flight slot, so one queue
+//! entry can represent several units of pool work.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};

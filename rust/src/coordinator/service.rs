@@ -1,16 +1,22 @@
-//! The coordinator service: admission → dynamic batching → routing →
-//! execution → reply.
+//! The coordinator service: admission → dynamic batching → shard
+//! expansion → routing → execution → reply.
 //!
 //! One dispatcher thread assembles batches from the admission queue
-//! (dispatch on `max_batch` or `batch_timeout_us`, whichever first) and
-//! hands jobs to the worker pool. The router sends a merge job to the
-//! XLA backend when an AOT artifact with the exact baked shape exists
-//! (`Backend::Xla`/`Auto`), to the segmented native path when
+//! (dispatch on `max_batch` or `batch_timeout_us`, whichever first),
+//! expands oversized compactions into rank shards ([`super::shard`]),
+//! and hands jobs to the worker pool. The router sends a merge job to
+//! the XLA backend when an AOT artifact with the exact baked shape
+//! exists (`Backend::Xla`/`Auto`), to the segmented native path when
 //! `segment_len` is configured and the job is large, and to the plain
-//! native Merge Path otherwise.
+//! native Merge Path otherwise. Compactions route by shape — see
+//! `run_compaction` below — and always execute on the coordinator's
+//! persistent pool (merge engines receive the pool handle; nested
+//! fork-join from inside a worker is deadlock-free because the pool's
+//! scoped wait is helping, see [`WorkerPool::run_scoped`]).
 
 use super::job::{Job, JobHandle, JobKind, JobResult};
 use super::queue::{BoundedQueue, PushError};
+use super::shard;
 use super::stats::ServiceStats;
 use crate::config::{Backend, MergeflowConfig};
 use crate::exec::WorkerPool;
@@ -51,7 +57,37 @@ impl InFlight {
     fn release(&self) {
         let mut c = self.count.lock().unwrap();
         *c -= 1;
-        self.cv.notify_one();
+        // notify_all: both acquire-waiters (dispatch loop) and the
+        // drain-waiter (dispatcher shutdown) share this condvar.
+        self.cv.notify_all();
+    }
+
+    /// Block until no job is in flight (dispatcher shutdown barrier).
+    fn wait_idle(&self) {
+        let mut c = self.count.lock().unwrap();
+        while *c > 0 {
+            c = self.cv.wait(c).unwrap();
+        }
+    }
+}
+
+/// Releases one in-flight slot when dropped — *after* dropping its
+/// pool handle. Job closures must not complete still owning an
+/// `Arc<WorkerPool>`: the dispatcher treats "in-flight reached zero"
+/// as "I hold the last pool handle" before it exits and joins the
+/// workers, and a worker that dropped the final `Arc` itself would
+/// run `WorkerPool::drop` on a pool thread and self-join (hang).
+/// Dropping on unwind also keeps a panicking job from leaking its
+/// slot, which would wedge both dispatch and shutdown.
+struct SlotGuard {
+    pool: Option<Arc<WorkerPool>>,
+    in_flight: Arc<InFlight>,
+}
+
+impl Drop for SlotGuard {
+    fn drop(&mut self) {
+        self.pool.take();
+        self.in_flight.release();
     }
 }
 
@@ -203,6 +239,12 @@ fn dispatcher_loop(
         // Block for the first job of a batch.
         let Some(first) = queue.pop_timeout(Duration::from_millis(50)) else {
             if queue.is_closed() && queue.is_empty() {
+                // Admission is drained; now wait for execution. Only
+                // after the last SlotGuard drops do we provably hold
+                // the final Arc<WorkerPool>, so dropping `pool` on the
+                // way out joins the workers from this thread — and
+                // shutdown() really does complete pending jobs first.
+                in_flight.wait_idle();
                 return;
             }
             continue;
@@ -229,25 +271,41 @@ fn dispatcher_loop(
         // The in-flight semaphore keeps dispatch from outrunning the
         // workers, so a full admission queue means the system really is
         // saturated (back-pressure reaches the client).
+        //
+        // Oversized compactions are expanded here into rank shards:
+        // each shard takes its own in-flight slot, so a giant
+        // compaction saturates the pool shard by shard instead of
+        // parking one worker on a monolithic job (and back-pressure
+        // sees its true width).
         for job in batch {
-            in_flight.acquire();
-            let cfg = cfg.clone();
-            let runtime = runtime.clone();
-            let stats = Arc::clone(&stats);
-            let in_flight2 = Arc::clone(&in_flight);
-            pool.submit(move || {
-                execute_job(&cfg, runtime.as_deref(), &stats, job);
-                in_flight2.release();
-            });
+            for sub in shard::maybe_expand(&cfg, &stats, job) {
+                in_flight.acquire();
+                let cfg = cfg.clone();
+                let runtime = runtime.clone();
+                let stats = Arc::clone(&stats);
+                let guard = SlotGuard {
+                    pool: Some(Arc::clone(&pool)),
+                    in_flight: Arc::clone(&in_flight),
+                };
+                pool.submit(move || {
+                    let pool = guard.pool.as_deref().expect("guard holds the pool");
+                    execute_job(&cfg, runtime.as_deref(), &stats, pool, sub);
+                    // `guard` drops here: pool handle first, then the
+                    // in-flight slot — on unwind too.
+                });
+            }
         }
     }
 }
 
-/// Run one job to completion and reply.
+/// Run one job to completion and reply. Runs on a pool worker; `pool`
+/// is the same pool, handed to the merge engines so per-job parallelism
+/// reuses the persistent workers instead of spawning scoped threads.
 fn execute_job(
     cfg: &MergeflowConfig,
     runtime: Option<&XlaExecutor>,
     stats: &ServiceStats,
+    pool: &WorkerPool,
     job: Job,
 ) {
     let wait_ns =
@@ -260,7 +318,14 @@ fn execute_job(
             parallel_merge_sort(&mut data, cfg.threads_per_job);
             (data, "native")
         }
-        JobKind::Compact { runs } => run_compaction(cfg, runs),
+        JobKind::Compact { runs } => run_compaction(cfg, runs, pool),
+        JobKind::CompactShard { shard: task } => {
+            // Shards reply through the group (only the last one sends);
+            // per-shard and parent-completion accounting live in
+            // execute_shard, so the common tail below must not run.
+            shard::execute_shard(task, &job.reply, stats);
+            return;
+        }
     };
     let latency_ns = wait_ns
         + u64::try_from(t0.elapsed().as_nanos()).unwrap_or(u64::MAX);
@@ -322,7 +387,9 @@ fn run_merge(
     }
 }
 
-/// Compaction router. In preference order:
+/// Compaction router for jobs *below* the sharding threshold (larger
+/// ones were already expanded into rank shards by the dispatcher, see
+/// [`super::shard`]). In preference order:
 ///
 /// 1. sequential loser tree for small jobs or `threads_per_job == 1`
 ///    (one pass, no parallel setup cost) — backend `"native"`;
@@ -332,7 +399,15 @@ fn run_merge(
 ///    tree's `⌈log₂ k⌉`, backend `"native-kway"`;
 /// 3. the pairwise Merge-Path tree beyond the flat engine's configured
 ///    range — backend `"native"`.
-fn run_compaction(cfg: &MergeflowConfig, mut runs: Vec<Vec<i32>>) -> (Vec<i32>, &'static str) {
+///
+/// Both parallel engines run on the coordinator's persistent `pool`
+/// (we are already on one of its workers; the pool's helping scoped
+/// wait makes that sound) — no scoped-thread spawning per job.
+fn run_compaction(
+    cfg: &MergeflowConfig,
+    mut runs: Vec<Vec<i32>>,
+    pool: &WorkerPool,
+) -> (Vec<i32>, &'static str) {
     runs.retain(|r| !r.is_empty());
     if runs.is_empty() {
         return (vec![], "native");
@@ -354,7 +429,7 @@ fn run_compaction(cfg: &MergeflowConfig, mut runs: Vec<Vec<i32>>) -> (Vec<i32>, 
     if cfg.kway_flat_max_k > 0 && refs.len() <= cfg.kway_flat_max_k {
         // Flat engine's segments tile [0, total): every slot written.
         let mut out = crate::uninit_vec(total);
-        parallel_kway_merge(&refs, &mut out, cfg.threads_per_job, None);
+        parallel_kway_merge(&refs, &mut out, cfg.threads_per_job, Some(pool));
         return (out, "native-kway");
     }
     // The job owns `runs`, so hand them to the consuming tree variant:
@@ -362,7 +437,7 @@ fn run_compaction(cfg: &MergeflowConfig, mut runs: Vec<Vec<i32>>) -> (Vec<i32>, 
     // keeping peak memory lower than merging out of borrows.
     drop(refs);
     (
-        crate::mergepath::kway::parallel_tree_merge(runs, cfg.threads_per_job, None),
+        crate::mergepath::kway::parallel_tree_merge(runs, cfg.threads_per_job, Some(pool)),
         "native",
     )
 }
@@ -382,6 +457,9 @@ mod tests {
             backend: Backend::Native,
             segment_len: 0,
             kway_flat_max_k: 64,
+            // Off by default in unit tests so each test opts into the
+            // sharded path explicitly.
+            compact_shard_min_len: 0,
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -440,6 +518,48 @@ mod tests {
         assert_eq!(res.backend, "native-kway");
         assert_eq!(res.output, expected);
         assert_eq!(svc.stats().kway_jobs.get(), 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn large_compaction_shards_by_rank() {
+        let mut cfg = test_config();
+        cfg.compact_shard_min_len = 2048;
+        let svc = MergeService::start(cfg).unwrap();
+        let runs: Vec<Vec<i32>> = (0..6u64)
+            .map(|i| gen_sorted_pair(WorkloadKind::Uniform, 3000, 1, 300 + i).0)
+            .collect();
+        // Oracle: the unsharded flat engine over the same runs.
+        let refs: Vec<&[i32]> = runs.iter().map(|r| r.as_slice()).collect();
+        let mut expected = vec![0i32; 18_000];
+        parallel_kway_merge(&refs, &mut expected, 4, None);
+        drop(refs);
+        let res = svc.submit_blocking(JobKind::Compact { runs }).unwrap();
+        assert_eq!(res.backend, "native-kway-sharded");
+        assert_eq!(res.output, expected, "sharded output must be bit-identical");
+        let stats = svc.stats();
+        assert_eq!(stats.sharded_jobs.get(), 1);
+        assert_eq!(stats.compact_shards.get(), 18_000 / 2048); // 8 shards
+        assert_eq!(stats.compact_shards_completed.get(), stats.compact_shards.get());
+        assert_eq!(stats.completed.get(), 1, "client sees one job");
+        assert_eq!(stats.kway_jobs.get(), 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn sharding_disabled_keeps_flat_route() {
+        // Same workload as above with sharding off: flat engine, same
+        // bits.
+        let svc = MergeService::start(test_config()).unwrap();
+        let runs: Vec<Vec<i32>> = (0..6u64)
+            .map(|i| gen_sorted_pair(WorkloadKind::Uniform, 3000, 1, 300 + i).0)
+            .collect();
+        let mut expected: Vec<i32> = runs.iter().flatten().copied().collect();
+        expected.sort_unstable();
+        let res = svc.submit_blocking(JobKind::Compact { runs }).unwrap();
+        assert_eq!(res.backend, "native-kway");
+        assert_eq!(res.output, expected);
+        assert_eq!(svc.stats().compact_shards.get(), 0);
         svc.shutdown();
     }
 
@@ -512,6 +632,24 @@ mod tests {
         let h = svc.submit(JobKind::Merge { a, b }).unwrap();
         svc.shutdown(); // drains the queue first
         assert!(h.wait().is_ok());
+    }
+
+    #[test]
+    fn shutdown_waits_for_dispatched_jobs() {
+        // A job already handed to a worker (in-flight, no longer
+        // queued) must also complete before shutdown returns — the
+        // dispatcher drains the in-flight count, which is equally what
+        // guarantees it holds the last pool handle when it exits.
+        let svc = MergeService::start(test_config()).unwrap();
+        let (a, b) = gen_sorted_pair(WorkloadKind::Uniform, 400_000, 400_000, 5);
+        let h = svc.submit(JobKind::Merge { a, b }).unwrap();
+        // Let the dispatcher hand the job to a worker before closing.
+        std::thread::sleep(Duration::from_millis(20));
+        svc.shutdown();
+        assert!(
+            h.try_wait().is_some(),
+            "job must be complete by the time shutdown returns"
+        );
     }
 
     #[test]

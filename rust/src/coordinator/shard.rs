@@ -1,0 +1,426 @@
+//! Rank-sharded compaction: split one giant `Compact` job into
+//! independent `CompactShard` sub-jobs by **output rank**.
+//!
+//! Merge Path's core property — any output rank induces a unique,
+//! synchronization-free cut of the inputs (Alg 1/2 of the paper,
+//! generalised to `k` runs after Siebert & Träff) — means a compaction
+//! does not have to execute as one monolithic job: cutting every run
+//! once per shard boundary with
+//! [`partition_kway_merge_path`](crate::mergepath::partition_kway_merge_path)
+//! yields `S` equisized shards that merge disjoint windows of the
+//! output with **zero inter-shard coordination**. The dispatcher
+//! expands a qualifying `Compact` job into `S` [`JobKind::CompactShard`]
+//! sub-jobs *before* dispatch, so each shard is scheduled on the
+//! persistent worker pool like any other job (own back-pressure slot,
+//! own queue accounting) and no worker ever sits blocked waiting for
+//! sibling shards.
+//!
+//! ## Lifecycle
+//!
+//! ```text
+//! Compact{runs}           dispatcher: plan S cuts (kway_rank_split
+//!      │                  per boundary), build one ShardGroup
+//!      ▼
+//! ShardGroup ── Arc ──┬── CompactShard #0 ──▶ worker: merge window 0 ─┐
+//!   runs (shared)     ├── CompactShard #1 ──▶ worker: merge window 1 ─┤
+//!   output buffer     └── CompactShard #S−1 ▶ worker: merge window S−1┤
+//!   remaining = S                                                     │
+//!                  last shard to finish (remaining → 0) ◀─────────────┘
+//!                  takes the stitched buffer, records the completion
+//!                  (backend "native-kway-sharded") and replies to the
+//!                  client's original handle
+//! ```
+//!
+//! Shards write through disjoint, statically-known windows of a single
+//! shared output buffer (the tiling + equisize ±1 invariants of the
+//! k-way partition), so "stitching in rank order" is free — the windows
+//! *are* the final layout. Stability is inherited: each shard runs the
+//! same stable loser-tree kernel over its slices, and concatenating
+//! stable per-rank-range merges is exactly the stable k-way merge.
+//!
+//! The whole path runs on the coordinator's persistent
+//! [`WorkerPool`](crate::exec::WorkerPool) — no scoped-thread spawning
+//! anywhere.
+
+use super::job::{Job, JobKind, JobResult};
+use super::stats::ServiceStats;
+use crate::config::MergeflowConfig;
+use crate::mergepath::kway::loser_tree_merge;
+use crate::mergepath::kway_path::{partition_kway_merge_path, KwaySegment};
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Backend tag reported for compactions executed as rank shards.
+pub const BACKEND_SHARDED: &str = "native-kway-sharded";
+
+/// Hard ceiling on shards per compaction, independent of configuration
+/// — bounds dispatcher-side planning cost and per-job bookkeeping.
+const MAX_SHARDS: usize = 256;
+
+/// Output buffer shared by all shards of one group. Shards write
+/// through disjoint `out_range` windows (partition tiling invariant),
+/// which is what makes the unsynchronized access sound. The base
+/// pointer is cached at construction — while shards run concurrently,
+/// no `&mut` to the `Vec` itself is ever materialized (two live `&mut`
+/// would alias even if the written windows are disjoint).
+struct SharedOut {
+    buf: UnsafeCell<Vec<i32>>,
+    /// Heap base of `buf`, captured before the group is shared. Stays
+    /// valid when the `Vec` moves: only its header moves, not the heap
+    /// allocation, and shards never grow/shrink the buffer.
+    base: *mut i32,
+}
+
+impl SharedOut {
+    fn new(mut buf: Vec<i32>) -> Self {
+        let base = buf.as_mut_ptr();
+        Self { buf: UnsafeCell::new(buf), base }
+    }
+}
+
+// SAFETY: concurrent access is only through `base` with disjoint
+// windows; the buffer itself is touched again only after all writers
+// finished (`remaining` countdown with AcqRel ordering).
+unsafe impl Send for SharedOut {}
+unsafe impl Sync for SharedOut {}
+
+/// Shared state of one sharded compaction: the run buffers (shared by
+/// all shards via `Arc`), the planned per-shard cuts, the output
+/// buffer, and the completion countdown.
+pub struct ShardGroup {
+    runs: Vec<Vec<i32>>,
+    segments: Vec<KwaySegment>,
+    out: SharedOut,
+    /// Shards still running; the shard that decrements this to zero
+    /// stitches and replies.
+    remaining: AtomicUsize,
+    /// Parent job id (every shard reports it; the client sees one job).
+    parent_id: u64,
+    /// Parent admission time — end-to-end latency covers queue wait,
+    /// planning, and the slowest shard.
+    enqueued_at: Instant,
+    /// Queue wait of the parent (admission → expansion), in ns.
+    queue_wait_ns: u64,
+    /// Total output elements across all shards.
+    total: usize,
+}
+
+impl std::fmt::Debug for ShardGroup {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ShardGroup")
+            .field("parent_id", &self.parent_id)
+            .field("shards", &self.segments.len())
+            .field("total", &self.total)
+            .finish()
+    }
+}
+
+/// One shard's handle into its [`ShardGroup`]: which segment of the
+/// plan this sub-job executes. Carried by [`JobKind::CompactShard`];
+/// constructed only by the dispatcher's shard expansion (clients
+/// cannot submit shards directly).
+#[derive(Debug, Clone)]
+pub struct ShardTask {
+    group: Arc<ShardGroup>,
+    index: usize,
+}
+
+impl ShardTask {
+    /// Output elements this shard produces (its window length).
+    pub fn len(&self) -> usize {
+        self.group.segments[self.index].out_range.len()
+    }
+
+    /// True iff the shard's output window is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total shards in this shard's group.
+    pub fn shard_count(&self) -> usize {
+        self.group.segments.len()
+    }
+}
+
+/// How many shards a compaction of `total` output elements with
+/// `live_runs` non-empty runs should execute as. `1` means "do not
+/// shard" (the flat/tree engines handle it in-process).
+///
+/// The sharded route shares the flat engine's run-count cap
+/// (`kway_flat_max_k`): each shard performs the same k-way loser-tree
+/// merge the knob governs, and the cap also bounds the dispatcher-side
+/// planning cost (each boundary search is `O(k²·log²(max run))`), so a
+/// compaction with thousands of runs cannot stall dispatch while being
+/// planned — it falls to the pairwise tree on a worker instead.
+///
+/// Qualifying jobs get at least `threads_per_job` shards: each shard
+/// merges *sequentially*, so fewer concurrent shards than the flat
+/// engine's thread count would reduce the job's parallelism on a
+/// borderline total (shards then run somewhat smaller than
+/// `compact_shard_min_len`, never smaller than `2·min_len/threads`).
+pub(crate) fn shard_count(cfg: &MergeflowConfig, live_runs: usize, total: usize) -> usize {
+    if cfg.compact_shard_min_len == 0 || live_runs < 2 || live_runs > cfg.kway_flat_max_k {
+        return 1;
+    }
+    let s = total / cfg.compact_shard_min_len;
+    if s < 2 {
+        return 1;
+    }
+    s.max(cfg.threads_per_job).min(MAX_SHARDS)
+}
+
+/// Expand a qualifying `Compact` job into one sub-job per shard; any
+/// other job (including compactions below the sharding threshold) is
+/// returned unchanged. Called by the dispatcher before dispatch, so
+/// every returned job flows through the normal in-flight accounting.
+///
+/// Planning cost is one [`kway_rank_split`] per interior shard
+/// boundary — `O(S·k²·log²(max run))` comparisons, vanishing against
+/// the `Θ(total)` merge the shards then perform in parallel. Planning
+/// runs *sequentially on the dispatcher thread* on purpose: routing
+/// the searches through the pool would make the dispatcher's scoped
+/// wait help-steal whole queued job closures (FIFO ahead of the
+/// microsecond-scale searches) and stall all dispatch behind them —
+/// the pooled partition is for the merge engines, which already own a
+/// worker (see
+/// [`partition_kway_merge_path_with_pool`](crate::mergepath::partition_kway_merge_path_with_pool)).
+/// The stall this can cost other traffic is bounded by the caps: at
+/// the extreme (`k = kway_flat_max_k` runs, [`MAX_SHARDS`] shards —
+/// i.e. a multi-gigabyte compaction) planning is on the order of a
+/// second, against the tens of seconds that job spends merging;
+/// operators who care more about dispatch latency than giant-job
+/// throughput raise `compact_shard_min_len`.
+///
+/// [`MAX_SHARDS`]: self::MAX_SHARDS
+/// [`kway_rank_split`]: crate::mergepath::kway_rank_split
+pub(crate) fn maybe_expand(cfg: &MergeflowConfig, stats: &ServiceStats, job: Job) -> Vec<Job> {
+    let Job { id, kind, enqueued_at, reply } = job;
+    let runs = match kind {
+        JobKind::Compact { runs } => runs,
+        other => return vec![Job { id, kind: other, enqueued_at, reply }],
+    };
+    let total: usize = runs.iter().map(|r| r.len()).sum();
+    let live_runs = runs.iter().filter(|r| !r.is_empty()).count();
+    let shards = shard_count(cfg, live_runs, total);
+    if shards < 2 {
+        return vec![Job { id, kind: JobKind::Compact { runs }, enqueued_at, reply }];
+    }
+    let segments = {
+        let refs: Vec<&[i32]> = runs.iter().map(|r| r.as_slice()).collect();
+        partition_kway_merge_path(&refs, shards)
+    };
+    let queue_wait_ns =
+        u64::try_from(enqueued_at.elapsed().as_nanos()).unwrap_or(u64::MAX);
+    let group = Arc::new(ShardGroup {
+        runs,
+        segments,
+        // Fully tiled by the shard windows — every slot written exactly
+        // once before the stitched read (see crate::uninit_vec).
+        out: SharedOut::new(crate::uninit_vec(total)),
+        remaining: AtomicUsize::new(shards),
+        parent_id: id,
+        enqueued_at,
+        queue_wait_ns,
+        total,
+    });
+    stats.compact_shards.add(shards as u64);
+    (0..shards)
+        .map(|index| Job {
+            id,
+            kind: JobKind::CompactShard {
+                shard: ShardTask { group: Arc::clone(&group), index },
+            },
+            enqueued_at,
+            // Every shard carries a clone; only the last-finishing
+            // shard actually sends through it.
+            reply: reply.clone(),
+        })
+        .collect()
+}
+
+/// Execute one shard: stable loser-tree merge of its per-run slices
+/// into its exclusive output window. The shard that completes the
+/// group stitches (takes the fully-tiled buffer) and replies on the
+/// parent's channel with backend [`BACKEND_SHARDED`].
+pub(crate) fn execute_shard(
+    shard: ShardTask,
+    reply: &std::sync::mpsc::Sender<JobResult>,
+    stats: &ServiceStats,
+) {
+    let group = &*shard.group;
+    let seg = &group.segments[shard.index];
+    if !seg.is_empty() {
+        let parts: Vec<&[i32]> = seg
+            .run_ranges
+            .iter()
+            .zip(&group.runs)
+            .map(|(r, run)| &run[r.clone()])
+            .collect();
+        // SAFETY: shard windows are disjoint and tile [0, total) (k-way
+        // partition invariants), so this shard has exclusive access to
+        // its window for the lifetime of the borrow; `base` was cached
+        // before the group was shared, so no `&mut Vec` aliases here.
+        let window = unsafe {
+            std::slice::from_raw_parts_mut(
+                group.out.base.add(seg.out_range.start),
+                seg.out_range.len(),
+            )
+        };
+        loser_tree_merge(&parts, window);
+    }
+    stats.compact_shards_completed.inc();
+    // AcqRel: our window writes happen-before the final shard's read of
+    // the whole buffer.
+    if group.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+        // SAFETY: all shards have finished writing (we observed the
+        // counter reach zero with Acquire), so we are the only thread
+        // touching the buffer.
+        let output = unsafe { std::mem::take(&mut *group.out.buf.get()) };
+        let latency_ns =
+            u64::try_from(group.enqueued_at.elapsed().as_nanos()).unwrap_or(u64::MAX);
+        stats.record_completion(
+            BACKEND_SHARDED,
+            group.total as u64,
+            latency_ns,
+            group.queue_wait_ns,
+        );
+        // Receiver may have been dropped (client gave up) — fine.
+        let _ = reply.send(JobResult {
+            id: group.parent_id,
+            output,
+            backend: BACKEND_SHARDED,
+            latency_ns,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::workload::{gen_sorted_runs, WorkloadKind};
+    use std::sync::mpsc::channel;
+    use std::time::Instant;
+
+    fn cfg_with(min_len: usize) -> MergeflowConfig {
+        MergeflowConfig {
+            compact_shard_min_len: min_len,
+            // threads_per_job = 2 keeps S = total/min_len exact in the
+            // expectations below (no threads floor kicking in).
+            threads_per_job: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn shard_count_thresholds() {
+        let cfg = cfg_with(1000);
+        assert_eq!(shard_count(&cfg, 4, 999), 1, "below one shard of data");
+        assert_eq!(shard_count(&cfg, 4, 1999), 1, "below two shards");
+        assert_eq!(shard_count(&cfg, 4, 2000), 2, "exactly two shards");
+        assert_eq!(shard_count(&cfg, 4, 10_500), 10);
+        assert_eq!(shard_count(&cfg, 1, 10_500), 1, "single live run never shards");
+        assert_eq!(shard_count(&cfg, 0, 0), 1);
+        assert_eq!(shard_count(&cfg_with(0), 8, 1 << 30), 1, "0 disables sharding");
+        assert_eq!(shard_count(&cfg_with(1), 2, 1 << 30), MAX_SHARDS, "capped");
+        // The sharded route inherits the flat engine's k cap: beyond it
+        // (or with the flat engine disabled) the tree handles the job.
+        let k_cap = cfg.kway_flat_max_k;
+        assert_eq!(shard_count(&cfg, k_cap, 1 << 30), MAX_SHARDS);
+        assert_eq!(shard_count(&cfg, k_cap + 1, 1 << 30), 1, "k over flat cap");
+        let mut flat_off = cfg_with(1000);
+        flat_off.kway_flat_max_k = 0;
+        assert_eq!(shard_count(&flat_off, 4, 1 << 30), 1, "flat engine off");
+        // Threads floor: a qualifying job never gets fewer shards than
+        // threads_per_job (sharding must not reduce parallelism), but
+        // the floor never forces sharding below the 2·min_len bar.
+        let mut four = cfg_with(1000);
+        four.threads_per_job = 4;
+        assert_eq!(shard_count(&four, 4, 1999), 1, "below the 2-shard bar");
+        assert_eq!(shard_count(&four, 4, 2000), 4, "floored at threads_per_job");
+        assert_eq!(shard_count(&four, 4, 10_500), 10, "floor inactive past it");
+    }
+
+    #[test]
+    fn expand_leaves_small_jobs_alone() {
+        let cfg = cfg_with(1 << 20);
+        let stats = ServiceStats::new();
+        let (tx, _rx) = channel();
+        let job = Job {
+            id: 7,
+            kind: JobKind::Compact { runs: vec![vec![1, 3], vec![2, 4]] },
+            enqueued_at: Instant::now(),
+            reply: tx,
+        };
+        let out = maybe_expand(&cfg, &stats, job);
+        assert_eq!(out.len(), 1);
+        assert!(matches!(out[0].kind, JobKind::Compact { .. }));
+        assert_eq!(stats.compact_shards.get(), 0);
+    }
+
+    #[test]
+    fn expand_and_execute_stitches_bit_identical() {
+        // Drive the shard path directly (no service): expand, execute
+        // every sub-job in arbitrary order, check the stitched reply.
+        let cfg = cfg_with(512);
+        let stats = ServiceStats::new();
+        let runs = gen_sorted_runs(WorkloadKind::Skewed, 6, 700, 11);
+        let mut expected = vec![0i32; 4200];
+        {
+            let refs: Vec<&[i32]> = runs.iter().map(|r| r.as_slice()).collect();
+            loser_tree_merge(&refs, &mut expected);
+        }
+        let (tx, rx) = channel();
+        let job = Job {
+            id: 42,
+            kind: JobKind::Compact { runs },
+            enqueued_at: Instant::now(),
+            reply: tx,
+        };
+        let subs = maybe_expand(&cfg, &stats, job);
+        assert_eq!(subs.len(), 4200 / 512); // 8 shards
+        assert_eq!(stats.compact_shards.get(), subs.len() as u64);
+        // Execute out of order: completion must not depend on ordering.
+        for sub in subs.into_iter().rev() {
+            match sub.kind {
+                JobKind::CompactShard { shard } => {
+                    assert!(shard.shard_count() >= 2);
+                    execute_shard(shard, &sub.reply, &stats);
+                }
+                _ => unreachable!("expansion must yield only shards"),
+            }
+        }
+        let res = rx.try_recv().expect("last shard must reply exactly once");
+        assert!(rx.try_recv().is_err(), "only one reply for the group");
+        assert_eq!(res.id, 42);
+        assert_eq!(res.backend, BACKEND_SHARDED);
+        assert_eq!(res.output, expected);
+        assert_eq!(stats.compact_shards_completed.get(), 8);
+        assert_eq!(stats.sharded_jobs.get(), 1);
+        assert_eq!(stats.completed.get(), 1);
+    }
+
+    #[test]
+    fn expand_handles_empty_runs_in_the_mix() {
+        let cfg = cfg_with(64);
+        let stats = ServiceStats::new();
+        let mut runs = gen_sorted_runs(WorkloadKind::Uniform, 3, 200, 5);
+        runs.insert(1, vec![]);
+        runs.push(vec![]);
+        let mut expected: Vec<i32> = runs.iter().flatten().copied().collect();
+        expected.sort_unstable();
+        let (tx, rx) = channel();
+        let job =
+            Job { id: 1, kind: JobKind::Compact { runs }, enqueued_at: Instant::now(), reply: tx };
+        let subs = maybe_expand(&cfg, &stats, job);
+        assert!(subs.len() >= 2);
+        for sub in subs {
+            match sub.kind {
+                JobKind::CompactShard { shard } => execute_shard(shard, &sub.reply, &stats),
+                _ => unreachable!(),
+            }
+        }
+        assert_eq!(rx.try_recv().unwrap().output, expected);
+    }
+}

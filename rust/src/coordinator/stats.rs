@@ -17,6 +17,14 @@ pub struct ServiceStats {
     pub segmented_jobs: Counter,
     /// Compactions executed on the flat single-pass k-way engine.
     pub kway_jobs: Counter,
+    /// Compactions executed as rank shards (backend
+    /// "native-kway-sharded"); one count per *parent* compaction.
+    pub sharded_jobs: Counter,
+    /// Shard sub-jobs planned by the dispatcher's shard expansion.
+    pub compact_shards: Counter,
+    /// Shard sub-jobs completed. Equals [`ServiceStats::compact_shards`]
+    /// when no sharded compaction is in flight.
+    pub compact_shards_completed: Counter,
     /// Jobs executed on the XLA backend.
     pub xla_jobs: Counter,
     /// Elements processed in total.
@@ -45,6 +53,7 @@ impl ServiceStats {
             "xla" => self.xla_jobs.inc(),
             "native-segmented" => self.segmented_jobs.inc(),
             "native-kway" => self.kway_jobs.inc(),
+            "native-kway-sharded" => self.sharded_jobs.inc(),
             _ => self.native_jobs.inc(),
         }
     }
@@ -52,7 +61,8 @@ impl ServiceStats {
     /// Human-readable snapshot (the `serve` CLI's stats dump).
     pub fn snapshot(&self) -> String {
         format!(
-            "jobs: submitted={} completed={} rejected={} | backends: native={} segmented={} kway={} xla={} | \
+            "jobs: submitted={} completed={} rejected={} | backends: native={} segmented={} kway={} sharded={} xla={} | \
+             shards: planned={} done={} | \
              batches={} elements={} | latency p50={} p95={} p99={} max={} | queue-wait p50={}",
             self.submitted.get(),
             self.completed.get(),
@@ -60,7 +70,10 @@ impl ServiceStats {
             self.native_jobs.get(),
             self.segmented_jobs.get(),
             self.kway_jobs.get(),
+            self.sharded_jobs.get(),
             self.xla_jobs.get(),
+            self.compact_shards.get(),
+            self.compact_shards_completed.get(),
             self.batches.get(),
             self.elements.get(),
             fmt_ns(self.latency.quantile(0.5)),
@@ -83,15 +96,30 @@ mod tests {
         s.record_completion("xla", 200, 2000, 20);
         s.record_completion("native-segmented", 300, 3000, 30);
         s.record_completion("native-kway", 400, 4000, 40);
-        assert_eq!(s.completed.get(), 4);
+        s.record_completion("native-kway-sharded", 500, 5000, 50);
+        assert_eq!(s.completed.get(), 5);
         assert_eq!(s.native_jobs.get(), 1);
         assert_eq!(s.xla_jobs.get(), 1);
         assert_eq!(s.segmented_jobs.get(), 1);
         assert_eq!(s.kway_jobs.get(), 1);
-        assert_eq!(s.elements.get(), 1000);
+        assert_eq!(s.sharded_jobs.get(), 1);
+        assert_eq!(s.elements.get(), 1500);
         let snap = s.snapshot();
-        assert!(snap.contains("completed=4"));
+        assert!(snap.contains("completed=5"));
         assert!(snap.contains("kway=1"));
+        assert!(snap.contains("sharded=1"));
         assert!(snap.contains("xla=1"));
+    }
+
+    #[test]
+    fn shard_counters_are_independent_of_completions() {
+        let s = ServiceStats::new();
+        s.compact_shards.add(8);
+        for _ in 0..8 {
+            s.compact_shards_completed.inc();
+        }
+        assert_eq!(s.compact_shards.get(), s.compact_shards_completed.get());
+        assert_eq!(s.completed.get(), 0, "shards are not client-visible jobs");
+        assert!(s.snapshot().contains("planned=8"));
     }
 }

@@ -8,12 +8,28 @@
 //! Scoped (borrowing) tasks are executed with a completion latch: the
 //! submitting call does not return until every task of the batch has
 //! run, which is what makes the lifetime erasure sound. A panicking
-//! task poisons the pool and the panic is re-raised on the submitter.
+//! scoped task is re-raised on the submitter; workers themselves
+//! survive any task's panic (a dead worker would silently shrink pool
+//! capacity), so panics are contained to the batch or job they belong
+//! to.
+//!
+//! ## Nested `run_scoped` (calling the pool from inside a worker)
+//!
+//! Coordinator jobs execute *on* pool workers, and a job's merge engine
+//! may itself call [`WorkerPool::run_scoped`] to parallelize its
+//! segments on the same pool. A naive latch wait would deadlock: every
+//! worker could end up blocked inside a wait while the tasks that would
+//! release those latches sit behind them in the queue. `run_scoped`
+//! therefore uses a *helping* wait — while its latch is open, the
+//! submitting thread pulls queued tasks and executes them itself. Any
+//! blocked submitter keeps draining the queue, so some thread always
+//! makes progress and nesting to arbitrary depth cannot deadlock.
 
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 type Task = Box<dyn FnOnce() + Send + 'static>;
 
@@ -44,21 +60,32 @@ impl Latch {
         }
     }
 
-    fn wait(&self) {
+    fn is_done(&self) -> bool {
+        *self.remaining.lock().unwrap() == 0
+    }
+
+    /// Wait until done or `timeout` elapses; true iff done.
+    fn wait_timeout(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
         let mut rem = self.remaining.lock().unwrap();
         while *rem > 0 {
-            rem = self.cv.wait(rem).unwrap();
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, _res) = self.cv.wait_timeout(rem, deadline - now).unwrap();
+            rem = guard;
         }
+        true
     }
-}
-
-struct Shared {
-    queue: Mutex<Option<Receiver<Task>>>, // receiver is moved out by workers
 }
 
 /// A fixed-size pool of OS threads executing submitted closures.
 pub struct WorkerPool {
     sender: Option<Sender<Task>>,
+    /// Shared with the workers so a blocked `run_scoped` submitter can
+    /// steal queued tasks (the helping wait).
+    receiver: Arc<Mutex<Receiver<Task>>>,
     handles: Vec<std::thread::JoinHandle<()>>,
     size: usize,
 }
@@ -74,13 +101,9 @@ impl WorkerPool {
     pub fn new(size: usize) -> Self {
         assert!(size > 0);
         let (tx, rx) = channel::<Task>();
-        let shared = Arc::new(Shared {
-            queue: Mutex::new(Some(rx)),
-        });
         // A single shared receiver guarded by a mutex: workers take turns
         // pulling tasks. Contention is negligible at our task granularity
         // (tasks are whole merge segments, not elements).
-        let rx = shared.queue.lock().unwrap().take().unwrap();
         let rx = Arc::new(Mutex::new(rx));
         let mut handles = Vec::with_capacity(size);
         for worker_id in 0..size {
@@ -94,7 +117,22 @@ impl WorkerPool {
                             guard.recv()
                         };
                         match task {
-                            Ok(task) => task(),
+                            // A panicking task must not take the worker
+                            // down with it: scoped batches report panics
+                            // through their latch (re-raised on the
+                            // submitter), and a raw job closure's drop
+                            // guards/channels fire during this unwind —
+                            // killing the thread would only leak pool
+                            // capacity and eventually wedge dispatch.
+                            Ok(task) => {
+                                if std::panic::catch_unwind(AssertUnwindSafe(task))
+                                    .is_err()
+                                {
+                                    eprintln!(
+                                        "mergeflow: pool task panicked; worker continues"
+                                    );
+                                }
+                            }
                             Err(_) => break, // channel closed: shut down
                         }
                     })
@@ -103,9 +141,19 @@ impl WorkerPool {
         }
         Self {
             sender: Some(tx),
+            receiver: rx,
             handles,
             size,
         }
+    }
+
+    /// Pull one queued task without blocking. `None` when the queue is
+    /// empty *or* when an idle worker holds the receiver lock (it is
+    /// parked inside `recv` and will run the next submitted task itself,
+    /// so there is nothing useful to steal).
+    fn try_steal(&self) -> Option<Task> {
+        let guard = self.receiver.try_lock().ok()?;
+        guard.try_recv().ok()
     }
 
     /// Number of worker threads.
@@ -127,6 +175,12 @@ impl WorkerPool {
     /// Blocks until all `n` tasks finish; panics (re-raised here) if any
     /// task panicked. Soundness of the lifetime erasure: tasks cannot
     /// outlive this call because of the latch wait.
+    ///
+    /// Safe to call from *inside* a pool worker: while the latch is
+    /// open, the submitting thread helps by executing queued tasks (its
+    /// own batch's or anyone else's), so nested fork-join on a fully
+    /// busy pool still makes progress instead of deadlocking (see the
+    /// module docs).
     pub fn run_scoped<'env, F>(&self, n: usize, f: F)
     where
         F: Fn(usize) + Sync + 'env,
@@ -148,7 +202,34 @@ impl WorkerPool {
                 latch.count_down(result.is_err());
             });
         }
-        latch.wait();
+        // Helping wait. The short condvar timeout only matters when the
+        // queue is empty but our tasks are still running on other
+        // threads; completion itself wakes the wait immediately.
+        loop {
+            if latch.is_done() {
+                break;
+            }
+            match self.try_steal() {
+                // A stolen task must not unwind through this frame:
+                // tasks of *our* batch still borrow `f` until the latch
+                // closes. Our own batch's tasks report panics through
+                // the latch; a stolen *foreign* task's panic belongs to
+                // whoever submitted it (its drop guards / channels fire
+                // during the unwind we catch here), not to this batch —
+                // re-raising it would fail an innocent caller, so log
+                // and keep helping.
+                Some(task) => {
+                    if std::panic::catch_unwind(AssertUnwindSafe(task)).is_err() {
+                        eprintln!(
+                            "mergeflow: stolen pool task panicked during helping wait"
+                        );
+                    }
+                }
+                None => {
+                    latch.wait_timeout(Duration::from_micros(500));
+                }
+            }
+        }
         if latch.panics.load(Ordering::SeqCst) > 0 {
             panic!("worker task panicked in run_scoped");
         }
@@ -218,6 +299,51 @@ mod tests {
             if i == 3 {
                 panic!("boom");
             }
+        });
+    }
+
+    #[test]
+    fn nested_run_scoped_does_not_deadlock() {
+        // Every worker enters a nested run_scoped while the pool is
+        // already saturated by the outer batch — without the helping
+        // wait this deadlocks (all workers blocked on latches, subtasks
+        // stuck behind them in the queue).
+        let pool = WorkerPool::new(2);
+        let counter = AtomicUsize::new(0);
+        pool.run_scoped(4, |_| {
+            pool.run_scoped(3, |_| {
+                counter.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 12);
+    }
+
+    #[test]
+    fn deeply_nested_run_scoped_single_worker() {
+        // One worker, three levels of nesting: only the helping wait can
+        // execute the inner batches at all.
+        let pool = WorkerPool::new(1);
+        let counter = AtomicUsize::new(0);
+        pool.run_scoped(2, |_| {
+            pool.run_scoped(2, |_| {
+                pool.run_scoped(2, |_| {
+                    counter.fetch_add(1, Ordering::SeqCst);
+                });
+            });
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "panicked")]
+    fn nested_run_scoped_propagates_inner_panic() {
+        let pool = WorkerPool::new(2);
+        pool.run_scoped(2, |i| {
+            pool.run_scoped(2, |j| {
+                if i == 1 && j == 1 {
+                    panic!("inner boom");
+                }
+            });
         });
     }
 

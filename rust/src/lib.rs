@@ -23,12 +23,16 @@
 //! - [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
 //!   merge kernels (`artifacts/*.hlo.txt`), L1/L2 of the stack.
 //! - [`coordinator`] — the serving layer: merge/sort/compaction job
-//!   queue, dynamic batcher, backend router, worker pool, metrics.
+//!   queue, dynamic batcher, backend router, worker pool, metrics, and
+//!   rank-sharded compaction ([`coordinator::shard`]) that splits giant
+//!   compactions into independent equisized sub-jobs by output rank.
 //! - [`bench`] — workload generators and the table/figure harness that
 //!   regenerates every table and figure of the paper's §6.
 //!
-//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! Start with `docs/ARCHITECTURE.md` for the module-by-module map onto
+//! the paper's algorithms and the coordinator's job flow
+//! (`submit → queue → execute_job → shard / flat / tree`), and
+//! `README.md` for a build/test/bench quickstart.
 
 pub mod baselines;
 pub mod bench;

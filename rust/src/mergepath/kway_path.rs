@@ -42,7 +42,16 @@
 //! `O(k log max|run|)` iterations of `O(k log n)` work, independent of
 //! `N`. With `p` independent searches (the Alg 1 / CREW schedule) the
 //! partition stage costs `O(p · k² log² n)` comparisons, vanishing
-//! against the `Θ(N)` merge for any realistic compaction shape.
+//! against the `Θ(N)` merge for any realistic compaction shape. The
+//! searches are mutually independent, so
+//! [`partition_kway_merge_path_with_pool`] runs them concurrently on a
+//! [`WorkerPool`] — for large `p·k²log²n` the partition stage itself
+//! parallelizes, exactly as Alg 1 prescribes for the pairwise case.
+//!
+//! The same rank-split also powers *rank-sharded compaction* in the
+//! coordinator ([`crate::coordinator::shard`]): one cut per shard
+//! boundary turns a giant compaction into independent, equisized
+//! sub-jobs with zero inter-shard coordination.
 
 use super::parallel::SliceParts;
 use crate::exec::{fork_join, WorkerPool};
@@ -159,23 +168,80 @@ pub fn kway_rank_split<T: Ord>(runs: &[&[T]], rank: usize) -> Vec<usize> {
 /// [`super::partition::partition_merge_path`], lengths differing by at
 /// most one.
 ///
+/// Invariants (the k-way generalisation of Thm 5/9/14, verified by the
+/// property suite):
+///
+/// - **tiling** — `out_range`s are contiguous and cover `[0, N)`;
+/// - **equisize ±1** — every segment length is `⌊N/p⌋` or `⌈N/p⌉`;
+/// - **per-run tiling** — for each run `j`, the `run_ranges[j]` of
+///   consecutive segments are contiguous and cover that run;
+/// - **stability** — concatenating the per-segment stable merges
+///   reproduces [`super::kway::loser_tree_merge`] bit for bit.
+///
+/// The `p − 1` interior rank selections run sequentially here; use
+/// [`partition_kway_merge_path_with_pool`] to run them concurrently on
+/// a [`WorkerPool`] (they are mutually independent, CREW-style).
+///
 /// # Panics
 /// If `p == 0`.
 pub fn partition_kway_merge_path<T: Ord>(runs: &[&[T]], p: usize) -> Vec<KwaySegment> {
     assert!(p > 0, "need at least one partition");
-    let k = runs.len();
     let n: usize = runs.iter().map(|r| r.len()).sum();
+    let cuts: Vec<Vec<usize>> = (1..p).map(|i| kway_rank_split(runs, i * n / p)).collect();
+    segments_from_cuts(runs, cuts, n, p)
+}
+
+/// [`partition_kway_merge_path`] with the `p − 1` interior rank
+/// selections executed concurrently on `pool` (sequentially when
+/// `pool` is `None` or the shape is too small to benefit).
+///
+/// Each output rank has a *unique* stable cut, so computing the cuts
+/// independently — in any order, on any thread — yields exactly the
+/// same nested sequence as the sequential loop; all documented
+/// invariants carry over unchanged. Safe to call from inside a pool
+/// worker: the pool's scoped wait is helping (see
+/// [`WorkerPool::run_scoped`]).
+///
+/// # Panics
+/// If `p == 0`.
+pub fn partition_kway_merge_path_with_pool<T: Ord + Sync>(
+    runs: &[&[T]],
+    p: usize,
+    pool: Option<&WorkerPool>,
+) -> Vec<KwaySegment> {
+    assert!(p > 0, "need at least one partition");
+    let n: usize = runs.iter().map(|r| r.len()).sum();
+    let interior = p - 1;
+    // Below 2 interior searches (or with < 2 runs, where each search
+    // is a trivial prefix-sum) the scheduling overhead outweighs the
+    // selection work — delegate to the sequential partition.
+    let Some(pl) = pool.filter(|_| interior >= 2 && runs.len() >= 2 && n > 0) else {
+        return partition_kway_merge_path(runs, p);
+    };
+    let slots: Vec<std::sync::Mutex<Vec<usize>>> =
+        (0..interior).map(|_| std::sync::Mutex::new(Vec::new())).collect();
+    pl.run_scoped(interior, |i| {
+        *slots[i].lock().unwrap() = kway_rank_split(runs, (i + 1) * n / p);
+    });
+    let cuts = slots.into_iter().map(|m| m.into_inner().unwrap()).collect();
+    segments_from_cuts(runs, cuts, n, p)
+}
+
+/// Assemble [`KwaySegment`]s from the `p − 1` interior cuts (the final
+/// cut — the full input — needs no search).
+fn segments_from_cuts<T>(
+    runs: &[&[T]],
+    cuts: Vec<Vec<usize>>,
+    n: usize,
+    p: usize,
+) -> Vec<KwaySegment> {
+    debug_assert_eq!(cuts.len(), p - 1);
     let mut segments = Vec::with_capacity(p);
-    let mut prev = vec![0usize; k];
+    let mut prev = vec![0usize; runs.len()];
     let mut prev_d = 0usize;
-    for i in 1..=p {
-        let d = i * n / p;
-        let cut = if i == p {
-            // Last cut is the full input — no search needed.
-            runs.iter().map(|r| r.len()).collect()
-        } else {
-            kway_rank_split(runs, d)
-        };
+    let full: Vec<usize> = runs.iter().map(|r| r.len()).collect();
+    for (i, cut) in cuts.into_iter().chain(std::iter::once(full)).enumerate() {
+        let d = (i + 1) * n / p;
         segments.push(KwaySegment {
             run_ranges: prev.iter().zip(cut.iter()).map(|(&s, &e)| s..e).collect(),
             out_range: prev_d..d,
@@ -194,6 +260,10 @@ pub fn partition_kway_merge_path<T: Ord>(runs: &[&[T]], p: usize) -> Vec<KwaySeg
 /// to the lower-indexed run) for every `p`.
 ///
 /// `pool`: optional persistent worker pool (scoped threads otherwise).
+/// When a pool is given, both the partition stage (the `p − 1` rank
+/// selections) and the per-segment merges run on it; the call is safe
+/// from inside a pool worker (helping wait, no nested-fork-join
+/// deadlock).
 ///
 /// # Panics
 /// If `out.len()` differs from the total input length or `p == 0`.
@@ -215,7 +285,7 @@ pub fn parallel_kway_merge<T: Ord + Copy + Send + Sync>(
         super::kway::loser_tree_merge(runs, out);
         return;
     }
-    let segments = partition_kway_merge_path(runs, p);
+    let segments = partition_kway_merge_path_with_pool(runs, p, pool);
     let shared = SliceParts::new(out);
     let body = |tid: usize| {
         let seg = &segments[tid];
@@ -431,6 +501,27 @@ mod tests {
         let mut out = vec![0i64; n];
         parallel_kway_merge(&rr, &mut out, 4, None);
         assert_eq!(out, oracle(&runs));
+    }
+
+    #[test]
+    fn pooled_partition_matches_sequential() {
+        // The pooled partition must produce byte-identical segments to
+        // the sequential loop for every (k, p) — the cuts are unique,
+        // so only the schedule differs.
+        let pool = WorkerPool::new(3);
+        let mut rng = Xoshiro256::seeded(0x6B06);
+        for _ in 0..10 {
+            let k = rng.range(0, 10);
+            let runs = random_runs(&mut rng, k, 90);
+            let rr = refs(&runs);
+            for p in [1, 2, 3, 5, 9, 16] {
+                let seq = partition_kway_merge_path(&rr, p);
+                let pooled = partition_kway_merge_path_with_pool(&rr, p, Some(&pool));
+                assert_eq!(seq, pooled, "k={k} p={p}");
+                let unpooled = partition_kway_merge_path_with_pool(&rr, p, None);
+                assert_eq!(seq, unpooled, "k={k} p={p} (no pool)");
+            }
+        }
     }
 
     #[test]

@@ -36,6 +36,7 @@ pub use sort::{parallel_merge_sort, parallel_merge_sort_with_pool};
 pub use cache_sort::{cache_efficient_sort, CacheSortConfig};
 pub use kway::{loser_tree_merge, parallel_tree_merge, parallel_tree_merge_refs};
 pub use kway_path::{
-    kway_rank_split, parallel_kway_merge, partition_kway_merge_path, KwaySegment,
+    kway_rank_split, parallel_kway_merge, partition_kway_merge_path,
+    partition_kway_merge_path_with_pool, KwaySegment,
 };
 pub use select::{multiselect, multiselect_independent};

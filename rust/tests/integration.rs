@@ -1,9 +1,10 @@
 //! Cross-module integration: coordinator + runtime + algorithms
 //! working together, including the XLA route when artifacts exist.
 
-use mergeflow::bench::workload::{gen_sorted_pair, gen_unsorted, WorkloadKind};
+use mergeflow::bench::workload::{gen_sorted_pair, gen_sorted_runs, gen_unsorted, WorkloadKind};
 use mergeflow::config::{Backend, MergeflowConfig, RawConfig};
 use mergeflow::coordinator::{JobKind, MergeService};
+use mergeflow::mergepath::{loser_tree_merge, parallel_kway_merge};
 use mergeflow::runtime::{ArtifactManifest, XlaExecutor};
 use std::path::Path;
 
@@ -21,6 +22,7 @@ fn base_config() -> MergeflowConfig {
         backend: Backend::Native,
         segment_len: 0,
         kway_flat_max_k: 64,
+        compact_shard_min_len: 0, // tests opt into sharding explicitly
         artifacts_dir: "artifacts".into(),
     }
 }
@@ -150,6 +152,85 @@ fn flat_kway_compaction_end_to_end() {
     assert_eq!(res.backend, "native-kway");
     assert_eq!(res.output, expected);
     assert_eq!(svc.stats().kway_jobs.get(), 1);
+    svc.shutdown();
+}
+
+#[test]
+fn sharded_compaction_end_to_end() {
+    // Acceptance path for rank-sharded compaction: a job whose output
+    // exceeds compact_shard_min_len · 2 must execute as ≥ 2
+    // CompactShard sub-jobs on the persistent pool, produce output
+    // bit-identical to the unsharded flat engine, and be reported as
+    // "native-kway-sharded".
+    let mut cfg = base_config();
+    cfg.compact_shard_min_len = 8192;
+    let svc = MergeService::start(cfg).unwrap();
+    let runs = gen_sorted_runs(WorkloadKind::Skewed, 10, 6000, 77);
+    let total: usize = runs.iter().map(|r| r.len()).sum();
+    assert!(total > 2 * 8192);
+    // Oracle 1: the unsharded flat single-pass engine.
+    let mut flat = vec![0i32; total];
+    {
+        let refs: Vec<&[i32]> = runs.iter().map(|r| r.as_slice()).collect();
+        parallel_kway_merge(&refs, &mut flat, 4, None);
+    }
+    // Oracle 2: the sequential loser tree (stability baseline).
+    let mut seq = vec![0i32; total];
+    {
+        let refs: Vec<&[i32]> = runs.iter().map(|r| r.as_slice()).collect();
+        loser_tree_merge(&refs, &mut seq);
+    }
+    assert_eq!(flat, seq);
+
+    let res = svc.submit_blocking(JobKind::Compact { runs }).unwrap();
+    assert_eq!(res.backend, "native-kway-sharded");
+    assert_eq!(res.output, flat, "sharded output must match the flat engine bit for bit");
+    let stats = svc.stats();
+    assert!(stats.compact_shards.get() >= 2, "expected at least two shards");
+    assert_eq!(stats.compact_shards_completed.get(), stats.compact_shards.get());
+    assert_eq!(stats.sharded_jobs.get(), 1);
+    assert_eq!(stats.completed.get(), 1);
+    svc.shutdown();
+}
+
+#[test]
+fn sharded_compaction_bit_identical_property() {
+    // Property sweep: for every workload kind and a spread of shapes —
+    // including injected empty runs and the k = 1 edge — the service
+    // output equals both parallel_kway_merge and the sequential loser
+    // tree, whatever route (sharded / flat / tree / sequential) the
+    // job takes.
+    let mut cfg = base_config();
+    cfg.compact_shard_min_len = 2048;
+    let svc = MergeService::start(cfg).unwrap();
+    for kind in WorkloadKind::all() {
+        for (case, &(k, run_len)) in
+            [(1usize, 3000usize), (3, 900), (5, 2000), (9, 1500)].iter().enumerate()
+        {
+            let mut runs = gen_sorted_runs(kind, k, run_len, 0xA11 + case as u64);
+            // Inject empty runs at both ends — they must be invisible.
+            runs.insert(0, vec![]);
+            runs.push(vec![]);
+            let total: usize = runs.iter().map(|r| r.len()).sum();
+            let refs: Vec<&[i32]> = runs.iter().map(|r| r.as_slice()).collect();
+            let mut seq = vec![0i32; total];
+            loser_tree_merge(&refs, &mut seq);
+            let mut flat = vec![0i32; total];
+            parallel_kway_merge(&refs, &mut flat, 3, None);
+            assert_eq!(seq, flat, "{kind:?} k={k}");
+            drop(refs);
+            let res = svc.submit_blocking(JobKind::Compact { runs }).unwrap();
+            assert_eq!(res.output, seq, "{kind:?} k={k} route={}", res.backend);
+            if k >= 2 && total >= 2 * 2048 {
+                assert_eq!(res.backend, "native-kway-sharded", "{kind:?} k={k}");
+            }
+        }
+    }
+    // All-empty and k = 0 edges.
+    for runs in [vec![], vec![vec![], vec![]]] {
+        let res = svc.submit_blocking(JobKind::Compact { runs }).unwrap();
+        assert!(res.output.is_empty());
+    }
     svc.shutdown();
 }
 
