@@ -38,7 +38,10 @@ fn main() {
         backend: Backend::Auto, // uses XLA artifacts when shapes fit
         segment_len: 1 << 20,   // cache-efficient path for big merges
         kway_flat_max_k: 128,   // flat single-pass engine for k-way compactions
+        compact_sharding: true,
         compact_shard_min_len: 512 << 10, // rank-shard compactions above 1M keys
+        compact_chunk_len: 1 << 20,       // one-shot runs stream in 1M-key chunks
+        compact_eager_min_len: 64 << 10,  // eager-merge once 64K ranks settle
         artifacts_dir: "artifacts".into(),
     };
     println!("config: {cfg:?}");
@@ -148,6 +151,54 @@ fn main() {
             fmt_ns(res.latency_ns),
             res.backend,
             svc.stats().compact_shards.get(),
+        );
+    }
+
+    // Phase 4 — streaming ingest: a CompactionSession feeds runs chunk
+    // by chunk, round-robin, while the dispatcher eagerly merges every
+    // settled rank window — ingest and merge overlap end to end, and
+    // at least one eager shard launches before seal() is even called.
+    {
+        let k = 6usize;
+        let chunk_len = 16 << 10;
+        let chunks_per_run = 8usize;
+        let stream_runs: Vec<Vec<i32>> = (0..k)
+            .map(|_| sorted_run(rng.next_u64(), chunk_len * chunks_per_run))
+            .collect();
+        let stream_total: usize = stream_runs.iter().map(|r| r.len()).sum();
+        total_elems += stream_total as u64;
+        let mut expected: Vec<i32> = stream_runs.iter().flatten().copied().collect();
+        expected.sort_unstable();
+        let mut session = svc.open_compaction(k).expect("open session");
+        for c in 0..chunks_per_run {
+            for (i, run) in stream_runs.iter().enumerate() {
+                session
+                    .feed(i, run[c * chunk_len..(c + 1) * chunk_len].to_vec())
+                    .expect("feed chunk");
+            }
+        }
+        let eager_before_seal = svc.stats().eager_shards.get();
+        for i in 0..k {
+            session.seal_run(i).expect("seal run");
+        }
+        let res = session
+            .seal()
+            .expect("seal session")
+            .wait()
+            .expect("streamed compaction");
+        assert_eq!(res.output, expected, "streamed compaction output mismatch");
+        assert_eq!(
+            res.backend, "native-kway-streamed",
+            "expected the streamed route (eager overlap)"
+        );
+        println!(
+            "streamed {k}-way compaction: {} keys in {} via {} \
+             ({} eager shards, {} observed before seal)",
+            stream_total,
+            fmt_ns(res.latency_ns),
+            res.backend,
+            svc.stats().eager_shards.get(),
+            eager_before_seal,
         );
     }
 

@@ -22,6 +22,8 @@ use mergeflow::bench::workload::{gen_sorted_runs, WorkloadKind};
 use mergeflow::config::{Backend, MergeflowConfig};
 use mergeflow::coordinator::{JobKind, MergeService};
 
+/// `min_len == 0` builds the unsharded (flat-engine) baseline — the
+/// sharding bool is the off switch now that 0 means auto-tune.
 fn service(compact_shard_min_len: usize) -> MergeService {
     let cfg = MergeflowConfig {
         workers: 8,
@@ -36,7 +38,12 @@ fn service(compact_shard_min_len: usize) -> MergeService {
         backend: Backend::Native,
         segment_len: 0,
         kway_flat_max_k: 128,
+        compact_sharding: compact_shard_min_len != 0,
         compact_shard_min_len,
+        // Whole-run feeds, no eager dispatch: this bench isolates the
+        // shard-size knob, so the streamed route must stay out of it.
+        compact_chunk_len: 0,
+        compact_eager_min_len: 0,
         artifacts_dir: "artifacts".into(),
     };
     MergeService::start(cfg).expect("service start")

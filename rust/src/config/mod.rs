@@ -161,14 +161,48 @@ pub struct MergeflowConfig {
     /// below the stream-thrash regime). Re-derive it per deployment by
     /// running the bench with larger k.
     pub kway_flat_max_k: usize,
+    /// Whether rank-sharded compaction (`coordinator::shard`) is
+    /// enabled at all.
+    ///
+    /// **Migration note:** before the streaming-ingest change,
+    /// "sharding off" was spelled `compact_shard_min_len = 0`; that
+    /// value now means *auto-tune* (see
+    /// [`compact_shard_min_len`](Self::compact_shard_min_len)). Old
+    /// configs that relied on `0` to disable sharding must set
+    /// `merge.compact_sharding = false` instead.
+    pub compact_sharding: bool,
     /// Minimum output elements per shard of a rank-sharded compaction
     /// (`coordinator::shard`). A `Compact` job whose total output is at
     /// least twice this value — and whose run count is within
     /// `kway_flat_max_k` — is split by output rank into independent
     /// `CompactShard` sub-jobs of roughly this size each (floored at
     /// `threads_per_job` shards, so sharding never reduces a job's
-    /// parallelism). 0 disables sharding.
+    /// parallelism).
+    ///
+    /// **0 means auto-tune**: the dispatcher picks
+    /// `clamp(total / workers, AUTO_SHARD_FLOOR, u32::MAX)` per job, so
+    /// a qualifying compaction splits into about one shard per pool
+    /// worker while shards never drop below the measured profitability
+    /// floor (`benches/sharded_vs_flat.rs` locates it per machine; the
+    /// baked floor is 256 Ki elements). Use
+    /// [`compact_sharding`](Self::compact_sharding)` = false` to turn
+    /// sharding off entirely.
     pub compact_shard_min_len: usize,
+    /// Chunk granularity (elements) used when a one-shot `Compact` job
+    /// is re-expressed as a streaming session (`coordinator::session`):
+    /// runs longer than this are fed to the dispatcher in chunks of
+    /// this size, round-robin across runs, so ingest and eager merging
+    /// overlap even for single-call submissions. Also the recommended
+    /// feed size for streaming clients. 0 = never split (each run is
+    /// fed as one chunk, no copies).
+    pub compact_chunk_len: usize,
+    /// Eager-start threshold (elements) for streaming compactions: once
+    /// the session's sealed-rank frontier has advanced at least this
+    /// far past what is already dispatched, the dispatcher cuts and
+    /// launches an eager `StreamShard` of exactly this many output
+    /// ranks *before* the session seals. 0 disables eager dispatch
+    /// (all merging starts at `seal()`).
+    pub compact_eager_min_len: usize,
     /// Directory holding AOT artifacts.
     pub artifacts_dir: String,
 }
@@ -184,7 +218,10 @@ impl Default for MergeflowConfig {
             backend: Backend::Native,
             segment_len: 0,
             kway_flat_max_k: 128,
+            compact_sharding: true,
             compact_shard_min_len: 2 << 20,
+            compact_chunk_len: 1 << 20,
+            compact_eager_min_len: 1 << 20,
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -204,8 +241,12 @@ impl MergeflowConfig {
             backend: raw.get_str("service.backend", "native").parse()?,
             segment_len: raw.get_usize("merge.segment_len", d.segment_len)?,
             kway_flat_max_k: raw.get_usize("merge.kway_flat_max_k", d.kway_flat_max_k)?,
+            compact_sharding: raw.get_bool("merge.compact_sharding", d.compact_sharding)?,
             compact_shard_min_len: raw
                 .get_usize("merge.compact_shard_min_len", d.compact_shard_min_len)?,
+            compact_chunk_len: raw.get_usize("merge.compact_chunk_len", d.compact_chunk_len)?,
+            compact_eager_min_len: raw
+                .get_usize("merge.compact_eager_min_len", d.compact_eager_min_len)?,
             artifacts_dir: raw.get_str("service.artifacts_dir", &d.artifacts_dir),
         };
         cfg.validate()?;
@@ -254,7 +295,10 @@ timeout_us = 150
 [merge]
 segment_len = 4096
 kway_flat_max_k = 32
+compact_sharding = false
 compact_shard_min_len = 65536
+compact_chunk_len = 8192
+compact_eager_min_len = 16384
 "#;
 
     #[test]
@@ -268,7 +312,10 @@ compact_shard_min_len = 65536
         assert_eq!(cfg.backend, Backend::Auto);
         assert_eq!(cfg.segment_len, 4096);
         assert_eq!(cfg.kway_flat_max_k, 32);
+        assert!(!cfg.compact_sharding);
         assert_eq!(cfg.compact_shard_min_len, 65536);
+        assert_eq!(cfg.compact_chunk_len, 8192);
+        assert_eq!(cfg.compact_eager_min_len, 16384);
         assert_eq!(cfg.batch_timeout_us, 150);
     }
 
@@ -280,6 +327,12 @@ compact_shard_min_len = 65536
         assert_eq!(
             cfg.compact_shard_min_len,
             MergeflowConfig::default().compact_shard_min_len
+        );
+        assert!(cfg.compact_sharding, "sharding defaults to on");
+        assert_eq!(cfg.compact_chunk_len, MergeflowConfig::default().compact_chunk_len);
+        assert_eq!(
+            cfg.compact_eager_min_len,
+            MergeflowConfig::default().compact_eager_min_len
         );
     }
 

@@ -20,11 +20,15 @@ pub enum JobKind {
         data: Vec<i32>,
     },
     /// Compact several sorted runs into one (LSM-style k-way merge).
-    /// Routed to the flat single-pass k-way engine, the pairwise tree,
-    /// or — when the output is large enough — expanded by the
-    /// dispatcher into rank shards (see [`JobKind::CompactShard`]).
+    /// Re-expressed at submit time as a streaming session
+    /// ([`super::session`]) — open + chunked feeds + seal — so the
+    /// one-shot and streaming paths share a single code path; from the
+    /// seal onward it routes to the flat single-pass k-way engine, the
+    /// pairwise tree, or — when the output is large enough — the
+    /// dispatcher's rank shards (see [`JobKind::CompactShard`]).
     Compact {
-        /// The sorted runs.
+        /// The sorted runs. Sortedness is validated chunk by chunk on
+        /// the session feed path (bounded per call), not here.
         runs: Vec<Vec<i32>>,
     },
     /// One rank-shard of a large compaction. Internal: produced by the
@@ -34,6 +38,32 @@ pub enum JobKind {
     CompactShard {
         /// Which segment of the group's shard plan this job executes.
         shard: super::shard::ShardTask,
+    },
+    /// Streaming-session message: one validated chunk of one run
+    /// (see [`super::session`]). Internal: handled on the dispatcher,
+    /// never dispatched to a worker; the payload is only constructible
+    /// by [`super::CompactionSession`].
+    CompactChunk {
+        /// Which session/run the chunk extends, plus the data.
+        msg: super::session::ChunkMsg,
+    },
+    /// Streaming-session message: a run will receive no more chunks.
+    CompactSealRun {
+        /// Which session/run is sealed.
+        msg: super::session::RunSealMsg,
+    },
+    /// Streaming-session message: no more feeds at all — plan the
+    /// remaining rank range and arrange the reply.
+    CompactSeal {
+        /// Which session is sealed.
+        msg: super::session::SealMsg,
+    },
+    /// One shard of a streamed compaction (eager pre-seal window or
+    /// remainder). Internal: produced by the dispatcher's session
+    /// planner ([`super::session`]).
+    StreamShard {
+        /// The shard's input windows and completion slot.
+        shard: super::session::StreamShard,
     },
 }
 
@@ -45,11 +75,18 @@ impl JobKind {
             JobKind::Sort { data } => data.len(),
             JobKind::Compact { runs } => runs.iter().map(|r| r.len()).sum(),
             JobKind::CompactShard { shard } => shard.len(),
+            JobKind::CompactChunk { msg } => msg.len(),
+            JobKind::CompactSealRun { .. } | JobKind::CompactSeal { .. } => 0,
+            JobKind::StreamShard { shard } => shard.len(),
         }
     }
 
-    /// Validate sortedness preconditions (merge/compact inputs must be
-    /// sorted); returns a human-readable violation if any.
+    /// Validate sortedness preconditions on the submit path; returns a
+    /// human-readable violation if any. Only `Merge` is walked here:
+    /// `Compact` runs are validated chunk by chunk on the streaming
+    /// feed path (every one-shot `Compact` is re-expressed as a
+    /// session, see [`super::session`]), which bounds admission cost
+    /// per call instead of one O(total) walk of every run.
     pub fn validate(&self) -> Result<(), String> {
         let sorted = |v: &[i32]| v.windows(2).all(|w| w[0] <= w[1]);
         match self {
@@ -61,17 +98,16 @@ impl JobKind {
                     return Err("merge input B is not sorted".into());
                 }
             }
-            JobKind::Compact { runs } => {
-                for (i, r) in runs.iter().enumerate() {
-                    if !sorted(r) {
-                        return Err(format!("compaction run {i} is not sorted"));
-                    }
-                }
-            }
             JobKind::Sort { .. } => {}
-            // Shards carry slices of runs their parent job already
-            // validated at admission.
-            JobKind::CompactShard { .. } => {}
+            // Validated on the session feed path (chunk admission).
+            JobKind::Compact { .. } => {}
+            // Internal kinds carry data their producers already
+            // validated; clients cannot construct their payloads.
+            JobKind::CompactShard { .. }
+            | JobKind::CompactChunk { .. }
+            | JobKind::CompactSealRun { .. }
+            | JobKind::CompactSeal { .. }
+            | JobKind::StreamShard { .. } => {}
         }
         Ok(())
     }
@@ -98,7 +134,8 @@ pub struct JobResult {
     /// Sorted output.
     pub output: Vec<i32>,
     /// Which backend executed it ("native", "native-segmented",
-    /// "native-kway", "native-kway-sharded", "xla").
+    /// "native-kway", "native-kway-sharded", "native-kway-streamed",
+    /// "xla").
     pub backend: &'static str,
     /// End-to-end latency (ns, from admission).
     pub latency_ns: u64,
@@ -146,7 +183,11 @@ mod tests {
     fn validation_catches_unsorted() {
         assert!(JobKind::Merge { a: vec![2, 1], b: vec![] }.validate().is_err());
         assert!(JobKind::Merge { a: vec![1, 2], b: vec![0, 5] }.validate().is_ok());
-        assert!(JobKind::Compact { runs: vec![vec![1, 0]] }.validate().is_err());
+        // Compact is deliberately NOT walked here: its runs are
+        // validated chunk by chunk on the session feed path (the
+        // service still rejects unsorted compactions at submit — see
+        // the service tests).
+        assert!(JobKind::Compact { runs: vec![vec![1, 0]] }.validate().is_ok());
         assert!(JobKind::Sort { data: vec![5, 1] }.validate().is_ok());
     }
 }

@@ -9,19 +9,25 @@
 //! jobs can use the cache-efficient segmented variant (§4.3) by
 //! setting `merge.segment_len`. Large compactions are additionally
 //! split by output rank into independent [`shard`] sub-jobs — the
-//! paper's equipartition property applied at the job level.
+//! paper's equipartition property applied at the job level — and can
+//! be *streamed in*: a [`session::CompactionSession`] feeds runs chunk
+//! by chunk while the dispatcher eagerly merges the already-settled
+//! output prefix, overlapping ingest and merge end to end.
 //!
 //! See `docs/ARCHITECTURE.md` for the full job flow
-//! (`submit → queue → execute_job → shard / flat / tree`).
+//! (`submit → queue → execute_job → shard / flat / tree`) and the
+//! streaming session protocol.
 
 pub mod job;
 pub mod queue;
 pub mod service;
+pub mod session;
 pub mod shard;
 pub mod stats;
 
 pub use job::{Job, JobHandle, JobKind, JobResult};
 pub use queue::{BoundedQueue, PushError};
 pub use service::MergeService;
+pub use session::CompactionSession;
 pub use shard::ShardTask;
 pub use stats::ServiceStats;

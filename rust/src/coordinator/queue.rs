@@ -1,12 +1,25 @@
 //! Bounded MPMC admission queue with back-pressure.
 //!
-//! This is the *client-facing* half of the coordinator's flow control:
-//! [`BoundedQueue::try_push`] rejects when full, so overload surfaces
-//! at `submit` instead of growing unbounded memory. The second half is
-//! the dispatcher's in-flight semaphore, which stops dispatch from
-//! outrunning the workers — note that a `Compact` job may expand into
-//! several `CompactShard` sub-jobs *after* popping (see
-//! [`super::shard`]), each taking its own in-flight slot, so one queue
+//! This is the *client-facing* half of the coordinator's flow control,
+//! with two admission modes:
+//!
+//! - [`BoundedQueue::try_push`] rejects when full, so overload surfaces
+//!   at `submit` instead of growing unbounded memory (fail-fast mode,
+//!   used for whole jobs — and for the *first* message of the one-shot
+//!   `Compact` wrapper, which is its admission decision);
+//! - [`BoundedQueue::push`] blocks until space frees, used for the
+//!   chunk messages of admitted streaming compaction sessions
+//!   ([`super::session`]): the session is the admitted unit, and from
+//!   then on a full queue *pauses the feeder* instead of failing it —
+//!   ingest back-pressure without forcing clients to implement retry
+//!   (and without a big job spuriously rejecting itself on its own
+//!   queued chunks).
+//!
+//! The second half is the dispatcher's in-flight semaphore, which stops
+//! dispatch from outrunning the workers — note that a `Compact` job may
+//! expand into several `CompactShard` sub-jobs *after* popping (see
+//! [`super::shard`]), and a session message may unlock eager
+//! `StreamShard`s, each taking its own in-flight slot, so one queue
 //! entry can represent several units of pool work.
 
 use std::collections::VecDeque;
@@ -64,6 +77,16 @@ impl<T> BoundedQueue<T> {
     /// Whether the queue is empty.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Whether the queue is at capacity right now. A racy snapshot by
+    /// nature — used as the fail-fast admission gate for one-shot
+    /// compactions, whose chunk messages then use blocking [`push`]
+    /// for flow control (see the module docs).
+    ///
+    /// [`push`]: Self::push
+    pub fn is_full(&self) -> bool {
+        self.inner.lock().unwrap().items.len() >= self.capacity
     }
 
     /// Reject-mode push: fails fast when full (service back-pressure).
@@ -180,10 +203,13 @@ mod tests {
     #[test]
     fn try_push_rejects_when_full() {
         let q = BoundedQueue::new(2);
+        assert!(!q.is_full());
         q.try_push(1).unwrap();
         q.try_push(2).unwrap();
+        assert!(q.is_full());
         assert_eq!(q.try_push(3), Err(PushError::Full));
         q.pop_timeout(Duration::from_millis(1));
+        assert!(!q.is_full());
         q.try_push(3).unwrap();
     }
 

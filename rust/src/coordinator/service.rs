@@ -16,13 +16,14 @@
 
 use super::job::{Job, JobHandle, JobKind, JobResult};
 use super::queue::{BoundedQueue, PushError};
+use super::session::{self, CompactionSession, SessionTable};
 use super::shard;
 use super::stats::ServiceStats;
 use crate::config::{Backend, MergeflowConfig};
 use crate::exec::WorkerPool;
 use crate::mergepath::{
-    parallel_kway_merge, parallel_merge, parallel_merge_sort, segmented_parallel_merge,
-    SegmentedConfig,
+    parallel_kway_merge, parallel_merge, parallel_merge_sort_with_pool,
+    segmented_parallel_merge, SegmentedConfig,
 };
 use crate::runtime::XlaExecutor;
 use crate::{Error, Result};
@@ -95,6 +96,7 @@ impl Drop for SlotGuard {
 pub struct MergeService {
     cfg: MergeflowConfig,
     queue: Arc<BoundedQueue<Job>>,
+    table: Arc<SessionTable>,
     stats: Arc<ServiceStats>,
     runtime: Option<Arc<XlaExecutor>>,
     next_id: AtomicU64,
@@ -126,23 +128,26 @@ impl MergeService {
             }
         };
         let queue = Arc::new(BoundedQueue::<Job>::new(cfg.queue_capacity));
+        let table = Arc::new(SessionTable::default());
         let stats = Arc::new(ServiceStats::new());
         let pool = Arc::new(WorkerPool::new(cfg.workers));
 
         let dispatcher = {
             let queue = Arc::clone(&queue);
+            let table = Arc::clone(&table);
             let stats = Arc::clone(&stats);
             let cfg2 = cfg.clone();
             let runtime = runtime.clone();
             std::thread::Builder::new()
                 .name("mergeflow-dispatcher".into())
-                .spawn(move || dispatcher_loop(cfg2, queue, pool, runtime, stats))
+                .spawn(move || dispatcher_loop(cfg2, queue, table, pool, runtime, stats))
                 .expect("spawn dispatcher")
         };
 
         Ok(Self {
             cfg,
             queue,
+            table,
             stats,
             runtime,
             next_id: AtomicU64::new(1),
@@ -179,7 +184,20 @@ impl MergeService {
 
     /// Submit a job; fails fast with back-pressure when the queue is
     /// full or the input violates preconditions.
+    ///
+    /// `Compact` jobs are re-expressed as a streaming session
+    /// ([`CompactionSession`]) — open, chunked feeds, seal — so the
+    /// one-shot and streaming paths share one code path: sortedness is
+    /// validated chunk by chunk (bounded work per call instead of one
+    /// O(total) walk), and runs longer than
+    /// `merge.compact_chunk_len` are fed round-robin so the dispatcher
+    /// can start merging settled low ranks while later chunks are
+    /// still being admitted.
     pub fn submit(&self, kind: JobKind) -> Result<JobHandle> {
+        let kind = match kind {
+            JobKind::Compact { runs } => return self.submit_compact(runs),
+            other => other,
+        };
         if let Err(msg) = kind.validate() {
             self.stats.rejected.inc();
             return Err(Error::InvalidInput(msg));
@@ -208,6 +226,86 @@ impl MergeService {
         self.submit(kind)?.wait()
     }
 
+    /// Open a streaming compaction of `runs` sorted runs: feed chunks
+    /// through the returned [`CompactionSession`] as they become
+    /// available, seal runs as they end, then `seal()` the session for
+    /// a [`JobHandle`] to the merged output. The dispatcher plans and
+    /// launches eager merge shards over the settled output prefix
+    /// *while later chunks are still arriving* (see
+    /// [`super::session`]); the run count is fixed up front because a
+    /// surprise run could insert keys below already-merged ranks.
+    pub fn open_compaction(&self, runs: usize) -> Result<CompactionSession> {
+        // Streaming clients get blocking (flow-control) feeds and
+        // eager pre-seal planning.
+        self.open_session(runs, true, true)
+    }
+
+    fn open_session(
+        &self,
+        runs: usize,
+        blocking: bool,
+        eager: bool,
+    ) -> Result<CompactionSession> {
+        if self.queue.is_closed() {
+            return Err(Error::Service("service shut down".into()));
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        // `submitted` is counted at seal() — a session only becomes an
+        // admitted job once its ingest completes, so the old invariant
+        // (submitted = completed + rejected + in-flight) still holds
+        // for sessions that are aborted or rejected mid-feed.
+        self.stats.streamed_sessions.inc();
+        Ok(session::open(
+            Arc::clone(&self.queue),
+            Arc::clone(&self.table),
+            Arc::clone(&self.stats),
+            id,
+            runs,
+            blocking,
+            eager,
+        ))
+    }
+
+    /// The one-shot compaction wrapper over the session protocol. The
+    /// session runs in reject mode, so `submit`'s fail-fast contract is
+    /// preserved: a full queue surfaces as an immediate back-pressure
+    /// error (at whichever feed hits it) instead of blocking the caller.
+    fn submit_compact(&self, runs: Vec<Vec<i32>>) -> Result<JobHandle> {
+        // Cheap early-out before opening a session the queue clearly
+        // has no room to carry (racy snapshot; the session's
+        // reject-mode first push is the authoritative check).
+        if self.queue.is_full() {
+            self.stats.rejected.inc();
+            return Err(Error::Service("queue full (back-pressure)".into()));
+        }
+        // Chunked feeding only buys overlap when the dispatcher could
+        // actually dispatch eager shards for this job (same gates as
+        // the session planner); otherwise feed whole runs by move —
+        // zero copies, fewer queue messages. And if no run is long
+        // enough to chunk, ingest completes in one breath: register
+        // the session with eager planning off, so the job
+        // deterministically takes the classic routing instead of
+        // paying eager copies that cannot buy overlap.
+        let eager_possible = self.cfg.compact_eager_min_len > 0
+            && runs.len() >= 2
+            && runs.len() <= self.cfg.kway_flat_max_k;
+        let chunk_len = if eager_possible { self.cfg.compact_chunk_len } else { 0 };
+        let will_chunk = chunk_len > 0 && runs.iter().any(|r| r.len() > chunk_len);
+        let mut session = self.open_session(runs.len(), false, will_chunk)?;
+        let fed = feed_round_robin(&mut session, runs, chunk_len);
+        match fed {
+            Ok(()) => session.seal(), // seal does its own stats accounting
+            Err(e) => {
+                // Invalid chunk or full-queue admission failure: the
+                // dropped session aborts and its buffered chunks are
+                // reaped; count the rejection here (the session never
+                // counted an admission).
+                self.stats.rejected.inc();
+                Err(e)
+            }
+        }
+    }
+
     /// Drain and stop. Pending jobs are completed first.
     pub fn shutdown(mut self) {
         self.queue.close();
@@ -226,9 +324,51 @@ impl Drop for MergeService {
     }
 }
 
+/// Feed a one-shot compaction's runs through a session. Runs at most
+/// `chunk_len` long are fed whole *by move* (no copy — identical
+/// ingest cost to the old by-value `Compact` message); longer runs are
+/// sliced into `chunk_len` chunks and fed round-robin across runs, so
+/// the sealed-rank frontier advances during ingest and the dispatcher
+/// can overlap merging with the remaining feeds. `chunk_len == 0`
+/// means never split.
+fn feed_round_robin(
+    session: &mut CompactionSession,
+    mut runs: Vec<Vec<i32>>,
+    chunk_len: usize,
+) -> Result<()> {
+    let chunk_len = if chunk_len == 0 { usize::MAX } else { chunk_len };
+    let k = runs.len();
+    let mut offs = vec![0usize; k];
+    let mut done = vec![false; k];
+    let mut remaining = k;
+    while remaining > 0 {
+        for i in 0..k {
+            if done[i] {
+                continue;
+            }
+            let len = runs[i].len();
+            if offs[i] == 0 && len <= chunk_len {
+                session.feed(i, std::mem::take(&mut runs[i]))?;
+            } else {
+                let end = offs[i].saturating_add(chunk_len).min(len);
+                session.feed(i, runs[i][offs[i]..end].to_vec())?;
+                offs[i] = end;
+                if end < len {
+                    continue;
+                }
+            }
+            session.seal_run(i)?;
+            done[i] = true;
+            remaining -= 1;
+        }
+    }
+    Ok(())
+}
+
 fn dispatcher_loop(
     cfg: MergeflowConfig,
     queue: Arc<BoundedQueue<Job>>,
+    table: Arc<SessionTable>,
     pool: Arc<WorkerPool>,
     runtime: Option<Arc<XlaExecutor>>,
     stats: Arc<ServiceStats>,
@@ -236,6 +376,10 @@ fn dispatcher_loop(
     let timeout = Duration::from_micros(cfg.batch_timeout_us.max(1));
     let in_flight = Arc::new(InFlight::new(cfg.workers * 2));
     loop {
+        // Free the buffered ingest of any sessions aborted since the
+        // last iteration (runs on idle ticks too, so an abort on a
+        // quiet service is still reclaimed within one poll interval).
+        table.reap_aborted();
         // Block for the first job of a batch.
         let Some(first) = queue.pop_timeout(Duration::from_millis(50)) else {
             if queue.is_closed() && queue.is_empty() {
@@ -272,12 +416,22 @@ fn dispatcher_loop(
         // workers, so a full admission queue means the system really is
         // saturated (back-pressure reaches the client).
         //
+        // Session messages (streaming compaction ingest) are absorbed
+        // here on the dispatcher: chunks and run-seals mutate session
+        // state, a seal plans the remainder (or falls back to the
+        // classic Compact routing). Eager planning runs once per
+        // drained batch, over the sessions the batch touched — so a
+        // session whose seal landed in the same batch skips straight
+        // to the seal's zero-copy plan. Whatever jobs come out are
+        // dispatched like any others.
+        //
         // Oversized compactions are expanded here into rank shards:
         // each shard takes its own in-flight slot, so a giant
         // compaction saturates the pool shard by shard instead of
         // parking one worker on a monolithic job (and back-pressure
         // sees its true width).
-        for job in batch {
+        let mut touched = Vec::new();
+        let dispatch = |job: Job| {
             for sub in shard::maybe_expand(&cfg, &stats, job) {
                 in_flight.acquire();
                 let cfg = cfg.clone();
@@ -290,10 +444,23 @@ fn dispatcher_loop(
                 pool.submit(move || {
                     let pool = guard.pool.as_deref().expect("guard holds the pool");
                     execute_job(&cfg, runtime.as_deref(), &stats, pool, sub);
-                    // `guard` drops here: pool handle first, then the
-                    // in-flight slot — on unwind too.
+                    // `guard` drops here: pool handle first, then
+                    // the in-flight slot — on unwind too.
                 });
             }
+        };
+        for job in batch {
+            let unlocked = if session::is_session_message(&job.kind) {
+                session::handle_message(&cfg, &stats, &table, job, &mut touched)
+            } else {
+                vec![job]
+            };
+            for job in unlocked {
+                dispatch(job);
+            }
+        }
+        for job in session::plan_eager(&cfg, &stats, &table, &mut touched) {
+            dispatch(job);
         }
     }
 }
@@ -315,7 +482,11 @@ fn execute_job(
     let (output, backend) = match job.kind {
         JobKind::Merge { a, b } => run_merge(cfg, runtime, a, b),
         JobKind::Sort { mut data } => {
-            parallel_merge_sort(&mut data, cfg.threads_per_job);
+            // Sorts run on the persistent pool like the compaction
+            // engines (we are already on one of its workers; the
+            // helping scoped wait makes the nested fork-join sound) —
+            // no scoped-thread spawning anywhere in execute_job.
+            parallel_merge_sort_with_pool(pool, &mut data, cfg.threads_per_job);
             (data, "native")
         }
         JobKind::Compact { runs } => run_compaction(cfg, runs, pool),
@@ -325,6 +496,17 @@ fn execute_job(
             // execute_shard, so the common tail below must not run.
             shard::execute_shard(task, &job.reply, stats);
             return;
+        }
+        JobKind::StreamShard { shard: task } => {
+            // Same pattern: completion accounting and the (last-shard)
+            // reply live in the session's shared exec state.
+            session::execute_stream_shard(task, stats);
+            return;
+        }
+        JobKind::CompactChunk { .. }
+        | JobKind::CompactSealRun { .. }
+        | JobKind::CompactSeal { .. } => {
+            unreachable!("session messages are absorbed on the dispatcher")
         }
     };
     let latency_ns = wait_ns
@@ -457,9 +639,13 @@ mod tests {
             backend: Backend::Native,
             segment_len: 0,
             kway_flat_max_k: 64,
-            // Off by default in unit tests so each test opts into the
-            // sharded path explicitly.
+            // Sharding and eager streaming are off by default in unit
+            // tests so each test opts into those paths explicitly
+            // (min_len stays on auto but is inert while disabled).
+            compact_sharding: false,
             compact_shard_min_len: 0,
+            compact_chunk_len: 0,
+            compact_eager_min_len: 0,
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -524,6 +710,7 @@ mod tests {
     #[test]
     fn large_compaction_shards_by_rank() {
         let mut cfg = test_config();
+        cfg.compact_sharding = true;
         cfg.compact_shard_min_len = 2048;
         let svc = MergeService::start(cfg).unwrap();
         let runs: Vec<Vec<i32>> = (0..6u64)
@@ -659,6 +846,99 @@ mod tests {
             .submit_blocking(JobKind::Compact { runs: vec![vec![], vec![]] })
             .unwrap();
         assert!(res.output.is_empty());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn unsorted_compact_rejected_at_submit() {
+        // Compact validation moved from JobKind::validate's O(total)
+        // walk to the per-chunk feed path — the submit-facing contract
+        // (unsorted input → InvalidInput, rejection counted) must hold
+        // unchanged.
+        let svc = MergeService::start(test_config()).unwrap();
+        let err = svc
+            .submit(JobKind::Compact { runs: vec![vec![1, 2], vec![3, 1]] })
+            .unwrap_err();
+        assert!(matches!(err, Error::InvalidInput(_)));
+        assert!(svc.stats().rejected.get() >= 1);
+        assert_eq!(
+            svc.stats().submitted.get(),
+            0,
+            "a rejected compaction was never admitted"
+        );
+        // The aborted session must not wedge later traffic.
+        let res = svc
+            .submit_blocking(JobKind::Compact { runs: vec![vec![1, 3], vec![2, 4]] })
+            .unwrap();
+        assert_eq!(res.output, vec![1, 2, 3, 4]);
+        assert_eq!(svc.stats().submitted.get(), 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn streaming_session_end_to_end() {
+        let mut cfg = test_config();
+        cfg.compact_eager_min_len = 256;
+        let svc = MergeService::start(cfg).unwrap();
+        let runs: Vec<Vec<i32>> = (0..3u64)
+            .map(|i| gen_sorted_pair(WorkloadKind::Uniform, 1200, 1, 40 + i).0)
+            .collect();
+        let mut expected: Vec<i32> = runs.iter().flatten().copied().collect();
+        expected.sort_unstable();
+        let mut session = svc.open_compaction(runs.len()).unwrap();
+        // Interleave feeds across runs in 300-element chunks.
+        for start in (0..1200).step_by(300) {
+            for (i, run) in runs.iter().enumerate() {
+                session.feed(i, run[start..start + 300].to_vec()).unwrap();
+            }
+        }
+        for i in 0..runs.len() {
+            session.seal_run(i).unwrap();
+        }
+        let res = session.seal().unwrap().wait().unwrap();
+        assert_eq!(res.output, expected);
+        assert_eq!(svc.stats().streamed_sessions.get(), 1);
+        assert_eq!(svc.stats().streamed_chunks.get(), 12);
+        assert_eq!(svc.stats().completed.get(), 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn streaming_feed_validation_bounds() {
+        let svc = MergeService::start(test_config()).unwrap();
+        let mut session = svc.open_compaction(2).unwrap();
+        assert_eq!(session.run_count(), 2);
+        // Out-of-range run.
+        assert!(session.feed(2, vec![1]).is_err());
+        // Unsorted chunk rejected, session stays usable.
+        assert!(session.feed(0, vec![3, 1]).is_err());
+        session.feed(0, vec![1, 5]).unwrap();
+        // Boundary violation against the run's last element.
+        assert!(session.feed(0, vec![4]).is_err());
+        session.feed(0, vec![5, 9]).unwrap();
+        session.feed(1, vec![2]).unwrap();
+        // Sealed run refuses more data.
+        session.seal_run(1).unwrap();
+        assert!(session.feed(1, vec![7]).is_err());
+        let res = session.seal().unwrap().wait().unwrap();
+        assert_eq!(res.output, vec![1, 2, 5, 5, 9]);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn dropped_session_aborts_cleanly() {
+        let svc = MergeService::start(test_config()).unwrap();
+        {
+            let mut session = svc.open_compaction(2).unwrap();
+            session.feed(0, vec![1, 2, 3]).unwrap();
+            // Dropped without seal: buffered data must be discarded.
+        }
+        // Service still serves.
+        let res = svc
+            .submit_blocking(JobKind::Compact { runs: vec![vec![2], vec![1]] })
+            .unwrap();
+        assert_eq!(res.output, vec![1, 2]);
+        assert_eq!(svc.stats().completed.get(), 1);
         svc.shutdown();
     }
 }

@@ -1,0 +1,1065 @@
+//! Streaming compaction ingest: the chunked run protocol behind
+//! [`MergeService::open_compaction`](super::MergeService::open_compaction).
+//!
+//! A classic `JobKind::Compact` carries every run by value in one queue
+//! message, so a multi-gigabyte compaction pays full ingest latency and
+//! peak memory before the first cut is computed. Merge Path's core
+//! property makes that wait unnecessary: **any output rank induces a
+//! unique, synchronization-free cut of the inputs**, and the cut at
+//! rank `r` only inspects elements that can still land in the first
+//! `r` outputs. So a compaction whose low ranks are already *settled*
+//! can start merging them while high-rank data is still arriving.
+//!
+//! ## Protocol
+//!
+//! ```text
+//! client                       dispatcher                         pool
+//! ─────────────────────────────────────────────────────────────────────
+//! open_compaction(k) ─ registers a session (k runs, all open)
+//! feed(run, chunk) ──▶ CompactChunk ─▶ append to run buffer,
+//!   (validated           │             advance the sealed-rank
+//!    per chunk,          │             frontier; if it moved ≥
+//!    O(chunk) on         │             compact_eager_min_len past the
+//!    the caller)         │             planned rank: cut + dispatch
+//!                        │             eager StreamShard(s) ─────▶ merge
+//! seal_run(run) ───▶ CompactSealRun ─▶ run leaves the frontier min
+//! seal() ──────────▶ CompactSeal ───▶ plan the remaining rank range
+//!                                     as zero-copy StreamShards ─▶ merge
+//!                                     (or, if nothing was dispatched
+//!                                     eagerly, fall back to the classic
+//!                                     Compact routing — one code path,
+//!                                     same backends as before)
+//! last StreamShard to finish concatenates the per-shard outputs in
+//! rank order and replies on the session's handle
+//! ("native-kway-streamed")
+//! ```
+//!
+//! ## The sealed-rank frontier
+//!
+//! Let `F` be the minimum, over all *open* (unsealed) runs, of the last
+//! key fed to that run — undefined (no rank is safe) while any open run
+//! is still empty, and `+∞` once every run is sealed. Per-chunk
+//! admission validation guarantees each run's future elements are `≥`
+//! its current last key, hence `≥ F`. Every already-fed element with
+//! key `< F` therefore precedes all future elements in the stable merge
+//! (strict inequality: a tie at `F` from a lower-indexed run would
+//! still sort *before* an existing element — only strictly smaller keys
+//! are settled). The frontier rank
+//!
+//! ```text
+//! safe = Σ_j |{ x ∈ fed(run j) : x < F }|
+//! ```
+//!
+//! is exactly the length of the settled output prefix, and for any rank
+//! `r ≤ safe` the stable cut computed over the *fed prefixes*
+//! ([`kway_rank_split`]) equals the cut over the final, complete runs:
+//! the first `safe` outputs of both merges are the same elements in the
+//! same `(key, run, index)` order. Eager shards cut on live data are
+//! therefore bit-identical to shards cut after seal.
+//!
+//! ## Memory & cost model
+//!
+//! Eager shards copy their per-run windows out of the live ingest
+//! buffers (the buffers keep growing and may reallocate, so running
+//! workers must not borrow them); the remainder planned at `seal()`
+//! borrows the by-then frozen buffers through an `Arc` with no copy.
+//! Each shard merges into its own output vector and the last one
+//! concatenates — one extra `memcpy` pass over the output versus the
+//! in-place sharded path, bought back (and then some, on ingest-bound
+//! workloads) by overlapping merge work with ingest end to end. The
+//! per-chunk admission checks replace `JobKind::validate`'s former
+//! O(total) walk of every compaction on the submit path: validation
+//! cost is now amortized and bounded by the chunk size per call.
+
+use super::job::{Job, JobHandle, JobKind, JobResult};
+use super::queue::{BoundedQueue, PushError};
+use super::shard;
+use super::stats::ServiceStats;
+use crate::config::MergeflowConfig;
+use crate::mergepath::kway::loser_tree_merge;
+use crate::mergepath::kway_path::kway_rank_split;
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::ops::Range;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Backend tag reported for compactions that overlapped ingest with
+/// eager merging (at least one pre-seal shard dispatched).
+pub const BACKEND_STREAMED: &str = "native-kway-streamed";
+
+/// Hard ceiling on *eager* shards per session, independent of
+/// configuration — bounds dispatcher-side planning/copy cost. The
+/// remainder planned at seal is separately capped by
+/// [`shard::MAX_SHARDS`].
+const MAX_EAGER_SHARDS: usize = shard::MAX_SHARDS;
+
+// ---------------------------------------------------------------------
+// Queue message payloads. Fields are private to this module, so clients
+// cannot construct (and `submit` cannot receive) session messages
+// directly — the same opacity trick as `shard::ShardTask`.
+// ---------------------------------------------------------------------
+
+/// Payload of [`JobKind::CompactChunk`]: one validated chunk of one run.
+#[derive(Debug, Clone)]
+pub struct ChunkMsg {
+    session: u64,
+    run: usize,
+    data: Vec<i32>,
+}
+
+impl ChunkMsg {
+    /// Elements in this chunk (for job accounting).
+    pub(super) fn len(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Payload of [`JobKind::CompactSealRun`]: a run will receive no more
+/// chunks (it leaves the frontier minimum).
+#[derive(Debug, Clone)]
+pub struct RunSealMsg {
+    session: u64,
+    run: usize,
+}
+
+/// Payload of [`JobKind::CompactSeal`]: no more feeds at all; plan the
+/// remaining rank range and arrange the reply.
+#[derive(Debug, Clone)]
+pub struct SealMsg {
+    session: u64,
+}
+
+// ---------------------------------------------------------------------
+// Shared execution state (session ↔ stream-shard jobs on the pool).
+// ---------------------------------------------------------------------
+
+/// One shard of a streamed compaction: merge `k` per-run windows into
+/// an owned output vector, then hand it to the session's shared
+/// execution state. Carried by [`JobKind::StreamShard`]; constructed
+/// only by the dispatcher's session planner.
+#[derive(Debug, Clone)]
+pub struct StreamShard {
+    exec: Arc<StreamExec>,
+    input: ShardInput,
+    /// Slot in the session's output list; slots are allocated in rank
+    /// order, so concatenating by slot index reassembles the output.
+    idx: usize,
+}
+
+#[derive(Debug, Clone)]
+enum ShardInput {
+    /// Eager (pre-seal) shard: windows copied out of the live ingest
+    /// buffers, which keep growing (and may reallocate) underneath.
+    Owned(Vec<Vec<i32>>),
+    /// Remainder shard planned at seal: borrows the frozen run buffers.
+    Shared {
+        runs: Arc<Vec<Vec<i32>>>,
+        ranges: Vec<Range<usize>>,
+    },
+}
+
+impl StreamShard {
+    /// Output elements this shard produces.
+    pub fn len(&self) -> usize {
+        match &self.input {
+            ShardInput::Owned(windows) => windows.iter().map(|w| w.len()).sum(),
+            ShardInput::Shared { ranges, .. } => ranges.iter().map(|r| r.len()).sum(),
+        }
+    }
+
+    /// True iff the shard produces no output.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Completion state shared by all stream shards of one session.
+#[derive(Debug, Default)]
+struct StreamExec {
+    state: Mutex<ExecState>,
+}
+
+#[derive(Debug, Default)]
+struct ExecState {
+    /// Per-shard outputs, indexed by rank-ordered slot.
+    outputs: Vec<Option<Vec<i32>>>,
+    /// Shards completed so far.
+    done: usize,
+    /// Set when the session seals: from then on the shard count is
+    /// final and the last completion assembles + replies.
+    sealed: Option<SealInfo>,
+}
+
+#[derive(Debug)]
+struct SealInfo {
+    /// Total shard count (eager + remainder).
+    expected: usize,
+    /// Total output elements.
+    total: usize,
+    reply: Sender<JobResult>,
+    parent_id: u64,
+    /// Session open time — end-to-end latency covers the whole ingest.
+    enqueued_at: Instant,
+    /// Ingest duration (open → seal processed), reported as queue wait.
+    queue_wait_ns: u64,
+}
+
+impl StreamExec {
+    /// Allocate the next rank-ordered output slot.
+    fn push_slot(&self) -> usize {
+        let mut st = self.state.lock().unwrap();
+        st.outputs.push(None);
+        st.outputs.len() - 1
+    }
+}
+
+/// Record one shard's output; the completion that brings the sealed
+/// group to full strength assembles the final buffer and replies.
+fn complete_shard(exec: &StreamExec, idx: usize, out: Vec<i32>, stats: &ServiceStats) {
+    let mut st = exec.state.lock().unwrap();
+    debug_assert!(st.outputs[idx].is_none(), "shard slot filled twice");
+    st.outputs[idx] = Some(out);
+    st.done += 1;
+    stats.stream_shards_completed.inc();
+    maybe_finish(&mut st, stats);
+}
+
+/// If the session is sealed and every shard has reported, concatenate
+/// the rank-ordered outputs and reply on the session handle.
+fn maybe_finish(st: &mut ExecState, stats: &ServiceStats) {
+    let Some(info) = &st.sealed else { return };
+    if st.done < info.expected {
+        return;
+    }
+    let mut output = Vec::with_capacity(info.total);
+    for slot in st.outputs.iter_mut() {
+        output.append(&mut slot.take().expect("sealed group complete but a slot is empty"));
+    }
+    let latency_ns =
+        u64::try_from(info.enqueued_at.elapsed().as_nanos()).unwrap_or(u64::MAX);
+    stats.record_completion(
+        BACKEND_STREAMED,
+        info.total as u64,
+        latency_ns,
+        info.queue_wait_ns,
+    );
+    // Receiver may have been dropped (client gave up) — that's fine.
+    let _ = info.reply.send(JobResult {
+        id: info.parent_id,
+        output,
+        backend: BACKEND_STREAMED,
+        latency_ns,
+    });
+    // Drop the sender so an aborted/forgotten receiver unblocks.
+    st.sealed = None;
+}
+
+/// Execute one stream shard on a pool worker: stable loser-tree merge
+/// of its per-run windows into an owned buffer, then report completion
+/// (the last shard of a sealed session assembles and replies).
+pub(crate) fn execute_stream_shard(shard: StreamShard, stats: &ServiceStats) {
+    let out = match &shard.input {
+        ShardInput::Owned(windows) => {
+            let parts: Vec<&[i32]> = windows.iter().map(|w| w.as_slice()).collect();
+            merge_parts(&parts)
+        }
+        ShardInput::Shared { runs, ranges } => {
+            let parts: Vec<&[i32]> = ranges
+                .iter()
+                .zip(runs.iter())
+                .map(|(r, run)| &run[r.clone()])
+                .collect();
+            merge_parts(&parts)
+        }
+    };
+    complete_shard(&shard.exec, shard.idx, out, stats);
+}
+
+fn merge_parts(parts: &[&[i32]]) -> Vec<i32> {
+    let total: usize = parts.iter().map(|p| p.len()).sum();
+    // Fully tiled by the loser-tree merge (see crate::uninit_vec).
+    let mut out = crate::uninit_vec(total);
+    loser_tree_merge(parts, &mut out);
+    out
+}
+
+// ---------------------------------------------------------------------
+// Dispatcher-side session state.
+// ---------------------------------------------------------------------
+
+/// All live streaming sessions, shared between the service front end
+/// (open / abort) and the dispatcher (everything else). The dispatcher
+/// is the only mutator of per-session ingest state; clients only insert
+/// new sessions and flip the abort flag, so one mutex over the map is
+/// uncontended in practice.
+#[derive(Debug, Default)]
+pub(super) struct SessionTable {
+    sessions: Mutex<HashMap<u64, SessionState>>,
+    /// Ids of aborted sessions awaiting reclamation. Dropping a session
+    /// records its id here (an in-memory list — unlike a queue message
+    /// it cannot fail under back-pressure), and the dispatcher reaps on
+    /// every loop iteration, so an aborted session's buffered ingest is
+    /// freed promptly instead of leaking until service shutdown.
+    aborted: Mutex<Vec<u64>>,
+}
+
+impl SessionTable {
+    fn insert(&self, id: u64, state: SessionState) {
+        self.sessions.lock().unwrap().insert(id, state);
+    }
+
+    fn mark_aborted(&self, id: u64) {
+        if let Some(s) = self.sessions.lock().unwrap().get_mut(&id) {
+            s.aborted = true;
+        }
+        self.aborted.lock().unwrap().push(id);
+    }
+
+    /// Drop the state of every aborted session. Called by the
+    /// dispatcher once per loop iteration; in-flight messages that
+    /// still reference a reaped id just find no entry and are ignored.
+    pub(super) fn reap_aborted(&self) {
+        let ids: Vec<u64> = std::mem::take(&mut *self.aborted.lock().unwrap());
+        if ids.is_empty() {
+            return;
+        }
+        let mut map = self.sessions.lock().unwrap();
+        for id in ids {
+            map.remove(&id);
+        }
+    }
+}
+
+#[derive(Debug)]
+struct SessionState {
+    runs: Vec<RunIngest>,
+    /// Absolute per-run cut positions already dispatched to eager
+    /// shards (componentwise nondecreasing; sums to `planned_rank`).
+    planned: Vec<usize>,
+    /// Output ranks `[0, planned_rank)` are covered by eager shards.
+    planned_rank: usize,
+    exec: Arc<StreamExec>,
+    /// Session reply sender; every emitted shard job carries a clone.
+    reply: Sender<JobResult>,
+    enqueued_at: Instant,
+    /// Whether eager (pre-seal) planning is enabled for this session.
+    /// The one-shot wrapper disables it when it fed every run as one
+    /// whole-moved chunk: ingest completes in the same breath, so
+    /// eager window copies could never buy overlap — and the route the
+    /// job takes stays deterministic (classic fallback) instead of
+    /// depending on where batch boundaries happen to fall.
+    eager: bool,
+    eager_count: usize,
+    aborted: bool,
+}
+
+#[derive(Debug, Default)]
+struct RunIngest {
+    buf: Vec<i32>,
+    sealed: bool,
+}
+
+/// Settled output prefix length under the sealed-rank frontier (module
+/// docs): elements strictly below the minimum last-fed key of any open
+/// run; everything once all runs are sealed; nothing while an open run
+/// is still empty.
+fn safe_rank(runs: &[RunIngest]) -> usize {
+    let mut frontier: Option<i32> = None;
+    let mut all_sealed = true;
+    for r in runs {
+        if !r.sealed {
+            all_sealed = false;
+            match r.buf.last() {
+                None => return 0,
+                Some(&v) => frontier = Some(frontier.map_or(v, |f| f.min(v))),
+            }
+        }
+    }
+    if all_sealed {
+        return runs.iter().map(|r| r.buf.len()).sum();
+    }
+    let f = frontier.expect("an open run with data exists");
+    runs.iter().map(|r| r.buf.partition_point(|x| *x < f)).sum()
+}
+
+/// True iff `kind` is a session protocol message (handled on the
+/// dispatcher, never dispatched to a worker).
+pub(super) fn is_session_message(kind: &JobKind) -> bool {
+    matches!(
+        kind,
+        JobKind::CompactChunk { .. } | JobKind::CompactSealRun { .. } | JobKind::CompactSeal { .. }
+    )
+}
+
+/// Process one session message on the dispatcher thread. Ingest
+/// messages (chunk / run-seal) only mutate session state and record the
+/// touched session in `touched`; eager planning runs once per drained
+/// batch via [`plan_eager`], so a session whose seal is absorbed in the
+/// same batch never pays for eager window copies the seal's zero-copy
+/// remainder planner would make redundant. A seal returns the jobs it
+/// unlocked (the remainder plan or the classic-fallback `Compact`); the
+/// caller dispatches them through the normal expansion + in-flight
+/// accounting.
+pub(super) fn handle_message(
+    cfg: &MergeflowConfig,
+    stats: &ServiceStats,
+    table: &SessionTable,
+    job: Job,
+    touched: &mut Vec<u64>,
+) -> Vec<Job> {
+    let Job { id, kind, enqueued_at, reply } = job;
+    let mut map = table.sessions.lock().unwrap();
+    match kind {
+        JobKind::CompactChunk { msg } => {
+            let Some(state) = map.get_mut(&msg.session) else { return Vec::new() };
+            if state.aborted {
+                map.remove(&msg.session);
+                return Vec::new();
+            }
+            let r = &mut state.runs[msg.run];
+            debug_assert!(!r.sealed, "chunk for a sealed run passed admission");
+            if r.buf.is_empty() {
+                // First chunk of a run lands by move — the whole-run
+                // feeds of the one-shot wrapper never copy.
+                r.buf = msg.data;
+            } else {
+                r.buf.extend_from_slice(&msg.data);
+            }
+            touched.push(msg.session);
+            Vec::new()
+        }
+        JobKind::CompactSealRun { msg } => {
+            let Some(state) = map.get_mut(&msg.session) else { return Vec::new() };
+            if state.aborted {
+                map.remove(&msg.session);
+                return Vec::new();
+            }
+            state.runs[msg.run].sealed = true;
+            touched.push(msg.session);
+            Vec::new()
+        }
+        JobKind::CompactSeal { msg } => {
+            let Some(state) = map.remove(&msg.session) else { return Vec::new() };
+            if state.aborted {
+                return Vec::new();
+            }
+            // `state` is owned now — release the table lock so client
+            // threads (open_compaction, session drops) are not stalled
+            // behind the remainder planning below.
+            drop(map);
+            finalize(cfg, stats, state, id, reply)
+        }
+        other => vec![Job { id, kind: other, enqueued_at, reply }],
+    }
+}
+
+/// Batch-level eager planning: for every session touched by the just
+/// drained batch that is still live (not sealed in that same batch, not
+/// aborted), dispatch eager shards over its newly settled ranks. Called
+/// by the dispatcher after each batch; `touched` is drained.
+pub(super) fn plan_eager(
+    cfg: &MergeflowConfig,
+    stats: &ServiceStats,
+    table: &SessionTable,
+    touched: &mut Vec<u64>,
+) -> Vec<Job> {
+    if touched.is_empty() {
+        return Vec::new();
+    }
+    touched.sort_unstable();
+    touched.dedup();
+    let mut jobs = Vec::new();
+    let mut map = table.sessions.lock().unwrap();
+    for id in touched.drain(..) {
+        let Some(state) = map.get_mut(&id) else { continue };
+        if state.aborted {
+            continue; // the reap frees it
+        }
+        jobs.extend(maybe_plan_eager(cfg, stats, state, id));
+    }
+    jobs
+}
+
+/// Dispatch eager shards while the sealed-rank frontier is at least
+/// `compact_eager_min_len` ahead of the planned rank. Each shard covers
+/// exactly that many output ranks; the cut is computed over the fed
+/// prefixes, which for ranks within the frontier equals the cut over
+/// the final runs (module docs). Skipped entirely once every run is
+/// sealed: the seal message is imminent and its remainder planner
+/// merges the tail zero-copy, so eager window copies would be waste.
+fn maybe_plan_eager(
+    cfg: &MergeflowConfig,
+    stats: &ServiceStats,
+    state: &mut SessionState,
+    id: u64,
+) -> Vec<Job> {
+    let eager_len = cfg.compact_eager_min_len;
+    if eager_len == 0 || !state.eager {
+        return Vec::new();
+    }
+    let k = state.runs.len();
+    // Eager shards run the flat engine's per-shard kernel; share its k
+    // cap (which also bounds per-cut planning cost, like shard.rs).
+    if k < 2 || k > cfg.kway_flat_max_k {
+        return Vec::new();
+    }
+    if state.runs.iter().all(|r| r.sealed) {
+        return Vec::new();
+    }
+    let safe = safe_rank(&state.runs);
+    let mut jobs = Vec::new();
+    while safe.saturating_sub(state.planned_rank) >= eager_len
+        && state.eager_count < MAX_EAGER_SHARDS
+    {
+        let target = state.planned_rank + eager_len;
+        let (cut, windows) = {
+            let prefixes: Vec<&[i32]> =
+                state.runs.iter().map(|r| r.buf.as_slice()).collect();
+            let cut = kway_rank_split(&prefixes, target);
+            let windows: Vec<Vec<i32>> = prefixes
+                .iter()
+                .zip(cut.iter().zip(state.planned.iter()))
+                .map(|(p, (&e, &s))| p[s..e].to_vec())
+                .collect();
+            (cut, windows)
+        };
+        state.planned = cut;
+        state.planned_rank = target;
+        state.eager_count += 1;
+        stats.eager_shards.inc();
+        let idx = state.exec.push_slot();
+        jobs.push(Job {
+            id,
+            kind: JobKind::StreamShard {
+                shard: StreamShard {
+                    exec: Arc::clone(&state.exec),
+                    input: ShardInput::Owned(windows),
+                    idx,
+                },
+            },
+            // Session open time: latency accounting covers the ingest.
+            enqueued_at: state.enqueued_at,
+            reply: state.reply.clone(),
+        });
+    }
+    jobs
+}
+
+/// Seal processing. With no eager work done the session degrades to the
+/// classic one-shot routing (`shard::maybe_expand` → sharded / flat /
+/// tree, identical backends) — streaming is purely additive for
+/// sessions that never overlapped. Otherwise the remaining rank range
+/// is planned as zero-copy `StreamShard`s over the frozen buffers and
+/// the group is armed to assemble + reply on its last completion.
+fn finalize(
+    cfg: &MergeflowConfig,
+    stats: &ServiceStats,
+    mut state: SessionState,
+    id: u64,
+    reply: Sender<JobResult>,
+) -> Vec<Job> {
+    for r in &mut state.runs {
+        r.sealed = true;
+    }
+    // Latency accounting runs from session open, so the reported
+    // end-to-end figure covers the whole ingest (and "queue wait" is
+    // the open→seal ingest duration).
+    let opened_at = state.enqueued_at;
+    let total: usize = state.runs.iter().map(|r| r.buf.len()).sum();
+    if state.eager_count == 0 {
+        let runs: Vec<Vec<i32>> = state.runs.into_iter().map(|r| r.buf).collect();
+        return vec![Job {
+            id,
+            kind: JobKind::Compact { runs },
+            enqueued_at: opened_at,
+            reply,
+        }];
+    }
+    let queue_wait_ns =
+        u64::try_from(opened_at.elapsed().as_nanos()).unwrap_or(u64::MAX);
+    let remainder = total - state.planned_rank;
+    let runs: Arc<Vec<Vec<i32>>> =
+        Arc::new(state.runs.into_iter().map(|r| r.buf).collect());
+    let mut jobs = Vec::new();
+    if remainder > 0 {
+        // Same sizing policy as the sharded route: ~min_len elements
+        // per shard (auto-tuned when configured so), floored at
+        // threads_per_job so the tail never has less parallelism than
+        // a one-shot job would, capped at MAX_SHARDS, and never more
+        // shards than elements. `merge.compact_sharding = false` is
+        // honored here too: the tail then merges as a single shard.
+        let n = if cfg.compact_sharding {
+            let min_len = shard::effective_shard_min_len(cfg, remainder).max(1);
+            (remainder / min_len)
+                .max(1)
+                .max(cfg.threads_per_job)
+                .min(shard::MAX_SHARDS)
+                .min(remainder)
+        } else {
+            1
+        };
+        let refs: Vec<&[i32]> = runs.iter().map(|r| r.as_slice()).collect();
+        let mut prev = state.planned.clone();
+        for i in 1..=n {
+            let cut: Vec<usize> = if i == n {
+                refs.iter().map(|r| r.len()).collect()
+            } else {
+                kway_rank_split(&refs, state.planned_rank + i * remainder / n)
+            };
+            let ranges: Vec<Range<usize>> =
+                prev.iter().zip(cut.iter()).map(|(&s, &e)| s..e).collect();
+            let idx = state.exec.push_slot();
+            jobs.push(Job {
+                id,
+                kind: JobKind::StreamShard {
+                    shard: StreamShard {
+                        exec: Arc::clone(&state.exec),
+                        input: ShardInput::Shared { runs: Arc::clone(&runs), ranges },
+                        idx,
+                    },
+                },
+                enqueued_at: opened_at,
+                reply: reply.clone(),
+            });
+            prev = cut;
+        }
+    }
+    let mut st = state.exec.state.lock().unwrap();
+    st.sealed = Some(SealInfo {
+        expected: st.outputs.len(),
+        total,
+        reply,
+        parent_id: id,
+        enqueued_at: opened_at,
+        queue_wait_ns,
+    });
+    // All eager shards may already be done (and the remainder empty):
+    // assemble right here on the dispatcher.
+    maybe_finish(&mut st, stats);
+    drop(st);
+    jobs
+}
+
+// ---------------------------------------------------------------------
+// Client handle.
+// ---------------------------------------------------------------------
+
+/// Client handle to a streaming compaction: feed sorted chunks run by
+/// run, seal runs as they end, then [`seal`](Self::seal) the session
+/// for a [`JobHandle`] to the merged output.
+///
+/// Every chunk is validated at admission — sortedness within the chunk
+/// plus the boundary against the run's previous chunk — in O(chunk) on
+/// the calling thread, so a violation is rejected *mid-stream* with the
+/// session intact (the offending chunk is simply not admitted; the
+/// client may correct and continue). Feeds apply back-pressure by
+/// blocking while the service queue is full.
+///
+/// Dropping an unsealed session aborts it: buffered data is discarded
+/// and no reply is ever delivered.
+#[derive(Debug)]
+pub struct CompactionSession {
+    queue: Arc<BoundedQueue<Job>>,
+    table: Arc<SessionTable>,
+    stats: Arc<ServiceStats>,
+    id: u64,
+    tx: Sender<JobResult>,
+    rx: Option<Receiver<JobResult>>,
+    runs: Vec<ClientRun>,
+    sealed: bool,
+    /// Back-pressure mode: `true` (streaming clients) blocks feeds
+    /// while the queue is full; `false` (the one-shot `submit` wrapper)
+    /// rejects the *first* message instead — preserving `submit`'s
+    /// fail-fast admission — and switches to blocking once admitted,
+    /// so a large job cannot spuriously reject itself mid-feed by
+    /// outrunning the dispatcher with its own chunk messages.
+    blocking: bool,
+    /// Set after the first successful push (see `blocking`).
+    admitted: bool,
+}
+
+#[derive(Debug, Default)]
+struct ClientRun {
+    last: Option<i32>,
+    sealed: bool,
+}
+
+/// Open a session: register dispatcher-side state and build the client
+/// handle. Called by `MergeService::open_compaction` (which allocates
+/// the id); `submitted` is counted later, at [`CompactionSession::seal`].
+pub(super) fn open(
+    queue: Arc<BoundedQueue<Job>>,
+    table: Arc<SessionTable>,
+    stats: Arc<ServiceStats>,
+    id: u64,
+    run_count: usize,
+    blocking: bool,
+    eager: bool,
+) -> CompactionSession {
+    let (tx, rx) = channel();
+    table.insert(
+        id,
+        SessionState {
+            runs: (0..run_count).map(|_| RunIngest::default()).collect(),
+            planned: vec![0; run_count],
+            planned_rank: 0,
+            exec: Arc::new(StreamExec::default()),
+            reply: tx.clone(),
+            enqueued_at: Instant::now(),
+            eager,
+            eager_count: 0,
+            aborted: false,
+        },
+    );
+    CompactionSession {
+        queue,
+        table,
+        stats,
+        id,
+        tx,
+        rx: Some(rx),
+        runs: (0..run_count).map(|_| ClientRun::default()).collect(),
+        sealed: false,
+        blocking,
+        admitted: false,
+    }
+}
+
+impl CompactionSession {
+    /// Session id (the job id the eventual [`JobResult`] reports).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Number of runs declared at open.
+    pub fn run_count(&self) -> usize {
+        self.runs.len()
+    }
+
+    fn check_open(&self, run: usize) -> Result<()> {
+        if self.sealed {
+            return Err(Error::InvalidInput("session already sealed".into()));
+        }
+        if run >= self.runs.len() {
+            return Err(Error::InvalidInput(format!(
+                "run {run} out of range (session has {} runs)",
+                self.runs.len()
+            )));
+        }
+        if self.runs[run].sealed {
+            return Err(Error::InvalidInput(format!("run {run} already sealed")));
+        }
+        Ok(())
+    }
+
+    fn push(&mut self, kind: JobKind) -> Result<()> {
+        let job = Job {
+            id: self.id,
+            kind,
+            enqueued_at: Instant::now(),
+            reply: self.tx.clone(),
+        };
+        // Streaming clients get flow control (block while full). The
+        // one-shot wrapper fail-fast-rejects only its *first* message —
+        // the admission decision, matching the old by-value `Compact` —
+        // and then blocks like any admitted ingest: its own chunk
+        // messages filling the queue must pause it, not reject it.
+        let result = if self.blocking || self.admitted {
+            self.queue.push(job)
+        } else {
+            self.queue.try_push(job)
+        };
+        match result {
+            Ok(()) => {
+                self.admitted = true;
+                Ok(())
+            }
+            Err(PushError::Closed) => Err(Error::Service("service shut down".into())),
+            Err(PushError::Full) => {
+                debug_assert!(!self.blocking, "blocking push never reports Full");
+                Err(Error::Service("queue full (back-pressure)".into()))
+            }
+        }
+    }
+
+    /// Feed one sorted chunk of `run`. Validation is per chunk and
+    /// bounded by its length: the chunk itself must be sorted and its
+    /// first element must not precede the run's last fed element. An
+    /// empty chunk is a no-op. Blocks while the service queue is full.
+    pub fn feed(&mut self, run: usize, chunk: Vec<i32>) -> Result<()> {
+        self.check_open(run)?;
+        if chunk.is_empty() {
+            return Ok(());
+        }
+        if !chunk.windows(2).all(|w| w[0] <= w[1]) {
+            return Err(Error::InvalidInput(format!(
+                "chunk for run {run} is not sorted"
+            )));
+        }
+        if let Some(last) = self.runs[run].last {
+            if chunk[0] < last {
+                return Err(Error::InvalidInput(format!(
+                    "chunk for run {run} starts at {} before the run's last element {last}",
+                    chunk[0]
+                )));
+            }
+        }
+        // Client-side state and the admission counters advance only
+        // after the push succeeds: a rejected push (full queue in
+        // reject mode, or shutdown) must leave the session exactly as
+        // it was, so the same chunk can be retried.
+        let last = chunk.last().copied();
+        let bytes = (chunk.len() * std::mem::size_of::<i32>()) as u64;
+        self.push(JobKind::CompactChunk {
+            msg: ChunkMsg { session: self.id, run, data: chunk },
+        })?;
+        self.runs[run].last = last;
+        self.stats.streamed_chunks.inc();
+        self.stats.streamed_bytes.add(bytes);
+        Ok(())
+    }
+
+    /// Declare that `run` will receive no more chunks. Sealing a run
+    /// removes it from the frontier minimum, which is what lets the
+    /// dispatcher advance past the run's last key.
+    pub fn seal_run(&mut self, run: usize) -> Result<()> {
+        self.check_open(run)?;
+        self.push(JobKind::CompactSealRun {
+            msg: RunSealMsg { session: self.id, run },
+        })?;
+        self.runs[run].sealed = true;
+        Ok(())
+    }
+
+    /// Seal the session (any still-open runs are sealed implicitly) and
+    /// return the handle to the merged output. Consumes the session; on
+    /// error (full queue in reject mode, or shutdown) the session is
+    /// dropped and therefore aborted — its buffered ingest is reaped —
+    /// and the admission converts into a rejection in the stats.
+    pub fn seal(mut self) -> Result<JobHandle> {
+        // Count the admission *before* the push: the dispatcher may
+        // absorb the seal and complete the job before this thread
+        // resumes, and a snapshot must never observe
+        // completed > submitted. A failed push converts the admission
+        // into a rejection (submitted = completed + rejected +
+        // in-flight stays balanced); aborted-without-seal sessions
+        // never touch either counter.
+        self.stats.submitted.inc();
+        if let Err(e) = self.push(JobKind::CompactSeal { msg: SealMsg { session: self.id } })
+        {
+            self.stats.rejected.inc();
+            return Err(e);
+        }
+        self.sealed = true; // the seal is in: Drop must not abort now
+        let rx = self.rx.take().expect("receiver taken only here");
+        Ok(JobHandle::new(self.id, rx))
+    }
+}
+
+impl Drop for CompactionSession {
+    fn drop(&mut self) {
+        if self.sealed {
+            return;
+        }
+        // Abort: flag the session (stops eager planning even before the
+        // reap) and queue its id for reclamation — the dispatcher reaps
+        // on its next loop iteration, so the buffered ingest is freed
+        // promptly and without depending on queue capacity.
+        self.table.mark_aborted(self.id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ingest(pairs: &[(&[i32], bool)]) -> Vec<RunIngest> {
+        pairs
+            .iter()
+            .map(|(buf, sealed)| RunIngest { buf: buf.to_vec(), sealed: *sealed })
+            .collect()
+    }
+
+    #[test]
+    fn safe_rank_frontier_cases() {
+        // No runs: vacuously all sealed, nothing to settle.
+        assert_eq!(safe_rank(&[]), 0);
+        // An open empty run pins the frontier at "nothing settled".
+        assert_eq!(safe_rank(&ingest(&[(&[1, 2, 3], false), (&[], false)])), 0);
+        // All sealed: everything is settled.
+        assert_eq!(safe_rank(&ingest(&[(&[1, 2], true), (&[0], true)])), 3);
+        // Frontier = the open run's last key (5); only strictly-below
+        // counts: {2, 3} from the open run and {1} from the sealed one.
+        // The ties at 5 are unsettled — a future element of the open
+        // run could equal 5 and sort between them.
+        assert_eq!(
+            safe_rank(&ingest(&[(&[2, 3, 5], false), (&[1, 5, 9], true)])),
+            3
+        );
+        // Two open runs: frontier is the smaller last element.
+        assert_eq!(
+            safe_rank(&ingest(&[(&[1, 4, 8], false), (&[2, 6], false)])),
+            3, // {1, 4} and {2} are < 6
+        );
+        // Duplicate-heavy: nothing strictly below the frontier.
+        assert_eq!(safe_rank(&ingest(&[(&[5, 5], false), (&[5, 5, 5], false)])), 0);
+    }
+
+    #[test]
+    fn stream_shard_len_both_inputs() {
+        let exec = Arc::new(StreamExec::default());
+        let owned = StreamShard {
+            exec: Arc::clone(&exec),
+            input: ShardInput::Owned(vec![vec![1, 2], vec![3]]),
+            idx: 0,
+        };
+        assert_eq!(owned.len(), 3);
+        assert!(!owned.is_empty());
+        let shared = StreamShard {
+            exec,
+            input: ShardInput::Shared {
+                runs: Arc::new(vec![vec![1, 2, 3, 4], vec![5, 6]]),
+                ranges: vec![1..3, 0..2],
+            },
+            idx: 1,
+        };
+        assert_eq!(shared.len(), 4);
+    }
+
+    #[test]
+    fn exec_assembles_in_rank_order_after_seal() {
+        let stats = ServiceStats::new();
+        let exec = StreamExec::default();
+        let a = exec.push_slot();
+        let b = exec.push_slot();
+        let (tx, rx) = channel();
+        // Complete out of order, seal in between: reply fires only when
+        // both the seal info and the last output are in.
+        complete_shard(&exec, b, vec![30, 40], &stats);
+        {
+            let mut st = exec.state.lock().unwrap();
+            st.sealed = Some(SealInfo {
+                expected: 2,
+                total: 4,
+                reply: tx,
+                parent_id: 9,
+                enqueued_at: Instant::now(),
+                queue_wait_ns: 1,
+            });
+            maybe_finish(&mut st, &stats);
+        }
+        assert!(rx.try_recv().is_err(), "must wait for the first shard");
+        complete_shard(&exec, a, vec![10, 20], &stats);
+        let res = rx.try_recv().expect("group complete");
+        assert_eq!(res.output, vec![10, 20, 30, 40]);
+        assert_eq!(res.backend, BACKEND_STREAMED);
+        assert_eq!(res.id, 9);
+        assert_eq!(stats.streamed_jobs.get(), 1);
+        assert_eq!(stats.stream_shards_completed.get(), 2);
+    }
+
+    #[test]
+    fn eager_plan_respects_threshold_and_seal_skip() {
+        let cfg =
+            MergeflowConfig { compact_eager_min_len: 4, ..MergeflowConfig::default() };
+        let stats = ServiceStats::new();
+        let (tx, _rx) = channel();
+        let mut state = SessionState {
+            runs: ingest(&[(&[1, 2, 3, 4, 50], false), (&[1, 2, 3, 4, 60], false)]),
+            planned: vec![0, 0],
+            planned_rank: 0,
+            exec: Arc::new(StreamExec::default()),
+            reply: tx,
+            enqueued_at: Instant::now(),
+            eager: true,
+            eager_count: 0,
+            aborted: false,
+        };
+        // Frontier = 50 → 8 settled ranks → two eager shards of 4.
+        let jobs = maybe_plan_eager(&cfg, &stats, &mut state, 1);
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(state.planned_rank, 8);
+        assert_eq!(state.planned, vec![4, 4]);
+        assert_eq!(stats.eager_shards.get(), 2);
+        // Nothing new settled → no further shards.
+        assert!(maybe_plan_eager(&cfg, &stats, &mut state, 1).is_empty());
+        // All runs sealed → the seal will handle the tail zero-copy.
+        for r in &mut state.runs {
+            r.sealed = true;
+        }
+        assert!(maybe_plan_eager(&cfg, &stats, &mut state, 1).is_empty());
+        // The planned shards merge the settled prefix bit-identically.
+        for job in jobs {
+            match job.kind {
+                JobKind::StreamShard { shard } => {
+                    assert_eq!(shard.len(), 4);
+                    execute_stream_shard(shard, &stats);
+                }
+                _ => unreachable!("eager planning emits stream shards"),
+            }
+        }
+        let st = state.exec.state.lock().unwrap();
+        let merged: Vec<i32> = st
+            .outputs
+            .iter()
+            .flat_map(|o| o.clone().unwrap())
+            .collect();
+        assert_eq!(merged, vec![1, 1, 2, 2, 3, 3, 4, 4]);
+    }
+
+    #[test]
+    fn reap_frees_aborted_sessions() {
+        let table = SessionTable::default();
+        let (tx, _rx) = channel();
+        table.insert(
+            7,
+            SessionState {
+                runs: ingest(&[(&[1, 2, 3], false)]),
+                planned: vec![0],
+                planned_rank: 0,
+                exec: Arc::new(StreamExec::default()),
+                reply: tx,
+                enqueued_at: Instant::now(),
+                eager: true,
+                eager_count: 0,
+                aborted: false,
+            },
+        );
+        table.mark_aborted(7);
+        assert!(!table.sessions.lock().unwrap().is_empty(), "reap is deferred");
+        table.reap_aborted();
+        assert!(table.sessions.lock().unwrap().is_empty(), "buffers freed");
+        // Aborting an id with no entry (already reaped) is a no-op.
+        table.mark_aborted(99);
+        table.reap_aborted();
+    }
+
+    #[test]
+    fn eager_plan_disabled_cases() {
+        let stats = ServiceStats::new();
+        let (tx, _rx) = channel();
+        let mut state = SessionState {
+            runs: ingest(&[(&[1, 2, 3, 4], false), (&[1, 2, 3, 9], false)]),
+            planned: vec![0, 0],
+            planned_rank: 0,
+            exec: Arc::new(StreamExec::default()),
+            reply: tx,
+            enqueued_at: Instant::now(),
+            eager: true,
+            eager_count: 0,
+            aborted: false,
+        };
+        let off =
+            MergeflowConfig { compact_eager_min_len: 0, ..MergeflowConfig::default() };
+        assert!(maybe_plan_eager(&off, &stats, &mut state, 1).is_empty());
+        let k_cap = MergeflowConfig {
+            compact_eager_min_len: 1,
+            kway_flat_max_k: 1,
+            ..MergeflowConfig::default()
+        };
+        assert!(maybe_plan_eager(&k_cap, &stats, &mut state, 1).is_empty());
+        assert_eq!(stats.eager_shards.get(), 0);
+    }
+}

@@ -57,7 +57,28 @@ pub const BACKEND_SHARDED: &str = "native-kway-sharded";
 
 /// Hard ceiling on shards per compaction, independent of configuration
 /// — bounds dispatcher-side planning cost and per-job bookkeeping.
-const MAX_SHARDS: usize = 256;
+/// Shared with the streaming remainder planner ([`super::session`]).
+pub(crate) const MAX_SHARDS: usize = 256;
+
+/// Smallest shard length the auto-tuner will pick
+/// (`merge.compact_shard_min_len = 0`). Below this, per-shard dispatch
+/// and planning overhead eat the scheduling win —
+/// `benches/sharded_vs_flat.rs` locates the boundary per machine; 256
+/// Ki elements sits above it on every shape the bench has swept.
+pub(crate) const AUTO_SHARD_FLOOR: usize = 1 << 18;
+
+/// Resolve the configured shard length for a job of `total` output
+/// elements. A configured `compact_shard_min_len` is used as-is;
+/// **0 means auto**: one shard per pool worker
+/// (`total / workers`), clamped to `[AUTO_SHARD_FLOOR, u32::MAX]` so
+/// shards never drop below the measured profitability floor and the
+/// arithmetic stays sane for absurd totals.
+pub(crate) fn effective_shard_min_len(cfg: &MergeflowConfig, total: usize) -> usize {
+    if cfg.compact_shard_min_len != 0 {
+        return cfg.compact_shard_min_len;
+    }
+    (total / cfg.workers.max(1)).clamp(AUTO_SHARD_FLOOR, u32::MAX as usize)
+}
 
 /// Output buffer shared by all shards of one group. Shards write
 /// through disjoint `out_range` windows (partition tiling invariant),
@@ -161,10 +182,10 @@ impl ShardTask {
 /// borderline total (shards then run somewhat smaller than
 /// `compact_shard_min_len`, never smaller than `2·min_len/threads`).
 pub(crate) fn shard_count(cfg: &MergeflowConfig, live_runs: usize, total: usize) -> usize {
-    if cfg.compact_shard_min_len == 0 || live_runs < 2 || live_runs > cfg.kway_flat_max_k {
+    if !cfg.compact_sharding || live_runs < 2 || live_runs > cfg.kway_flat_max_k {
         return 1;
     }
-    let s = total / cfg.compact_shard_min_len;
+    let s = total / effective_shard_min_len(cfg, total);
     if s < 2 {
         return 1;
     }
@@ -322,7 +343,9 @@ mod tests {
         assert_eq!(shard_count(&cfg, 4, 10_500), 10);
         assert_eq!(shard_count(&cfg, 1, 10_500), 1, "single live run never shards");
         assert_eq!(shard_count(&cfg, 0, 0), 1);
-        assert_eq!(shard_count(&cfg_with(0), 8, 1 << 30), 1, "0 disables sharding");
+        let mut off = cfg_with(1000);
+        off.compact_sharding = false;
+        assert_eq!(shard_count(&off, 8, 1 << 30), 1, "bool knob disables sharding");
         assert_eq!(shard_count(&cfg_with(1), 2, 1 << 30), MAX_SHARDS, "capped");
         // The sharded route inherits the flat engine's k cap: beyond it
         // (or with the flat engine disabled) the tree handles the job.
@@ -340,6 +363,34 @@ mod tests {
         assert_eq!(shard_count(&four, 4, 1999), 1, "below the 2-shard bar");
         assert_eq!(shard_count(&four, 4, 2000), 4, "floored at threads_per_job");
         assert_eq!(shard_count(&four, 4, 10_500), 10, "floor inactive past it");
+    }
+
+    #[test]
+    fn auto_shard_len_tracks_workers() {
+        // min_len = 0 → auto: total/workers clamped to the measured
+        // floor, so a qualifying job splits into ~workers shards.
+        let mut auto = cfg_with(0);
+        auto.workers = 4;
+        assert_eq!(
+            effective_shard_min_len(&auto, 8 * AUTO_SHARD_FLOOR),
+            2 * AUTO_SHARD_FLOOR
+        );
+        assert_eq!(shard_count(&auto, 8, 8 * AUTO_SHARD_FLOOR), 4, "~one per worker");
+        // Below the floor, auto never shrinks shards further...
+        assert_eq!(effective_shard_min_len(&auto, AUTO_SHARD_FLOOR), AUTO_SHARD_FLOOR);
+        // ...so borderline totals do not shard at all (< 2 shards).
+        assert_eq!(shard_count(&auto, 8, AUTO_SHARD_FLOOR + 1), 1);
+        assert_eq!(shard_count(&auto, 8, 2 * AUTO_SHARD_FLOOR), 2);
+        // An explicit min_len is used as-is.
+        assert_eq!(effective_shard_min_len(&cfg_with(1000), 1 << 30), 1000);
+        // The u32 clamp guards absurd totals on huge worker counts.
+        let mut one = cfg_with(0);
+        one.workers = 1;
+        assert_eq!(
+            effective_shard_min_len(&one, usize::MAX),
+            u32::MAX as usize,
+            "auto shard length is clamped to u32::MAX"
+        );
     }
 
     #[test]

@@ -25,6 +25,24 @@ pub struct ServiceStats {
     /// Shard sub-jobs completed. Equals [`ServiceStats::compact_shards`]
     /// when no sharded compaction is in flight.
     pub compact_shards_completed: Counter,
+    /// Compactions that overlapped ingest with eager merging (backend
+    /// "native-kway-streamed"); one count per session. Sessions that
+    /// never dispatched an eager shard fall back to the classic routing
+    /// and are counted under that backend instead.
+    pub streamed_jobs: Counter,
+    /// Streaming compaction sessions opened (every one-shot `Compact`
+    /// opens one — the one-shot path is a wrapper over the session
+    /// protocol).
+    pub streamed_sessions: Counter,
+    /// Non-empty chunks admitted across all sessions.
+    pub streamed_chunks: Counter,
+    /// Bytes admitted through session feeds.
+    pub streamed_bytes: Counter,
+    /// Eager `StreamShard`s dispatched *before* their session's final
+    /// seal — the overlap the streaming protocol exists to create.
+    pub eager_shards: Counter,
+    /// Stream shards completed (eager + remainder).
+    pub stream_shards_completed: Counter,
     /// Jobs executed on the XLA backend.
     pub xla_jobs: Counter,
     /// Elements processed in total.
@@ -54,6 +72,7 @@ impl ServiceStats {
             "native-segmented" => self.segmented_jobs.inc(),
             "native-kway" => self.kway_jobs.inc(),
             "native-kway-sharded" => self.sharded_jobs.inc(),
+            "native-kway-streamed" => self.streamed_jobs.inc(),
             _ => self.native_jobs.inc(),
         }
     }
@@ -61,8 +80,9 @@ impl ServiceStats {
     /// Human-readable snapshot (the `serve` CLI's stats dump).
     pub fn snapshot(&self) -> String {
         format!(
-            "jobs: submitted={} completed={} rejected={} | backends: native={} segmented={} kway={} sharded={} xla={} | \
+            "jobs: submitted={} completed={} rejected={} | backends: native={} segmented={} kway={} sharded={} streamed={} xla={} | \
              shards: planned={} done={} | \
+             streaming: sessions={} chunks={} bytes={} eager={} stream-done={} | \
              batches={} elements={} | latency p50={} p95={} p99={} max={} | queue-wait p50={}",
             self.submitted.get(),
             self.completed.get(),
@@ -71,9 +91,15 @@ impl ServiceStats {
             self.segmented_jobs.get(),
             self.kway_jobs.get(),
             self.sharded_jobs.get(),
+            self.streamed_jobs.get(),
             self.xla_jobs.get(),
             self.compact_shards.get(),
             self.compact_shards_completed.get(),
+            self.streamed_sessions.get(),
+            self.streamed_chunks.get(),
+            self.streamed_bytes.get(),
+            self.eager_shards.get(),
+            self.stream_shards_completed.get(),
             self.batches.get(),
             self.elements.get(),
             fmt_ns(self.latency.quantile(0.5)),
@@ -97,18 +123,38 @@ mod tests {
         s.record_completion("native-segmented", 300, 3000, 30);
         s.record_completion("native-kway", 400, 4000, 40);
         s.record_completion("native-kway-sharded", 500, 5000, 50);
-        assert_eq!(s.completed.get(), 5);
+        s.record_completion("native-kway-streamed", 600, 6000, 60);
+        assert_eq!(s.completed.get(), 6);
         assert_eq!(s.native_jobs.get(), 1);
         assert_eq!(s.xla_jobs.get(), 1);
         assert_eq!(s.segmented_jobs.get(), 1);
         assert_eq!(s.kway_jobs.get(), 1);
         assert_eq!(s.sharded_jobs.get(), 1);
-        assert_eq!(s.elements.get(), 1500);
+        assert_eq!(s.streamed_jobs.get(), 1);
+        assert_eq!(s.elements.get(), 2100);
         let snap = s.snapshot();
-        assert!(snap.contains("completed=5"));
+        assert!(snap.contains("completed=6"));
         assert!(snap.contains("kway=1"));
         assert!(snap.contains("sharded=1"));
+        assert!(snap.contains("streamed=1"));
         assert!(snap.contains("xla=1"));
+    }
+
+    #[test]
+    fn streaming_counters_in_snapshot() {
+        let s = ServiceStats::new();
+        s.streamed_sessions.inc();
+        s.streamed_chunks.add(12);
+        s.streamed_bytes.add(4096);
+        s.eager_shards.add(3);
+        s.stream_shards_completed.add(5);
+        let snap = s.snapshot();
+        assert!(snap.contains("sessions=1"));
+        assert!(snap.contains("chunks=12"));
+        assert!(snap.contains("bytes=4096"));
+        assert!(snap.contains("eager=3"));
+        assert!(snap.contains("stream-done=5"));
+        assert_eq!(s.completed.get(), 0, "ingest counters are not completions");
     }
 
     #[test]

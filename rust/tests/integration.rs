@@ -22,7 +22,11 @@ fn base_config() -> MergeflowConfig {
         backend: Backend::Native,
         segment_len: 0,
         kway_flat_max_k: 64,
-        compact_shard_min_len: 0, // tests opt into sharding explicitly
+        // Tests opt into sharding / eager streaming explicitly.
+        compact_sharding: false,
+        compact_shard_min_len: 0,
+        compact_chunk_len: 0,
+        compact_eager_min_len: 0,
         artifacts_dir: "artifacts".into(),
     }
 }
@@ -163,6 +167,7 @@ fn sharded_compaction_end_to_end() {
     // bit-identical to the unsharded flat engine, and be reported as
     // "native-kway-sharded".
     let mut cfg = base_config();
+    cfg.compact_sharding = true;
     cfg.compact_shard_min_len = 8192;
     let svc = MergeService::start(cfg).unwrap();
     let runs = gen_sorted_runs(WorkloadKind::Skewed, 10, 6000, 77);
@@ -201,6 +206,7 @@ fn sharded_compaction_bit_identical_property() {
     // tree, whatever route (sharded / flat / tree / sequential) the
     // job takes.
     let mut cfg = base_config();
+    cfg.compact_sharding = true;
     cfg.compact_shard_min_len = 2048;
     let svc = MergeService::start(cfg).unwrap();
     for kind in WorkloadKind::all() {

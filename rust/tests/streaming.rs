@@ -1,0 +1,229 @@
+//! Streaming compaction ingest, end to end: the `CompactionSession`
+//! protocol must produce output bit-identical to the one-shot
+//! `Compact` oracle under every workload kind, chunking pattern, and
+//! rejection scenario — and must demonstrably overlap ingest with
+//! merging (eager shards dispatched before the final seal).
+
+use mergeflow::bench::workload::{gen_sorted_runs, WorkloadKind};
+use mergeflow::config::{Backend, MergeflowConfig};
+use mergeflow::coordinator::{JobKind, MergeService};
+use std::time::{Duration, Instant};
+
+fn base_config() -> MergeflowConfig {
+    MergeflowConfig {
+        workers: 2,
+        threads_per_job: 2,
+        queue_capacity: 256,
+        max_batch: 8,
+        batch_timeout_us: 100,
+        backend: Backend::Native,
+        segment_len: 0,
+        kway_flat_max_k: 64,
+        compact_sharding: false,
+        compact_shard_min_len: 0,
+        compact_chunk_len: 0,
+        compact_eager_min_len: 0,
+        artifacts_dir: "artifacts".into(),
+    }
+}
+
+fn sorted_oracle(runs: &[Vec<i32>]) -> Vec<i32> {
+    let mut v: Vec<i32> = runs.iter().flatten().copied().collect();
+    v.sort_unstable();
+    v
+}
+
+/// Property sweep: interleaved chunked feeds across runs — including
+/// empty chunks, a mid-stream unsorted-chunk rejection and a boundary
+/// violation rejection per session, staggered run seals — must match
+/// the one-shot `Compact` submission of the very same runs bit for
+/// bit, for every workload kind, with eager dispatch enabled.
+#[test]
+fn streamed_matches_one_shot_across_workloads() {
+    let mut cfg = base_config();
+    cfg.compact_eager_min_len = 300;
+    let svc = MergeService::start(cfg).unwrap();
+    // Cycle of chunk lengths; 0 exercises the empty-chunk no-op.
+    let chunk_lens = [97usize, 0, 256, 33, 511];
+    for (w, kind) in WorkloadKind::all().iter().enumerate() {
+        for (case, &(k, run_len)) in
+            [(1usize, 2000usize), (3, 700), (5, 1500)].iter().enumerate()
+        {
+            let runs = gen_sorted_runs(*kind, k, run_len, 0x57AE + (w * 10 + case) as u64);
+            let expected = sorted_oracle(&runs);
+
+            // One-shot oracle through the service itself.
+            let one_shot = svc
+                .submit_blocking(JobKind::Compact { runs: runs.clone() })
+                .unwrap();
+            assert_eq!(one_shot.output, expected, "{kind:?} k={k} one-shot");
+
+            // Streamed: interleave chunks across runs.
+            let mut session = svc.open_compaction(k).unwrap();
+            let mut offs = vec![0usize; k];
+            let mut c = case; // stagger the chunk-length cycle per case
+            while offs.iter().zip(&runs).any(|(&o, r)| o < r.len()) {
+                for i in 0..k {
+                    if offs[i] >= runs[i].len() {
+                        continue;
+                    }
+                    let len = chunk_lens[c % chunk_lens.len()];
+                    c += 1;
+                    let end = (offs[i] + len).min(runs[i].len());
+                    session.feed(i, runs[i][offs[i]..end].to_vec()).unwrap();
+                    offs[i] = end;
+                    // Stagger seals: even runs seal as soon as they
+                    // end, odd runs only at session seal.
+                    if offs[i] == runs[i].len() && i % 2 == 0 {
+                        session.seal_run(i).unwrap();
+                    }
+                }
+            }
+            // Mid-stream rejections must not disturb admitted data:
+            // run k-1 is still open iff k-1 is odd; aim at an open run
+            // when one exists.
+            if k > 1 {
+                let open = if (k - 1) % 2 == 1 { k - 1 } else { k - 2 };
+                if open % 2 == 1 {
+                    assert!(
+                        session.feed(open, vec![5, 3]).is_err(),
+                        "unsorted chunk must be rejected mid-stream"
+                    );
+                    if let Some(&last) = runs[open].last() {
+                        if last > i32::MIN {
+                            assert!(
+                                session.feed(open, vec![last - 1]).is_err(),
+                                "boundary violation must be rejected mid-stream"
+                            );
+                        }
+                    }
+                }
+            }
+            let res = session.seal().unwrap().wait().unwrap();
+            assert_eq!(res.output, expected, "{kind:?} k={k} streamed");
+            assert_eq!(
+                res.output, one_shot.output,
+                "{kind:?} k={k} streamed vs one-shot"
+            );
+        }
+    }
+    svc.shutdown();
+}
+
+/// Acceptance: a compaction fed in ≥ 4 chunks per run overlaps ingest
+/// with merging — the `eager_shards` counter proves at least one shard
+/// was dispatched *before* the session's final `seal()` — and still
+/// produces bit-identical output, reported as "native-kway-streamed".
+#[test]
+fn eager_shards_dispatch_before_seal() {
+    let mut cfg = base_config();
+    cfg.compact_eager_min_len = 1024;
+    let svc = MergeService::start(cfg).unwrap();
+    // Four identical ascending runs: the frontier is deterministic
+    // (min of last fed keys), so after all 16 chunks are admitted the
+    // settled prefix is 4 · 4095 elements — far past the threshold.
+    let k = 4usize;
+    let run: Vec<i32> = (0..4096).collect();
+    let runs: Vec<Vec<i32>> = (0..k).map(|_| run.clone()).collect();
+    let expected = sorted_oracle(&runs);
+
+    let mut session = svc.open_compaction(k).unwrap();
+    for chunk in 0..4 {
+        for (i, r) in runs.iter().enumerate() {
+            session.feed(i, r[chunk * 1024..(chunk + 1) * 1024].to_vec()).unwrap();
+        }
+    }
+    // All data is admitted but nothing is sealed: any eager shard the
+    // dispatcher launches is provably pre-seal. The chunks are already
+    // in the queue, so the dispatcher reaches them without further help
+    // from this thread — poll the counter.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while svc.stats().eager_shards.get() == 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let eager_before_seal = svc.stats().eager_shards.get();
+    assert!(
+        eager_before_seal >= 1,
+        "dispatcher must launch eager shards before seal()"
+    );
+
+    for i in 0..k {
+        session.seal_run(i).unwrap();
+    }
+    let res = session.seal().unwrap().wait().unwrap();
+    assert_eq!(res.backend, "native-kway-streamed");
+    assert_eq!(res.output, expected, "streamed output must be bit-identical");
+    let stats = svc.stats();
+    assert_eq!(stats.streamed_jobs.get(), 1);
+    assert!(stats.eager_shards.get() >= eager_before_seal);
+    assert!(
+        stats.stream_shards_completed.get() >= stats.eager_shards.get(),
+        "eager and remainder shards all complete"
+    );
+    assert_eq!(stats.streamed_chunks.get(), 16);
+    assert_eq!(stats.streamed_bytes.get(), (4 * 4096 * 4) as u64);
+    assert_eq!(stats.completed.get(), 1, "client sees one job");
+    svc.shutdown();
+}
+
+/// Sessions with no eager overlap fall back to the classic routing —
+/// same backends as a by-value submission, streaming purely additive.
+#[test]
+fn no_overlap_session_degrades_to_classic_routing() {
+    let svc = MergeService::start(base_config()).unwrap(); // eager off
+    let runs = gen_sorted_runs(WorkloadKind::Uniform, 6, 3000, 9);
+    let expected = sorted_oracle(&runs);
+    let mut session = svc.open_compaction(6).unwrap();
+    for (i, r) in runs.iter().enumerate() {
+        session.feed(i, r.clone()).unwrap();
+        session.seal_run(i).unwrap();
+    }
+    let res = session.seal().unwrap().wait().unwrap();
+    assert_eq!(res.backend, "native-kway", "no overlap → flat engine tag");
+    assert_eq!(res.output, expected);
+    assert_eq!(svc.stats().streamed_jobs.get(), 0);
+    assert_eq!(svc.stats().kway_jobs.get(), 1);
+    svc.shutdown();
+}
+
+#[test]
+fn seal_with_zero_runs_yields_empty_output() {
+    let svc = MergeService::start(base_config()).unwrap();
+    let session = svc.open_compaction(0).unwrap();
+    let res = session.seal().unwrap().wait().unwrap();
+    assert!(res.output.is_empty());
+    svc.shutdown();
+}
+
+#[test]
+fn single_chunk_degenerate_session() {
+    let svc = MergeService::start(base_config()).unwrap();
+    let mut session = svc.open_compaction(1).unwrap();
+    session.feed(0, vec![1, 2, 2, 7]).unwrap();
+    let res = session.seal().unwrap().wait().unwrap();
+    assert_eq!(res.output, vec![1, 2, 2, 7]);
+    assert_eq!(res.backend, "native", "single run returns by move");
+    svc.shutdown();
+}
+
+/// The one-shot path *is* the session path: a chunked `compact_chunk_len`
+/// configuration must yield bit-identical output to an unchunked one,
+/// and large one-shot submissions gain eager overlap for free.
+#[test]
+fn one_shot_chunked_submission_overlaps_and_matches() {
+    let mut cfg = base_config();
+    cfg.compact_chunk_len = 512; // split one-shot runs into 8 chunks
+    cfg.compact_eager_min_len = 512;
+    let svc = MergeService::start(cfg).unwrap();
+    let run: Vec<i32> = (0..4096).collect();
+    let runs: Vec<Vec<i32>> = (0..4).map(|_| run.clone()).collect();
+    let expected = sorted_oracle(&runs);
+    let res = svc.submit_blocking(JobKind::Compact { runs }).unwrap();
+    assert_eq!(res.output, expected);
+    // Round-robin chunked feeds advance the frontier during ingest, so
+    // the dispatcher overlapped — backend tag records it.
+    assert_eq!(res.backend, "native-kway-streamed");
+    assert!(svc.stats().eager_shards.get() >= 1);
+    assert_eq!(svc.stats().streamed_chunks.get(), 32);
+    svc.shutdown();
+}
