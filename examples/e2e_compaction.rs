@@ -202,6 +202,62 @@ fn main() {
         );
     }
 
+    // Phase 5 — typed records: the same coordinator, generic over
+    // keyed records. (key, payload) pairs compact end-to-end with the
+    // guaranteed-stable tie order (equal keys keep run-then-offset
+    // order), verified against the stable sequential oracle; the
+    // non-i32 record type deterministically routes native (XLA
+    // artifacts are baked for i32 keys).
+    {
+        let typed_cfg = MergeflowConfig {
+            workers: 4,
+            threads_per_job: 2,
+            queue_capacity: 64,
+            max_batch: 16,
+            batch_timeout_us: 100,
+            backend: Backend::Native,
+            segment_len: 0,
+            kway_flat_max_k: 64,
+            compact_sharding: true,
+            compact_shard_min_len: 128 << 10,
+            compact_chunk_len: 0,
+            compact_eager_min_len: 0,
+            artifacts_dir: "artifacts".into(),
+        };
+        let typed = MergeService::<(u64, u64)>::start(typed_cfg).expect("typed service");
+        let k = 8usize;
+        let rec_len = 48 << 10;
+        let rec_runs: Vec<Vec<(u64, u64)>> = (0..k)
+            .map(|run| {
+                sorted_run(rng.next_u64(), rec_len)
+                    .into_iter()
+                    .enumerate()
+                    .map(|(off, key)| {
+                        let key = (key as i64 - i32::MIN as i64) as u64;
+                        (key, ((run as u64) << 32) | off as u64)
+                    })
+                    .collect()
+            })
+            .collect();
+        total_elems += (k * rec_len) as u64;
+        // Stable oracle: flatten in run order, stable-sort by key —
+        // ties must come out in run-index-then-offset order.
+        let mut expected: Vec<(u64, u64)> = rec_runs.iter().flatten().copied().collect();
+        expected.sort_by_key(|r| r.0);
+        let res = typed
+            .submit_blocking(JobKind::Compact { runs: rec_runs })
+            .expect("typed compact job");
+        assert_eq!(res.output, expected, "typed compaction must be stable");
+        assert_eq!(res.backend, "native-kway-sharded", "384K records → rank shards");
+        println!(
+            "typed {k}-way compaction: {} (key, payload) records in {} via {} (stable ties)",
+            k * rec_len,
+            fmt_ns(res.latency_ns),
+            res.backend
+        );
+        typed.shutdown();
+    }
+
     // Collect the artifact-sized jobs (XLA route when artifacts exist).
     for h in small_jobs {
         let r = h.wait().expect("small job");

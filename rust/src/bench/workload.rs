@@ -180,6 +180,35 @@ pub fn gen_sorted_runs(kind: WorkloadKind, k: usize, run_len: usize, seed: u64) 
     }
 }
 
+/// Generate `k` sorted runs of `(key, payload)` records — the typed
+/// (key-value / LSM) compaction shape served by
+/// `MergeService<(u64, u64)>`. Keys follow [`gen_sorted_runs`] for the
+/// same `(kind, k, run_len, seed)`, shifted order-preservingly into
+/// `u64` (so `Skewed` still produces dense duplicate keys); payloads
+/// encode provenance (`run << 32 | offset`), which makes a *stable*
+/// merge — equal keys in run-index-then-offset order — verifiable from
+/// the output alone. Deterministic in all four parameters.
+pub fn gen_record_runs(
+    kind: WorkloadKind,
+    k: usize,
+    run_len: usize,
+    seed: u64,
+) -> Vec<Vec<(u64, u64)>> {
+    gen_sorted_runs(kind, k, run_len, seed)
+        .into_iter()
+        .enumerate()
+        .map(|(run, keys)| {
+            keys.into_iter()
+                .enumerate()
+                .map(|(off, key)| {
+                    let key = (key as i64 - i32::MIN as i64) as u64;
+                    (key, ((run as u64) << 32) | off as u64)
+                })
+                .collect()
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -256,6 +285,30 @@ mod tests {
                 "run bands must be strictly increasing"
             );
         }
+    }
+
+    #[test]
+    fn record_runs_carry_keys_and_provenance() {
+        for kind in WorkloadKind::all() {
+            let recs = gen_record_runs(kind, 4, 300, 9);
+            let keys = gen_sorted_runs(kind, 4, 300, 9);
+            assert_eq!(recs.len(), 4, "{kind:?}");
+            for (run, (rr, kr)) in recs.iter().zip(&keys).enumerate() {
+                assert_eq!(rr.len(), 300, "{kind:?}");
+                for (off, (&(key, payload), &k)) in rr.iter().zip(kr).enumerate() {
+                    // Order-preserving key shift: same relative order.
+                    assert_eq!(key, (k as i64 - i32::MIN as i64) as u64, "{kind:?}");
+                    assert_eq!(payload, ((run as u64) << 32) | off as u64, "{kind:?}");
+                }
+                assert!(rr.windows(2).all(|w| w[0].0 <= w[1].0), "{kind:?}");
+            }
+            assert_eq!(recs, gen_record_runs(kind, 4, 300, 9), "{kind:?} deterministic");
+        }
+        // Skewed keeps its point: dense duplicate keys survive the shift.
+        let skewed = gen_record_runs(WorkloadKind::Skewed, 2, 50_000, 1);
+        let mut uniq: Vec<u64> = skewed[0].iter().map(|r| r.0).collect();
+        uniq.dedup();
+        assert!(uniq.len() < skewed[0].len(), "skewed records should repeat keys");
     }
 
     #[test]

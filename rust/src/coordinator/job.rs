@@ -1,23 +1,30 @@
-//! Job types flowing through the coordinator.
+//! Job types flowing through the coordinator, generic over keyed
+//! records ([`Record`]). The default record parameter is `i32` (the
+//! paper's 32-bit integer workloads), so pre-typed-API code that spells
+//! plain `JobKind` / `JobResult` keeps compiling unchanged.
 
+use crate::record::Record;
 use std::sync::mpsc::{Receiver, Sender};
 use std::time::Instant;
 
-/// What a client asks the service to do. Keys are `i32` (the paper's
-/// 32-bit integer workloads).
+/// What a client asks the service to do. Inputs are sorted-by-key
+/// record runs; all merging is stable (equal keys keep
+/// run-index-then-offset order — see [`crate::record`]).
 #[derive(Debug, Clone)]
-pub enum JobKind {
-    /// Merge two sorted arrays.
+pub enum JobKind<R: Record = i32> {
+    /// Merge two sorted arrays. Stable: on key ties all of `a`'s
+    /// records precede `b`'s.
     Merge {
         /// Sorted input A.
-        a: Vec<i32>,
+        a: Vec<R>,
         /// Sorted input B.
-        b: Vec<i32>,
+        b: Vec<R>,
     },
-    /// Sort one unsorted array.
+    /// Sort one unsorted array (stable by key: equal keys keep their
+    /// input order).
     Sort {
         /// Input data.
-        data: Vec<i32>,
+        data: Vec<R>,
     },
     /// Compact several sorted runs into one (LSM-style k-way merge).
     /// Re-expressed at submit time as a streaming session
@@ -29,7 +36,7 @@ pub enum JobKind {
     Compact {
         /// The sorted runs. Sortedness is validated chunk by chunk on
         /// the session feed path (bounded per call), not here.
-        runs: Vec<Vec<i32>>,
+        runs: Vec<Vec<R>>,
     },
     /// One rank-shard of a large compaction. Internal: produced by the
     /// dispatcher's shard expansion ([`super::shard`]); clients cannot
@@ -37,7 +44,7 @@ pub enum JobKind {
     /// this kind directly.
     CompactShard {
         /// Which segment of the group's shard plan this job executes.
-        shard: super::shard::ShardTask,
+        shard: super::shard::ShardTask<R>,
     },
     /// Streaming-session message: one validated chunk of one run
     /// (see [`super::session`]). Internal: handled on the dispatcher,
@@ -45,7 +52,7 @@ pub enum JobKind {
     /// by [`super::CompactionSession`].
     CompactChunk {
         /// Which session/run the chunk extends, plus the data.
-        msg: super::session::ChunkMsg,
+        msg: super::session::ChunkMsg<R>,
     },
     /// Streaming-session message: a run will receive no more chunks.
     CompactSealRun {
@@ -63,11 +70,11 @@ pub enum JobKind {
     /// planner ([`super::session`]).
     StreamShard {
         /// The shard's input windows and completion slot.
-        shard: super::session::StreamShard,
+        shard: super::session::StreamShard<R>,
     },
 }
 
-impl JobKind {
+impl<R: Record> JobKind<R> {
     /// Total number of input elements.
     pub fn input_len(&self) -> usize {
         match self {
@@ -82,20 +89,21 @@ impl JobKind {
     }
 
     /// Validate sortedness preconditions on the submit path; returns a
-    /// human-readable violation if any. Only `Merge` is walked here:
-    /// `Compact` runs are validated chunk by chunk on the streaming
-    /// feed path (every one-shot `Compact` is re-expressed as a
-    /// session, see [`super::session`]), which bounds admission cost
-    /// per call instead of one O(total) walk of every run.
+    /// human-readable violation if any. Sortedness is always *by key*
+    /// ([`Record::key`]) — payload order within equal keys is free.
+    /// Only `Merge` is walked here: `Compact` runs are validated chunk
+    /// by chunk on the streaming feed path (every one-shot `Compact` is
+    /// re-expressed as a session, see [`super::session`]), which bounds
+    /// admission cost per call instead of one O(total) walk of every
+    /// run.
     pub fn validate(&self) -> Result<(), String> {
-        let sorted = |v: &[i32]| v.windows(2).all(|w| w[0] <= w[1]);
         match self {
             JobKind::Merge { a, b } => {
-                if !sorted(a) {
-                    return Err("merge input A is not sorted".into());
+                if !crate::record::is_sorted_by_key(a) {
+                    return Err("merge input A is not sorted by key".into());
                 }
-                if !sorted(b) {
-                    return Err("merge input B is not sorted".into());
+                if !crate::record::is_sorted_by_key(b) {
+                    return Err("merge input B is not sorted by key".into());
                 }
             }
             JobKind::Sort { .. } => {}
@@ -115,27 +123,28 @@ impl JobKind {
 
 /// An admitted job.
 #[derive(Debug)]
-pub struct Job {
+pub struct Job<R: Record = i32> {
     /// Monotonic id.
     pub id: u64,
     /// Payload.
-    pub kind: JobKind,
+    pub kind: JobKind<R>,
     /// Admission time (for queueing-latency metrics).
     pub enqueued_at: Instant,
     /// Completion channel.
-    pub reply: Sender<JobResult>,
+    pub reply: Sender<JobResult<R>>,
 }
 
 /// Completed job.
 #[derive(Debug, Clone)]
-pub struct JobResult {
+pub struct JobResult<R: Record = i32> {
     /// Job id.
     pub id: u64,
-    /// Sorted output.
-    pub output: Vec<i32>,
+    /// Sorted output (stable: equal keys in run-then-offset order).
+    pub output: Vec<R>,
     /// Which backend executed it ("native", "native-segmented",
-    /// "native-kway", "native-kway-sharded", "native-kway-streamed",
-    /// "xla").
+    /// "native-kway", "native-kway-typed" — the flat engine on a
+    /// non-scalar record — "native-kway-sharded",
+    /// "native-kway-streamed", "xla").
     pub backend: &'static str,
     /// End-to-end latency (ns, from admission).
     pub latency_ns: u64,
@@ -143,26 +152,26 @@ pub struct JobResult {
 
 /// Client-side handle to await a result.
 #[derive(Debug)]
-pub struct JobHandle {
+pub struct JobHandle<R: Record = i32> {
     /// Job id.
     pub id: u64,
-    rx: Receiver<JobResult>,
+    rx: Receiver<JobResult<R>>,
 }
 
-impl JobHandle {
-    pub(crate) fn new(id: u64, rx: Receiver<JobResult>) -> Self {
+impl<R: Record> JobHandle<R> {
+    pub(crate) fn new(id: u64, rx: Receiver<JobResult<R>>) -> Self {
         Self { id, rx }
     }
 
     /// Block until the job completes.
-    pub fn wait(self) -> crate::Result<JobResult> {
+    pub fn wait(self) -> crate::Result<JobResult<R>> {
         self.rx
             .recv()
             .map_err(|_| crate::Error::Service(format!("job {} dropped by service", self.id)))
     }
 
     /// Non-blocking poll.
-    pub fn try_wait(&self) -> Option<JobResult> {
+    pub fn try_wait(&self) -> Option<JobResult<R>> {
         self.rx.try_recv().ok()
     }
 }
@@ -189,5 +198,18 @@ mod tests {
         // the service tests).
         assert!(JobKind::Compact { runs: vec![vec![1, 0]] }.validate().is_ok());
         assert!(JobKind::Sort { data: vec![5, 1] }.validate().is_ok());
+    }
+
+    #[test]
+    fn validation_is_key_only_for_records() {
+        // Payload disorder within equal keys is fine; key disorder is
+        // not — merging never looks at payloads.
+        let ok = JobKind::Merge {
+            a: vec![(1u64, 9u64), (1, 2), (4, 0)],
+            b: vec![],
+        };
+        assert!(ok.validate().is_ok());
+        let bad = JobKind::Merge { a: vec![(2u64, 0u64), (1, 0)], b: vec![] };
+        assert!(bad.validate().is_err());
     }
 }

@@ -3,6 +3,15 @@
 //! dynamic batcher, size-aware backend router (native Merge Path vs
 //! AOT XLA executable), persistent worker pool, and service metrics.
 //!
+//! The whole layer is **generic over keyed records**
+//! ([`crate::record::Record`]): `MergeService<R>`, `JobKind<R>`,
+//! `JobResult<R>`, sessions and shards all carry `Vec<R>` payloads and
+//! merge by key with a guaranteed-stable tie order (equal keys keep
+//! run-index-then-offset order). The default parameter `R = i32` keeps
+//! the classic scalar spelling source-compatible; key-value compaction
+//! is `MergeService<(K, V)>` — see the [`crate::record`] docs for the
+//! contract and the quickstart.
+//!
 //! The paper's contribution (Merge Path partitioning) is the *kernel*
 //! this service schedules: every merge job is executed with perfectly
 //! load-balanced segments across `threads_per_job` threads, and large
@@ -27,7 +36,9 @@ pub mod stats;
 
 pub use job::{Job, JobHandle, JobKind, JobResult};
 pub use queue::{BoundedQueue, PushError};
-pub use service::MergeService;
+pub use service::{I32MergeService, MergeService};
+#[allow(deprecated)]
+pub use service::LegacyMergeService;
 pub use session::CompactionSession;
 pub use shard::ShardTask;
 pub use stats::ServiceStats;

@@ -1,12 +1,21 @@
 //! The coordinator service: admission → dynamic batching → shard
 //! expansion → routing → execution → reply.
 //!
+//! The whole service is generic over keyed records ([`Record`]) — the
+//! default parameter `i32` keeps the classic scalar surface spelling
+//! (`MergeService`, `JobKind`, ...) source-compatible. All merging is
+//! stable: equal keys keep run-index-then-offset order (pairwise, all
+//! of A's ties precede B's; sorts are stable by key) — see
+//! [`crate::record`].
+//!
 //! One dispatcher thread assembles batches from the admission queue
 //! (dispatch on `max_batch` or `batch_timeout_us`, whichever first),
 //! expands oversized compactions into rank shards ([`super::shard`]),
 //! and hands jobs to the worker pool. The router sends a merge job to
 //! the XLA backend when an AOT artifact with the exact baked shape
-//! exists (`Backend::Xla`/`Auto`), to the segmented native path when
+//! exists (`Backend::Xla`/`Auto`) **and** the record type is the baked
+//! `i32` (see [`crate::record::KeyedI32`] — any other instantiation
+//! deterministically routes native), to the segmented native path when
 //! `segment_len` is configured and the job is large, and to the plain
 //! native Merge Path otherwise. Compactions route by shape — see
 //! `run_compaction` below — and always execute on the coordinator's
@@ -25,6 +34,7 @@ use crate::mergepath::{
     parallel_kway_merge, parallel_merge, parallel_merge_sort_with_pool,
     segmented_parallel_merge, SegmentedConfig,
 };
+use crate::record::{self, ByKey, Record};
 use crate::runtime::XlaExecutor;
 use crate::{Error, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -92,18 +102,32 @@ impl Drop for SlotGuard {
     }
 }
 
-/// A running merge/sort service.
-pub struct MergeService {
+/// A running merge/sort service over records of type `R` (default:
+/// the classic `i32` scalar workload). See [`crate::record`] for the
+/// typed API and its stability contract.
+pub struct MergeService<R: Record = i32> {
     cfg: MergeflowConfig,
-    queue: Arc<BoundedQueue<Job>>,
-    table: Arc<SessionTable>,
+    queue: Arc<BoundedQueue<Job<R>>>,
+    table: Arc<SessionTable<R>>,
     stats: Arc<ServiceStats>,
     runtime: Option<Arc<XlaExecutor>>,
     next_id: AtomicU64,
     dispatcher: Option<std::thread::JoinHandle<()>>,
 }
 
-impl std::fmt::Debug for MergeService {
+/// The classic `i32`-keyed service, spelled explicitly.
+/// `MergeService`'s default record parameter means the bare name still
+/// denotes this same type in type positions.
+pub type I32MergeService = MergeService<i32>;
+
+/// Pre-typed-API spelling, kept as a migration shim.
+#[deprecated(
+    note = "the coordinator is generic over keyed records; use `MergeService<R>` \
+            (or the `I32MergeService` alias for the classic scalar service)"
+)]
+pub type LegacyMergeService = MergeService<i32>;
+
+impl<R: Record> std::fmt::Debug for MergeService<R> {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("MergeService")
             .field("workers", &self.cfg.workers)
@@ -112,10 +136,13 @@ impl std::fmt::Debug for MergeService {
     }
 }
 
-impl MergeService {
+impl<R: Record> MergeService<R> {
     /// Start the service. If the configured backend wants XLA, the
     /// artifact directory is opened now (fail fast); `Auto` degrades to
-    /// native silently when artifacts are missing.
+    /// native silently when artifacts are missing. (Whether merge jobs
+    /// can actually offload additionally depends on `R` — only
+    /// [`KeyedI32`](crate::record::KeyedI32) records fit the baked
+    /// artifacts; everything else routes native deterministically.)
     pub fn start(cfg: MergeflowConfig) -> Result<Self> {
         cfg.validate()?;
         let runtime = match cfg.backend {
@@ -127,8 +154,8 @@ impl MergeService {
                 XlaExecutor::start(std::path::Path::new(&cfg.artifacts_dir)).ok()
             }
         };
-        let queue = Arc::new(BoundedQueue::<Job>::new(cfg.queue_capacity));
-        let table = Arc::new(SessionTable::default());
+        let queue = Arc::new(BoundedQueue::<Job<R>>::new(cfg.queue_capacity));
+        let table = Arc::new(SessionTable::<R>::default());
         let stats = Arc::new(ServiceStats::new());
         let pool = Arc::new(WorkerPool::new(cfg.workers));
 
@@ -193,7 +220,7 @@ impl MergeService {
     /// `merge.compact_chunk_len` are fed round-robin so the dispatcher
     /// can start merging settled low ranks while later chunks are
     /// still being admitted.
-    pub fn submit(&self, kind: JobKind) -> Result<JobHandle> {
+    pub fn submit(&self, kind: JobKind<R>) -> Result<JobHandle<R>> {
         let kind = match kind {
             JobKind::Compact { runs } => return self.submit_compact(runs),
             other => other,
@@ -222,7 +249,7 @@ impl MergeService {
     }
 
     /// Submit and wait.
-    pub fn submit_blocking(&self, kind: JobKind) -> Result<JobResult> {
+    pub fn submit_blocking(&self, kind: JobKind<R>) -> Result<JobResult<R>> {
         self.submit(kind)?.wait()
     }
 
@@ -234,7 +261,7 @@ impl MergeService {
     /// *while later chunks are still arriving* (see
     /// [`super::session`]); the run count is fixed up front because a
     /// surprise run could insert keys below already-merged ranks.
-    pub fn open_compaction(&self, runs: usize) -> Result<CompactionSession> {
+    pub fn open_compaction(&self, runs: usize) -> Result<CompactionSession<R>> {
         // Streaming clients get blocking (flow-control) feeds and
         // eager pre-seal planning.
         self.open_session(runs, true, true)
@@ -245,7 +272,7 @@ impl MergeService {
         runs: usize,
         blocking: bool,
         eager: bool,
-    ) -> Result<CompactionSession> {
+    ) -> Result<CompactionSession<R>> {
         if self.queue.is_closed() {
             return Err(Error::Service("service shut down".into()));
         }
@@ -270,7 +297,7 @@ impl MergeService {
     /// session runs in reject mode, so `submit`'s fail-fast contract is
     /// preserved: a full queue surfaces as an immediate back-pressure
     /// error (at whichever feed hits it) instead of blocking the caller.
-    fn submit_compact(&self, runs: Vec<Vec<i32>>) -> Result<JobHandle> {
+    fn submit_compact(&self, runs: Vec<Vec<R>>) -> Result<JobHandle<R>> {
         // Cheap early-out before opening a session the queue clearly
         // has no room to carry (racy snapshot; the session's
         // reject-mode first push is the authoritative check).
@@ -315,7 +342,7 @@ impl MergeService {
     }
 }
 
-impl Drop for MergeService {
+impl<R: Record> Drop for MergeService<R> {
     fn drop(&mut self) {
         self.queue.close();
         if let Some(h) = self.dispatcher.take() {
@@ -331,9 +358,9 @@ impl Drop for MergeService {
 /// the sealed-rank frontier advances during ingest and the dispatcher
 /// can overlap merging with the remaining feeds. `chunk_len == 0`
 /// means never split.
-fn feed_round_robin(
-    session: &mut CompactionSession,
-    mut runs: Vec<Vec<i32>>,
+fn feed_round_robin<R: Record>(
+    session: &mut CompactionSession<R>,
+    mut runs: Vec<Vec<R>>,
     chunk_len: usize,
 ) -> Result<()> {
     let chunk_len = if chunk_len == 0 { usize::MAX } else { chunk_len };
@@ -365,10 +392,10 @@ fn feed_round_robin(
     Ok(())
 }
 
-fn dispatcher_loop(
+fn dispatcher_loop<R: Record>(
     cfg: MergeflowConfig,
-    queue: Arc<BoundedQueue<Job>>,
-    table: Arc<SessionTable>,
+    queue: Arc<BoundedQueue<Job<R>>>,
+    table: Arc<SessionTable<R>>,
     pool: Arc<WorkerPool>,
     runtime: Option<Arc<XlaExecutor>>,
     stats: Arc<ServiceStats>,
@@ -431,7 +458,7 @@ fn dispatcher_loop(
         // parking one worker on a monolithic job (and back-pressure
         // sees its true width).
         let mut touched = Vec::new();
-        let dispatch = |job: Job| {
+        let dispatch = |job: Job<R>| {
             for sub in shard::maybe_expand(&cfg, &stats, job) {
                 in_flight.acquire();
                 let cfg = cfg.clone();
@@ -468,12 +495,12 @@ fn dispatcher_loop(
 /// Run one job to completion and reply. Runs on a pool worker; `pool`
 /// is the same pool, handed to the merge engines so per-job parallelism
 /// reuses the persistent workers instead of spawning scoped threads.
-fn execute_job(
+fn execute_job<R: Record>(
     cfg: &MergeflowConfig,
     runtime: Option<&XlaExecutor>,
     stats: &ServiceStats,
     pool: &WorkerPool,
-    job: Job,
+    job: Job<R>,
 ) {
     let wait_ns =
         u64::try_from(job.enqueued_at.elapsed().as_nanos()).unwrap_or(u64::MAX);
@@ -485,8 +512,13 @@ fn execute_job(
             // Sorts run on the persistent pool like the compaction
             // engines (we are already on one of its workers; the
             // helping scoped wait makes the nested fork-join sound) —
-            // no scoped-thread spawning anywhere in execute_job.
-            parallel_merge_sort_with_pool(pool, &mut data, cfg.threads_per_job);
+            // no scoped-thread spawning anywhere in execute_job. The
+            // key-only ordering keeps the sort stable for records.
+            parallel_merge_sort_with_pool(
+                pool,
+                record::as_keyed_mut(&mut data),
+                cfg.threads_per_job,
+            );
             (data, "native")
         }
         JobKind::Compact { runs } => run_compaction(cfg, runs, pool),
@@ -519,13 +551,15 @@ fn execute_job(
 /// Route and run a merge. The inputs stay owned here so the native
 /// paths merge straight out of them — no clones on the hot path; the
 /// XLA route copies once, inside [`XlaExecutor::merge`], and only when
-/// it is actually taken.
-fn run_merge(
+/// it is actually taken. Non-`i32` record types can never take the XLA
+/// route ([`XlaExecutor::merge_records`] returns `None` for them), so
+/// typed traffic routes native deterministically.
+fn run_merge<R: Record>(
     cfg: &MergeflowConfig,
     runtime: Option<&XlaExecutor>,
-    a: Vec<i32>,
-    b: Vec<i32>,
-) -> (Vec<i32>, &'static str) {
+    a: Vec<R>,
+    b: Vec<R>,
+) -> (Vec<R>, &'static str) {
     // XLA route: exact-shape artifact required (XLA shapes are static).
     if matches!(cfg.backend, Backend::Xla | Backend::Auto) {
         if let Some(rt) = runtime {
@@ -534,38 +568,45 @@ fn run_merge(
             if let Some(meta) = rt.find_for_sizes(a.len(), b.len()) {
                 if rt.is_compiled(&meta.name) {
                     let name = meta.name.clone();
-                    match rt.merge(&name, &a, &b) {
-                        Ok(out) => return (out, "xla"),
-                        Err(e) => {
+                    match rt.merge_records(&name, &a, &b) {
+                        Some(Ok(out)) => return (out, "xla"),
+                        Some(Err(e)) => {
                             eprintln!("mergeflow: xla merge failed, falling back: {e}")
                         }
+                        // Record type is not i32-keyed: the baked
+                        // artifact cannot serve it — native by design.
+                        None => {}
                     }
                 }
             }
             if cfg.backend == Backend::Xla {
-                // Explicit XLA mode with no fitting artifact: still
-                // serve (degrade to native) but tag it, so operators
-                // can see the misconfiguration in stats.
+                // Explicit XLA mode with no fitting warm artifact (or a
+                // non-i32 record type): still serve (degrade to native)
+                // but tag it, so operators can see the misconfiguration
+                // in stats.
                 eprintln!(
-                    "mergeflow: no XLA artifact for sizes ({}, {}); falling back to native",
+                    "mergeflow: no XLA artifact serves sizes ({}, {}) for this record type; \
+                     falling back to native",
                     a.len(),
                     b.len()
                 );
             }
         }
     }
-    let mut out = vec![0i32; a.len() + b.len()];
+    // Fully tiled by the merge below (see crate::uninit_vec).
+    let mut out: Vec<ByKey<R>> = crate::uninit_vec(a.len() + b.len());
+    let (ka, kb) = (record::as_keyed(&a), record::as_keyed(&b));
     if cfg.segment_len > 0 && out.len() >= 2 * cfg.segment_len {
         segmented_parallel_merge(
-            &a,
-            &b,
+            ka,
+            kb,
             &mut out,
             SegmentedConfig { segment_len: cfg.segment_len, threads: cfg.threads_per_job },
         );
-        (out, "native-segmented")
+        (record::into_records(out), "native-segmented")
     } else {
-        parallel_merge(&a, &b, &mut out, cfg.threads_per_job);
-        (out, "native")
+        parallel_merge(ka, kb, &mut out, cfg.threads_per_job);
+        (record::into_records(out), "native")
     }
 }
 
@@ -578,18 +619,22 @@ fn run_merge(
 /// 2. the flat single-pass k-way engine
 ///    ([`mergepath::kway_path`](crate::mergepath::kway_path)) for
 ///    `2 ≤ k ≤ kway_flat_max_k` — one pass over memory instead of the
-///    tree's `⌈log₂ k⌉`, backend `"native-kway"`;
+///    tree's `⌈log₂ k⌉`, backend `"native-kway"` (scalar records) or
+///    `"native-kway-typed"` (payload-carrying records, so typed
+///    traffic is visible in the stats);
 /// 3. the pairwise Merge-Path tree beyond the flat engine's configured
 ///    range — backend `"native"`.
 ///
 /// Both parallel engines run on the coordinator's persistent `pool`
 /// (we are already on one of its workers; the pool's helping scoped
-/// wait makes that sound) — no scoped-thread spawning per job.
-fn run_compaction(
+/// wait makes that sound) — no scoped-thread spawning per job. Every
+/// route merges through the key-only [`ByKey`] order, so the output is
+/// stable for records exactly as for scalars.
+fn run_compaction<R: Record>(
     cfg: &MergeflowConfig,
-    mut runs: Vec<Vec<i32>>,
+    mut runs: Vec<Vec<R>>,
     pool: &WorkerPool,
-) -> (Vec<i32>, &'static str) {
+) -> (Vec<R>, &'static str) {
     runs.retain(|r| !r.is_empty());
     if runs.is_empty() {
         return (vec![], "native");
@@ -599,29 +644,29 @@ fn run_compaction(
         return (runs.pop().unwrap(), "native");
     }
     let total: usize = runs.iter().map(|r| r.len()).sum();
-    let refs: Vec<&[i32]> = runs.iter().map(|r| r.as_slice()).collect();
+    let refs: Vec<&[ByKey<R>]> = runs.iter().map(|r| record::as_keyed(r)).collect();
     if total < 4096 || cfg.threads_per_job == 1 {
         // Small compactions: one sequential k-way pass beats any
-        // parallel setup cost. Not hot enough to warrant the uninit
-        // buffer idiom — a plain zeroed Vec keeps this path boring.
-        let mut out = vec![0i32; total];
+        // parallel setup cost.
+        let mut out: Vec<ByKey<R>> = crate::uninit_vec(total);
         crate::mergepath::kway::loser_tree_merge(&refs, &mut out);
-        return (out, "native");
+        return (record::into_records(out), "native");
     }
     if cfg.kway_flat_max_k > 0 && refs.len() <= cfg.kway_flat_max_k {
         // Flat engine's segments tile [0, total): every slot written.
-        let mut out = crate::uninit_vec(total);
+        let mut out: Vec<ByKey<R>> = crate::uninit_vec(total);
         parallel_kway_merge(&refs, &mut out, cfg.threads_per_job, Some(pool));
-        return (out, "native-kway");
+        let tag = if R::IS_SCALAR { "native-kway" } else { "native-kway-typed" };
+        return (record::into_records(out), tag);
     }
     // The job owns `runs`, so hand them to the consuming tree variant:
     // it frees each run buffer as its first-round merge completes,
     // keeping peak memory lower than merging out of borrows.
     drop(refs);
-    (
-        crate::mergepath::kway::parallel_tree_merge(runs, cfg.threads_per_job, Some(pool)),
-        "native",
-    )
+    let keyed: Vec<Vec<ByKey<R>>> = runs.into_iter().map(record::into_keyed).collect();
+    let merged =
+        crate::mergepath::kway::parallel_tree_merge(keyed, cfg.threads_per_job, Some(pool));
+    (record::into_records(merged), "native")
 }
 
 #[cfg(test)]
@@ -703,6 +748,25 @@ mod tests {
         let res = svc.submit_blocking(JobKind::Compact { runs }).unwrap();
         assert_eq!(res.backend, "native-kway");
         assert_eq!(res.output, expected);
+        assert_eq!(svc.stats().kway_jobs.get(), 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn typed_record_compaction_is_stable_and_tagged() {
+        // (key, payload) records through the flat engine: the backend
+        // tag flips to "native-kway-typed" and equal keys keep
+        // run-index-then-offset order — checked against the stable
+        // oracle (flatten in run order, stable-sort by key).
+        let svc = MergeService::<(u32, u32)>::start(test_config()).unwrap();
+        let runs: Vec<Vec<(u32, u32)>> = (0..6u32)
+            .map(|run| (0..2000u32).map(|off| (off / 50, run * 10_000 + off)).collect())
+            .collect();
+        let mut expected: Vec<(u32, u32)> = runs.iter().flatten().copied().collect();
+        expected.sort_by_key(|r| r.0);
+        let res = svc.submit_blocking(JobKind::Compact { runs }).unwrap();
+        assert_eq!(res.backend, "native-kway-typed");
+        assert_eq!(res.output, expected, "ties must keep run-then-offset order");
         assert_eq!(svc.stats().kway_jobs.get(), 1);
         svc.shutdown();
     }
@@ -841,11 +905,29 @@ mod tests {
 
     #[test]
     fn empty_compaction() {
-        let svc = MergeService::start(test_config()).unwrap();
+        // No data anywhere pins nothing for inference — spell the
+        // record type (the only call site that ever needs to).
+        let svc = MergeService::<i32>::start(test_config()).unwrap();
         let res = svc
             .submit_blocking(JobKind::Compact { runs: vec![vec![], vec![]] })
             .unwrap();
         assert!(res.output.is_empty());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn legacy_alias_still_names_the_service() {
+        // The deprecated pre-typed-API alias must keep compiling for
+        // downstream migrations.
+        #[allow(deprecated)]
+        fn start_legacy(cfg: MergeflowConfig) -> Result<LegacyMergeService> {
+            MergeService::start(cfg)
+        }
+        let svc: I32MergeService = start_legacy(test_config()).unwrap();
+        let res = svc
+            .submit_blocking(JobKind::Compact { runs: vec![vec![1, 3], vec![2]] })
+            .unwrap();
+        assert_eq!(res.output, vec![1, 2, 3]);
         svc.shutdown();
     }
 

@@ -10,6 +10,10 @@
 //! `r` outputs. So a compaction whose low ranks are already *settled*
 //! can start merging them while high-rank data is still arriving.
 //!
+//! The protocol is generic over keyed records ([`Record`]): chunks are
+//! `Vec<R>`, validation and the frontier compare keys only, and every
+//! merge is stable (equal keys keep run-index-then-offset order).
+//!
 //! ## Protocol
 //!
 //! ```text
@@ -23,61 +27,75 @@
 //!    the caller)         │             planned rank: cut + dispatch
 //!                        │             eager StreamShard(s) ─────▶ merge
 //! seal_run(run) ───▶ CompactSealRun ─▶ run leaves the frontier min
-//! seal() ──────────▶ CompactSeal ───▶ plan the remaining rank range
-//!                                     as zero-copy StreamShards ─▶ merge
+//! seal() ──────────▶ CompactSeal ───▶ allocate the final buffer; plan
+//!                                     the remaining rank range as
+//!                                     zero-copy StreamShards that merge
+//!                                     straight into their disjoint
+//!                                     windows of it ──────────────▶ merge
 //!                                     (or, if nothing was dispatched
 //!                                     eagerly, fall back to the classic
 //!                                     Compact routing — one code path,
 //!                                     same backends as before)
-//! last StreamShard to finish concatenates the per-shard outputs in
-//! rank order and replies on the session's handle
-//! ("native-kway-streamed")
+//! eager outputs are memcpy'd into their windows by a pool-worker
+//! install task at seal (or by the shard's own completion after seal);
+//! the completion that brings the sealed group to full strength takes
+//! the fully-tiled buffer and replies ("native-kway-streamed") — there
+//! is no concatenation pass.
 //! ```
 //!
-//! ## The sealed-rank frontier
+//! ## The sealed-rank frontier (tie-aware)
 //!
 //! Let `F` be the minimum, over all *open* (unsealed) runs, of the last
 //! key fed to that run — undefined (no rank is safe) while any open run
 //! is still empty, and `+∞` once every run is sealed. Per-chunk
-//! admission validation guarantees each run's future elements are `≥`
-//! its current last key, hence `≥ F`. Every already-fed element with
-//! key `< F` therefore precedes all future elements in the stable merge
-//! (strict inequality: a tie at `F` from a lower-indexed run would
-//! still sort *before* an existing element — only strictly smaller keys
-//! are settled). The frontier rank
+//! admission validation guarantees each run's future elements have keys
+//! `≥` the run's current last key, hence `≥ F`. A fed element
+//! `(key, run j, offset)` is **settled** — no future element can
+//! precede it in the stable `(key, run, offset)` order — iff
 //!
-//! ```text
-//! safe = Σ_j |{ x ∈ fed(run j) : x < F }|
-//! ```
+//! - `key < F` (every future key is `≥ F`), or
+//! - `key == F` and `j ≤ m`, where `m` is the lowest-indexed *open* run
+//!   whose last key equals `F`: open runs below `m` have last key
+//!   `> F` (their ties at `F` are complete), run `m`'s own future ties
+//!   land at later offsets (which never precede its fed ones), and
+//!   every other open run that can still produce a tie at `F` has index
+//!   `> m ≥ j`. Runs above `m` must wait — run `m` may yet feed a tie
+//!   that sorts before theirs.
 //!
-//! is exactly the length of the settled output prefix, and for any rank
-//! `r ≤ safe` the stable cut computed over the *fed prefixes*
-//! ([`kway_rank_split`]) equals the cut over the final, complete runs:
-//! the first `safe` outputs of both merges are the same elements in the
-//! same `(key, run, index)` order. Eager shards cut on live data are
-//! therefore bit-identical to shards cut after seal.
+//! The settled elements are a prefix of the stable merge of the *fed
+//! prefixes* and of the *final runs* alike, so for any rank `r ≤ safe`
+//! (`safe` = settled count, computed with one `partition_point` pair
+//! per run) the cut over the fed prefixes ([`kway_rank_split`]) equals
+//! the cut over the complete runs: eager shards cut on live data are
+//! bit-identical to shards cut after seal. Tracking the `(key, run)`
+//! tie owner — not just bare keys — is what keeps heavy-duplicate
+//! sessions streaming: with `k` identical runs the bare-key frontier
+//! settles nothing (no key is strictly below `F`), while the tie-aware
+//! frontier settles all of run 0's duplicates.
 //!
 //! ## Memory & cost model
 //!
 //! Eager shards copy their per-run windows out of the live ingest
 //! buffers (the buffers keep growing and may reallocate, so running
-//! workers must not borrow them); the remainder planned at `seal()`
-//! borrows the by-then frozen buffers through an `Arc` with no copy.
-//! Each shard merges into its own output vector and the last one
-//! concatenates — one extra `memcpy` pass over the output versus the
-//! in-place sharded path, bought back (and then some, on ingest-bound
-//! workloads) by overlapping merge work with ingest end to end. The
-//! per-chunk admission checks replace `JobKind::validate`'s former
-//! O(total) walk of every compaction on the submit path: validation
-//! cost is now amortized and bounded by the chunk size per call.
+//! workers must not borrow them) and merge into owned vectors — the
+//! final buffer does not exist yet. At `seal()` the final buffer is
+//! allocated once and the remainder is planned zero-copy (Arc'd frozen
+//! run buffers): remainder shards merge **in place** through disjoint
+//! windows of the shared buffer (the `SharedOut` pattern from
+//! [`super::shard`]), and only the eager outputs are memcpy'd in —
+//! removing the former whole-output concatenation pass. The per-chunk
+//! admission checks replace `JobKind::validate`'s former O(total) walk
+//! of every compaction on the submit path: validation cost is now
+//! amortized and bounded by the chunk size per call.
 
 use super::job::{Job, JobHandle, JobKind, JobResult};
 use super::queue::{BoundedQueue, PushError};
-use super::shard;
+use super::shard::{self, SharedOut};
 use super::stats::ServiceStats;
 use crate::config::MergeflowConfig;
 use crate::mergepath::kway::loser_tree_merge;
 use crate::mergepath::kway_path::kway_rank_split;
+use crate::record::{self, ByKey, Record};
 use crate::{Error, Result};
 use std::collections::HashMap;
 use std::ops::Range;
@@ -103,13 +121,13 @@ const MAX_EAGER_SHARDS: usize = shard::MAX_SHARDS;
 
 /// Payload of [`JobKind::CompactChunk`]: one validated chunk of one run.
 #[derive(Debug, Clone)]
-pub struct ChunkMsg {
+pub struct ChunkMsg<R: Record = i32> {
     session: u64,
     run: usize,
-    data: Vec<i32>,
+    data: Vec<R>,
 }
 
-impl ChunkMsg {
+impl<R: Record> ChunkMsg<R> {
     /// Elements in this chunk (for job accounting).
     pub(super) fn len(&self) -> usize {
         self.data.len()
@@ -135,37 +153,52 @@ pub struct SealMsg {
 // Shared execution state (session ↔ stream-shard jobs on the pool).
 // ---------------------------------------------------------------------
 
-/// One shard of a streamed compaction: merge `k` per-run windows into
-/// an owned output vector, then hand it to the session's shared
-/// execution state. Carried by [`JobKind::StreamShard`]; constructed
-/// only by the dispatcher's session planner.
+/// One shard of a streamed compaction. Eager (pre-seal) shards carry
+/// owned window copies and merge into an owned vector (the final
+/// buffer does not exist yet); remainder shards planned at `seal()`
+/// borrow the frozen run buffers and merge **in place** into their
+/// disjoint window of the final output buffer. Carried by
+/// [`JobKind::StreamShard`]; constructed only by the dispatcher's
+/// session planner.
 #[derive(Debug, Clone)]
-pub struct StreamShard {
-    exec: Arc<StreamExec>,
-    input: ShardInput,
-    /// Slot in the session's output list; slots are allocated in rank
-    /// order, so concatenating by slot index reassembles the output.
+pub struct StreamShard<R: Record = i32> {
+    exec: Arc<StreamExec<R>>,
+    /// Slot in the session's rank-ordered window list.
     idx: usize,
+    input: ShardInput<R>,
 }
 
 #[derive(Debug, Clone)]
-enum ShardInput {
+enum ShardInput<R: Record> {
     /// Eager (pre-seal) shard: windows copied out of the live ingest
     /// buffers, which keep growing (and may reallocate) underneath.
-    Owned(Vec<Vec<i32>>),
-    /// Remainder shard planned at seal: borrows the frozen run buffers.
-    Shared {
-        runs: Arc<Vec<Vec<i32>>>,
+    Owned(Vec<Vec<R>>),
+    /// Remainder shard planned at seal: borrows the frozen run buffers
+    /// and writes its `window` of the shared output buffer directly.
+    Windowed {
+        runs: Arc<Vec<Vec<R>>>,
         ranges: Vec<Range<usize>>,
+        out: Arc<SharedOut<R>>,
+        window: Range<usize>,
+    },
+    /// Post-seal install task: memcpy the outputs of eager shards that
+    /// completed *before* the seal into their (disjoint) windows of
+    /// the final buffer — on a pool worker, so the dispatcher's seal
+    /// handling stays at planning cost. Counted via `ExecState::extra`
+    /// (it is not a shard).
+    Install {
+        items: Vec<(Range<usize>, Vec<R>)>,
+        out: Arc<SharedOut<R>>,
     },
 }
 
-impl StreamShard {
+impl<R: Record> StreamShard<R> {
     /// Output elements this shard produces.
     pub fn len(&self) -> usize {
         match &self.input {
             ShardInput::Owned(windows) => windows.iter().map(|w| w.len()).sum(),
-            ShardInput::Shared { ranges, .. } => ranges.iter().map(|r| r.len()).sum(),
+            ShardInput::Windowed { window, .. } => window.len(),
+            ShardInput::Install { items, .. } => items.iter().map(|(w, _)| w.len()).sum(),
         }
     }
 
@@ -176,29 +209,58 @@ impl StreamShard {
 }
 
 /// Completion state shared by all stream shards of one session.
-#[derive(Debug, Default)]
-struct StreamExec {
-    state: Mutex<ExecState>,
+#[derive(Debug)]
+struct StreamExec<R: Record> {
+    state: Mutex<ExecState<R>>,
 }
 
-#[derive(Debug, Default)]
-struct ExecState {
-    /// Per-shard outputs, indexed by rank-ordered slot.
-    outputs: Vec<Option<Vec<i32>>>,
-    /// Shards completed so far.
-    done: usize,
-    /// Set when the session seals: from then on the shard count is
-    /// final and the last completion assembles + replies.
-    sealed: Option<SealInfo>,
+impl<R: Record> Default for StreamExec<R> {
+    fn default() -> Self {
+        Self { state: Mutex::new(ExecState::default()) }
+    }
 }
 
 #[derive(Debug)]
-struct SealInfo {
-    /// Total shard count (eager + remainder).
-    expected: usize,
+struct ExecState<R: Record> {
+    /// Disjoint output windows, one per shard, in rank order (slot `i`
+    /// covers output ranks `slots[i]`). Eager slots tile
+    /// `[0, planned_rank)`; remainder slots tile the rest at seal.
+    slots: Vec<Range<usize>>,
+    /// Eager outputs completed *before* the seal allocated the final
+    /// buffer, parked here and memcpy'd into their windows at seal.
+    parked: Vec<Option<Vec<R>>>,
+    /// The final output buffer, allocated at seal. Remainder shards
+    /// write their windows directly; eager completions after seal copy
+    /// themselves in.
+    out: Option<Arc<SharedOut<R>>>,
+    /// Shards completed so far.
+    done: usize,
+    /// Pending auxiliary work that must also finish before the reply —
+    /// the install task carrying pre-seal eager outputs (0 or 1).
+    extra: usize,
+    /// Set when the session seals: from then on the shard count is
+    /// final and the completion that reaches full strength replies.
+    sealed: Option<SealInfo<R>>,
+}
+
+impl<R: Record> Default for ExecState<R> {
+    fn default() -> Self {
+        Self {
+            slots: Vec::new(),
+            parked: Vec::new(),
+            out: None,
+            done: 0,
+            extra: 0,
+            sealed: None,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct SealInfo<R: Record> {
     /// Total output elements.
     total: usize,
-    reply: Sender<JobResult>,
+    reply: Sender<JobResult<R>>,
     parent_id: u64,
     /// Session open time — end-to-end latency covers the whole ingest.
     enqueued_at: Instant,
@@ -206,37 +268,100 @@ struct SealInfo {
     queue_wait_ns: u64,
 }
 
-impl StreamExec {
-    /// Allocate the next rank-ordered output slot.
-    fn push_slot(&self) -> usize {
+impl<R: Record> StreamExec<R> {
+    /// Allocate the next rank-ordered shard slot covering `window`.
+    fn push_slot(&self, window: Range<usize>) -> usize {
         let mut st = self.state.lock().unwrap();
-        st.outputs.push(None);
-        st.outputs.len() - 1
+        st.slots.push(window);
+        st.parked.push(None);
+        st.slots.len() - 1
     }
 }
 
-/// Record one shard's output; the completion that brings the sealed
-/// group to full strength assembles the final buffer and replies.
-fn complete_shard(exec: &StreamExec, idx: usize, out: Vec<i32>, stats: &ServiceStats) {
-    let mut st = exec.state.lock().unwrap();
-    debug_assert!(st.outputs[idx].is_none(), "shard slot filled twice");
-    st.outputs[idx] = Some(out);
+/// Record one *eager* shard's owned output: parked until the seal
+/// allocates the final buffer, copied straight into the shard's window
+/// once it exists. The completion that brings the sealed group to full
+/// strength replies.
+fn complete_eager<R: Record>(
+    exec: &StreamExec<R>,
+    idx: usize,
+    out: Vec<R>,
+    stats: &ServiceStats,
+) {
+    let mut guard = exec.state.lock().unwrap();
+    let st = &mut *guard;
+    debug_assert!(st.parked[idx].is_none(), "shard slot filled twice");
+    match &st.out {
+        Some(buf) => {
+            let w = st.slots[idx].clone();
+            debug_assert_eq!(w.len(), out.len(), "shard output must fill its window");
+            // SAFETY: slot windows are disjoint and this completion is
+            // its window's only writer; concurrent remainder shards
+            // write other windows of the same buffer.
+            unsafe { std::slice::from_raw_parts_mut(buf.base().add(w.start), w.len()) }
+                .copy_from_slice(&out);
+        }
+        None => st.parked[idx] = Some(out),
+    }
     st.done += 1;
     stats.stream_shards_completed.inc();
-    maybe_finish(&mut st, stats);
+    maybe_finish(st, stats);
 }
 
-/// If the session is sealed and every shard has reported, concatenate
-/// the rank-ordered outputs and reply on the session handle.
-fn maybe_finish(st: &mut ExecState, stats: &ServiceStats) {
+/// Record a windowed (remainder) shard completion — its output is
+/// already in place in the final buffer.
+fn complete_windowed<R: Record>(exec: &StreamExec<R>, stats: &ServiceStats) {
+    let mut guard = exec.state.lock().unwrap();
+    let st = &mut *guard;
+    st.done += 1;
+    stats.stream_shards_completed.inc();
+    maybe_finish(st, stats);
+}
+
+/// Arm a sealed session's exec state: install the final output buffer
+/// and the seal info, and *steal* any parked eager outputs — they are
+/// returned for installation by a pool-worker task (counted in
+/// `extra`), so the dispatcher's seal handling stays at planning cost
+/// instead of memcpying the whole eager prefix under the exec lock.
+/// Fires the reply immediately when nothing is parked and every shard
+/// already completed.
+fn arm_sealed<R: Record>(
+    exec: &StreamExec<R>,
+    out: &Arc<SharedOut<R>>,
+    info: SealInfo<R>,
+    stats: &ServiceStats,
+) -> Vec<(Range<usize>, Vec<R>)> {
+    let mut guard = exec.state.lock().unwrap();
+    let st = &mut *guard;
+    let mut items = Vec::new();
+    for (idx, slot) in st.parked.iter_mut().enumerate() {
+        if let Some(v) = slot.take() {
+            let w = st.slots[idx].clone();
+            debug_assert_eq!(w.len(), v.len(), "shard output must fill its window");
+            items.push((w, v));
+        }
+    }
+    st.extra = usize::from(!items.is_empty());
+    st.out = Some(Arc::clone(out));
+    st.sealed = Some(info);
+    maybe_finish(st, stats);
+    items
+}
+
+/// If the session is sealed and every shard (plus the install task, if
+/// any) has reported, take the fully-tiled output buffer and reply on
+/// the session handle.
+fn maybe_finish<R: Record>(st: &mut ExecState<R>, stats: &ServiceStats) {
     let Some(info) = &st.sealed else { return };
-    if st.done < info.expected {
+    if st.done < st.slots.len() || st.extra > 0 {
         return;
     }
-    let mut output = Vec::with_capacity(info.total);
-    for slot in st.outputs.iter_mut() {
-        output.append(&mut slot.take().expect("sealed group complete but a slot is empty"));
-    }
+    let buf = st.out.take().expect("sealed group has an output buffer");
+    // SAFETY: the slot windows tile the buffer and every shard has
+    // completed (done == slots, observed under the state mutex, which
+    // every completion passed through — happens-before established),
+    // so the buffer is fully written and no writer can touch it again.
+    let output = unsafe { buf.take() };
     let latency_ns =
         u64::try_from(info.enqueued_at.elapsed().as_nanos()).unwrap_or(u64::MAX);
     stats.record_completion(
@@ -257,32 +382,53 @@ fn maybe_finish(st: &mut ExecState, stats: &ServiceStats) {
 }
 
 /// Execute one stream shard on a pool worker: stable loser-tree merge
-/// of its per-run windows into an owned buffer, then report completion
-/// (the last shard of a sealed session assembles and replies).
-pub(crate) fn execute_stream_shard(shard: StreamShard, stats: &ServiceStats) {
-    let out = match &shard.input {
+/// of its per-run windows (key-only order via [`ByKey`]), then report
+/// completion. Eager shards merge into an owned buffer; remainder
+/// shards merge straight into their window of the final buffer; the
+/// install task memcpys pre-seal eager outputs into theirs.
+pub(crate) fn execute_stream_shard<R: Record>(shard: StreamShard<R>, stats: &ServiceStats) {
+    match &shard.input {
         ShardInput::Owned(windows) => {
-            let parts: Vec<&[i32]> = windows.iter().map(|w| w.as_slice()).collect();
-            merge_parts(&parts)
+            let parts: Vec<&[ByKey<R>]> =
+                windows.iter().map(|w| record::as_keyed(w)).collect();
+            let total: usize = parts.iter().map(|p| p.len()).sum();
+            // Fully tiled by the loser-tree merge (see crate::uninit_vec).
+            let mut out: Vec<ByKey<R>> = crate::uninit_vec(total);
+            loser_tree_merge(&parts, &mut out);
+            complete_eager(&shard.exec, shard.idx, record::into_records(out), stats);
         }
-        ShardInput::Shared { runs, ranges } => {
-            let parts: Vec<&[i32]> = ranges
+        ShardInput::Windowed { runs, ranges, out, window } => {
+            let parts: Vec<&[ByKey<R>]> = ranges
                 .iter()
                 .zip(runs.iter())
-                .map(|(r, run)| &run[r.clone()])
+                .map(|(r, run)| record::as_keyed(&run[r.clone()]))
                 .collect();
-            merge_parts(&parts)
+            // SAFETY: remainder windows are disjoint (nested rank cuts)
+            // and disjoint from every eager window; the buffer is read
+            // only after all shards completed (state mutex ordering).
+            let dst = unsafe {
+                std::slice::from_raw_parts_mut(out.base().add(window.start), window.len())
+            };
+            loser_tree_merge(&parts, record::as_keyed_mut(dst));
+            complete_windowed(&shard.exec, stats);
         }
-    };
-    complete_shard(&shard.exec, shard.idx, out, stats);
-}
-
-fn merge_parts(parts: &[&[i32]]) -> Vec<i32> {
-    let total: usize = parts.iter().map(|p| p.len()).sum();
-    // Fully tiled by the loser-tree merge (see crate::uninit_vec).
-    let mut out = crate::uninit_vec(total);
-    loser_tree_merge(parts, &mut out);
-    out
+        ShardInput::Install { items, out } => {
+            for (w, v) in items {
+                // SAFETY: eager windows are disjoint from each other
+                // and from every remainder window, and their producing
+                // shards have completed — this task is each window's
+                // only writer.
+                unsafe {
+                    std::slice::from_raw_parts_mut(out.base().add(w.start), w.len())
+                }
+                .copy_from_slice(v);
+            }
+            let mut guard = shard.exec.state.lock().unwrap();
+            let st = &mut *guard;
+            st.extra -= 1;
+            maybe_finish(st, stats);
+        }
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -294,9 +440,9 @@ fn merge_parts(parts: &[&[i32]]) -> Vec<i32> {
 /// is the only mutator of per-session ingest state; clients only insert
 /// new sessions and flip the abort flag, so one mutex over the map is
 /// uncontended in practice.
-#[derive(Debug, Default)]
-pub(super) struct SessionTable {
-    sessions: Mutex<HashMap<u64, SessionState>>,
+#[derive(Debug)]
+pub(super) struct SessionTable<R: Record> {
+    sessions: Mutex<HashMap<u64, SessionState<R>>>,
     /// Ids of aborted sessions awaiting reclamation. Dropping a session
     /// records its id here (an in-memory list — unlike a queue message
     /// it cannot fail under back-pressure), and the dispatcher reaps on
@@ -305,8 +451,14 @@ pub(super) struct SessionTable {
     aborted: Mutex<Vec<u64>>,
 }
 
-impl SessionTable {
-    fn insert(&self, id: u64, state: SessionState) {
+impl<R: Record> Default for SessionTable<R> {
+    fn default() -> Self {
+        Self { sessions: Mutex::new(HashMap::new()), aborted: Mutex::new(Vec::new()) }
+    }
+}
+
+impl<R: Record> SessionTable<R> {
+    fn insert(&self, id: u64, state: SessionState<R>) {
         self.sessions.lock().unwrap().insert(id, state);
     }
 
@@ -333,16 +485,16 @@ impl SessionTable {
 }
 
 #[derive(Debug)]
-struct SessionState {
-    runs: Vec<RunIngest>,
+struct SessionState<R: Record> {
+    runs: Vec<RunIngest<R>>,
     /// Absolute per-run cut positions already dispatched to eager
     /// shards (componentwise nondecreasing; sums to `planned_rank`).
     planned: Vec<usize>,
     /// Output ranks `[0, planned_rank)` are covered by eager shards.
     planned_rank: usize,
-    exec: Arc<StreamExec>,
+    exec: Arc<StreamExec<R>>,
     /// Session reply sender; every emitted shard job carries a clone.
-    reply: Sender<JobResult>,
+    reply: Sender<JobResult<R>>,
     enqueued_at: Instant,
     /// Whether eager (pre-seal) planning is enabled for this session.
     /// The one-shot wrapper disables it when it fed every run as one
@@ -355,25 +507,40 @@ struct SessionState {
     aborted: bool,
 }
 
-#[derive(Debug, Default)]
-struct RunIngest {
-    buf: Vec<i32>,
+#[derive(Debug)]
+struct RunIngest<R: Record> {
+    buf: Vec<R>,
     sealed: bool,
 }
 
-/// Settled output prefix length under the sealed-rank frontier (module
-/// docs): elements strictly below the minimum last-fed key of any open
-/// run; everything once all runs are sealed; nothing while an open run
-/// is still empty.
-fn safe_rank(runs: &[RunIngest]) -> usize {
-    let mut frontier: Option<i32> = None;
+impl<R: Record> Default for RunIngest<R> {
+    fn default() -> Self {
+        Self { buf: Vec::new(), sealed: false }
+    }
+}
+
+/// Settled output prefix length under the tie-aware sealed-rank
+/// frontier (module docs): keys strictly below the minimum last-fed
+/// key `F` of any open run always settle; ties *at* `F` settle for
+/// every run up to (and including) the lowest-indexed open run whose
+/// last key is `F` — later runs must wait for that run's possible
+/// future ties. Everything once all runs are sealed; nothing while an
+/// open run is still empty.
+fn safe_rank<R: Record>(runs: &[RunIngest<R>]) -> usize {
+    let mut frontier: Option<&R::Key> = None;
     let mut all_sealed = true;
     for r in runs {
         if !r.sealed {
             all_sealed = false;
             match r.buf.last() {
                 None => return 0,
-                Some(&v) => frontier = Some(frontier.map_or(v, |f| f.min(v))),
+                Some(v) => {
+                    let k = v.key();
+                    frontier = Some(match frontier {
+                        Some(f) if f <= k => f,
+                        _ => k,
+                    });
+                }
             }
         }
     }
@@ -381,12 +548,27 @@ fn safe_rank(runs: &[RunIngest]) -> usize {
         return runs.iter().map(|r| r.buf.len()).sum();
     }
     let f = frontier.expect("an open run with data exists");
-    runs.iter().map(|r| r.buf.partition_point(|x| *x < f)).sum()
+    // The tie owner: lowest-indexed open run whose last fed key is F.
+    let owner = runs
+        .iter()
+        .position(|r| !r.sealed && r.buf.last().map(|v| v.key()) == Some(f))
+        .expect("the frontier came from some open run");
+    runs.iter()
+        .enumerate()
+        .map(|(j, r)| {
+            let below = r.buf.partition_point(|x| x.key() < f);
+            if j <= owner {
+                below + r.buf[below..].partition_point(|x| x.key() == f)
+            } else {
+                below
+            }
+        })
+        .sum()
 }
 
 /// True iff `kind` is a session protocol message (handled on the
 /// dispatcher, never dispatched to a worker).
-pub(super) fn is_session_message(kind: &JobKind) -> bool {
+pub(super) fn is_session_message<R: Record>(kind: &JobKind<R>) -> bool {
     matches!(
         kind,
         JobKind::CompactChunk { .. } | JobKind::CompactSealRun { .. } | JobKind::CompactSeal { .. }
@@ -402,13 +584,13 @@ pub(super) fn is_session_message(kind: &JobKind) -> bool {
 /// unlocked (the remainder plan or the classic-fallback `Compact`); the
 /// caller dispatches them through the normal expansion + in-flight
 /// accounting.
-pub(super) fn handle_message(
+pub(super) fn handle_message<R: Record>(
     cfg: &MergeflowConfig,
     stats: &ServiceStats,
-    table: &SessionTable,
-    job: Job,
+    table: &SessionTable<R>,
+    job: Job<R>,
     touched: &mut Vec<u64>,
-) -> Vec<Job> {
+) -> Vec<Job<R>> {
     let Job { id, kind, enqueued_at, reply } = job;
     let mut map = table.sessions.lock().unwrap();
     match kind {
@@ -459,12 +641,12 @@ pub(super) fn handle_message(
 /// drained batch that is still live (not sealed in that same batch, not
 /// aborted), dispatch eager shards over its newly settled ranks. Called
 /// by the dispatcher after each batch; `touched` is drained.
-pub(super) fn plan_eager(
+pub(super) fn plan_eager<R: Record>(
     cfg: &MergeflowConfig,
     stats: &ServiceStats,
-    table: &SessionTable,
+    table: &SessionTable<R>,
     touched: &mut Vec<u64>,
-) -> Vec<Job> {
+) -> Vec<Job<R>> {
     if touched.is_empty() {
         return Vec::new();
     }
@@ -488,13 +670,14 @@ pub(super) fn plan_eager(
 /// prefixes, which for ranks within the frontier equals the cut over
 /// the final runs (module docs). Skipped entirely once every run is
 /// sealed: the seal message is imminent and its remainder planner
-/// merges the tail zero-copy, so eager window copies would be waste.
-fn maybe_plan_eager(
+/// merges the tail zero-copy and in place, so eager window copies would
+/// be waste.
+fn maybe_plan_eager<R: Record>(
     cfg: &MergeflowConfig,
     stats: &ServiceStats,
-    state: &mut SessionState,
+    state: &mut SessionState<R>,
     id: u64,
-) -> Vec<Job> {
+) -> Vec<Job<R>> {
     let eager_len = cfg.compact_eager_min_len;
     if eager_len == 0 || !state.eager {
         return Vec::new();
@@ -514,29 +697,29 @@ fn maybe_plan_eager(
         && state.eager_count < MAX_EAGER_SHARDS
     {
         let target = state.planned_rank + eager_len;
-        let (cut, windows) = {
-            let prefixes: Vec<&[i32]> =
-                state.runs.iter().map(|r| r.buf.as_slice()).collect();
-            let cut = kway_rank_split(&prefixes, target);
-            let windows: Vec<Vec<i32>> = prefixes
-                .iter()
-                .zip(cut.iter().zip(state.planned.iter()))
-                .map(|(p, (&e, &s))| p[s..e].to_vec())
-                .collect();
-            (cut, windows)
+        let cut = {
+            let prefixes: Vec<&[ByKey<R>]> =
+                state.runs.iter().map(|r| record::as_keyed(&r.buf)).collect();
+            kway_rank_split(&prefixes, target)
         };
+        let windows: Vec<Vec<R>> = state
+            .runs
+            .iter()
+            .zip(cut.iter().zip(state.planned.iter()))
+            .map(|(r, (&e, &s))| r.buf[s..e].to_vec())
+            .collect();
+        let idx = state.exec.push_slot(state.planned_rank..target);
         state.planned = cut;
         state.planned_rank = target;
         state.eager_count += 1;
         stats.eager_shards.inc();
-        let idx = state.exec.push_slot();
         jobs.push(Job {
             id,
             kind: JobKind::StreamShard {
                 shard: StreamShard {
                     exec: Arc::clone(&state.exec),
-                    input: ShardInput::Owned(windows),
                     idx,
+                    input: ShardInput::Owned(windows),
                 },
             },
             // Session open time: latency accounting covers the ingest.
@@ -550,16 +733,19 @@ fn maybe_plan_eager(
 /// Seal processing. With no eager work done the session degrades to the
 /// classic one-shot routing (`shard::maybe_expand` → sharded / flat /
 /// tree, identical backends) — streaming is purely additive for
-/// sessions that never overlapped. Otherwise the remaining rank range
-/// is planned as zero-copy `StreamShard`s over the frozen buffers and
-/// the group is armed to assemble + reply on its last completion.
-fn finalize(
+/// sessions that never overlapped. Otherwise the final output buffer is
+/// allocated here, the remaining rank range is planned as zero-copy
+/// `StreamShard`s that merge straight into their disjoint windows of
+/// it, parked eager outputs are handed to a pool-worker install task
+/// (the dispatcher pays planning cost only), and the group is armed to
+/// reply on its last completion.
+fn finalize<R: Record>(
     cfg: &MergeflowConfig,
     stats: &ServiceStats,
-    mut state: SessionState,
+    mut state: SessionState<R>,
     id: u64,
-    reply: Sender<JobResult>,
-) -> Vec<Job> {
+    reply: Sender<JobResult<R>>,
+) -> Vec<Job<R>> {
     for r in &mut state.runs {
         r.sealed = true;
     }
@@ -569,7 +755,7 @@ fn finalize(
     let opened_at = state.enqueued_at;
     let total: usize = state.runs.iter().map(|r| r.buf.len()).sum();
     if state.eager_count == 0 {
-        let runs: Vec<Vec<i32>> = state.runs.into_iter().map(|r| r.buf).collect();
+        let runs: Vec<Vec<R>> = state.runs.into_iter().map(|r| r.buf).collect();
         return vec![Job {
             id,
             kind: JobKind::Compact { runs },
@@ -580,8 +766,13 @@ fn finalize(
     let queue_wait_ns =
         u64::try_from(opened_at.elapsed().as_nanos()).unwrap_or(u64::MAX);
     let remainder = total - state.planned_rank;
-    let runs: Arc<Vec<Vec<i32>>> =
+    let runs: Arc<Vec<Vec<R>>> =
         Arc::new(state.runs.into_iter().map(|r| r.buf).collect());
+    // The final output buffer, allocated exactly once. Eager windows
+    // tile [0, planned_rank), remainder windows tile the rest; every
+    // slot is fully written before the buffer is read (uninit_vec
+    // contract).
+    let out: Arc<SharedOut<R>> = Arc::new(SharedOut::new(crate::uninit_vec(total)));
     let mut jobs = Vec::new();
     if remainder > 0 {
         // Same sizing policy as the sharded route: ~min_len elements
@@ -600,45 +791,65 @@ fn finalize(
         } else {
             1
         };
-        let refs: Vec<&[i32]> = runs.iter().map(|r| r.as_slice()).collect();
+        let refs: Vec<&[ByKey<R>]> =
+            runs.iter().map(|r| record::as_keyed(r)).collect();
         let mut prev = state.planned.clone();
+        let mut prev_rank = state.planned_rank;
         for i in 1..=n {
-            let cut: Vec<usize> = if i == n {
-                refs.iter().map(|r| r.len()).collect()
+            let (cut, rank): (Vec<usize>, usize) = if i == n {
+                (refs.iter().map(|r| r.len()).collect(), total)
             } else {
-                kway_rank_split(&refs, state.planned_rank + i * remainder / n)
+                let rank = state.planned_rank + i * remainder / n;
+                (kway_rank_split(&refs, rank), rank)
             };
             let ranges: Vec<Range<usize>> =
                 prev.iter().zip(cut.iter()).map(|(&s, &e)| s..e).collect();
-            let idx = state.exec.push_slot();
+            let idx = state.exec.push_slot(prev_rank..rank);
             jobs.push(Job {
                 id,
                 kind: JobKind::StreamShard {
                     shard: StreamShard {
                         exec: Arc::clone(&state.exec),
-                        input: ShardInput::Shared { runs: Arc::clone(&runs), ranges },
                         idx,
+                        input: ShardInput::Windowed {
+                            runs: Arc::clone(&runs),
+                            ranges,
+                            out: Arc::clone(&out),
+                            window: prev_rank..rank,
+                        },
                     },
                 },
                 enqueued_at: opened_at,
                 reply: reply.clone(),
             });
             prev = cut;
+            prev_rank = rank;
         }
     }
-    let mut st = state.exec.state.lock().unwrap();
-    st.sealed = Some(SealInfo {
-        expected: st.outputs.len(),
-        total,
-        reply,
-        parent_id: id,
-        enqueued_at: opened_at,
-        queue_wait_ns,
-    });
-    // All eager shards may already be done (and the remainder empty):
-    // assemble right here on the dispatcher.
-    maybe_finish(&mut st, stats);
-    drop(st);
+    // Arm the group. Parked eager outputs are stolen here and installed
+    // by a pool-worker task below — the dispatcher never pays the
+    // memcpy. With nothing parked and no remainder, arm_sealed
+    // assembles right here (the buffer is already fully tiled).
+    let installs = arm_sealed(
+        &state.exec,
+        &out,
+        SealInfo { total, reply, parent_id: id, enqueued_at: opened_at, queue_wait_ns },
+        stats,
+    );
+    if !installs.is_empty() {
+        jobs.push(Job {
+            id,
+            kind: JobKind::StreamShard {
+                shard: StreamShard {
+                    exec: Arc::clone(&state.exec),
+                    idx: 0, // unused: installs have no slot of their own
+                    input: ShardInput::Install { items: installs, out },
+                },
+            },
+            enqueued_at: opened_at,
+            reply: state.reply.clone(),
+        });
+    }
     jobs
 }
 
@@ -646,28 +857,28 @@ fn finalize(
 // Client handle.
 // ---------------------------------------------------------------------
 
-/// Client handle to a streaming compaction: feed sorted chunks run by
-/// run, seal runs as they end, then [`seal`](Self::seal) the session
-/// for a [`JobHandle`] to the merged output.
+/// Client handle to a streaming compaction: feed sorted record chunks
+/// run by run, seal runs as they end, then [`seal`](Self::seal) the
+/// session for a [`JobHandle`] to the merged output.
 ///
-/// Every chunk is validated at admission — sortedness within the chunk
-/// plus the boundary against the run's previous chunk — in O(chunk) on
-/// the calling thread, so a violation is rejected *mid-stream* with the
-/// session intact (the offending chunk is simply not admitted; the
-/// client may correct and continue). Feeds apply back-pressure by
-/// blocking while the service queue is full.
+/// Every chunk is validated at admission — sortedness *by key* within
+/// the chunk plus the key boundary against the run's previous chunk —
+/// in O(chunk) on the calling thread, so a violation is rejected
+/// *mid-stream* with the session intact (the offending chunk is simply
+/// not admitted; the client may correct and continue). Feeds apply
+/// back-pressure by blocking while the service queue is full.
 ///
 /// Dropping an unsealed session aborts it: buffered data is discarded
 /// and no reply is ever delivered.
 #[derive(Debug)]
-pub struct CompactionSession {
-    queue: Arc<BoundedQueue<Job>>,
-    table: Arc<SessionTable>,
+pub struct CompactionSession<R: Record = i32> {
+    queue: Arc<BoundedQueue<Job<R>>>,
+    table: Arc<SessionTable<R>>,
     stats: Arc<ServiceStats>,
     id: u64,
-    tx: Sender<JobResult>,
-    rx: Option<Receiver<JobResult>>,
-    runs: Vec<ClientRun>,
+    tx: Sender<JobResult<R>>,
+    rx: Option<Receiver<JobResult<R>>>,
+    runs: Vec<ClientRun<R>>,
     sealed: bool,
     /// Back-pressure mode: `true` (streaming clients) blocks feeds
     /// while the queue is full; `false` (the one-shot `submit` wrapper)
@@ -680,24 +891,25 @@ pub struct CompactionSession {
     admitted: bool,
 }
 
-#[derive(Debug, Default)]
-struct ClientRun {
-    last: Option<i32>,
+#[derive(Debug)]
+struct ClientRun<R: Record> {
+    /// Last record fed to the run (its key bounds the next chunk).
+    last: Option<R>,
     sealed: bool,
 }
 
 /// Open a session: register dispatcher-side state and build the client
 /// handle. Called by `MergeService::open_compaction` (which allocates
 /// the id); `submitted` is counted later, at [`CompactionSession::seal`].
-pub(super) fn open(
-    queue: Arc<BoundedQueue<Job>>,
-    table: Arc<SessionTable>,
+pub(super) fn open<R: Record>(
+    queue: Arc<BoundedQueue<Job<R>>>,
+    table: Arc<SessionTable<R>>,
     stats: Arc<ServiceStats>,
     id: u64,
     run_count: usize,
     blocking: bool,
     eager: bool,
-) -> CompactionSession {
+) -> CompactionSession<R> {
     let (tx, rx) = channel();
     table.insert(
         id,
@@ -720,14 +932,14 @@ pub(super) fn open(
         id,
         tx,
         rx: Some(rx),
-        runs: (0..run_count).map(|_| ClientRun::default()).collect(),
+        runs: (0..run_count).map(|_| ClientRun { last: None, sealed: false }).collect(),
         sealed: false,
         blocking,
         admitted: false,
     }
 }
 
-impl CompactionSession {
+impl<R: Record> CompactionSession<R> {
     /// Session id (the job id the eventual [`JobResult`] reports).
     pub fn id(&self) -> u64 {
         self.id
@@ -754,7 +966,7 @@ impl CompactionSession {
         Ok(())
     }
 
-    fn push(&mut self, kind: JobKind) -> Result<()> {
+    fn push(&mut self, kind: JobKind<R>) -> Result<()> {
         let job = Job {
             id: self.id,
             kind,
@@ -784,25 +996,26 @@ impl CompactionSession {
         }
     }
 
-    /// Feed one sorted chunk of `run`. Validation is per chunk and
-    /// bounded by its length: the chunk itself must be sorted and its
-    /// first element must not precede the run's last fed element. An
+    /// Feed one key-sorted chunk of `run`. Validation is per chunk and
+    /// bounded by its length: the chunk itself must be sorted by key
+    /// and its first key must not precede the run's last fed key. An
     /// empty chunk is a no-op. Blocks while the service queue is full.
-    pub fn feed(&mut self, run: usize, chunk: Vec<i32>) -> Result<()> {
+    pub fn feed(&mut self, run: usize, chunk: Vec<R>) -> Result<()> {
         self.check_open(run)?;
         if chunk.is_empty() {
             return Ok(());
         }
-        if !chunk.windows(2).all(|w| w[0] <= w[1]) {
+        if !record::is_sorted_by_key(&chunk) {
             return Err(Error::InvalidInput(format!(
-                "chunk for run {run} is not sorted"
+                "chunk for run {run} is not sorted by key"
             )));
         }
-        if let Some(last) = self.runs[run].last {
-            if chunk[0] < last {
+        if let Some(last) = &self.runs[run].last {
+            if chunk[0].key() < last.key() {
                 return Err(Error::InvalidInput(format!(
-                    "chunk for run {run} starts at {} before the run's last element {last}",
-                    chunk[0]
+                    "chunk for run {run} starts at key {:?} before the run's last key {:?}",
+                    chunk[0].key(),
+                    last.key()
                 )));
             }
         }
@@ -811,7 +1024,7 @@ impl CompactionSession {
         // reject mode, or shutdown) must leave the session exactly as
         // it was, so the same chunk can be retried.
         let last = chunk.last().copied();
-        let bytes = (chunk.len() * std::mem::size_of::<i32>()) as u64;
+        let bytes = std::mem::size_of_val(chunk.as_slice()) as u64;
         self.push(JobKind::CompactChunk {
             msg: ChunkMsg { session: self.id, run, data: chunk },
         })?;
@@ -838,7 +1051,7 @@ impl CompactionSession {
     /// error (full queue in reject mode, or shutdown) the session is
     /// dropped and therefore aborted — its buffered ingest is reaped —
     /// and the admission converts into a rejection in the stats.
-    pub fn seal(mut self) -> Result<JobHandle> {
+    pub fn seal(mut self) -> Result<JobHandle<R>> {
         // Count the admission *before* the push: the dispatcher may
         // absorb the seal and complete the job before this thread
         // resumes, and a snapshot must never observe
@@ -858,7 +1071,7 @@ impl CompactionSession {
     }
 }
 
-impl Drop for CompactionSession {
+impl<R: Record> Drop for CompactionSession<R> {
     fn drop(&mut self) {
         if self.sealed {
             return;
@@ -875,7 +1088,7 @@ impl Drop for CompactionSession {
 mod tests {
     use super::*;
 
-    fn ingest(pairs: &[(&[i32], bool)]) -> Vec<RunIngest> {
+    fn ingest(pairs: &[(&[i32], bool)]) -> Vec<RunIngest<i32>> {
         pairs
             .iter()
             .map(|(buf, sealed)| RunIngest { buf: buf.to_vec(), sealed: *sealed })
@@ -885,79 +1098,121 @@ mod tests {
     #[test]
     fn safe_rank_frontier_cases() {
         // No runs: vacuously all sealed, nothing to settle.
-        assert_eq!(safe_rank(&[]), 0);
+        assert_eq!(safe_rank::<i32>(&[]), 0);
         // An open empty run pins the frontier at "nothing settled".
         assert_eq!(safe_rank(&ingest(&[(&[1, 2, 3], false), (&[], false)])), 0);
         // All sealed: everything is settled.
         assert_eq!(safe_rank(&ingest(&[(&[1, 2], true), (&[0], true)])), 3);
-        // Frontier = the open run's last key (5); only strictly-below
-        // counts: {2, 3} from the open run and {1} from the sealed one.
-        // The ties at 5 are unsettled — a future element of the open
-        // run could equal 5 and sort between them.
+        // Frontier = the open run 0's last key (5); {2, 3} and {1} are
+        // strictly below, and run 0 *owns* the tie at 5 (its future
+        // fives land at later offsets, which never precede the fed
+        // one), so it settles too. Run 1's 5 must wait even though run
+        // 1 is sealed: run 0 may still feed a 5, which sorts before it
+        // (run 0 < run 1).
         assert_eq!(
             safe_rank(&ingest(&[(&[2, 3, 5], false), (&[1, 5, 9], true)])),
-            3
+            4
         );
-        // Two open runs: frontier is the smaller last element.
+        // Two open runs: frontier is the smaller last key (6), owned by
+        // run 1 — so run 1's fed 6 settles ({1, 4}, {2}, and the 6).
         assert_eq!(
             safe_rank(&ingest(&[(&[1, 4, 8], false), (&[2, 6], false)])),
-            3, // {1, 4} and {2} are < 6
+            4
         );
-        // Duplicate-heavy: nothing strictly below the frontier.
-        assert_eq!(safe_rank(&ingest(&[(&[5, 5], false), (&[5, 5, 5], false)])), 0);
+        // Duplicate-heavy: nothing is strictly below the frontier, but
+        // the tie owner (run 0, the lowest-indexed open run at F = 5)
+        // settles its fed duplicates — run 1's must wait for run 0's
+        // possible future fives.
+        assert_eq!(safe_rank(&ingest(&[(&[5, 5], false), (&[5, 5, 5], false)])), 2);
+        // Owner below a tying sealed run: runs 0/1 open with last keys
+        // 9/5 → F = 5 owned by run 1; run 0 contributes {1}, run 1 its
+        // two fives (own future ties are later offsets).
+        assert_eq!(safe_rank(&ingest(&[(&[1, 9], false), (&[5, 5], false)])), 3);
+        // A sealed lower-indexed run's ties always settle: F = 6 owned
+        // by run 1; the three 5s settle everywhere, run 1's 6 settles,
+        // run 2's nothing beyond its 5.
+        assert_eq!(
+            safe_rank(&ingest(&[(&[5], true), (&[5, 6], false), (&[5, 7], false)])),
+            4
+        );
     }
 
     #[test]
     fn stream_shard_len_both_inputs() {
-        let exec = Arc::new(StreamExec::default());
+        let exec: Arc<StreamExec<i32>> = Arc::new(StreamExec::default());
         let owned = StreamShard {
             exec: Arc::clone(&exec),
-            input: ShardInput::Owned(vec![vec![1, 2], vec![3]]),
             idx: 0,
+            input: ShardInput::Owned(vec![vec![1, 2], vec![3]]),
         };
         assert_eq!(owned.len(), 3);
         assert!(!owned.is_empty());
-        let shared = StreamShard {
+        let windowed = StreamShard {
             exec,
-            input: ShardInput::Shared {
+            idx: 1,
+            input: ShardInput::Windowed {
                 runs: Arc::new(vec![vec![1, 2, 3, 4], vec![5, 6]]),
                 ranges: vec![1..3, 0..2],
+                out: Arc::new(SharedOut::new(vec![0i32; 6])),
+                window: 2..6,
             },
-            idx: 1,
         };
-        assert_eq!(shared.len(), 4);
+        assert_eq!(windowed.len(), 4);
     }
 
     #[test]
-    fn exec_assembles_in_rank_order_after_seal() {
+    fn exec_writes_in_place_and_replies_after_seal() {
         let stats = ServiceStats::new();
-        let exec = StreamExec::default();
-        let a = exec.push_slot();
-        let b = exec.push_slot();
+        let exec: Arc<StreamExec<i32>> = Arc::new(StreamExec::default());
+        let a = exec.push_slot(0..2);
+        let b = exec.push_slot(2..4);
         let (tx, rx) = channel();
-        // Complete out of order, seal in between: reply fires only when
-        // both the seal info and the last output are in.
-        complete_shard(&exec, b, vec![30, 40], &stats);
-        {
-            let mut st = exec.state.lock().unwrap();
-            st.sealed = Some(SealInfo {
-                expected: 2,
+        // Shard b completes *before* the seal: its output parks.
+        complete_eager(&exec, b, vec![30, 40], &stats);
+        assert!(
+            exec.state.lock().unwrap().parked[b].is_some(),
+            "pre-seal output must park (no buffer yet)"
+        );
+        // Seal: buffer installed; the parked output is stolen for a
+        // pool-worker install task instead of being copied here.
+        let out = Arc::new(SharedOut::new(vec![0i32; 4]));
+        let installs = arm_sealed(
+            &exec,
+            &out,
+            SealInfo {
                 total: 4,
                 reply: tx,
                 parent_id: 9,
                 enqueued_at: Instant::now(),
                 queue_wait_ns: 1,
-            });
-            maybe_finish(&mut st, &stats);
-        }
-        assert!(rx.try_recv().is_err(), "must wait for the first shard");
-        complete_shard(&exec, a, vec![10, 20], &stats);
+            },
+            &stats,
+        );
+        assert_eq!(installs.len(), 1, "parked output stolen for install");
+        assert!(rx.try_recv().is_err(), "must wait for install + shard a");
+        // The install task runs like any stream shard.
+        execute_stream_shard(
+            StreamShard {
+                exec: Arc::clone(&exec),
+                idx: 0,
+                input: ShardInput::Install { items: installs, out },
+            },
+            &stats,
+        );
+        assert!(rx.try_recv().is_err(), "shard a still outstanding");
+        // Shard a completes after the seal: copied straight in, group
+        // reaches full strength, reply fires with the tiled buffer.
+        complete_eager(&exec, a, vec![10, 20], &stats);
         let res = rx.try_recv().expect("group complete");
         assert_eq!(res.output, vec![10, 20, 30, 40]);
         assert_eq!(res.backend, BACKEND_STREAMED);
         assert_eq!(res.id, 9);
         assert_eq!(stats.streamed_jobs.get(), 1);
-        assert_eq!(stats.stream_shards_completed.get(), 2);
+        assert_eq!(
+            stats.stream_shards_completed.get(),
+            2,
+            "the install task is not a shard"
+        );
     }
 
     #[test]
@@ -990,7 +1245,8 @@ mod tests {
             r.sealed = true;
         }
         assert!(maybe_plan_eager(&cfg, &stats, &mut state, 1).is_empty());
-        // The planned shards merge the settled prefix bit-identically.
+        // The planned shards merge the settled prefix bit-identically;
+        // pre-seal their outputs park in rank-ordered slots.
         for job in jobs {
             match job.kind {
                 JobKind::StreamShard { shard } => {
@@ -1001,8 +1257,9 @@ mod tests {
             }
         }
         let st = state.exec.state.lock().unwrap();
+        assert_eq!(st.slots, vec![0..4, 4..8]);
         let merged: Vec<i32> = st
-            .outputs
+            .parked
             .iter()
             .flat_map(|o| o.clone().unwrap())
             .collect();
@@ -1010,8 +1267,34 @@ mod tests {
     }
 
     #[test]
+    fn duplicate_heavy_runs_settle_for_the_tie_owner() {
+        // All-identical keys: the bare-key frontier would settle
+        // nothing; the tie-aware frontier settles run 0's fed
+        // duplicates, so eager shards still launch.
+        let cfg =
+            MergeflowConfig { compact_eager_min_len: 2, ..MergeflowConfig::default() };
+        let stats = ServiceStats::new();
+        let (tx, _rx) = channel();
+        let mut state = SessionState {
+            runs: ingest(&[(&[7, 7, 7, 7], false), (&[7, 7, 7], false)]),
+            planned: vec![0, 0],
+            planned_rank: 0,
+            exec: Arc::new(StreamExec::default()),
+            reply: tx,
+            enqueued_at: Instant::now(),
+            eager: true,
+            eager_count: 0,
+            aborted: false,
+        };
+        let jobs = maybe_plan_eager(&cfg, &stats, &mut state, 1);
+        assert_eq!(jobs.len(), 2, "4 settled ranks / eager_len 2");
+        assert_eq!(state.planned_rank, 4);
+        assert_eq!(state.planned, vec![4, 0], "all shards cut from the tie owner");
+    }
+
+    #[test]
     fn reap_frees_aborted_sessions() {
-        let table = SessionTable::default();
+        let table: SessionTable<i32> = SessionTable::default();
         let (tx, _rx) = channel();
         table.insert(
             7,

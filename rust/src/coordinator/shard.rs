@@ -15,6 +15,11 @@
 //! own queue accounting) and no worker ever sits blocked waiting for
 //! sibling shards.
 //!
+//! Everything here is generic over keyed records ([`Record`]): shards
+//! carry `Vec<R>` runs and merge through the key-only [`ByKey`]
+//! adapter, so the stable tie order (run index, then offset) is
+//! preserved for payload-carrying records exactly as for scalars.
+//!
 //! ## Lifecycle
 //!
 //! ```text
@@ -47,6 +52,7 @@ use super::stats::ServiceStats;
 use crate::config::MergeflowConfig;
 use crate::mergepath::kway::loser_tree_merge;
 use crate::mergepath::kway_path::{partition_kway_merge_path, KwaySegment};
+use crate::record::{self, ByKey, Record};
 use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -80,40 +86,65 @@ pub(crate) fn effective_shard_min_len(cfg: &MergeflowConfig, total: usize) -> us
     (total / cfg.workers.max(1)).clamp(AUTO_SHARD_FLOOR, u32::MAX as usize)
 }
 
-/// Output buffer shared by all shards of one group. Shards write
-/// through disjoint `out_range` windows (partition tiling invariant),
-/// which is what makes the unsynchronized access sound. The base
-/// pointer is cached at construction — while shards run concurrently,
-/// no `&mut` to the `Vec` itself is ever materialized (two live `&mut`
-/// would alias even if the written windows are disjoint).
-struct SharedOut {
-    buf: UnsafeCell<Vec<i32>>,
+/// Output buffer shared by concurrent writers of one merge group.
+/// Writers go through disjoint windows off the cached `base` pointer
+/// (partition tiling invariant), which is what makes the unsynchronized
+/// access sound. While writers run, no `&mut` to the `Vec` itself is
+/// ever materialized (two live `&mut` would alias even if the written
+/// windows are disjoint). Used by the rank shards here and by the
+/// streamed remainder shards in [`super::session`].
+pub(crate) struct SharedOut<T> {
+    buf: UnsafeCell<Vec<T>>,
     /// Heap base of `buf`, captured before the group is shared. Stays
     /// valid when the `Vec` moves: only its header moves, not the heap
-    /// allocation, and shards never grow/shrink the buffer.
-    base: *mut i32,
+    /// allocation, and writers never grow/shrink the buffer.
+    base: *mut T,
 }
 
-impl SharedOut {
-    fn new(mut buf: Vec<i32>) -> Self {
+impl<T> SharedOut<T> {
+    pub(crate) fn new(mut buf: Vec<T>) -> Self {
         let base = buf.as_mut_ptr();
         Self { buf: UnsafeCell::new(buf), base }
+    }
+
+    /// The cached heap base. Callers carve disjoint windows out of it
+    /// with `from_raw_parts_mut`; every window must be fully written
+    /// before [`SharedOut::take`] (the buffer may be uninitialized —
+    /// see [`crate::uninit_vec`]).
+    pub(crate) fn base(&self) -> *mut T {
+        self.base
+    }
+
+    /// Move the buffer out.
+    ///
+    /// # Safety
+    /// All writers must have finished, with a happens-before edge to
+    /// this call (countdown with AcqRel, or a shared mutex).
+    pub(crate) unsafe fn take(&self) -> Vec<T> {
+        std::mem::take(&mut *self.buf.get())
     }
 }
 
 // SAFETY: concurrent access is only through `base` with disjoint
 // windows; the buffer itself is touched again only after all writers
-// finished (`remaining` countdown with AcqRel ordering).
-unsafe impl Send for SharedOut {}
-unsafe impl Sync for SharedOut {}
+// finished (completion countdown / mutex in the owning group).
+unsafe impl<T: Send> Send for SharedOut<T> {}
+unsafe impl<T: Send> Sync for SharedOut<T> {}
+
+impl<T> std::fmt::Debug for SharedOut<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // The Vec must not be inspected while writers may be live.
+        f.debug_struct("SharedOut").finish_non_exhaustive()
+    }
+}
 
 /// Shared state of one sharded compaction: the run buffers (shared by
 /// all shards via `Arc`), the planned per-shard cuts, the output
 /// buffer, and the completion countdown.
-pub struct ShardGroup {
-    runs: Vec<Vec<i32>>,
+pub struct ShardGroup<R: Record = i32> {
+    runs: Vec<Vec<R>>,
     segments: Vec<KwaySegment>,
-    out: SharedOut,
+    out: SharedOut<R>,
     /// Shards still running; the shard that decrements this to zero
     /// stitches and replies.
     remaining: AtomicUsize,
@@ -128,7 +159,7 @@ pub struct ShardGroup {
     total: usize,
 }
 
-impl std::fmt::Debug for ShardGroup {
+impl<R: Record> std::fmt::Debug for ShardGroup<R> {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("ShardGroup")
             .field("parent_id", &self.parent_id)
@@ -143,12 +174,12 @@ impl std::fmt::Debug for ShardGroup {
 /// constructed only by the dispatcher's shard expansion (clients
 /// cannot submit shards directly).
 #[derive(Debug, Clone)]
-pub struct ShardTask {
-    group: Arc<ShardGroup>,
+pub struct ShardTask<R: Record = i32> {
+    group: Arc<ShardGroup<R>>,
     index: usize,
 }
 
-impl ShardTask {
+impl<R: Record> ShardTask<R> {
     /// Output elements this shard produces (its window length).
     pub fn len(&self) -> usize {
         self.group.segments[self.index].out_range.len()
@@ -216,7 +247,11 @@ pub(crate) fn shard_count(cfg: &MergeflowConfig, live_runs: usize, total: usize)
 ///
 /// [`MAX_SHARDS`]: self::MAX_SHARDS
 /// [`kway_rank_split`]: crate::mergepath::kway_rank_split
-pub(crate) fn maybe_expand(cfg: &MergeflowConfig, stats: &ServiceStats, job: Job) -> Vec<Job> {
+pub(crate) fn maybe_expand<R: Record>(
+    cfg: &MergeflowConfig,
+    stats: &ServiceStats,
+    job: Job<R>,
+) -> Vec<Job<R>> {
     let Job { id, kind, enqueued_at, reply } = job;
     let runs = match kind {
         JobKind::Compact { runs } => runs,
@@ -229,7 +264,7 @@ pub(crate) fn maybe_expand(cfg: &MergeflowConfig, stats: &ServiceStats, job: Job
         return vec![Job { id, kind: JobKind::Compact { runs }, enqueued_at, reply }];
     }
     let segments = {
-        let refs: Vec<&[i32]> = runs.iter().map(|r| r.as_slice()).collect();
+        let refs: Vec<&[ByKey<R>]> = runs.iter().map(|r| record::as_keyed(r)).collect();
         partition_kway_merge_path(&refs, shards)
     };
     let queue_wait_ns =
@@ -265,19 +300,19 @@ pub(crate) fn maybe_expand(cfg: &MergeflowConfig, stats: &ServiceStats, job: Job
 /// into its exclusive output window. The shard that completes the
 /// group stitches (takes the fully-tiled buffer) and replies on the
 /// parent's channel with backend [`BACKEND_SHARDED`].
-pub(crate) fn execute_shard(
-    shard: ShardTask,
-    reply: &std::sync::mpsc::Sender<JobResult>,
+pub(crate) fn execute_shard<R: Record>(
+    shard: ShardTask<R>,
+    reply: &std::sync::mpsc::Sender<JobResult<R>>,
     stats: &ServiceStats,
 ) {
     let group = &*shard.group;
     let seg = &group.segments[shard.index];
     if !seg.is_empty() {
-        let parts: Vec<&[i32]> = seg
+        let parts: Vec<&[ByKey<R>]> = seg
             .run_ranges
             .iter()
             .zip(&group.runs)
-            .map(|(r, run)| &run[r.clone()])
+            .map(|(r, run)| record::as_keyed(&run[r.clone()]))
             .collect();
         // SAFETY: shard windows are disjoint and tile [0, total) (k-way
         // partition invariants), so this shard has exclusive access to
@@ -285,11 +320,11 @@ pub(crate) fn execute_shard(
         // before the group was shared, so no `&mut Vec` aliases here.
         let window = unsafe {
             std::slice::from_raw_parts_mut(
-                group.out.base.add(seg.out_range.start),
+                group.out.base().add(seg.out_range.start),
                 seg.out_range.len(),
             )
         };
-        loser_tree_merge(&parts, window);
+        loser_tree_merge(&parts, record::as_keyed_mut(window));
     }
     stats.compact_shards_completed.inc();
     // AcqRel: our window writes happen-before the final shard's read of
@@ -298,7 +333,7 @@ pub(crate) fn execute_shard(
         // SAFETY: all shards have finished writing (we observed the
         // counter reach zero with Acquire), so we are the only thread
         // touching the buffer.
-        let output = unsafe { std::mem::take(&mut *group.out.buf.get()) };
+        let output = unsafe { group.out.take() };
         let latency_ns =
             u64::try_from(group.enqueued_at.elapsed().as_nanos()).unwrap_or(u64::MAX);
         stats.record_completion(
@@ -320,7 +355,7 @@ pub(crate) fn execute_shard(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::bench::workload::{gen_sorted_runs, WorkloadKind};
+    use crate::bench::workload::{gen_record_runs, gen_sorted_runs, WorkloadKind};
     use std::sync::mpsc::channel;
     use std::time::Instant;
 
@@ -467,6 +502,30 @@ mod tests {
         let subs = maybe_expand(&cfg, &stats, job);
         assert!(subs.len() >= 2);
         for sub in subs {
+            match sub.kind {
+                JobKind::CompactShard { shard } => execute_shard(shard, &sub.reply, &stats),
+                _ => unreachable!(),
+            }
+        }
+        assert_eq!(rx.try_recv().unwrap().output, expected);
+    }
+
+    #[test]
+    fn sharded_records_keep_stable_tie_order() {
+        // Payload-carrying records with dense duplicate keys: the
+        // stitched shard output must equal the stable oracle (flatten
+        // in run order, stable-sort by key) bit for bit.
+        let cfg = cfg_with(256);
+        let stats = ServiceStats::new();
+        let runs = gen_record_runs(WorkloadKind::Skewed, 5, 600, 21);
+        let mut expected: Vec<(u64, u64)> = runs.iter().flatten().copied().collect();
+        expected.sort_by_key(|r| r.0); // stable: ties keep run/offset order
+        let (tx, rx) = channel();
+        let job =
+            Job { id: 9, kind: JobKind::Compact { runs }, enqueued_at: Instant::now(), reply: tx };
+        let subs = maybe_expand(&cfg, &stats, job);
+        assert!(subs.len() >= 2, "record job must shard");
+        for sub in subs.into_iter().rev() {
             match sub.kind {
                 JobKind::CompactShard { shard } => execute_shard(shard, &sub.reply, &stats),
                 _ => unreachable!(),

@@ -15,7 +15,10 @@ pub struct ServiceStats {
     pub native_jobs: Counter,
     /// Jobs executed on the segmented native backend.
     pub segmented_jobs: Counter,
-    /// Compactions executed on the flat single-pass k-way engine.
+    /// Compactions executed on the flat single-pass k-way engine —
+    /// both the scalar tag ("native-kway") and the typed-record tag
+    /// ("native-kway-typed"): same engine, the tag only distinguishes
+    /// payload-carrying records in per-job results.
     pub kway_jobs: Counter,
     /// Compactions executed as rank shards (backend
     /// "native-kway-sharded"); one count per *parent* compaction.
@@ -70,7 +73,7 @@ impl ServiceStats {
         match backend {
             "xla" => self.xla_jobs.inc(),
             "native-segmented" => self.segmented_jobs.inc(),
-            "native-kway" => self.kway_jobs.inc(),
+            "native-kway" | "native-kway-typed" => self.kway_jobs.inc(),
             "native-kway-sharded" => self.sharded_jobs.inc(),
             "native-kway-streamed" => self.streamed_jobs.inc(),
             _ => self.native_jobs.inc(),
@@ -122,19 +125,20 @@ mod tests {
         s.record_completion("xla", 200, 2000, 20);
         s.record_completion("native-segmented", 300, 3000, 30);
         s.record_completion("native-kway", 400, 4000, 40);
+        s.record_completion("native-kway-typed", 450, 4500, 45);
         s.record_completion("native-kway-sharded", 500, 5000, 50);
         s.record_completion("native-kway-streamed", 600, 6000, 60);
-        assert_eq!(s.completed.get(), 6);
+        assert_eq!(s.completed.get(), 7);
         assert_eq!(s.native_jobs.get(), 1);
         assert_eq!(s.xla_jobs.get(), 1);
         assert_eq!(s.segmented_jobs.get(), 1);
-        assert_eq!(s.kway_jobs.get(), 1);
+        assert_eq!(s.kway_jobs.get(), 2, "typed tag counts as the same engine");
         assert_eq!(s.sharded_jobs.get(), 1);
         assert_eq!(s.streamed_jobs.get(), 1);
-        assert_eq!(s.elements.get(), 2100);
+        assert_eq!(s.elements.get(), 2550);
         let snap = s.snapshot();
-        assert!(snap.contains("completed=6"));
-        assert!(snap.contains("kway=1"));
+        assert!(snap.contains("completed=7"));
+        assert!(snap.contains("kway=2"));
         assert!(snap.contains("sharded=1"));
         assert!(snap.contains("streamed=1"));
         assert!(snap.contains("xla=1"));

@@ -22,10 +22,15 @@
 //!   through a virtual-time engine.
 //! - [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
 //!   merge kernels (`artifacts/*.hlo.txt`), L1/L2 of the stack.
-//! - [`coordinator`] — the serving layer: merge/sort/compaction job
-//!   queue, dynamic batcher, backend router, worker pool, metrics, and
-//!   rank-sharded compaction ([`coordinator::shard`]) that splits giant
-//!   compactions into independent equisized sub-jobs by output rank.
+//! - [`record`] — the typed-record API: the [`Record`] trait (ordered
+//!   key + opaque payload), scalar/pair/float-key implementations, and
+//!   the key-only ordering adapter that carries the coordinator's
+//!   stability contract (equal keys keep run-index-then-offset order).
+//! - [`coordinator`] — the serving layer, generic over keyed records:
+//!   merge/sort/compaction job queue, dynamic batcher, backend router,
+//!   worker pool, metrics, and rank-sharded compaction
+//!   ([`coordinator::shard`]) that splits giant compactions into
+//!   independent equisized sub-jobs by output rank.
 //! - [`bench`] — workload generators and the table/figure harness that
 //!   regenerates every table and figure of the paper's §6.
 //!
@@ -42,10 +47,13 @@ pub mod coordinator;
 pub mod exec;
 pub mod mergepath;
 pub mod metrics;
+pub mod record;
 pub mod rng;
 pub mod runtime;
 pub mod sim;
 pub mod testutil;
+
+pub use record::{ByKey, F32Key, F64Key, KeyedI32, Record, XlaSeam};
 
 /// Crate-wide error type. Display/Error/From are hand-implemented —
 /// the offline image has no crates.io access, so no `thiserror`.

@@ -23,13 +23,27 @@
 //! path — exactly the memory-traffic waste §4.3 of the paper warns
 //! about, paid `log k` times over by the tree.
 //!
-//! ## Stable merge order
+//! ## Stable merge order — a contract, not an accident
 //!
 //! Ties across runs resolve to the lower-indexed run, and elements
-//! within a run keep their order — i.e. elements are ordered by the key
+//! within a run keep their order — i.e. elements are ordered by
 //! `(value, run index, index in run)`. This matches
 //! [`super::kway::loser_tree_merge`] exactly, so segment merges
 //! concatenate into a bit-identical result.
+//!
+//! This is a **guarantee** of every entry point in this module, relied
+//! on by the typed-record coordinator ([`crate::record`]): when `T`
+//! compares by key only (payloads invisible to `Ord`, e.g.
+//! [`ByKey`](crate::record::ByKey)), equal keys keep
+//! run-index-then-offset order in the output — for every partition
+//! count `p`, at every rank. Concretely: [`kway_rank_split`] returns
+//! the per-run prefix lengths of the first `rank` elements of exactly
+//! this stable order (so its cuts nest and tile per run), and
+//! [`parallel_kway_merge`] reproduces the sequential stable merge bit
+//! for bit for every `p`. The property suite pins this down with
+//! payload-carrying elements whose `Ord` ignores the payload
+//! (`stability_ties_ordered_by_run_index`,
+//! `rank_split_stability_contract_with_payloads`).
 //!
 //! ## Selection algorithm
 //!
@@ -534,6 +548,47 @@ mod tests {
         let mut out = vec![0i64; n];
         parallel_kway_merge(&rr, &mut out, 4, Some(&pool));
         assert_eq!(out, oracle(&runs));
+    }
+
+    #[test]
+    fn rank_split_stability_contract_with_payloads() {
+        // The stability contract at the selection level: with key-only
+        // ordering ([`crate::record::ByKey`]) over (key, payload)
+        // records carrying dense duplicate keys, the cut at every rank
+        // selects exactly the first `rank` elements of the stable
+        // (key, run, offset) order — the property the typed coordinator
+        // (eager streaming, rank sharding) builds on.
+        use crate::record::{as_keyed, into_records, ByKey};
+        let runs: Vec<Vec<(i64, u32)>> = (0..4)
+            .map(|run| {
+                (0..50u32)
+                    .map(|off| ((off / 10) as i64, run * 100 + off))
+                    .collect()
+            })
+            .collect();
+        let keyed: Vec<&[ByKey<(i64, u32)>]> =
+            runs.iter().map(|r| as_keyed(r.as_slice())).collect();
+        // Stable oracle: flatten in run order (offsets already
+        // ascending), then stable-sort by key.
+        let mut expected: Vec<(i64, u32)> = runs.iter().flatten().copied().collect();
+        expected.sort_by_key(|r| r.0);
+        for p in [1, 2, 3, 7] {
+            let mut out = vec![ByKey((0i64, 0u32)); 200];
+            parallel_kway_merge(&keyed, &mut out, p, None);
+            assert_eq!(into_records(out), expected, "p={p}");
+        }
+        for rank in [0usize, 1, 37, 100, 123, 199, 200] {
+            let cut = kway_rank_split(&keyed, rank);
+            assert_eq!(cut.iter().sum::<usize>(), rank);
+            // The selected per-run prefixes, replayed through the
+            // stable order, are exactly the first `rank` outputs.
+            let mut selected: Vec<(i64, u32)> = Vec::with_capacity(rank);
+            for (j, &c) in cut.iter().enumerate() {
+                selected.extend_from_slice(&runs[j][..c]);
+            }
+            selected.sort_by_key(|r| r.0); // stable
+            assert_eq!(selected, expected[..rank], "rank={rank}");
+        }
     }
 
     #[test]

@@ -1,0 +1,394 @@
+//! Typed records: the keyed-record abstraction the coordinator is
+//! generic over.
+//!
+//! The Merge Path partition needs nothing but comparisons, and the
+//! kernels in [`crate::mergepath`] have always been generic over
+//! `T: Ord`. This module is the missing API boundary: a [`Record`] is a
+//! fixed-size value with an ordered *key*; the whole serving layer
+//! ([`MergeService<R>`](crate::coordinator::MergeService),
+//! [`JobKind<R>`](crate::coordinator::JobKind), sessions, shards) is
+//! parameterized over it, so key-value compaction — the LSM workload —
+//! runs through the exact same engine as the paper's scalar arrays.
+//!
+//! ## The stability contract
+//!
+//! Once payloads ride along with keys, stability becomes *observable*:
+//! two records can compare equal by key while carrying different
+//! payloads. Every merge the coordinator performs is therefore
+//! guaranteed **stable**: equal keys keep run-index-then-offset order
+//! (for pairwise merges, all of `A`'s ties precede `B`'s; sorts are
+//! stable by key). Träff's *Simplified, stable parallel merging* and
+//! Siebert & Träff's *Perfectly load-balanced, optimal, stable,
+//! parallel merge* show exact rank-splitting loses nothing by promising
+//! this; the flat engine's tile invariants already implied it, and
+//! [`crate::mergepath::kway_path`] documents + tests it as a contract.
+//!
+//! Merging compares **keys only** — payload bits never influence the
+//! order, which is exactly what makes the run-order guarantee
+//! meaningful. Internally the coordinator wraps records in the
+//! [`ByKey`] adapter (a `#[repr(transparent)]` newtype whose `Ord` is
+//! key-only) before handing slices to the `T: Ord` kernels; the
+//! zero-cost casts live here too.
+//!
+//! ## Implementations
+//!
+//! - every primitive integer, `bool`, and `char` is a [`Record`] whose
+//!   key is itself (`i32` is the classic scalar workload);
+//! - `(K, V)` pairs are key-value records keyed on `K`;
+//! - [`F32Key`] / [`F64Key`] wrap floats with a total order
+//!   (`total_cmp`), since raw floats are not `Ord`.
+//!
+//! The XLA offload seam is part of the trait: AOT artifacts are baked
+//! for `i32` keys, so only [`KeyedI32`] types (today: `i32` itself)
+//! can return a witness from [`Record::xla_seam`] — the [`XlaSeam`]
+//! constructor is bounded on the marker, so every other instantiation
+//! deterministically routes native, enforced at compile time.
+
+use std::cmp::Ordering;
+
+/// A fixed-size keyed record the coordinator can merge, sort and
+/// compact. See the [module docs](self) for the stability contract.
+///
+/// ```
+/// use mergeflow::config::MergeflowConfig;
+/// use mergeflow::coordinator::{JobKind, MergeService};
+///
+/// // (key, payload) pairs are records keyed on the first element.
+/// let svc = MergeService::<(u64, u64)>::start(MergeflowConfig::default()).unwrap();
+/// let runs = vec![
+///     vec![(1u64, 100u64), (3, 101)], // run 0
+///     vec![(1, 200), (2, 201)],       // run 1
+/// ];
+/// let out = svc.submit_blocking(JobKind::Compact { runs }).unwrap().output;
+/// // Stable: the tie at key 1 keeps run order (run 0 before run 1).
+/// assert_eq!(out, vec![(1, 100), (1, 200), (2, 201), (3, 101)]);
+/// svc.shutdown();
+/// ```
+pub trait Record: Copy + Send + Sync + std::fmt::Debug + 'static {
+    /// The ordered key merging compares by. Payload bits (anything in
+    /// the record beyond the key) never influence merge order.
+    type Key: Ord + std::fmt::Debug;
+
+    /// Borrow this record's key.
+    fn key(&self) -> &Self::Key;
+
+    /// Whether the record *is* its key (scalar workloads). Non-scalar
+    /// records route through the same engines but report the
+    /// `"native-kway-typed"` backend tag on the flat k-way path, so
+    /// operators can see typed traffic in the stats.
+    const IS_SCALAR: bool;
+
+    /// XLA offload seam: `Some` iff this record type can be served by
+    /// the AOT merge artifacts, which are baked for `i32` keys. The
+    /// returned [`XlaSeam`] witness is constructible **only** for
+    /// [`KeyedI32`] types, so an implementation cannot opt into the
+    /// route without the marker — the gate holds at compile time. The
+    /// default `None` routes every other instantiation native.
+    fn xla_seam() -> Option<XlaSeam<Self>> {
+        None
+    }
+}
+
+/// Marker + conversion pair for record types whose memory layout is
+/// exactly the `i32` keys the AOT XLA merge artifacts are baked for.
+/// Implementing it is what unlocks [`Record::xla_seam`]: the
+/// [`XlaSeam`] witness can only be built from these two conversions
+/// (its constructor is bounded on this trait), so non-`KeyedI32`
+/// instantiations can never reach the XLA backend.
+pub trait KeyedI32: Record {
+    /// View the records as the artifact's `i32` key buffer.
+    fn as_i32_keys(records: &[Self]) -> &[i32];
+
+    /// Rebuild records from the artifact's `i32` output buffer.
+    fn from_i32_keys(keys: Vec<i32>) -> Vec<Self>;
+}
+
+impl KeyedI32 for i32 {
+    #[inline]
+    fn as_i32_keys(records: &[Self]) -> &[i32] {
+        records
+    }
+
+    #[inline]
+    fn from_i32_keys(keys: Vec<i32>) -> Vec<Self> {
+        keys
+    }
+}
+
+/// Compile-time witness that a record type is XLA-servable: bundles
+/// the two [`KeyedI32`] conversions so a view can never exist without
+/// its way back (no half-implemented seam). Only constructible for
+/// `R: KeyedI32` — see [`Record::xla_seam`].
+#[derive(Clone, Copy)]
+pub struct XlaSeam<R: Record> {
+    view_fn: fn(&[R]) -> &[i32],
+    back_fn: fn(Vec<i32>) -> Vec<R>,
+}
+
+impl<R: KeyedI32> XlaSeam<R> {
+    /// Build the witness — the only way, and it requires the marker.
+    pub fn new() -> Self {
+        Self { view_fn: R::as_i32_keys, back_fn: R::from_i32_keys }
+    }
+}
+
+impl<R: KeyedI32> Default for XlaSeam<R> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<R: Record> XlaSeam<R> {
+    /// View records as the baked `i32` key buffer.
+    pub fn view<'a>(&self, records: &'a [R]) -> &'a [i32] {
+        (self.view_fn)(records)
+    }
+
+    /// Rebuild records from the artifact's output buffer.
+    pub fn back(&self, keys: Vec<i32>) -> Vec<R> {
+        (self.back_fn)(keys)
+    }
+}
+
+impl Record for i32 {
+    type Key = i32;
+
+    #[inline]
+    fn key(&self) -> &i32 {
+        self
+    }
+
+    const IS_SCALAR: bool = true;
+
+    #[inline]
+    fn xla_seam() -> Option<XlaSeam<Self>> {
+        Some(XlaSeam::new())
+    }
+}
+
+macro_rules! scalar_record {
+    ($($t:ty),* $(,)?) => {$(
+        impl Record for $t {
+            type Key = $t;
+
+            #[inline]
+            fn key(&self) -> &$t {
+                self
+            }
+
+            const IS_SCALAR: bool = true;
+        }
+    )*};
+}
+
+scalar_record!(i8, i16, i64, i128, isize, u8, u16, u32, u64, u128, usize, bool, char);
+
+/// Key-value pairs are records keyed on the first element; the second
+/// is opaque payload carried along by the merge.
+impl<K, V> Record for (K, V)
+where
+    K: Ord + Copy + Send + Sync + std::fmt::Debug + 'static,
+    V: Copy + Send + Sync + std::fmt::Debug + 'static,
+{
+    type Key = K;
+
+    #[inline]
+    fn key(&self) -> &K {
+        &self.0
+    }
+
+    const IS_SCALAR: bool = false;
+}
+
+macro_rules! float_key {
+    ($($(#[$doc:meta])* $name:ident($t:ty)),* $(,)?) => {$(
+        $(#[$doc])*
+        #[derive(Debug, Clone, Copy)]
+        pub struct $name(pub $t);
+
+        impl PartialEq for $name {
+            fn eq(&self, other: &Self) -> bool {
+                self.0.total_cmp(&other.0) == Ordering::Equal
+            }
+        }
+
+        impl Eq for $name {}
+
+        impl PartialOrd for $name {
+            fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+                Some(self.cmp(other))
+            }
+        }
+
+        impl Ord for $name {
+            fn cmp(&self, other: &Self) -> Ordering {
+                self.0.total_cmp(&other.0)
+            }
+        }
+
+        impl Record for $name {
+            type Key = $name;
+
+            #[inline]
+            fn key(&self) -> &$name {
+                self
+            }
+
+            const IS_SCALAR: bool = true;
+        }
+    )*};
+}
+
+float_key!(
+    /// A total-order `f32` key (IEEE 754 `totalOrder`): floats are not
+    /// `Ord`, so float-keyed workloads wrap them. `-NaN < -∞ < … <
+    /// -0.0 < +0.0 < … < +∞ < +NaN`; `Eq` agrees with the same order
+    /// (so `-0.0 != +0.0`, unlike raw `f32`).
+    F32Key(f32),
+    /// A total-order `f64` key; see [`F32Key`].
+    F64Key(f64),
+);
+
+/// Key-only ordering adapter: a `#[repr(transparent)]` newtype whose
+/// `Ord`/`Eq` compare the record's key and nothing else. This is how
+/// records flow through the `T: Ord` kernels in [`crate::mergepath`]
+/// without those kernels knowing about payloads — and why a stable
+/// kernel yields the run-then-offset tie order the typed API promises.
+///
+/// The casts below are zero-cost: `repr(transparent)` guarantees
+/// `ByKey<R>` and `R` have identical layout.
+#[derive(Debug, Clone, Copy)]
+#[repr(transparent)]
+pub struct ByKey<R: Record>(pub R);
+
+impl<R: Record> PartialEq for ByKey<R> {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.key() == other.0.key()
+    }
+}
+
+impl<R: Record> Eq for ByKey<R> {}
+
+impl<R: Record> PartialOrd for ByKey<R> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<R: Record> Ord for ByKey<R> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.key().cmp(other.0.key())
+    }
+}
+
+/// View a record slice through the key-only ordering (zero-cost).
+#[inline]
+pub fn as_keyed<R: Record>(records: &[R]) -> &[ByKey<R>] {
+    // SAFETY: ByKey<R> is #[repr(transparent)] over R.
+    unsafe { std::slice::from_raw_parts(records.as_ptr().cast(), records.len()) }
+}
+
+/// Mutable key-only view of a record slice (zero-cost).
+#[inline]
+pub fn as_keyed_mut<R: Record>(records: &mut [R]) -> &mut [ByKey<R>] {
+    // SAFETY: ByKey<R> is #[repr(transparent)] over R.
+    unsafe { std::slice::from_raw_parts_mut(records.as_mut_ptr().cast(), records.len()) }
+}
+
+/// Rewrap an owned record vector in the key-only ordering (zero-cost:
+/// the allocation is reused, nothing is copied).
+#[inline]
+pub fn into_keyed<R: Record>(records: Vec<R>) -> Vec<ByKey<R>> {
+    let mut v = std::mem::ManuallyDrop::new(records);
+    // SAFETY: ByKey<R> is #[repr(transparent)] over R (same size and
+    // alignment), and R: Copy means neither type has drop glue.
+    unsafe { Vec::from_raw_parts(v.as_mut_ptr().cast(), v.len(), v.capacity()) }
+}
+
+/// Unwrap a key-ordered vector back into plain records (zero-cost).
+#[inline]
+pub fn into_records<R: Record>(keyed: Vec<ByKey<R>>) -> Vec<R> {
+    let mut v = std::mem::ManuallyDrop::new(keyed);
+    // SAFETY: see into_keyed — the transparent cast in reverse.
+    unsafe { Vec::from_raw_parts(v.as_mut_ptr().cast(), v.len(), v.capacity()) }
+}
+
+/// True iff the records are sorted by key (the admission precondition
+/// for every merge/compaction input). Equal keys in any payload order
+/// are fine — ordering is key-only by contract.
+#[inline]
+pub fn is_sorted_by_key<R: Record>(records: &[R]) -> bool {
+    records.windows(2).all(|w| w[0].key() <= w[1].key())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_key_ignores_payload() {
+        let a = ByKey((5u64, 1u64));
+        let b = ByKey((5u64, 2u64));
+        let c = ByKey((6u64, 0u64));
+        assert_eq!(a, b, "payloads must not affect equality");
+        assert_eq!(a.cmp(&b), Ordering::Equal);
+        assert!(a < c);
+        assert!(!<(u64, u64) as Record>::IS_SCALAR);
+        assert!(<i32 as Record>::IS_SCALAR);
+    }
+
+    #[test]
+    fn casts_round_trip() {
+        let recs: Vec<(i64, u8)> = vec![(3, 1), (1, 2), (2, 3)];
+        let keyed = as_keyed(&recs);
+        assert_eq!(keyed.len(), 3);
+        assert!(keyed[1] < keyed[2]);
+        let mut owned = into_keyed(recs.clone());
+        owned.sort(); // stable, key-only
+        let back = into_records(owned);
+        assert_eq!(back, vec![(1i64, 2u8), (2, 3), (3, 1)]);
+        let mut recs = recs;
+        as_keyed_mut(&mut recs).sort();
+        assert_eq!(recs, back);
+    }
+
+    #[test]
+    fn sorted_by_key_allows_payload_disorder() {
+        assert!(is_sorted_by_key(&[(1u32, 9u32), (1, 2), (3, 0)]));
+        assert!(!is_sorted_by_key(&[(2u32, 0u32), (1, 0)]));
+        assert!(is_sorted_by_key::<i32>(&[]));
+        assert!(is_sorted_by_key(&[1i32, 1, 5]));
+        assert!(!is_sorted_by_key(&[2i32, 1]));
+    }
+
+    #[test]
+    fn float_keys_totally_ordered() {
+        let mut v = vec![
+            F64Key(f64::NAN),
+            F64Key(1.5),
+            F64Key(f64::NEG_INFINITY),
+            F64Key(-0.0),
+            F64Key(0.0),
+        ];
+        v.sort();
+        assert_eq!(v[0].0, f64::NEG_INFINITY);
+        assert!(v[1].0.is_sign_negative() && v[1].0 == 0.0, "-0.0 sorts before +0.0");
+        assert!(v[2].0.is_sign_positive() && v[2].0 == 0.0);
+        assert_eq!(v[3].0, 1.5);
+        assert!(v[4].0.is_nan(), "+NaN sorts last");
+        assert_ne!(F32Key(-0.0), F32Key(0.0), "Eq agrees with total order");
+        assert_eq!(F32Key(f32::NAN), F32Key(f32::NAN));
+    }
+
+    #[test]
+    fn xla_seam_is_i32_only() {
+        let seam = <i32 as Record>::xla_seam().expect("i32 carries the KeyedI32 seam");
+        let a = vec![1i32, 2, 3];
+        assert_eq!(seam.view(&a), a.as_slice());
+        assert_eq!(seam.back(a.clone()), a);
+        // Non-KeyedI32 records have no seam: the router must go native.
+        assert!(<(i32, i32) as Record>::xla_seam().is_none());
+        assert!(<i64 as Record>::xla_seam().is_none());
+        assert!(<F32Key as Record>::xla_seam().is_none());
+    }
+}

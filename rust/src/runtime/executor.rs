@@ -188,6 +188,25 @@ impl XlaExecutor {
             .find(|m| m.op == "merge" && m.n_a == n_a && m.n_b == n_b)
     }
 
+    /// Typed-record seam for the coordinator's router: run the named
+    /// artifact when `R`'s memory layout is exactly the baked `i32`
+    /// keys — i.e. when [`Record::xla_seam`] yields the witness only
+    /// [`KeyedI32`](crate::record::KeyedI32) types (today: `i32`) can
+    /// construct. `None` means no artifact can serve this record type
+    /// and the caller must route native; the gate is a compile-time
+    /// property of `R`, so routing is deterministic per instantiation.
+    ///
+    /// [`Record::xla_seam`]: crate::record::Record::xla_seam
+    pub fn merge_records<R: crate::record::Record>(
+        &self,
+        name: &str,
+        a: &[R],
+        b: &[R],
+    ) -> Option<Result<Vec<R>>> {
+        let seam = R::xla_seam()?;
+        Some(self.merge(name, seam.view(a), seam.view(b)).map(|out| seam.back(out)))
+    }
+
     /// Execute a merge on the executor thread (blocking rendezvous).
     ///
     /// Takes the inputs by reference so callers that may fall back to a

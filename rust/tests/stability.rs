@@ -1,0 +1,207 @@
+//! The typed-record stability contract, end to end: `(key, payload)`
+//! records with dense duplicate keys must come out of **every**
+//! compaction backend — sequential loser tree, flat single-pass k-way,
+//! rank-sharded, streamed session, pairwise-tree fallback — with
+//! payloads bit-identical to the stable sequential oracle (equal keys
+//! in run-index-then-offset order). Payloads encode provenance
+//! (`run << 32 | offset`), so any instability is visible in the output
+//! itself.
+
+use mergeflow::bench::workload::{gen_record_runs, WorkloadKind};
+use mergeflow::config::{Backend, MergeflowConfig};
+use mergeflow::coordinator::{JobKind, MergeService};
+use std::time::{Duration, Instant};
+
+type Rec = (u64, u64);
+
+fn base_config() -> MergeflowConfig {
+    MergeflowConfig {
+        workers: 2,
+        threads_per_job: 2,
+        queue_capacity: 256,
+        max_batch: 8,
+        batch_timeout_us: 100,
+        backend: Backend::Native,
+        segment_len: 0,
+        kway_flat_max_k: 64,
+        compact_sharding: false,
+        compact_shard_min_len: 0,
+        compact_chunk_len: 0,
+        compact_eager_min_len: 0,
+        artifacts_dir: "artifacts".into(),
+    }
+}
+
+/// The stable oracle: flatten in run order (offsets already ascending
+/// within a run), then stable-sort by key — ties end up in exactly
+/// (run index, offset) order.
+fn stable_oracle(runs: &[Vec<Rec>]) -> Vec<Rec> {
+    let mut v: Vec<Rec> = runs.iter().flatten().copied().collect();
+    v.sort_by_key(|r| r.0);
+    v
+}
+
+/// Dense-duplicate record runs: every key repeats `dup` times within a
+/// run and collides across all `k` runs.
+fn dup_runs(k: usize, run_len: usize, dup: usize) -> Vec<Vec<Rec>> {
+    (0..k)
+        .map(|run| {
+            (0..run_len)
+                .map(|off| ((off / dup) as u64, ((run as u64) << 32) | off as u64))
+                .collect()
+        })
+        .collect()
+}
+
+/// Property sweep over every workload kind and shape spread: the
+/// one-shot service output must equal the stable oracle bit for bit on
+/// the sequential ("native", small totals), flat k-way
+/// ("native-kway-typed"), and tree-fallback routes.
+#[test]
+fn one_shot_stability_across_workloads_and_routes() {
+    let svc = MergeService::<Rec>::start(base_config()).unwrap();
+    let mut tree_cfg = base_config();
+    tree_cfg.kway_flat_max_k = 4; // force the pairwise-tree fallback for k > 4
+    let tree_svc = MergeService::<Rec>::start(tree_cfg).unwrap();
+    for (w, kind) in WorkloadKind::all().iter().enumerate() {
+        for (case, &(k, run_len)) in
+            [(2usize, 600usize), (5, 1500), (8, 2000)].iter().enumerate()
+        {
+            let runs = gen_record_runs(*kind, k, run_len, 0x57AB + (w * 10 + case) as u64);
+            let expected = stable_oracle(&runs);
+            let res = svc.submit_blocking(JobKind::Compact { runs: runs.clone() }).unwrap();
+            assert_eq!(res.output, expected, "{kind:?} k={k} route={}", res.backend);
+            let res = tree_svc.submit_blocking(JobKind::Compact { runs }).unwrap();
+            assert_eq!(
+                res.output, expected,
+                "{kind:?} k={k} tree route={}",
+                res.backend
+            );
+            if k > 4 && k * run_len >= 4096 {
+                assert_eq!(res.backend, "native", "{kind:?} k={k} must take the tree");
+            }
+        }
+    }
+    // Dense duplicates through the flat engine: the hard case.
+    let runs = dup_runs(6, 3000, 64);
+    let expected = stable_oracle(&runs);
+    let res = svc.submit_blocking(JobKind::Compact { runs }).unwrap();
+    assert_eq!(res.backend, "native-kway-typed");
+    assert_eq!(res.output, expected, "flat engine must keep tie provenance");
+    svc.shutdown();
+    tree_svc.shutdown();
+}
+
+/// The rank-sharded route must stitch a stable result: shard cuts land
+/// *inside* duplicate tie groups, so any run-order mixup at a boundary
+/// would reorder payloads.
+#[test]
+fn sharded_route_is_stable_under_duplicates() {
+    let mut cfg = base_config();
+    cfg.compact_sharding = true;
+    cfg.compact_shard_min_len = 2048;
+    let svc = MergeService::<Rec>::start(cfg).unwrap();
+    let runs = dup_runs(6, 3000, 128);
+    let expected = stable_oracle(&runs);
+    let res = svc.submit_blocking(JobKind::Compact { runs }).unwrap();
+    assert_eq!(res.backend, "native-kway-sharded");
+    assert_eq!(res.output, expected, "shard boundaries must respect tie order");
+    assert!(svc.stats().compact_shards.get() >= 2);
+    // A duplicate-dense workload kind through the same route.
+    let runs = gen_record_runs(WorkloadKind::Skewed, 5, 4000, 77);
+    let expected = stable_oracle(&runs);
+    let res = svc.submit_blocking(JobKind::Compact { runs }).unwrap();
+    assert_eq!(res.output, expected);
+    svc.shutdown();
+}
+
+/// The streamed session path: chunked interleaved feeds of
+/// duplicate-heavy record runs, with at least one eager shard provably
+/// dispatched *before* `seal()` (the tie-aware frontier is what makes
+/// that possible — bare-key frontiers pin at 0 on all-duplicate keys),
+/// and output still bit-identical to the stable oracle.
+#[test]
+fn streamed_route_is_stable_and_overlaps_under_duplicates() {
+    let mut cfg = base_config();
+    cfg.compact_eager_min_len = 512;
+    let svc = MergeService::<Rec>::start(cfg).unwrap();
+    let k = 4usize;
+    let run_len = 4096usize;
+    // dup == run_len: every key of every run is identical — the
+    // worst case for the frontier, the sharpest case for stability.
+    let runs = dup_runs(k, run_len, run_len);
+    let expected = stable_oracle(&runs);
+    let mut session = svc.open_compaction(k).unwrap();
+    for chunk in 0..4 {
+        for (i, r) in runs.iter().enumerate() {
+            session
+                .feed(i, r[chunk * 1024..(chunk + 1) * 1024].to_vec())
+                .unwrap();
+        }
+    }
+    // All data admitted, nothing sealed: any eager shard is pre-seal.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while svc.stats().eager_shards.get() == 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(
+        svc.stats().eager_shards.get() >= 1,
+        "tie-aware frontier must settle the owner run's duplicates pre-seal"
+    );
+    for i in 0..k {
+        session.seal_run(i).unwrap();
+    }
+    let res = session.seal().unwrap().wait().unwrap();
+    assert_eq!(res.backend, "native-kway-streamed");
+    assert_eq!(res.output, expected, "streamed ties must keep provenance");
+    assert_eq!(svc.stats().completed.get(), 1);
+    svc.shutdown();
+}
+
+/// Acceptance: `MergeService<(u64, u64)>` compacts key-payload runs
+/// end-to-end through all three large-job paths — one-shot flat,
+/// sharded, and a streamed session — and all three agree with the
+/// stable sequential oracle bit for bit.
+#[test]
+fn typed_service_end_to_end_all_paths_agree() {
+    let runs = gen_record_runs(WorkloadKind::Skewed, 6, 5000, 0xACC);
+    let expected = stable_oracle(&runs);
+
+    // One-shot flat.
+    let flat_svc = MergeService::<Rec>::start(base_config()).unwrap();
+    let flat = flat_svc
+        .submit_blocking(JobKind::Compact { runs: runs.clone() })
+        .unwrap();
+    assert_eq!(flat.backend, "native-kway-typed");
+    assert_eq!(flat.output, expected);
+    flat_svc.shutdown();
+
+    // Sharded.
+    let mut cfg = base_config();
+    cfg.compact_sharding = true;
+    cfg.compact_shard_min_len = 4096;
+    let shard_svc = MergeService::<Rec>::start(cfg).unwrap();
+    let sharded = shard_svc
+        .submit_blocking(JobKind::Compact { runs: runs.clone() })
+        .unwrap();
+    assert_eq!(sharded.backend, "native-kway-sharded");
+    assert_eq!(sharded.output, expected);
+    shard_svc.shutdown();
+
+    // Streamed session (interleaved 500-record chunks).
+    let mut cfg = base_config();
+    cfg.compact_eager_min_len = 1024;
+    let stream_svc = MergeService::<Rec>::start(cfg).unwrap();
+    let mut session = stream_svc.open_compaction(runs.len()).unwrap();
+    for start in (0..5000).step_by(500) {
+        for (i, r) in runs.iter().enumerate() {
+            session.feed(i, r[start..start + 500].to_vec()).unwrap();
+        }
+    }
+    for i in 0..runs.len() {
+        session.seal_run(i).unwrap();
+    }
+    let streamed = session.seal().unwrap().wait().unwrap();
+    assert_eq!(streamed.output, expected, "route={}", streamed.backend);
+    stream_svc.shutdown();
+}

@@ -166,6 +166,43 @@ fn eager_shards_dispatch_before_seal() {
     svc.shutdown();
 }
 
+/// Heavy-duplicate ingest must still overlap: with every key equal
+/// across all runs nothing is ever *strictly below* the frontier, so
+/// the old bare-key frontier pinned at 0 and such sessions never
+/// streamed. The tie-aware frontier (per-run tie settling — see
+/// coordinator/session.rs) settles the owner run's duplicates, so
+/// eager shards launch before seal even here.
+#[test]
+fn duplicate_heavy_session_still_streams() {
+    let mut cfg = base_config();
+    cfg.compact_eager_min_len = 512;
+    let svc = MergeService::start(cfg).unwrap();
+    let k = 3usize;
+    let runs: Vec<Vec<i32>> = (0..k).map(|_| vec![7; 4096]).collect();
+    let mut session = svc.open_compaction(k).unwrap();
+    for chunk in 0..4 {
+        for (i, r) in runs.iter().enumerate() {
+            session.feed(i, r[chunk * 1024..(chunk + 1) * 1024].to_vec()).unwrap();
+        }
+    }
+    // All chunks admitted, nothing sealed: any eager shard is pre-seal.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while svc.stats().eager_shards.get() == 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(
+        svc.stats().eager_shards.get() >= 1,
+        "tie-aware frontier must settle duplicates and dispatch eagerly"
+    );
+    for i in 0..k {
+        session.seal_run(i).unwrap();
+    }
+    let res = session.seal().unwrap().wait().unwrap();
+    assert_eq!(res.backend, "native-kway-streamed");
+    assert_eq!(res.output, vec![7; k * 4096]);
+    svc.shutdown();
+}
+
 /// Sessions with no eager overlap fall back to the classic routing —
 /// same backends as a by-value submission, streaming purely additive.
 #[test]
@@ -188,7 +225,9 @@ fn no_overlap_session_degrades_to_classic_routing() {
 
 #[test]
 fn seal_with_zero_runs_yields_empty_output() {
-    let svc = MergeService::start(base_config()).unwrap();
+    // No data ever flows, so nothing pins the (defaulted) record type
+    // for inference — spell it.
+    let svc = MergeService::<i32>::start(base_config()).unwrap();
     let session = svc.open_compaction(0).unwrap();
     let res = session.seal().unwrap().wait().unwrap();
     assert!(res.output.is_empty());
