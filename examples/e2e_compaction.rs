@@ -36,7 +36,10 @@ fn main() {
         max_batch: 16,
         batch_timeout_us: 100,
         backend: Backend::Auto, // uses XLA artifacts when shapes fit
+        segmented: true,        // cache-efficient segmented routes on
         segment_len: 1 << 20,   // cache-efficient path for big merges
+        kway_segment_elems: 0,  // auto: C/(k+1) from cache_bytes below
+        cache_bytes: 1 << 20,   // pinned so the demo routes identically everywhere
         kway_flat_max_k: 128,   // flat single-pass engine for k-way compactions
         compact_sharding: true,
         compact_shard_min_len: 512 << 10, // rank-shard compactions above 1M keys
@@ -102,9 +105,11 @@ fn main() {
     }
 
     // Phase 2 — k-way compactions of fresh batches through single jobs.
-    // Both shapes take the flat single-pass engine (k ≤ kway_flat_max_k):
-    // every worker thread merges its equisized slice of the output in
-    // one pass instead of the ⌈log₂ k⌉ passes of the old pairwise tree.
+    // Both shapes take the *segmented* flat single-pass engine
+    // (k ≤ kway_flat_max_k, and the jobs span at least two auto-sized
+    // path windows): every worker thread merges its equisized slice of
+    // the output in one pass, walked in (k+1)·L-bounded windows so the
+    // live windows stay cache-resident.
     for k in [7usize, 16] {
         let kway: Vec<Vec<i32>> = (0..k)
             .map(|_| sorted_run(rng.next_u64(), 32 << 10))
@@ -117,9 +122,12 @@ fn main() {
             .submit_blocking(JobKind::Compact { runs: kway })
             .expect("compact job");
         assert_eq!(res.output, expected, "compaction output mismatch (k={k})");
-        assert_eq!(res.backend, "native-kway", "expected the flat k-way engine");
+        assert_eq!(
+            res.backend, "native-kway-segmented",
+            "expected the segmented flat k-way engine"
+        );
         println!(
-            "{k}-way compaction: {} keys in {} via {} (single pass)",
+            "{k}-way compaction: {} keys in {} via {} (single segmented pass)",
             kway_total,
             fmt_ns(res.latency_ns),
             res.backend
@@ -216,7 +224,10 @@ fn main() {
             max_batch: 16,
             batch_timeout_us: 100,
             backend: Backend::Native,
+            segmented: true,
             segment_len: 0,
+            kway_segment_elems: 0,
+            cache_bytes: 1 << 20,
             kway_flat_max_k: 64,
             compact_sharding: true,
             compact_shard_min_len: 128 << 10,

@@ -1,0 +1,125 @@
+//! Segmented flat k-way merge vs the unsegmented flat engine — the
+//! k-way extension of `ablation_segment_len.rs` / `fig8_segmented_ratio.rs`.
+//!
+//! Two views:
+//! 1. **Simulated cache misses** (k × segment length) on the scaled
+//!    12-core machine: the flat engine streams `k + 1` unbounded
+//!    sequences per thread and its argmin inner loop re-reads every
+//!    live head per output, so once the `k + 1` live lines outrun the
+//!    private cache every touch misses; the segmented engine's bounded
+//!    kernel touches each element once and bounds a window's working
+//!    set at `(k+1)·L`. The L sweep shows the U-shape: tiny L drowns
+//!    in per-window head refills, huge L loses nothing in this model
+//!    but forfeits the residency bound the real hardware cares about.
+//! 2. **Real wallclock** (k × run length × segment length) for the two
+//!    engines on this host, bit-identity cross-checked per shape.
+//!
+//! Env: MERGEFLOW_BENCH_N = total merged elements (default 4M),
+//!      MERGEFLOW_BENCH_KIND = uniform|skewed|one-sided|interleaved|runs.
+use mergeflow::bench::figures::sim_scale;
+use mergeflow::bench::harness::{report_line, BenchTimer, Table};
+use mergeflow::bench::workload::{gen_sorted_runs, WorkloadKind};
+use mergeflow::mergepath::{
+    loser_tree_merge, parallel_kway_merge, segmented_kway_merge, KwaySegmentedConfig,
+};
+use mergeflow::sim::engine::{simulate_kway_merge, KwayMergeAlgo};
+use mergeflow::sim::machine::x5670_12;
+use mergeflow::sim::stream::Stage;
+
+fn main() {
+    let scale = sim_scale();
+    let machine = x5670_12().scaled_caches(scale);
+    let l3_elems = machine.mem.l3.capacity / 4;
+    let p = 8usize;
+
+    // --- Simulated miss sweep: k × L ---------------------------------
+    let sim_run_len = ((1usize << 20) / scale).clamp(1 << 12, 1 << 17);
+    let mut t = Table::new(
+        &format!(
+            "Segmented vs flat k-way — simulated L1 misses ({sim_run_len} per run, p={p}, scaled L3 = {l3_elems} elems)"
+        ),
+        &["k", "flat", "seg L=C/(k+1)", "seg L/4", "seg 4L", "flat/seg ratio"],
+    );
+    for k in [4usize, 8, 12, 16] {
+        let runs = gen_sorted_runs(WorkloadKind::Uniform, k, sim_run_len, 7);
+        let refs: Vec<&[i32]> = runs.iter().map(|r| r.as_slice()).collect();
+        let auto_l = (l3_elems / (k + 1)).max(64);
+        let miss = |algo: KwayMergeAlgo| {
+            simulate_kway_merge(&machine, algo, &refs, true, Stage::Both, p)
+                .mem
+                .l1
+                .misses()
+        };
+        let flat = miss(KwayMergeAlgo::Flat);
+        let seg = miss(KwayMergeAlgo::Segmented { segment_elems: auto_l });
+        let seg_small = miss(KwayMergeAlgo::Segmented { segment_elems: (auto_l / 4).max(16) });
+        let seg_large = miss(KwayMergeAlgo::Segmented { segment_elems: auto_l * 4 });
+        t.row(&[
+            k.to_string(),
+            flat.to_string(),
+            seg.to_string(),
+            seg_small.to_string(),
+            seg_large.to_string(),
+            format!("{:.2}", flat as f64 / seg.max(1) as f64),
+        ]);
+    }
+    t.print();
+    println!("ratios > 1 mean the segmented engine misses less; the gap opens once k + 1 stream lines outrun the scaled private L1");
+
+    // --- Real wallclock sweep: k × run length × L --------------------
+    let n_total: usize = std::env::var("MERGEFLOW_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4usize << 20);
+    let kind = std::env::var("MERGEFLOW_BENCH_KIND")
+        .ok()
+        .and_then(|v| WorkloadKind::parse(&v))
+        .unwrap_or(WorkloadKind::Uniform);
+    let timer = BenchTimer::quick();
+    println!("\nworkload: {} x {n_total} total elements", kind.name());
+    for k in [4usize, 12, 32] {
+        for run_len in [n_total / k, n_total / k / 8] {
+            let runs = gen_sorted_runs(kind, k, run_len.max(1), 42);
+            let refs: Vec<&[i32]> = runs.iter().map(|r| r.as_slice()).collect();
+            let total: usize = refs.iter().map(|r| r.len()).sum();
+            println!("\n--- k = {k} runs of {} ({total} total) ---", total / k);
+            for p in [1usize, 4, 8] {
+                let m = timer.measure(|| {
+                    let mut out = vec![0i32; total];
+                    parallel_kway_merge(&refs, &mut out, p, None);
+                    std::hint::black_box(&out);
+                });
+                println!("{}", report_line(&format!("flat p={p}"), &m, total as u64));
+                // L sweep around the L2-resident pick (256 KiB / 4B / (k+1)).
+                let l2_elems = (256usize << 10) / 4;
+                for l in [l2_elems / (k + 1), 4 * l2_elems / (k + 1), 1 << 16] {
+                    let cfg = KwaySegmentedConfig { segment_elems: l.max(64), threads: p };
+                    let m = timer.measure(|| {
+                        let mut out = vec![0i32; total];
+                        segmented_kway_merge(&refs, &mut out, cfg, None);
+                        std::hint::black_box(&out);
+                    });
+                    println!(
+                        "{}",
+                        report_line(
+                            &format!("seg  p={p} L={}", cfg.segment_elems),
+                            &m,
+                            total as u64
+                        )
+                    );
+                }
+            }
+            // Cross-check once per shape: segmented == sequential loser tree.
+            let mut seq = vec![0i32; total];
+            loser_tree_merge(&refs, &mut seq);
+            let mut out = vec![0i32; total];
+            segmented_kway_merge(
+                &refs,
+                &mut out,
+                KwaySegmentedConfig { segment_elems: 1 << 14, threads: 8 },
+                None,
+            );
+            assert_eq!(seq, out, "segmented engine diverged at k={k}");
+        }
+    }
+}

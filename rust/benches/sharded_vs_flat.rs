@@ -36,7 +36,11 @@ fn service(compact_shard_min_len: usize) -> MergeService {
         max_batch: 32,
         batch_timeout_us: 100,
         backend: Backend::Native,
+        // Unsegmented engines: this bench isolates sharded-vs-flat.
+        segmented: false,
         segment_len: 0,
+        kway_segment_elems: 0,
+        cache_bytes: 0,
         kway_flat_max_k: 128,
         compact_sharding: compact_shard_min_len != 0,
         compact_shard_min_len,

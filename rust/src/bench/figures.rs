@@ -7,8 +7,11 @@
 //! the default scale of 64 (1 = paper-size arrays; slow).
 
 use super::harness::{fmt_elems, fmt_speedup, Table};
-use super::workload::{gen_sorted_pair, WorkloadKind};
-use crate::sim::engine::{simulate_merge, speedup_curve, MergeAlgo, SimWorkload};
+use super::workload::{gen_sorted_pair, gen_sorted_runs, WorkloadKind};
+use crate::sim::engine::{
+    simulate_kway_merge, simulate_merge, speedup_curve, KwayMergeAlgo, MergeAlgo,
+    SimWorkload,
+};
 use crate::sim::hypercore::{hypercore_fpga32, hypercore_speedup_curve, simulate_hypercore};
 use crate::sim::machine::{e7_8870_40, table2_rows, x5670_12};
 use crate::sim::stream::Stage;
@@ -209,6 +212,56 @@ pub fn table1(scale: usize) -> Table {
     t
 }
 
+/// Table 1 companion for the compaction hot path: cache misses of the
+/// **flat k-way engine vs its segmented variant** on a cache-busting
+/// shape — `k + 1` live stream lines exceeding the scaled private L1,
+/// where the flat argmin's per-output head re-reads thrash while the
+/// segmented engine's bounded kernel touches each element once
+/// (`(k+1)·L` working set, §4.3 generalised). Partition stage is the
+/// same `p − 1` rank selections for both.
+pub fn table1_kway(scale: usize) -> Table {
+    let machine = x5670_12().scaled_caches(scale);
+    let run_len = ((1usize << 20) / scale).clamp(1 << 12, 1 << 17);
+    let k = 12usize; // argmin regime; k + 1 = 13 lines > the scaled L1
+    let p = 8usize;
+    let runs = gen_sorted_runs(WorkloadKind::Uniform, k, run_len, SEED);
+    let refs: Vec<&[i32]> = runs.iter().map(|r| r.as_slice()).collect();
+    let l3_elems = machine.mem.l3.capacity / 4;
+    let auto_l = (l3_elems / (k + 1)).max(64);
+    let algos: Vec<(String, KwayMergeAlgo)> = vec![
+        ("flat (unsegmented)".into(), KwayMergeAlgo::Flat),
+        (
+            format!("segmented L=C/(k+1)={auto_l}"),
+            KwayMergeAlgo::Segmented { segment_elems: auto_l },
+        ),
+        (
+            format!("segmented L={}", auto_l * 8),
+            KwayMergeAlgo::Segmented { segment_elems: auto_l * 8 },
+        ),
+    ];
+    let mut t = Table::new(
+        &format!(
+            "Table 1b — k-way engine cache misses (k={k}, {} per run, p={p}, scale 1/{scale})",
+            fmt_elems(run_len)
+        ),
+        &["engine", "partition stage", "merge stage", "total", "dram bytes"],
+    );
+    for (name, algo) in algos {
+        let part = simulate_kway_merge(&machine, algo, &refs, true, Stage::Partition, p);
+        let both = simulate_kway_merge(&machine, algo, &refs, true, Stage::Both, p);
+        let pm = part.mem.l1.misses();
+        let tm = both.mem.l1.misses();
+        t.row(&[
+            name,
+            pm.to_string(),
+            tm.saturating_sub(pm).to_string(),
+            tm.to_string(),
+            both.mem.dram_bytes().to_string(),
+        ]);
+    }
+    t
+}
+
 /// Table 2: the systems (simulated geometries).
 pub fn table2() -> Table {
     let mut t = Table::new(
@@ -341,6 +394,37 @@ mod tests {
             "SPM total {} vs MP {}\n{r}",
             totals[3],
             totals[2]
+        );
+    }
+
+    #[test]
+    fn table1_kway_segmented_reduces_misses() {
+        // The segmented k-way acceptance claim, pinned at test scale:
+        // on the cache-busting shape (k + 1 live lines > the scaled
+        // private L1) the segmented engine's total simulated misses
+        // must land decisively below the unsegmented flat engine's.
+        let t = table1_kway(TEST_SCALE);
+        let r = t.render();
+        let totals: Vec<u64> = r
+            .lines()
+            .skip(4) // blank, title, header, rule
+            .map(|l| {
+                let cols: Vec<&str> = l.split_whitespace().collect();
+                cols[cols.len() - 2].parse().unwrap()
+            })
+            .collect();
+        assert_eq!(totals.len(), 3);
+        assert!(
+            totals[1] * 2 < totals[0],
+            "segmented {} vs flat {} total misses\n{r}",
+            totals[1],
+            totals[0]
+        );
+        assert!(
+            totals[2] * 2 < totals[0],
+            "large-L segmented {} vs flat {}\n{r}",
+            totals[2],
+            totals[0]
         );
     }
 

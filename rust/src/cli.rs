@@ -5,7 +5,7 @@
 //! mergeflow sort    --n 16M --threads 8 [--cache-elems C]
 //! mergeflow serve   [--config mergeflow.toml] [--jobs N]
 //! mergeflow figure  fig4|fig5|fig7|fig8 [--scale S]
-//! mergeflow table   table1|table2 [--scale S]
+//! mergeflow table   table1|table1b|table2 [--scale S]
 //! mergeflow probe   [--scale S]
 //! mergeflow artifacts [--dir artifacts]
 //! ```
@@ -105,7 +105,7 @@ USAGE:
   mergeflow sort    --n <SIZE> [--threads P] [--cache-elems C] [--seed S]
   mergeflow serve   [--config FILE] [--jobs N] [--job-size SIZE]
   mergeflow figure  <fig4|fig5|fig7|fig8> [--scale S]
-  mergeflow table   <table1|table2> [--scale S]
+  mergeflow table   <table1|table1b|table2> [--scale S]
   mergeflow probe   [--scale S]
   mergeflow artifacts [--dir DIR]
   mergeflow help

@@ -146,8 +146,43 @@ pub struct MergeflowConfig {
     pub batch_timeout_us: u64,
     /// Execution backend.
     pub backend: Backend,
-    /// Segment length for cache-efficient merging (elements); 0 = off.
+    /// Whether the cache-efficient segmented routes (pairwise Alg 3 and
+    /// the segmented flat k-way engine) are enabled at all. When
+    /// `false`, [`segment_len`](Self::segment_len) and
+    /// [`kway_segment_elems`](Self::kway_segment_elems) are inert and
+    /// every job takes the unsegmented engines.
+    ///
+    /// **Migration note:** before the segmented k-way change,
+    /// "segmented merging off" was spelled `segment_len = 0`; that
+    /// value now means *auto-size* from the cache (unified with
+    /// `kway_segment_elems` — both `*_len` knobs read `0 = auto`, off
+    /// lives here), exactly the `compact_shard_min_len` →
+    /// `compact_sharding` migration pattern. Old configs that relied on
+    /// `segment_len = 0` to disable the segmented route must set
+    /// `merge.segmented = false` instead.
+    pub segmented: bool,
+    /// Path-segment length `L` (elements) for the pairwise segmented
+    /// merge (Alg 3): a `Merge` job routes segmented when its output
+    /// has at least `2·L` elements. **0 means auto**: `C/3` per
+    /// Prop. 15, with `C` the configured/detected cache size in
+    /// elements (see [`cache_bytes`](Self::cache_bytes)). Disable the
+    /// route with [`segmented`](Self::segmented)` = false`.
     pub segment_len: usize,
+    /// Path-window length `L` (output elements) for the segmented flat
+    /// k-way engine: a `Compact` job within the flat engine's range
+    /// routes segmented when its output has at least `2·L` elements,
+    /// and the rank-sharded / streamed sub-merges window themselves the
+    /// same way. **0 means auto**: `C/(k+1)` — the k-way Prop. 15 pick,
+    /// sized per job from its run count `k` — with `C` the
+    /// configured/detected cache size in elements. Disable with
+    /// [`segmented`](Self::segmented)` = false`.
+    pub kway_segment_elems: usize,
+    /// Cache capacity (bytes) the auto-sized segment lengths are
+    /// derived from. **0 means detect**: the largest data/unified cache
+    /// level reported by the OS (`/sys/devices/system/cpu/.../cache`),
+    /// falling back to 8 MiB when detection is unavailable. The value
+    /// is clamped to `[64 KiB, 1 GiB]` either way.
+    pub cache_bytes: usize,
     /// Largest run count `k` served by the flat single-pass k-way merge
     /// engine (`mergepath::kway_path`) — and by the rank-sharded route,
     /// which runs the same per-shard k-way kernel; compactions with
@@ -216,7 +251,10 @@ impl Default for MergeflowConfig {
             max_batch: 32,
             batch_timeout_us: 200,
             backend: Backend::Native,
+            segmented: true,
             segment_len: 0,
+            kway_segment_elems: 0,
+            cache_bytes: 0,
             kway_flat_max_k: 128,
             compact_sharding: true,
             compact_shard_min_len: 2 << 20,
@@ -239,7 +277,11 @@ impl MergeflowConfig {
             batch_timeout_us: raw.get_usize("batcher.timeout_us", d.batch_timeout_us as usize)?
                 as u64,
             backend: raw.get_str("service.backend", "native").parse()?,
+            segmented: raw.get_bool("merge.segmented", d.segmented)?,
             segment_len: raw.get_usize("merge.segment_len", d.segment_len)?,
+            kway_segment_elems: raw
+                .get_usize("merge.kway_segment_elems", d.kway_segment_elems)?,
+            cache_bytes: raw.get_usize("merge.cache_bytes", d.cache_bytes)?,
             kway_flat_max_k: raw.get_usize("merge.kway_flat_max_k", d.kway_flat_max_k)?,
             compact_sharding: raw.get_bool("merge.compact_sharding", d.compact_sharding)?,
             compact_shard_min_len: raw
@@ -256,6 +298,75 @@ impl MergeflowConfig {
     /// Load from a TOML file.
     pub fn from_file(path: &std::path::Path) -> Result<Self> {
         Self::from_raw(&RawConfig::from_file(path)?)
+    }
+
+    /// Cache capacity in *elements of `elem_bytes` each* that the
+    /// segmented routes size their windows from:
+    /// [`cache_bytes`](Self::cache_bytes) when configured, the detected
+    /// cache otherwise (see [`detected_cache_bytes`]).
+    pub fn cache_elems(&self, elem_bytes: usize) -> usize {
+        let bytes = if self.cache_bytes > 0 {
+            self.cache_bytes.clamp(CACHE_BYTES_MIN, CACHE_BYTES_MAX)
+        } else {
+            detected_cache_bytes()
+        };
+        (bytes / elem_bytes.max(1)).max(6)
+    }
+
+    /// Effective pairwise path-segment length for records of
+    /// `elem_bytes` bytes: the configured
+    /// [`segment_len`](Self::segment_len), or `C/3` (Prop. 15, via
+    /// [`SegmentedConfig::for_cache`](crate::mergepath::SegmentedConfig::for_cache))
+    /// when auto. The pairwise engine's windows are *cooperative* — all
+    /// of a job's threads work inside one window — so the whole cache
+    /// budget goes to that job's one live window set; this is the
+    /// paper's Prop. 15 sizing verbatim. It is a **per-job** budget:
+    /// when several large segmented `Merge` jobs run concurrently their
+    /// window sets compete for the same cache (the paper sizes a single
+    /// merge). Operators running many concurrent large merges should
+    /// lower [`cache_bytes`](Self::cache_bytes) or pin `segment_len`
+    /// accordingly — the k-way auto sizing divides by the walker count
+    /// instead because its walkers are *always* concurrent, even within
+    /// one job. **0 means the segmented route is disabled**
+    /// ([`segmented`](Self::segmented)` = false`).
+    pub fn effective_segment_len(&self, elem_bytes: usize) -> usize {
+        if !self.segmented {
+            return 0;
+        }
+        if self.segment_len > 0 {
+            return self.segment_len;
+        }
+        crate::mergepath::SegmentedConfig::for_cache(self.cache_elems(elem_bytes), 1)
+            .segment_len
+    }
+
+    /// Effective k-way path-window length for a compaction of `k` runs
+    /// of `elem_bytes`-byte records: the configured
+    /// [`kway_segment_elems`](Self::kway_segment_elems), or — when auto
+    /// — `(C/w)/(k+1)`, the k-way Prop. 15 pick (via
+    /// [`KwaySegmentedConfig::for_cache`](crate::mergepath::KwaySegmentedConfig::for_cache))
+    /// applied to a **per-walker share** of the cache. Unlike the
+    /// pairwise engine, the segmented k-way engine windows each
+    /// thread's rank segment *independently* (and rank/stream shards
+    /// window concurrently on separate workers), so up to
+    /// `w = max(workers, threads_per_job)` window sets are live at
+    /// once; dividing `C` by `w` keeps their combined footprint within
+    /// the cache instead of `w×` over it. **0 means the segmented
+    /// route is disabled** ([`segmented`](Self::segmented)` = false`).
+    pub fn effective_kway_segment_elems(&self, elem_bytes: usize, k: usize) -> usize {
+        if !self.segmented {
+            return 0;
+        }
+        if self.kway_segment_elems > 0 {
+            return self.kway_segment_elems;
+        }
+        let walkers = self.workers.max(self.threads_per_job).max(1);
+        crate::mergepath::KwaySegmentedConfig::for_cache(
+            self.cache_elems(elem_bytes) / walkers,
+            k,
+            1,
+        )
+        .segment_elems
     }
 
     /// Check invariants.
@@ -276,6 +387,74 @@ impl MergeflowConfig {
     }
 }
 
+/// Bounds applied to both configured and detected cache sizes, so a
+/// misread sysfs entry (or an absurd knob) can never produce degenerate
+/// or overflowing window lengths.
+const CACHE_BYTES_MIN: usize = 64 << 10;
+const CACHE_BYTES_MAX: usize = 1 << 30;
+/// Assumed last-level cache when detection is unavailable (a
+/// conservative modern-server L3 slice).
+const CACHE_BYTES_FALLBACK: usize = 8 << 20;
+
+/// Byte capacity of the largest data/unified cache level reported by
+/// the OS (Linux sysfs), clamped to `[64 KiB, 1 GiB]`; the 8 MiB
+/// fallback when nothing is readable (non-Linux, sandboxes). Detected
+/// once and cached for the process — this feeds the `0 = auto` sizing
+/// of [`MergeflowConfig::segment_len`] and
+/// [`MergeflowConfig::kway_segment_elems`].
+pub fn detected_cache_bytes() -> usize {
+    use std::sync::OnceLock;
+    static DETECTED: OnceLock<usize> = OnceLock::new();
+    *DETECTED.get_or_init(|| {
+        sysfs_largest_cache()
+            .unwrap_or(CACHE_BYTES_FALLBACK)
+            .clamp(CACHE_BYTES_MIN, CACHE_BYTES_MAX)
+    })
+}
+
+/// Scan `/sys/devices/system/cpu/cpu0/cache/index*` for the largest
+/// `Data`/`Unified` level. Returns `None` when the tree is missing or
+/// unparsable (the caller falls back).
+fn sysfs_largest_cache() -> Option<usize> {
+    let base = std::path::Path::new("/sys/devices/system/cpu/cpu0/cache");
+    let mut largest: Option<usize> = None;
+    for entry in std::fs::read_dir(base).ok()? {
+        let path = match entry {
+            Ok(e) => e.path(),
+            Err(_) => continue,
+        };
+        if !path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .is_some_and(|n| n.starts_with("index"))
+        {
+            continue;
+        }
+        let read = |f: &str| std::fs::read_to_string(path.join(f)).ok();
+        let ty = read("type").unwrap_or_default();
+        if !matches!(ty.trim(), "Data" | "Unified") {
+            continue;
+        }
+        let Some(bytes) = read("size").and_then(|s| parse_cache_size(s.trim())) else {
+            continue;
+        };
+        largest = Some(largest.map_or(bytes, |l| l.max(bytes)));
+    }
+    largest
+}
+
+/// Parse sysfs cache-size spellings: `32K`, `12288K`, `8M`, plain
+/// bytes.
+fn parse_cache_size(s: &str) -> Option<usize> {
+    let (digits, mult) = match s.as_bytes().last()? {
+        b'K' | b'k' => (&s[..s.len() - 1], 1usize << 10),
+        b'M' | b'm' => (&s[..s.len() - 1], 1usize << 20),
+        b'G' | b'g' => (&s[..s.len() - 1], 1usize << 30),
+        _ => (s, 1usize),
+    };
+    digits.parse::<usize>().ok().map(|v| v.saturating_mul(mult))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -293,7 +472,10 @@ max_batch = 64
 timeout_us = 150
 
 [merge]
+segmented = true
 segment_len = 4096
+kway_segment_elems = 2048
+cache_bytes = 1048576
 kway_flat_max_k = 32
 compact_sharding = false
 compact_shard_min_len = 65536
@@ -310,7 +492,10 @@ compact_eager_min_len = 16384
         let cfg = MergeflowConfig::from_raw(&raw).unwrap();
         assert_eq!(cfg.workers, 8);
         assert_eq!(cfg.backend, Backend::Auto);
+        assert!(cfg.segmented);
         assert_eq!(cfg.segment_len, 4096);
+        assert_eq!(cfg.kway_segment_elems, 2048);
+        assert_eq!(cfg.cache_bytes, 1 << 20);
         assert_eq!(cfg.kway_flat_max_k, 32);
         assert!(!cfg.compact_sharding);
         assert_eq!(cfg.compact_shard_min_len, 65536);
@@ -358,6 +543,65 @@ compact_eager_min_len = 16384
     fn comments_and_quotes() {
         let raw = RawConfig::parse("name = \"a # not comment\" # real comment\n").unwrap();
         assert_eq!(raw.get("name"), Some("a # not comment"));
+    }
+
+    #[test]
+    fn segmented_auto_sizing_and_off_switch() {
+        // Explicit lengths pass through untouched.
+        let cfg = MergeflowConfig {
+            segment_len: 4096,
+            kway_segment_elems: 512,
+            ..Default::default()
+        };
+        assert_eq!(cfg.effective_segment_len(4), 4096);
+        assert_eq!(cfg.effective_kway_segment_elems(4, 7), 512);
+        // Auto: C/3 pairwise (cooperative windows, full cache budget);
+        // (C/w)/(k+1) k-way (w = max(workers, threads_per_job) = 4 on
+        // the default config — independent per-thread/per-shard window
+        // walkers share the cache).
+        let auto = MergeflowConfig { cache_bytes: 1 << 20, ..Default::default() };
+        assert_eq!(auto.cache_elems(4), (1 << 20) / 4);
+        assert_eq!(auto.effective_segment_len(4), (1 << 20) / 4 / 3);
+        assert_eq!(auto.effective_kway_segment_elems(4, 7), (1 << 20) / 4 / 4 / 8);
+        // Wider records shrink the element capacity proportionally.
+        assert_eq!(auto.cache_elems(16), (1 << 20) / 16);
+        // k = 0/1 degenerate divisors floored at 2.
+        assert_eq!(auto.effective_kway_segment_elems(4, 0), (1 << 20) / 4 / 4 / 2);
+        // More walkers shrink the per-walker window share.
+        let wide = MergeflowConfig {
+            cache_bytes: 1 << 20,
+            workers: 8,
+            threads_per_job: 2,
+            ..Default::default()
+        };
+        assert_eq!(wide.effective_kway_segment_elems(4, 7), (1 << 20) / 4 / 8 / 8);
+        // merge.segmented = false turns both routes off regardless of
+        // the length knobs (the unified off switch).
+        let off = MergeflowConfig {
+            segmented: false,
+            segment_len: 4096,
+            kway_segment_elems: 512,
+            ..Default::default()
+        };
+        assert_eq!(off.effective_segment_len(4), 0);
+        assert_eq!(off.effective_kway_segment_elems(4, 7), 0);
+        // Configured cache bytes are clamped to sane bounds.
+        let tiny = MergeflowConfig { cache_bytes: 1, ..Default::default() };
+        assert_eq!(tiny.cache_elems(4), (64 << 10) / 4);
+        // Detection never reports a degenerate size (clamp + fallback).
+        let d = detected_cache_bytes();
+        assert!((64 << 10..=1 << 30).contains(&d), "detected {d}");
+    }
+
+    #[test]
+    fn cache_size_spellings_parse() {
+        assert_eq!(parse_cache_size("32K"), Some(32 << 10));
+        assert_eq!(parse_cache_size("12288K"), Some(12288 << 10));
+        assert_eq!(parse_cache_size("8M"), Some(8 << 20));
+        assert_eq!(parse_cache_size("1G"), Some(1 << 30));
+        assert_eq!(parse_cache_size("65536"), Some(65536));
+        assert_eq!(parse_cache_size(""), None);
+        assert_eq!(parse_cache_size("zebra"), None);
     }
 
     #[test]

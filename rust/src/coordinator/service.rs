@@ -31,8 +31,9 @@ use super::stats::ServiceStats;
 use crate::config::{Backend, MergeflowConfig};
 use crate::exec::WorkerPool;
 use crate::mergepath::{
-    parallel_kway_merge, parallel_merge, parallel_merge_sort_with_pool,
-    segmented_parallel_merge, SegmentedConfig,
+    parallel_kway_merge, parallel_merge_sort_with_pool, parallel_merge_with_pool,
+    segmented_kway_merge, segmented_parallel_merge_with_pool, KwaySegmentedConfig,
+    SegmentedConfig,
 };
 use crate::record::{self, ByKey, Record};
 use crate::runtime::XlaExecutor;
@@ -507,7 +508,7 @@ fn execute_job<R: Record>(
     let t0 = Instant::now();
     let elements = job.kind.input_len() as u64;
     let (output, backend) = match job.kind {
-        JobKind::Merge { a, b } => run_merge(cfg, runtime, a, b),
+        JobKind::Merge { a, b } => run_merge(cfg, runtime, a, b, pool),
         JobKind::Sort { mut data } => {
             // Sorts run on the persistent pool like the compaction
             // engines (we are already on one of its workers; the
@@ -554,11 +555,18 @@ fn execute_job<R: Record>(
 /// it is actually taken. Non-`i32` record types can never take the XLA
 /// route ([`XlaExecutor::merge_records`] returns `None` for them), so
 /// typed traffic routes native deterministically.
+///
+/// Both native routes run on the coordinator's persistent `pool` (we
+/// are already on one of its workers; the helping scoped wait makes
+/// the nested fork-joins sound) — the segmented route in particular
+/// fork-joins once **per path segment**, so the pool is what keeps an
+/// `N/L`-segment job from spawning `N/L·(p−1)` scoped threads.
 fn run_merge<R: Record>(
     cfg: &MergeflowConfig,
     runtime: Option<&XlaExecutor>,
     a: Vec<R>,
     b: Vec<R>,
+    pool: &WorkerPool,
 ) -> (Vec<R>, &'static str) {
     // XLA route: exact-shape artifact required (XLA shapes are static).
     if matches!(cfg.backend, Backend::Xla | Backend::Auto) {
@@ -596,16 +604,18 @@ fn run_merge<R: Record>(
     // Fully tiled by the merge below (see crate::uninit_vec).
     let mut out: Vec<ByKey<R>> = crate::uninit_vec(a.len() + b.len());
     let (ka, kb) = (record::as_keyed(&a), record::as_keyed(&b));
-    if cfg.segment_len > 0 && out.len() >= 2 * cfg.segment_len {
-        segmented_parallel_merge(
+    let seg = cfg.effective_segment_len(std::mem::size_of::<R>());
+    if seg > 0 && out.len() >= 2 * seg {
+        segmented_parallel_merge_with_pool(
+            pool,
             ka,
             kb,
             &mut out,
-            SegmentedConfig { segment_len: cfg.segment_len, threads: cfg.threads_per_job },
+            SegmentedConfig { segment_len: seg, threads: cfg.threads_per_job },
         );
         (record::into_records(out), "native-segmented")
     } else {
-        parallel_merge(ka, kb, &mut out, cfg.threads_per_job);
+        parallel_merge_with_pool(pool, ka, kb, &mut out, cfg.threads_per_job);
         (record::into_records(out), "native")
     }
 }
@@ -616,13 +626,24 @@ fn run_merge<R: Record>(
 ///
 /// 1. sequential loser tree for small jobs or `threads_per_job == 1`
 ///    (one pass, no parallel setup cost) — backend `"native"`;
-/// 2. the flat single-pass k-way engine
-///    ([`mergepath::kway_path`](crate::mergepath::kway_path)) for
-///    `2 ≤ k ≤ kway_flat_max_k` — one pass over memory instead of the
-///    tree's `⌈log₂ k⌉`, backend `"native-kway"` (scalar records) or
-///    `"native-kway-typed"` (payload-carrying records, so typed
-///    traffic is visible in the stats);
-/// 3. the pairwise Merge-Path tree beyond the flat engine's configured
+/// 2. within the flat engine's range (`2 ≤ k ≤ kway_flat_max_k`), the
+///    **segmented** flat k-way engine
+///    ([`segmented_kway_merge`](crate::mergepath::segmented_kway_merge))
+///    when segmented merging is enabled and the job spans at least two
+///    path windows (`merge.kway_segment_elems`, `0 =` auto per-walker
+///    `C/(k+1)`) — same single pass, `(k+1)·L`-bounded working set,
+///    backend `"native-kway-segmented"`. The in-simulator miss win is
+///    specific to the argmin regime (`k ≤ 16`, whose head re-reads
+///    thrash small caches); for larger `k` both kernels touch each
+///    element once and the windowing is neutral in-model (bounded
+///    working set only, a few per-mille of state-refill overhead);
+/// 3. otherwise the flat single-pass k-way engine
+///    ([`mergepath::kway_path`](crate::mergepath::kway_path)) — one
+///    pass over memory instead of the tree's `⌈log₂ k⌉`, backend
+///    `"native-kway"` (scalar records) or `"native-kway-typed"`
+///    (payload-carrying records, so typed traffic is visible in the
+///    stats);
+/// 4. the pairwise Merge-Path tree beyond the flat engine's configured
 ///    range — backend `"native"`.
 ///
 /// Both parallel engines run on the coordinator's persistent `pool`
@@ -655,6 +676,27 @@ fn run_compaction<R: Record>(
     if cfg.kway_flat_max_k > 0 && refs.len() <= cfg.kway_flat_max_k {
         // Flat engine's segments tile [0, total): every slot written.
         let mut out: Vec<ByKey<R>> = crate::uninit_vec(total);
+        let seg =
+            cfg.effective_kway_segment_elems(std::mem::size_of::<R>(), refs.len());
+        if seg > 0 && total >= 2 * seg {
+            // Segmented variant: same stable single pass, but each
+            // thread walks its rank segment in (k+1)·L-bounded path
+            // windows so the live windows stay cache-resident. The
+            // scalar/typed tag split mirrors the flat route, so typed
+            // traffic stays visible in per-job results here too.
+            segmented_kway_merge(
+                &refs,
+                &mut out,
+                KwaySegmentedConfig { segment_elems: seg, threads: cfg.threads_per_job },
+                Some(pool),
+            );
+            let tag = if R::IS_SCALAR {
+                "native-kway-segmented"
+            } else {
+                "native-kway-segmented-typed"
+            };
+            return (record::into_records(out), tag);
+        }
         parallel_kway_merge(&refs, &mut out, cfg.threads_per_job, Some(pool));
         let tag = if R::IS_SCALAR { "native-kway" } else { "native-kway-typed" };
         return (record::into_records(out), tag);
@@ -682,7 +724,13 @@ mod tests {
             max_batch: 8,
             batch_timeout_us: 100,
             backend: Backend::Native,
+            // Segmented routes are off by default in unit tests so each
+            // test opts in explicitly (the length knobs stay on auto
+            // but are inert while disabled) — like sharding below.
+            segmented: false,
             segment_len: 0,
+            kway_segment_elems: 0,
+            cache_bytes: 0,
             kway_flat_max_k: 64,
             // Sharding and eager streaming are off by default in unit
             // tests so each test opts into those paths explicitly
@@ -845,15 +893,101 @@ mod tests {
     #[test]
     fn segmented_route_for_large_jobs() {
         let mut cfg = test_config();
+        cfg.segmented = true;
         cfg.segment_len = 256;
         let svc = MergeService::start(cfg).unwrap();
         let (a, b) = gen_sorted_pair(WorkloadKind::Uniform, 4000, 4000, 3);
+        let mut expected: Vec<i32> = a.iter().chain(b.iter()).copied().collect();
+        expected.sort_unstable();
         let res = svc.submit_blocking(JobKind::Merge { a, b }).unwrap();
         assert_eq!(res.backend, "native-segmented");
+        assert_eq!(res.output, expected);
+        assert_eq!(svc.stats().segmented_jobs.get(), 1);
         // Small job still takes the plain path.
         let (a, b) = gen_sorted_pair(WorkloadKind::Uniform, 50, 50, 4);
         let res = svc.submit_blocking(JobKind::Merge { a, b }).unwrap();
         assert_eq!(res.backend, "native");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn segmented_off_switch_disables_both_routes() {
+        // merge.segmented = false makes the length knobs inert: large
+        // jobs take the unsegmented engines.
+        let mut cfg = test_config();
+        cfg.segmented = false;
+        cfg.segment_len = 256;
+        cfg.kway_segment_elems = 256;
+        let svc = MergeService::start(cfg).unwrap();
+        let (a, b) = gen_sorted_pair(WorkloadKind::Uniform, 4000, 4000, 3);
+        let res = svc.submit_blocking(JobKind::Merge { a, b }).unwrap();
+        assert_eq!(res.backend, "native");
+        let runs: Vec<Vec<i32>> = (0..6u64)
+            .map(|i| gen_sorted_pair(WorkloadKind::Uniform, 2000, 1, 500 + i).0)
+            .collect();
+        let res = svc.submit_blocking(JobKind::Compact { runs }).unwrap();
+        assert_eq!(res.backend, "native-kway");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn segmented_kway_route_for_large_compactions() {
+        let mut cfg = test_config();
+        cfg.segmented = true;
+        cfg.kway_segment_elems = 512;
+        let svc = MergeService::start(cfg).unwrap();
+        let runs: Vec<Vec<i32>> = (0..8u64)
+            .map(|i| gen_sorted_pair(WorkloadKind::Uniform, 2000, 1, 600 + i).0)
+            .collect();
+        let mut expected: Vec<i32> = runs.iter().flatten().copied().collect();
+        expected.sort_unstable();
+        let res = svc.submit_blocking(JobKind::Compact { runs }).unwrap();
+        assert_eq!(res.backend, "native-kway-segmented");
+        assert_eq!(res.output, expected);
+        let stats = svc.stats();
+        assert_eq!(stats.kway_segmented_jobs.get(), 1);
+        assert_eq!(stats.kway_jobs.get(), 0, "segmented is its own counter");
+        // Small totals take the sequential route before any windowing.
+        let runs: Vec<Vec<i32>> =
+            (0..2u64).map(|i| gen_sorted_pair(WorkloadKind::Uniform, 300, 1, 800 + i).0).collect();
+        let res = svc.submit_blocking(JobKind::Compact { runs }).unwrap();
+        assert_eq!(res.backend, "native");
+        svc.shutdown();
+        // A job spanning less than two windows stays on the unsegmented
+        // flat engine (needs L > total/2 while total ≥ 4096).
+        let mut cfg = test_config();
+        cfg.segmented = true;
+        cfg.kway_segment_elems = 4096;
+        let svc = MergeService::start(cfg).unwrap();
+        let runs: Vec<Vec<i32>> = (0..4u64)
+            .map(|i| gen_sorted_pair(WorkloadKind::Uniform, 1250, 1, 700 + i).0)
+            .collect();
+        let mut expected: Vec<i32> = runs.iter().flatten().copied().collect();
+        expected.sort_unstable();
+        let res = svc.submit_blocking(JobKind::Compact { runs }).unwrap();
+        assert_eq!(res.backend, "native-kway", "5000 < 2·4096 → one window, flat");
+        assert_eq!(res.output, expected);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn segmented_kway_auto_sizing_routes_by_cache() {
+        // Auto (kway_segment_elems = 0) with a configured 64 KiB cache:
+        // C = 16K i32 elems over w = 2 walkers, k = 7 →
+        // L = 16Ki/2/8 = 1024; a 21K-element job spans ≥ 2 windows and
+        // routes segmented.
+        let mut cfg = test_config();
+        cfg.segmented = true;
+        cfg.cache_bytes = 64 << 10;
+        let svc = MergeService::start(cfg).unwrap();
+        let runs: Vec<Vec<i32>> = (0..7u64)
+            .map(|i| gen_sorted_pair(WorkloadKind::Uniform, 3000, 1, 900 + i).0)
+            .collect();
+        let mut expected: Vec<i32> = runs.iter().flatten().copied().collect();
+        expected.sort_unstable();
+        let res = svc.submit_blocking(JobKind::Compact { runs }).unwrap();
+        assert_eq!(res.backend, "native-kway-segmented");
+        assert_eq!(res.output, expected);
         svc.shutdown();
     }
 

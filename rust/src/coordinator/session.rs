@@ -93,7 +93,7 @@ use super::queue::{BoundedQueue, PushError};
 use super::shard::{self, SharedOut};
 use super::stats::ServiceStats;
 use crate::config::MergeflowConfig;
-use crate::mergepath::kway::loser_tree_merge;
+use crate::mergepath::kway::loser_tree_merge_segmented;
 use crate::mergepath::kway_path::kway_rank_split;
 use crate::record::{self, ByKey, Record};
 use crate::{Error, Result};
@@ -166,6 +166,10 @@ pub struct StreamShard<R: Record = i32> {
     /// Slot in the session's rank-ordered window list.
     idx: usize,
     input: ShardInput<R>,
+    /// Path-window length for this shard's merge (`0` = unwindowed):
+    /// resolved at plan time from `merge.kway_segment_elems` (auto =
+    /// `C/(k+1)`), mirroring the rank-sharded route.
+    seg_elems: usize,
 }
 
 #[derive(Debug, Clone)]
@@ -382,11 +386,17 @@ fn maybe_finish<R: Record>(st: &mut ExecState<R>, stats: &ServiceStats) {
 }
 
 /// Execute one stream shard on a pool worker: stable loser-tree merge
-/// of its per-run windows (key-only order via [`ByKey`]), then report
+/// of its per-run windows (key-only order via [`ByKey`]) — in
+/// `(k+1)·L`-bounded path windows when planned with segmented merging
+/// (`seg_elems > 0`; bit-identical either way) — then report
 /// completion. Eager shards merge into an owned buffer; remainder
 /// shards merge straight into their window of the final buffer; the
 /// install task memcpys pre-seal eager outputs into theirs.
 pub(crate) fn execute_stream_shard<R: Record>(shard: StreamShard<R>, stats: &ServiceStats) {
+    // Install tasks are memcpy-only and always carry seg_elems == 0.
+    if shard.seg_elems > 0 {
+        stats.segmented_shard_merges.inc();
+    }
     match &shard.input {
         ShardInput::Owned(windows) => {
             let parts: Vec<&[ByKey<R>]> =
@@ -394,7 +404,7 @@ pub(crate) fn execute_stream_shard<R: Record>(shard: StreamShard<R>, stats: &Ser
             let total: usize = parts.iter().map(|p| p.len()).sum();
             // Fully tiled by the loser-tree merge (see crate::uninit_vec).
             let mut out: Vec<ByKey<R>> = crate::uninit_vec(total);
-            loser_tree_merge(&parts, &mut out);
+            loser_tree_merge_segmented(&parts, &mut out, shard.seg_elems);
             complete_eager(&shard.exec, shard.idx, record::into_records(out), stats);
         }
         ShardInput::Windowed { runs, ranges, out, window } => {
@@ -409,7 +419,7 @@ pub(crate) fn execute_stream_shard<R: Record>(shard: StreamShard<R>, stats: &Ser
             let dst = unsafe {
                 std::slice::from_raw_parts_mut(out.base().add(window.start), window.len())
             };
-            loser_tree_merge(&parts, record::as_keyed_mut(dst));
+            loser_tree_merge_segmented(&parts, record::as_keyed_mut(dst), shard.seg_elems);
             complete_windowed(&shard.exec, stats);
         }
         ShardInput::Install { items, out } => {
@@ -692,6 +702,7 @@ fn maybe_plan_eager<R: Record>(
         return Vec::new();
     }
     let safe = safe_rank(&state.runs);
+    let seg_elems = cfg.effective_kway_segment_elems(std::mem::size_of::<R>(), k);
     let mut jobs = Vec::new();
     while safe.saturating_sub(state.planned_rank) >= eager_len
         && state.eager_count < MAX_EAGER_SHARDS
@@ -720,6 +731,7 @@ fn maybe_plan_eager<R: Record>(
                     exec: Arc::clone(&state.exec),
                     idx,
                     input: ShardInput::Owned(windows),
+                    seg_elems,
                 },
             },
             // Session open time: latency accounting covers the ingest.
@@ -773,6 +785,8 @@ fn finalize<R: Record>(
     // slot is fully written before the buffer is read (uninit_vec
     // contract).
     let out: Arc<SharedOut<R>> = Arc::new(SharedOut::new(crate::uninit_vec(total)));
+    let seg_elems =
+        cfg.effective_kway_segment_elems(std::mem::size_of::<R>(), runs.len());
     let mut jobs = Vec::new();
     if remainder > 0 {
         // Same sizing policy as the sharded route: ~min_len elements
@@ -817,6 +831,7 @@ fn finalize<R: Record>(
                             out: Arc::clone(&out),
                             window: prev_rank..rank,
                         },
+                        seg_elems,
                     },
                 },
                 enqueued_at: opened_at,
@@ -844,6 +859,7 @@ fn finalize<R: Record>(
                     exec: Arc::clone(&state.exec),
                     idx: 0, // unused: installs have no slot of their own
                     input: ShardInput::Install { items: installs, out },
+                    seg_elems: 0, // memcpy only, nothing to window
                 },
             },
             enqueued_at: opened_at,
@@ -1144,6 +1160,7 @@ mod tests {
             exec: Arc::clone(&exec),
             idx: 0,
             input: ShardInput::Owned(vec![vec![1, 2], vec![3]]),
+            seg_elems: 0,
         };
         assert_eq!(owned.len(), 3);
         assert!(!owned.is_empty());
@@ -1156,6 +1173,7 @@ mod tests {
                 out: Arc::new(SharedOut::new(vec![0i32; 6])),
                 window: 2..6,
             },
+            seg_elems: 2,
         };
         assert_eq!(windowed.len(), 4);
     }
@@ -1196,6 +1214,7 @@ mod tests {
                 exec: Arc::clone(&exec),
                 idx: 0,
                 input: ShardInput::Install { items: installs, out },
+                seg_elems: 0,
             },
             &stats,
         );

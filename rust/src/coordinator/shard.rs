@@ -50,7 +50,7 @@
 use super::job::{Job, JobKind, JobResult};
 use super::stats::ServiceStats;
 use crate::config::MergeflowConfig;
-use crate::mergepath::kway::loser_tree_merge;
+use crate::mergepath::kway::loser_tree_merge_segmented;
 use crate::mergepath::kway_path::{partition_kway_merge_path, KwaySegment};
 use crate::record::{self, ByKey, Record};
 use std::cell::UnsafeCell;
@@ -157,6 +157,11 @@ pub struct ShardGroup<R: Record = i32> {
     queue_wait_ns: u64,
     /// Total output elements across all shards.
     total: usize,
+    /// Path-window length for the per-shard merges (`0` = unwindowed):
+    /// resolved at plan time from `merge.kway_segment_elems` (auto =
+    /// `C/(k+1)`), so every shard merges its rank window in
+    /// `(k+1)·L`-bounded segments like the flat segmented engine.
+    seg_elems: usize,
 }
 
 impl<R: Record> std::fmt::Debug for ShardGroup<R> {
@@ -270,6 +275,8 @@ pub(crate) fn maybe_expand<R: Record>(
     let queue_wait_ns =
         u64::try_from(enqueued_at.elapsed().as_nanos()).unwrap_or(u64::MAX);
     let group = Arc::new(ShardGroup {
+        seg_elems: cfg
+            .effective_kway_segment_elems(std::mem::size_of::<R>(), runs.len()),
         runs,
         segments,
         // Fully tiled by the shard windows — every slot written exactly
@@ -297,9 +304,12 @@ pub(crate) fn maybe_expand<R: Record>(
 }
 
 /// Execute one shard: stable loser-tree merge of its per-run slices
-/// into its exclusive output window. The shard that completes the
-/// group stitches (takes the fully-tiled buffer) and replies on the
-/// parent's channel with backend [`BACKEND_SHARDED`].
+/// into its exclusive output window — in `(k+1)·L`-bounded path
+/// windows when the group was planned with segmented merging (see
+/// [`ShardGroup::seg_elems`]; bit-identical either way). The shard
+/// that completes the group stitches (takes the fully-tiled buffer)
+/// and replies on the parent's channel with backend
+/// [`BACKEND_SHARDED`].
 pub(crate) fn execute_shard<R: Record>(
     shard: ShardTask<R>,
     reply: &std::sync::mpsc::Sender<JobResult<R>>,
@@ -324,7 +334,10 @@ pub(crate) fn execute_shard<R: Record>(
                 seg.out_range.len(),
             )
         };
-        loser_tree_merge(&parts, record::as_keyed_mut(window));
+        if group.seg_elems > 0 {
+            stats.segmented_shard_merges.inc();
+        }
+        loser_tree_merge_segmented(&parts, record::as_keyed_mut(window), group.seg_elems);
     }
     stats.compact_shards_completed.inc();
     // AcqRel: our window writes happen-before the final shard's read of
@@ -356,6 +369,7 @@ pub(crate) fn execute_shard<R: Record>(
 mod tests {
     use super::*;
     use crate::bench::workload::{gen_record_runs, gen_sorted_runs, WorkloadKind};
+    use crate::mergepath::kway::loser_tree_merge;
     use std::sync::mpsc::channel;
     use std::time::Instant;
 
@@ -485,6 +499,55 @@ mod tests {
         assert_eq!(stats.compact_shards_completed.get(), 8);
         assert_eq!(stats.sharded_jobs.get(), 1);
         assert_eq!(stats.completed.get(), 1);
+    }
+
+    #[test]
+    fn segmented_shard_merges_are_bit_identical_and_counted() {
+        // Tiny explicit window: every shard merges through many bounded
+        // windows; the stitched result must not change by a bit.
+        let mut cfg = cfg_with(512);
+        cfg.segmented = true;
+        cfg.kway_segment_elems = 64;
+        let stats = ServiceStats::new();
+        let runs = gen_sorted_runs(WorkloadKind::Skewed, 6, 700, 11);
+        let mut expected = vec![0i32; 4200];
+        {
+            let refs: Vec<&[i32]> = runs.iter().map(|r| r.as_slice()).collect();
+            loser_tree_merge(&refs, &mut expected);
+        }
+        let (tx, rx) = channel();
+        let job = Job {
+            id: 43,
+            kind: JobKind::Compact { runs },
+            enqueued_at: Instant::now(),
+            reply: tx,
+        };
+        let subs = maybe_expand(&cfg, &stats, job);
+        let n_shards = subs.len();
+        assert!(n_shards >= 2);
+        for sub in subs {
+            match sub.kind {
+                JobKind::CompactShard { shard } => execute_shard(shard, &sub.reply, &stats),
+                _ => unreachable!(),
+            }
+        }
+        assert_eq!(rx.try_recv().unwrap().output, expected);
+        assert_eq!(stats.segmented_shard_merges.get(), n_shards as u64);
+        // With segmented merging off the counter stays put.
+        let mut off = cfg_with(512);
+        off.segmented = false;
+        let runs = gen_sorted_runs(WorkloadKind::Uniform, 4, 600, 12);
+        let (tx, rx) = channel();
+        let job =
+            Job { id: 44, kind: JobKind::Compact { runs }, enqueued_at: Instant::now(), reply: tx };
+        for sub in maybe_expand(&off, &stats, job) {
+            match sub.kind {
+                JobKind::CompactShard { shard } => execute_shard(shard, &sub.reply, &stats),
+                _ => unreachable!(),
+            }
+        }
+        let _ = rx.try_recv().unwrap();
+        assert_eq!(stats.segmented_shard_merges.get(), n_shards as u64);
     }
 
     #[test]

@@ -20,6 +20,17 @@ pub struct ServiceStats {
     /// ("native-kway-typed"): same engine, the tag only distinguishes
     /// payload-carrying records in per-job results.
     pub kway_jobs: Counter,
+    /// Compactions executed on the *segmented* flat k-way engine —
+    /// both the scalar tag ("native-kway-segmented") and the
+    /// typed-record tag ("native-kway-segmented-typed"): the same
+    /// single stable pass, walked in `(k+1)·L`-bounded path windows so
+    /// the live windows stay cache-resident
+    /// (`merge.kway_segment_elems`).
+    pub kway_segmented_jobs: Counter,
+    /// Rank-shard / stream-shard sub-merges executed in bounded path
+    /// windows (the per-shard analogue of the segmented engine; the
+    /// parent jobs still count under their own backends).
+    pub segmented_shard_merges: Counter,
     /// Compactions executed as rank shards (backend
     /// "native-kway-sharded"); one count per *parent* compaction.
     pub sharded_jobs: Counter,
@@ -74,6 +85,9 @@ impl ServiceStats {
             "xla" => self.xla_jobs.inc(),
             "native-segmented" => self.segmented_jobs.inc(),
             "native-kway" | "native-kway-typed" => self.kway_jobs.inc(),
+            "native-kway-segmented" | "native-kway-segmented-typed" => {
+                self.kway_segmented_jobs.inc()
+            }
             "native-kway-sharded" => self.sharded_jobs.inc(),
             "native-kway-streamed" => self.streamed_jobs.inc(),
             _ => self.native_jobs.inc(),
@@ -83,8 +97,8 @@ impl ServiceStats {
     /// Human-readable snapshot (the `serve` CLI's stats dump).
     pub fn snapshot(&self) -> String {
         format!(
-            "jobs: submitted={} completed={} rejected={} | backends: native={} segmented={} kway={} sharded={} streamed={} xla={} | \
-             shards: planned={} done={} | \
+            "jobs: submitted={} completed={} rejected={} | backends: native={} segmented={} kway={} kway-seg={} sharded={} streamed={} xla={} | \
+             shards: planned={} done={} seg-merges={} | \
              streaming: sessions={} chunks={} bytes={} eager={} stream-done={} | \
              batches={} elements={} | latency p50={} p95={} p99={} max={} | queue-wait p50={}",
             self.submitted.get(),
@@ -93,11 +107,13 @@ impl ServiceStats {
             self.native_jobs.get(),
             self.segmented_jobs.get(),
             self.kway_jobs.get(),
+            self.kway_segmented_jobs.get(),
             self.sharded_jobs.get(),
             self.streamed_jobs.get(),
             self.xla_jobs.get(),
             self.compact_shards.get(),
             self.compact_shards_completed.get(),
+            self.segmented_shard_merges.get(),
             self.streamed_sessions.get(),
             self.streamed_chunks.get(),
             self.streamed_bytes.get(),
@@ -126,19 +142,23 @@ mod tests {
         s.record_completion("native-segmented", 300, 3000, 30);
         s.record_completion("native-kway", 400, 4000, 40);
         s.record_completion("native-kway-typed", 450, 4500, 45);
+        s.record_completion("native-kway-segmented", 480, 4800, 48);
+        s.record_completion("native-kway-segmented-typed", 470, 4700, 47);
         s.record_completion("native-kway-sharded", 500, 5000, 50);
         s.record_completion("native-kway-streamed", 600, 6000, 60);
-        assert_eq!(s.completed.get(), 7);
+        assert_eq!(s.completed.get(), 9);
         assert_eq!(s.native_jobs.get(), 1);
         assert_eq!(s.xla_jobs.get(), 1);
         assert_eq!(s.segmented_jobs.get(), 1);
         assert_eq!(s.kway_jobs.get(), 2, "typed tag counts as the same engine");
+        assert_eq!(s.kway_segmented_jobs.get(), 2, "typed segmented tag too");
         assert_eq!(s.sharded_jobs.get(), 1);
         assert_eq!(s.streamed_jobs.get(), 1);
-        assert_eq!(s.elements.get(), 2550);
+        assert_eq!(s.elements.get(), 3500);
         let snap = s.snapshot();
-        assert!(snap.contains("completed=7"));
+        assert!(snap.contains("completed=9"));
         assert!(snap.contains("kway=2"));
+        assert!(snap.contains("kway-seg=2"));
         assert!(snap.contains("sharded=1"));
         assert!(snap.contains("streamed=1"));
         assert!(snap.contains("xla=1"));
@@ -170,6 +190,9 @@ mod tests {
         }
         assert_eq!(s.compact_shards.get(), s.compact_shards_completed.get());
         assert_eq!(s.completed.get(), 0, "shards are not client-visible jobs");
-        assert!(s.snapshot().contains("planned=8"));
+        s.segmented_shard_merges.add(3);
+        let snap = s.snapshot();
+        assert!(snap.contains("planned=8"));
+        assert!(snap.contains("seg-merges=3"));
     }
 }

@@ -174,10 +174,11 @@ fn cmd_table(cli: &Cli) -> Result<()> {
     let scale = scale_of(cli);
     match cli.positional.first().map(|s| s.as_str()).unwrap_or("") {
         "table1" => figures::table1(scale).print(),
+        "table1b" => figures::table1_kway(scale).print(),
         "table2" => figures::table2().print(),
         other => {
             return Err(Error::Config(format!(
-                "unknown table `{other}` (table1|table2)"
+                "unknown table `{other}` (table1|table1b|table2)"
             )))
         }
     }

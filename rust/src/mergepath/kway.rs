@@ -1,10 +1,18 @@
 //! k-way merging of sorted runs — the LSM-compaction primitive built
 //! on the paper's pairwise Merge Path.
 //!
-//! Two engines:
+//! Engines:
 //! - [`loser_tree_merge`] — sequential tournament merge: linear argmin
 //!   for small `k`, binary min-heap beyond — `O(N log k)` comparisons
 //!   in one pass; the baseline and the small-job fast path.
+//! - [`loser_tree_merge_bounded`] — the *cursor-carrying, bounded*
+//!   kernel behind §4.3's windowing generalised to `k` runs
+//!   ([`super::kway_path::segmented_kway_merge`]): merges exactly
+//!   `out.len()` elements starting from per-run cursors and advances
+//!   them, keeping the current head **values** in a thread-local array
+//!   so each input element is touched exactly once (the argmin engine
+//!   above re-touches every run head per output — fine while the
+//!   `k + 1` live lines fit in cache, ruinous past it).
 //! - [`parallel_tree_merge`] — a balanced binary tree of pairwise
 //!   [`parallel_merge`](super::parallel::parallel_merge) rounds:
 //!   `⌈log₂ k⌉` fully-parallel levels, `O(N log k)` work,
@@ -81,6 +89,185 @@ pub fn loser_tree_merge<T: Ord + Copy>(runs: &[&[T]], out: &mut [T]) {
         cursors[i] += 1;
         if let Some(nv) = key(runs, &cursors, i) {
             heap.push(Reverse((nv, i)));
+        }
+    }
+}
+
+/// Cursor-carrying bounded k-way merge: emit exactly `out.len()`
+/// elements of the stable merge of `runs` (ties to the lower-indexed
+/// run, offsets in order — the same `(value, run, index)` order as
+/// [`loser_tree_merge`]) starting at `cursors`, and advance `cursors`
+/// to the consumed positions.
+///
+/// Splitting one merge into consecutive bounded calls over the same
+/// cursor state reproduces the unsplit merge bit for bit — the cursors
+/// are the *whole* state of the stable merge, which is what lets
+/// [`super::kway_path::segmented_kway_merge`] advance window by window
+/// via this local frontier instead of re-running a global
+/// [`kway_rank_split`](super::kway_path::kway_rank_split) per window.
+///
+/// Unlike the argmin loop of [`loser_tree_merge`], the current head of
+/// every run is cached *by value* in a local array (small `k`) or heap
+/// (large `k`), so each input element is read from its run exactly
+/// once — together with the §4.3 window bound (a length-`L` output
+/// window consumes at most `L` consecutive elements of each run, the
+/// k-way Lemma 16) this keeps the working set of a window at
+/// `(k + 1)·L` elements.
+///
+/// # Panics
+/// If `cursors.len() != runs.len()`, any cursor is past its run's end,
+/// or `out` wants more elements than remain.
+pub fn loser_tree_merge_bounded<T: Ord + Copy>(
+    runs: &[&[T]],
+    cursors: &mut [usize],
+    out: &mut [T],
+) {
+    let k = runs.len();
+    assert_eq!(cursors.len(), k, "one cursor per run");
+    let remaining: usize = runs
+        .iter()
+        .zip(cursors.iter())
+        .map(|(r, &c)| {
+            assert!(c <= r.len(), "cursor {c} past run end {}", r.len());
+            r.len() - c
+        })
+        .sum();
+    assert!(
+        out.len() <= remaining,
+        "bounded merge wants {} of {remaining} remaining elements",
+        out.len()
+    );
+    if out.is_empty() {
+        return;
+    }
+    if k == 1 {
+        let c = cursors[0];
+        out.copy_from_slice(&runs[0][c..c + out.len()]);
+        cursors[0] += out.len();
+        return;
+    }
+    if k <= 16 {
+        let mut heads = fill_heads(runs, cursors);
+        argmin_bounded(runs, cursors, &mut heads, out);
+        return;
+    }
+    let mut heap = fill_heap(runs, cursors);
+    heap_bounded(runs, cursors, &mut heap, out);
+}
+
+/// Current head value of every run (`None` = exhausted) — the state
+/// the bounded argmin kernel advances.
+fn fill_heads<T: Ord + Copy>(runs: &[&[T]], cursors: &[usize]) -> Vec<Option<T>> {
+    runs.iter()
+        .zip(cursors.iter())
+        .map(|(r, &c)| r.get(c).copied())
+        .collect()
+}
+
+/// Cached-heads argmin: same selection rule as [`loser_tree_merge`]
+/// (first strictly-smaller head wins, so equal keys keep the lower run
+/// index), but heads live in the caller-provided array and a run is
+/// re-read only when its head is consumed.
+fn argmin_bounded<T: Ord + Copy>(
+    runs: &[&[T]],
+    cursors: &mut [usize],
+    heads: &mut [Option<T>],
+    out: &mut [T],
+) {
+    for slot in out.iter_mut() {
+        let mut best = usize::MAX;
+        let mut best_key: Option<T> = None;
+        for (j, head) in heads.iter().enumerate() {
+            if let Some(v) = head {
+                let better = match best_key {
+                    Some(b) => *v < b,
+                    None => true,
+                };
+                if better {
+                    best = j;
+                    best_key = Some(*v);
+                }
+            }
+        }
+        *slot = best_key.expect("out longer than remaining input");
+        cursors[best] += 1;
+        heads[best] = runs[best].get(cursors[best]).copied();
+    }
+}
+
+type HeadHeap<T> = std::collections::BinaryHeap<std::cmp::Reverse<(T, usize)>>;
+
+/// Min-heap of `(head key, run index)` over the runs' current heads —
+/// ties resolve by run index, matching [`loser_tree_merge`] exactly.
+fn fill_heap<T: Ord + Copy>(runs: &[&[T]], cursors: &[usize]) -> HeadHeap<T> {
+    let mut heap = HeadHeap::with_capacity(runs.len());
+    for (j, (r, &c)) in runs.iter().zip(cursors.iter()).enumerate() {
+        if let Some(v) = r.get(c) {
+            heap.push(std::cmp::Reverse((*v, j)));
+        }
+    }
+    heap
+}
+
+/// Large-k bounded merge over a caller-provided head heap.
+fn heap_bounded<T: Ord + Copy>(
+    runs: &[&[T]],
+    cursors: &mut [usize],
+    heap: &mut HeadHeap<T>,
+    out: &mut [T],
+) {
+    for slot in out.iter_mut() {
+        let std::cmp::Reverse((v, j)) = heap.pop().expect("out longer than remaining input");
+        *slot = v;
+        cursors[j] += 1;
+        if let Some(nv) = runs[j].get(cursors[j]) {
+            heap.push(std::cmp::Reverse((*nv, j)));
+        }
+    }
+}
+
+/// Sequential windowed k-way merge: the whole merge executed as
+/// consecutive [`loser_tree_merge_bounded`] windows of `segment_elems`
+/// outputs each, so the live working set stays at `(k + 1)` windows
+/// (§4.3 generalised — see
+/// [`super::kway_path::segmented_kway_merge`]). `segment_elems == 0`
+/// means unwindowed: delegate to [`loser_tree_merge`].
+///
+/// Output is bit-identical to [`loser_tree_merge`] for every
+/// `segment_elems`. This is the per-shard kernel of the rank-sharded
+/// and streamed compaction routes when segmented merging is enabled.
+///
+/// The per-run head state (value array / heap) is built once and
+/// carried across windows — the hot loop allocates nothing per window,
+/// so even the `L = 1` degenerate costs only the loop bound.
+pub fn loser_tree_merge_segmented<T: Ord + Copy>(
+    runs: &[&[T]],
+    out: &mut [T],
+    segment_elems: usize,
+) {
+    let k = runs.len();
+    if segment_elems == 0 || k <= 1 {
+        // Unwindowed delegate (0) or shapes with nothing to window.
+        loser_tree_merge(runs, out);
+        return;
+    }
+    let total: usize = runs.iter().map(|r| r.len()).sum();
+    assert_eq!(out.len(), total, "output must hold all input elements");
+    let mut cursors = vec![0usize; k];
+    let mut done = 0usize;
+    if k <= 16 {
+        let mut heads = fill_heads(runs, &cursors);
+        while done < total {
+            let wlen = segment_elems.min(total - done);
+            argmin_bounded(runs, &mut cursors, &mut heads, &mut out[done..done + wlen]);
+            done += wlen;
+        }
+    } else {
+        let mut heap = fill_heap(runs, &cursors);
+        while done < total {
+            let wlen = segment_elems.min(total - done);
+            heap_bounded(runs, &mut cursors, &mut heap, &mut out[done..done + wlen]);
+            done += wlen;
         }
     }
 }
@@ -224,6 +411,92 @@ mod tests {
         let mut out = vec![0i64; 4];
         loser_tree_merge(&[&e, &a, &e, &b, &e], &mut out);
         assert_eq!(out, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn bounded_windows_reproduce_full_merge() {
+        // Splitting the merge into arbitrary bounded windows over one
+        // cursor state must reproduce the one-shot merge bit for bit —
+        // across the argmin (k <= 16) and heap (k > 16) regimes.
+        let mut rng = Xoshiro256::seeded(0x52);
+        for k in [1usize, 2, 5, 16, 17, 33] {
+            let runs = random_runs(&mut rng, k, 70);
+            let refs: Vec<&[i64]> = runs.iter().map(|r| r.as_slice()).collect();
+            let n: usize = refs.iter().map(|r| r.len()).sum();
+            let mut expected = vec![0i64; n];
+            loser_tree_merge(&refs, &mut expected);
+            for window in [1usize, 3, 7, 64, 1 << 20] {
+                let mut out = vec![0i64; n];
+                let mut cursors = vec![0usize; k];
+                let mut done = 0usize;
+                while done < n {
+                    let wlen = window.min(n - done);
+                    loser_tree_merge_bounded(&refs, &mut cursors, &mut out[done..done + wlen]);
+                    done += wlen;
+                }
+                assert_eq!(out, expected, "k={k} window={window}");
+                assert!(
+                    cursors.iter().zip(&refs).all(|(&c, r)| c == r.len()),
+                    "all runs fully consumed"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bounded_keeps_stable_tie_order() {
+        // Key-only Ord with provenance payloads: window boundaries land
+        // inside tie groups, and the continuation must keep the
+        // (run index, offset) order.
+        #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+        struct K(i64, u8);
+        impl PartialOrd for K {
+            fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+                Some(self.cmp(o))
+            }
+        }
+        impl Ord for K {
+            fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+                self.0.cmp(&o.0)
+            }
+        }
+        let runs: Vec<Vec<K>> = (0..3u8)
+            .map(|run| (0..30i64).map(|i| K(i / 10, run)).collect())
+            .collect();
+        let refs: Vec<&[K]> = runs.iter().map(|r| r.as_slice()).collect();
+        let mut expected = vec![K(0, 9); 90];
+        loser_tree_merge(&refs, &mut expected);
+        let mut out = vec![K(0, 9); 90];
+        loser_tree_merge_segmented(&refs, &mut out, 7);
+        assert_eq!(
+            out.iter().map(|k| (k.0, k.1)).collect::<Vec<_>>(),
+            expected.iter().map(|k| (k.0, k.1)).collect::<Vec<_>>(),
+        );
+    }
+
+    #[test]
+    fn segmented_wrapper_edge_cases() {
+        // 0 = unwindowed delegate; empty inputs; window > input.
+        let mut out: Vec<i64> = vec![];
+        loser_tree_merge_segmented(&[], &mut out, 8);
+        let a = vec![1i64, 4];
+        let b = vec![2i64, 3];
+        let refs: Vec<&[i64]> = vec![&a, &b];
+        for window in [0usize, 1, 1 << 30] {
+            let mut out = vec![0i64; 4];
+            loser_tree_merge_segmented(&refs, &mut out, window);
+            assert_eq!(out, vec![1, 2, 3, 4], "window={window}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "bounded merge wants")]
+    fn bounded_rejects_overlong_output() {
+        let a = vec![1i64];
+        let refs: Vec<&[i64]> = vec![&a];
+        let mut cursors = vec![0usize];
+        let mut out = vec![0i64; 2];
+        loser_tree_merge_bounded(&refs, &mut cursors, &mut out);
     }
 
     #[test]

@@ -232,12 +232,24 @@ pub fn partition_kway_merge_path_with_pool<T: Ord + Sync>(
     let Some(pl) = pool.filter(|_| interior >= 2 && runs.len() >= 2 && n > 0) else {
         return partition_kway_merge_path(runs, p);
     };
-    let slots: Vec<std::sync::Mutex<Vec<usize>>> =
-        (0..interior).map(|_| std::sync::Mutex::new(Vec::new())).collect();
-    pl.run_scoped(interior, |i| {
-        *slots[i].lock().unwrap() = kway_rank_split(runs, (i + 1) * n / p);
-    });
-    let cuts = slots.into_iter().map(|m| m.into_inner().unwrap()).collect();
+    // The searches write disjoint k-wide windows of one flat cut
+    // buffer, indexed by boundary — the crate's disjoint-window
+    // shared-output pattern — so no per-cut lock or allocation is
+    // needed to collect them.
+    let k = runs.len();
+    let mut flat = vec![0usize; interior * k];
+    {
+        let shared = SliceParts::new(&mut flat);
+        pl.run_scoped(interior, |i| {
+            let cut = kway_rank_split(runs, (i + 1) * n / p);
+            // SAFETY: window [i·k, (i+1)·k) is exclusive to boundary i;
+            // the windows tile the buffer and run_scoped's latch gives
+            // the read below a happens-before edge on every write.
+            let w = unsafe { shared.slice_mut(i * k, k) };
+            w.copy_from_slice(&cut);
+        });
+    }
+    let cuts = flat.chunks(k).map(|c| c.to_vec()).collect();
     segments_from_cuts(runs, cuts, n, p)
 }
 
@@ -317,6 +329,115 @@ pub fn parallel_kway_merge<T: Ord + Copy + Send + Sync>(
         // window.
         let chunk = unsafe { shared.slice_mut(seg.out_range.start, seg.out_range.len()) };
         super::kway::loser_tree_merge(&parts, chunk);
+    };
+    match pool {
+        Some(pl) => pl.run_scoped(p, body),
+        None => fork_join(p, body),
+    }
+}
+
+/// Tuning for [`segmented_kway_merge`] — the k-way generalisation of
+/// [`SegmentedConfig`](super::segmented::SegmentedConfig).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KwaySegmentedConfig {
+    /// Output elements per path window (`L`). The Prop. 15 pick for a
+    /// cache of `C` elements and `k` runs is `C/(k+1)`: the `k` live
+    /// input windows plus the output window then fit together
+    /// ([`KwaySegmentedConfig::for_cache`]).
+    pub segment_elems: usize,
+    /// Number of threads (each windows its own rank segment).
+    pub threads: usize,
+}
+
+impl KwaySegmentedConfig {
+    /// Config from a cache capacity of `cache_elems` elements per the
+    /// k-way Prop. 15: `L = C/(k+1)`, so all `k + 1` live windows of a
+    /// window iteration are cache-resident together.
+    pub fn for_cache(cache_elems: usize, k: usize, threads: usize) -> Self {
+        Self {
+            segment_elems: (cache_elems / (k + 1).max(2)).max(1),
+            threads: threads.max(1),
+        }
+    }
+
+    /// Window iterations for a total output length `n` (per thread the
+    /// count divides by `threads`; this is the k-way analogue of the
+    /// paper's `MAX_iterations`).
+    pub fn iterations(&self, n: usize) -> usize {
+        n.div_ceil(self.segment_elems.max(1))
+    }
+}
+
+/// Segmented (cache-efficient) flat k-way merge — §4.3's Algorithm 3
+/// generalised from two runs to `k`, on top of the same balanced
+/// stable-cut partition as [`parallel_kway_merge`].
+///
+/// The `p − 1` interior rank selections split the output into `p`
+/// equisized rank segments exactly as the flat engine does; each
+/// thread then walks its segment in path windows of
+/// `cfg.segment_elems` outputs, merging every window with the
+/// cursor-carrying bounded kernel
+/// ([`loser_tree_merge_bounded`](super::kway::loser_tree_merge_bounded)).
+/// The cursors left by one window *are* the stable cut where the next
+/// window begins — the window-local frontier — so no further
+/// [`kway_rank_split`] is ever run inside a segment. By the k-way
+/// Lemma 16 a window of `L` outputs consumes at most `L` consecutive
+/// elements of each run, so each iteration's working set is bounded by
+/// `(k + 1)·L` elements: pick `L = C/(k+1)` ([`KwaySegmentedConfig::for_cache`])
+/// and the `k` input windows and the output window stay cache-resident
+/// while the bounded kernel touches each input element exactly once.
+///
+/// Output is **bit-identical** to
+/// [`loser_tree_merge`](super::kway::loser_tree_merge) (stable:
+/// equal keys keep run-index-then-offset order) for every `p` and
+/// every `segment_elems` — the traversal bounds change, the merge
+/// order does not. The stability contract of this module applies
+/// unchanged.
+///
+/// `pool`: optional persistent worker pool (scoped threads otherwise);
+/// safe to call from inside a pool worker (helping wait).
+///
+/// # Panics
+/// If `out.len()` differs from the total input length,
+/// `cfg.segment_elems == 0`, or `cfg.threads == 0`.
+pub fn segmented_kway_merge<T: Ord + Copy + Send + Sync>(
+    runs: &[&[T]],
+    out: &mut [T],
+    cfg: KwaySegmentedConfig,
+    pool: Option<&WorkerPool>,
+) {
+    let total: usize = runs.iter().map(|r| r.len()).sum();
+    assert_eq!(out.len(), total, "output must hold all input elements");
+    assert!(cfg.segment_elems > 0, "segment_elems must be positive");
+    assert!(cfg.threads > 0, "threads must be positive");
+    if total == 0 {
+        return;
+    }
+    let p = cfg.threads;
+    if p == 1 || total < 2 * p || runs.len() < 2 {
+        // Degenerate parallel shapes still merge windowed — the cache
+        // bound is the point of this entry, not the thread count.
+        super::kway::loser_tree_merge_segmented(runs, out, cfg.segment_elems);
+        return;
+    }
+    let segments = partition_kway_merge_path_with_pool(runs, p, pool);
+    let shared = SliceParts::new(out);
+    let body = |tid: usize| {
+        let seg = &segments[tid];
+        if seg.is_empty() {
+            return;
+        }
+        let parts: Vec<&[T]> = seg
+            .run_ranges
+            .iter()
+            .zip(runs)
+            .map(|(r, run)| &run[r.clone()])
+            .collect();
+        // SAFETY: out_ranges are disjoint across tids and tile
+        // [0, total) by construction (same invariant as the flat
+        // engine), so each thread gets an exclusive window.
+        let chunk = unsafe { shared.slice_mut(seg.out_range.start, seg.out_range.len()) };
+        super::kway::loser_tree_merge_segmented(&parts, chunk, cfg.segment_elems);
     };
     match pool {
         Some(pl) => pl.run_scoped(p, body),
@@ -528,7 +649,10 @@ mod tests {
             let k = rng.range(0, 10);
             let runs = random_runs(&mut rng, k, 90);
             let rr = refs(&runs);
-            for p in [1, 2, 3, 5, 9, 16] {
+            // High p included: the disjoint-window cut collection must
+            // stay byte-identical when boundaries outnumber both the
+            // workers and the elements.
+            for p in [1, 2, 3, 5, 9, 16, 64, 257] {
                 let seq = partition_kway_merge_path(&rr, p);
                 let pooled = partition_kway_merge_path_with_pool(&rr, p, Some(&pool));
                 assert_eq!(seq, pooled, "k={k} p={p}");
@@ -548,6 +672,112 @@ mod tests {
         let mut out = vec![0i64; n];
         parallel_kway_merge(&rr, &mut out, 4, Some(&pool));
         assert_eq!(out, oracle(&runs));
+    }
+
+    #[test]
+    fn segmented_kway_bit_identical_across_property_sweep() {
+        // The acceptance sweep: every workload kind × k × p × segment
+        // length (dense duplicates included via Skewed and the
+        // dedicated case below) must reproduce loser_tree_merge bit
+        // for bit — including L = 1 and window-larger-than-input.
+        use crate::bench::workload::{gen_sorted_runs, WorkloadKind};
+        for (w, kind) in WorkloadKind::all().iter().enumerate() {
+            for &k in &[2usize, 3, 9, 17] {
+                let runs = gen_sorted_runs(*kind, k, 400, 0x5E6 + w as u64);
+                let refs: Vec<&[i32]> = runs.iter().map(|r| r.as_slice()).collect();
+                let n: usize = refs.iter().map(|r| r.len()).sum();
+                let mut expected = vec![0i32; n];
+                loser_tree_merge(&refs, &mut expected);
+                for &p in &[1usize, 2, 5, 8] {
+                    for &l in &[1usize, 13, 256, 1 << 20] {
+                        let mut out = vec![0i32; n];
+                        segmented_kway_merge(
+                            &refs,
+                            &mut out,
+                            KwaySegmentedConfig { segment_elems: l, threads: p },
+                            None,
+                        );
+                        assert_eq!(out, expected, "{kind:?} k={k} p={p} L={l}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn segmented_kway_dense_duplicates_keep_provenance() {
+        // All-identical keys with key-only Ord: window and segment
+        // boundaries all land inside one giant tie group, so any
+        // ordering mixup is visible in the payloads.
+        use crate::record::{as_keyed, into_records, ByKey};
+        let runs: Vec<Vec<(i64, u32)>> = (0..5u32)
+            .map(|run| (0..200u32).map(|off| (7i64, run * 1000 + off)).collect())
+            .collect();
+        let keyed: Vec<&[ByKey<(i64, u32)>]> =
+            runs.iter().map(|r| as_keyed(r.as_slice())).collect();
+        let expected: Vec<(i64, u32)> = runs.iter().flatten().copied().collect();
+        for &p in &[1usize, 3, 8] {
+            for &l in &[1usize, 7, 64] {
+                let mut out = vec![ByKey((0i64, 0u32)); 1000];
+                segmented_kway_merge(
+                    &keyed,
+                    &mut out,
+                    KwaySegmentedConfig { segment_elems: l, threads: p },
+                    None,
+                );
+                assert_eq!(into_records(out), expected, "p={p} L={l}");
+            }
+        }
+    }
+
+    #[test]
+    fn segmented_kway_with_pool_and_empty_runs() {
+        let pool = WorkerPool::new(3);
+        let mut rng = Xoshiro256::seeded(0x6B07);
+        let mut runs = random_runs(&mut rng, 7, 200);
+        runs.insert(2, vec![]);
+        runs.push(vec![]);
+        let rr = refs(&runs);
+        let n: usize = rr.iter().map(|r| r.len()).sum();
+        let mut expected = vec![0i64; n];
+        loser_tree_merge(&rr, &mut expected);
+        let mut out = vec![0i64; n];
+        segmented_kway_merge(
+            &rr,
+            &mut out,
+            KwaySegmentedConfig { segment_elems: 37, threads: 4 },
+            Some(&pool),
+        );
+        assert_eq!(out, expected);
+        // Degenerate shapes: no runs / all-empty runs.
+        let mut empty: Vec<i64> = vec![];
+        segmented_kway_merge(
+            &[],
+            &mut empty,
+            KwaySegmentedConfig { segment_elems: 8, threads: 2 },
+            None,
+        );
+        let e: Vec<i64> = vec![];
+        segmented_kway_merge(
+            &[&e, &e],
+            &mut empty,
+            KwaySegmentedConfig { segment_elems: 8, threads: 2 },
+            Some(&pool),
+        );
+    }
+
+    #[test]
+    fn kway_segmented_config_for_cache() {
+        // L = C/(k+1), floored at 1; thread floor at 1.
+        let cfg = KwaySegmentedConfig::for_cache(12_000, 5, 8);
+        assert_eq!(cfg.segment_elems, 2000);
+        assert_eq!(cfg.threads, 8);
+        assert_eq!(cfg.iterations(10_000), 5);
+        let tiny = KwaySegmentedConfig::for_cache(1, 100, 0);
+        assert_eq!(tiny.segment_elems, 1);
+        assert_eq!(tiny.threads, 1);
+        // k = 0/1 still sizes sanely (divisor floored at 2).
+        assert_eq!(KwaySegmentedConfig::for_cache(600, 0, 1).segment_elems, 300);
     }
 
     #[test]

@@ -11,9 +11,11 @@
 //! - [`segmented`] — Alg 3: `SegmentedParallelMerge` (cache-efficient, §4.3).
 //! - [`sort`] — §3: parallel merge sort.
 //! - [`cache_sort`] — §4.4: cache-efficient parallel sort.
-//! - [`kway`] — k-way merging (loser tree + parallel pairwise tree).
+//! - [`kway`] — k-way merging (loser tree, bounded/windowed loser tree,
+//!   parallel pairwise tree).
 //! - [`kway_path`] — flat single-pass k-way merge via multi-sequence
-//!   selection (§5 generalised to k runs, after Siebert & Träff).
+//!   selection (§5 generalised to k runs, after Siebert & Träff), and
+//!   its segmented (cache-efficient) variant (§4.3 generalised to k).
 //! - [`select`] — multiselection on the merge path ([10], §5).
 
 pub mod cache_sort;
@@ -31,12 +33,18 @@ pub use diagonal::{diagonal_intersection, PathPoint};
 pub use merge::{gallop_merge_into, hybrid_merge_bounded, merge_bounded, merge_into};
 pub use parallel::{parallel_merge, parallel_merge_with_pool};
 pub use partition::{partition_merge_path, MergeSegment};
-pub use segmented::{segmented_parallel_merge, SegmentedConfig};
+pub use segmented::{
+    segmented_parallel_merge, segmented_parallel_merge_with_pool, SegmentedConfig,
+};
 pub use sort::{parallel_merge_sort, parallel_merge_sort_with_pool};
 pub use cache_sort::{cache_efficient_sort, CacheSortConfig};
-pub use kway::{loser_tree_merge, parallel_tree_merge, parallel_tree_merge_refs};
+pub use kway::{
+    loser_tree_merge, loser_tree_merge_bounded, loser_tree_merge_segmented,
+    parallel_tree_merge, parallel_tree_merge_refs,
+};
 pub use kway_path::{
     kway_rank_split, parallel_kway_merge, partition_kway_merge_path,
-    partition_kway_merge_path_with_pool, KwaySegment,
+    partition_kway_merge_path_with_pool, segmented_kway_merge, KwaySegment,
+    KwaySegmentedConfig,
 };
 pub use select::{multiselect, multiselect_independent};

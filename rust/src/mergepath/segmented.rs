@@ -18,7 +18,7 @@
 use super::diagonal::diagonal_intersection;
 use super::merge::hybrid_merge_bounded;
 use super::parallel::SliceParts;
-use crate::exec::fork_join;
+use crate::exec::{fork_join, WorkerPool};
 
 /// Tuning for [`segmented_parallel_merge`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -52,6 +52,11 @@ impl SegmentedConfig {
 /// sequential merge; only the traversal order (and hence the cache
 /// behaviour) differs.
 ///
+/// Per-segment parallelism uses scoped OS threads; inside a service
+/// job, use [`segmented_parallel_merge_with_pool`] so the per-segment
+/// fork-joins reuse the persistent workers instead of spawning
+/// `iterations × (p − 1)` threads per job.
+///
 /// # Panics
 /// If `out.len() != a.len() + b.len()`, or `cfg.segment_len == 0`, or
 /// `cfg.threads == 0`.
@@ -60,6 +65,31 @@ pub fn segmented_parallel_merge<T: Ord + Copy + Send + Sync>(
     b: &[T],
     out: &mut [T],
     cfg: SegmentedConfig,
+) {
+    segmented_merge_impl(a, b, out, cfg, None);
+}
+
+/// [`segmented_parallel_merge`] with every per-segment fork-join
+/// executed on a persistent [`WorkerPool`] (identical output). Safe to
+/// call from inside a pool worker: the pool's scoped wait is helping
+/// (see [`WorkerPool::run_scoped`]), so the Alg 3 barrier per segment
+/// cannot deadlock a saturated pool.
+pub fn segmented_parallel_merge_with_pool<T: Ord + Copy + Send + Sync>(
+    pool: &WorkerPool,
+    a: &[T],
+    b: &[T],
+    out: &mut [T],
+    cfg: SegmentedConfig,
+) {
+    segmented_merge_impl(a, b, out, cfg, Some(pool));
+}
+
+fn segmented_merge_impl<T: Ord + Copy + Send + Sync>(
+    a: &[T],
+    b: &[T],
+    out: &mut [T],
+    cfg: SegmentedConfig,
+    pool: Option<&WorkerPool>,
 ) {
     assert_eq!(out.len(), a.len() + b.len());
     assert!(cfg.segment_len > 0, "segment_len must be positive");
@@ -86,9 +116,10 @@ pub fn segmented_parallel_merge<T: Ord + Copy + Send + Sync>(
         } else {
             // Parallel merge *within* the window: each core searches its
             // sub-diagonal of the window's (local) merge matrix and
-            // merges wlen/p outputs. The fork-join is the Alg 3 barrier.
+            // merges wlen/p outputs. The fork-join (pooled or scoped) is
+            // the Alg 3 barrier.
             let shared = SliceParts::new(out_seg);
-            fork_join(p, |tid| {
+            let body = |tid: usize| {
                 let d_start = tid * wlen / p;
                 let d_end = (tid + 1) * wlen / p;
                 if d_start == d_end {
@@ -103,7 +134,11 @@ pub fn segmented_parallel_merge<T: Ord + Copy + Send + Sync>(
                     chunk,
                     d_end - d_start,
                 );
-            });
+            };
+            match pool {
+                Some(pl) => pl.run_scoped(p, body),
+                None => fork_join(p, body),
+            }
         }
 
         // Advance the global cursor to the segment's end point: the
@@ -213,6 +248,25 @@ mod tests {
             SegmentedConfig { segment_len: 50, threads: 3 },
         );
         assert!(out.iter().all(|&x| x == 7));
+    }
+
+    #[test]
+    fn pool_variant_matches_scoped() {
+        let pool = WorkerPool::new(3);
+        let mut rng = Xoshiro256::seeded(0x51_6E);
+        for _ in 0..8 {
+            let n_a = rng.range(0, 500);
+            let a = random_sorted(&mut rng, n_a, 300);
+            let n_b = rng.range(0, 500);
+            let b = random_sorted(&mut rng, n_b, 300);
+            let cfg = SegmentedConfig { segment_len: 64, threads: 4 };
+            let mut scoped = vec![0i64; a.len() + b.len()];
+            segmented_parallel_merge(&a, &b, &mut scoped, cfg);
+            let mut pooled = vec![0i64; a.len() + b.len()];
+            segmented_parallel_merge_with_pool(&pool, &a, &b, &mut pooled, cfg);
+            assert_eq!(scoped, pooled);
+            assert_eq!(pooled, oracle(&a, &b));
+        }
     }
 
     #[test]

@@ -34,7 +34,9 @@ pub mod mem;
 pub mod stream;
 
 pub use cache::{CacheConfig, CacheStats, ReplacementPolicy, SetAssocCache};
-pub use engine::{simulate_merge, MergeAlgo, SimReport, SimWorkload};
+pub use engine::{
+    simulate_kway_merge, simulate_merge, KwayMergeAlgo, MergeAlgo, SimReport, SimWorkload,
+};
 pub use hypercore::{simulate_hypercore, HyperCoreSpec};
 pub use machine::MachineSpec;
 pub use mem::{AccessKind, MemHierarchy, MemStats};

@@ -332,6 +332,316 @@ pub fn akl_santoro_events(
     out
 }
 
+/// Address layout of `k` runs plus the output in simulated memory —
+/// the k-way analogue of [`Layout`].
+#[derive(Debug, Clone)]
+pub struct KwayLayout {
+    /// Base address of each run.
+    pub bases: Vec<u64>,
+    /// Base address of the output `S`.
+    pub base_s: u64,
+    /// Element size in bytes.
+    pub elem: u64,
+}
+
+impl KwayLayout {
+    /// Runs then output laid out consecutively, each base aligned to a
+    /// 64-byte cache line, 4-byte elements.
+    pub fn contiguous(lens: &[usize]) -> Self {
+        let elem = 4u64;
+        let align = |x: u64| x.div_ceil(64) * 64;
+        let mut bases = Vec::with_capacity(lens.len());
+        let mut at = 0u64;
+        for &len in lens {
+            bases.push(at);
+            at = align(at + len as u64 * elem);
+        }
+        Self { bases, base_s: at, elem }
+    }
+
+    #[inline]
+    fn run(&self, j: usize, i: usize) -> u64 {
+        self.bases[j] + i as u64 * self.elem
+    }
+    #[inline]
+    fn s(&self, k: usize) -> u64 {
+        self.base_s + k as u64 * self.elem
+    }
+}
+
+/// Probe-emitting mirror of
+/// [`kway_rank_split`](crate::mergepath::kway_rank_split): same bound
+/// maintenance, with every binary-search probe (and pivot read)
+/// recorded as a random access. Debug-asserted to agree with the real
+/// routine.
+fn emit_kway_rank_split(
+    runs: &[&[i32]],
+    rank: usize,
+    layout: &KwayLayout,
+    out: &mut Vec<Ev>,
+) -> Vec<usize> {
+    let k = runs.len();
+    let mut lo = vec![0usize; k];
+    let mut hi: Vec<usize> = runs.iter().map(|r| r.len().min(rank)).collect();
+    let mut before = vec![0usize; k];
+    loop {
+        let mut sum_lo = 0usize;
+        let mut sum_hi = 0usize;
+        let mut jp = usize::MAX;
+        let mut widest = 0usize;
+        for j in 0..k {
+            sum_lo += lo[j];
+            sum_hi += hi[j];
+            let w = hi[j] - lo[j];
+            if w > widest {
+                widest = w;
+                jp = j;
+            }
+        }
+        let cut = if sum_lo == rank {
+            lo
+        } else if sum_hi == rank {
+            hi
+        } else {
+            assert!(jp != usize::MAX, "selection bounds collapsed inconsistently");
+            let m = lo[jp] + (hi[jp] - lo[jp] - 1) / 2;
+            out.push(Ev::ReadRand(layout.run(jp, m)));
+            let pv = runs[jp][m];
+            for j in 0..k {
+                before[j] = if j == jp {
+                    m
+                } else {
+                    // partition_point over run j, probes recorded.
+                    let le = j < jp; // ties count for higher-priority runs
+                    let (mut plo, mut phi) = (0usize, runs[j].len());
+                    while plo < phi {
+                        let mid = plo + (phi - plo) / 2;
+                        out.push(Ev::ReadRand(layout.run(j, mid)));
+                        let v = runs[j][mid];
+                        if v < pv || (le && v == pv) {
+                            plo = mid + 1;
+                        } else {
+                            phi = mid;
+                        }
+                    }
+                    plo
+                };
+            }
+            let pos: usize = before.iter().sum();
+            if pos < rank {
+                for j in 0..k {
+                    if j == jp {
+                        lo[jp] = lo[jp].max(m + 1);
+                    } else {
+                        lo[j] = lo[j].max(before[j].min(hi[j]));
+                    }
+                }
+            } else {
+                for j in 0..k {
+                    if j == jp {
+                        hi[jp] = hi[jp].min(m);
+                    } else {
+                        hi[j] = hi[j].min(before[j].max(lo[j]));
+                    }
+                }
+            }
+            continue;
+        };
+        debug_assert_eq!(cut, crate::mergepath::kway_rank_split(runs, rank));
+        return cut;
+    }
+}
+
+/// Thread `tid`'s events for the **unsegmented flat k-way engine**
+/// ([`parallel_kway_merge`](crate::mergepath::parallel_kway_merge)):
+/// the global partition's rank selection for this thread's boundary
+/// (they run concurrently, one per thread `tid ≥ 1`), then the
+/// per-segment sequential k-way merge.
+///
+/// The merge loop mirrors
+/// [`loser_tree_merge`](crate::mergepath::loser_tree_merge)'s memory
+/// behaviour: for `k ≤ 16` the linear argmin **re-reads every live run
+/// head per output** — `k + 1` live lines that thrash once they outrun
+/// the cache, the §4.3 failure mode the segmented engine exists to
+/// avoid; for `k > 16` the binary heap caches head values, touching
+/// each input element once (heap-node traffic is local and not
+/// modelled).
+pub fn kway_flat_events(
+    runs: &[&[i32]],
+    p: usize,
+    tid: usize,
+    writeback: bool,
+    stage: Stage,
+    layout: &KwayLayout,
+) -> Vec<Ev> {
+    assert!(p > 0 && tid < p);
+    let k = runs.len();
+    let n: usize = runs.iter().map(|r| r.len()).sum();
+    let mut out = Vec::new();
+    let (start, end) = kway_segment_bounds(runs, p, tid, stage, layout, &mut out);
+    if !stage.merge() {
+        return out;
+    }
+    let mut cursors = start;
+    let d0 = tid * n / p;
+    let d1 = (tid + 1) * n / p;
+    if k <= 16 {
+        // Linear argmin: every live head is re-read per output.
+        for d in d0..d1 {
+            let mut best = usize::MAX;
+            let mut best_key: Option<i32> = None;
+            for j in 0..k {
+                if cursors[j] < end[j] {
+                    out.push(Ev::Read(layout.run(j, cursors[j])));
+                    let v = runs[j][cursors[j]];
+                    let better = match best_key {
+                        Some(b) => v < b,
+                        None => true,
+                    };
+                    if better {
+                        best = j;
+                        best_key = Some(v);
+                    }
+                }
+            }
+            cursors[best] += 1;
+            if writeback {
+                out.push(Ev::Write(layout.s(d)));
+            }
+        }
+    } else {
+        // Heap engine: initial fill reads one head per run, then one
+        // read per consumed element (pushed as its run's next head).
+        let mut heads: Vec<Option<i32>> = (0..k)
+            .map(|j| {
+                (cursors[j] < end[j]).then(|| {
+                    out.push(Ev::Read(layout.run(j, cursors[j])));
+                    runs[j][cursors[j]]
+                })
+            })
+            .collect();
+        for d in d0..d1 {
+            let (best, _) = heads
+                .iter()
+                .enumerate()
+                .filter_map(|(j, h)| h.as_ref().map(|&v| (j, v)))
+                .min_by_key(|&(j, v)| (v, j))
+                .expect("segment longer than its inputs");
+            cursors[best] += 1;
+            heads[best] = (cursors[best] < end[best]).then(|| {
+                out.push(Ev::Read(layout.run(best, cursors[best])));
+                runs[best][cursors[best]]
+            });
+            if writeback {
+                out.push(Ev::Write(layout.s(d)));
+            }
+        }
+    }
+    out
+}
+
+/// Thread `tid`'s events for the **segmented flat k-way engine**
+/// ([`segmented_kway_merge`](crate::mergepath::segmented_kway_merge)):
+/// the same global partition, then the thread's rank segment walked in
+/// `segment_elems`-output path windows, each merged by the bounded
+/// cursor-carrying kernel
+/// ([`loser_tree_merge_bounded`](crate::mergepath::loser_tree_merge_bounded)):
+/// `k` head reads at window start (the local head-value refill — an
+/// upper bound: the state-carrying
+/// [`loser_tree_merge_segmented`](crate::mergepath::loser_tree_merge_segmented)
+/// skips even those, so the model is conservative against the
+/// segmented engine), then exactly one read per consumed element — the
+/// `(k+1)·L` working-set bound in event form. No inter-thread
+/// barriers: each thread windows its own segment, the cursors are the
+/// window-local frontier.
+#[allow(clippy::too_many_arguments)]
+pub fn kway_segmented_events(
+    runs: &[&[i32]],
+    segment_elems: usize,
+    p: usize,
+    tid: usize,
+    writeback: bool,
+    stage: Stage,
+    layout: &KwayLayout,
+) -> Vec<Ev> {
+    assert!(p > 0 && tid < p && segment_elems > 0);
+    let k = runs.len();
+    let n: usize = runs.iter().map(|r| r.len()).sum();
+    let mut out = Vec::new();
+    let (start, end) = kway_segment_bounds(runs, p, tid, stage, layout, &mut out);
+    if !stage.merge() {
+        return out;
+    }
+    let mut cursors = start;
+    let d0 = tid * n / p;
+    let d1 = (tid + 1) * n / p;
+    let mut d = d0;
+    while d < d1 {
+        let wlen = segment_elems.min(d1 - d);
+        // Window-start refill: read every live head into the local
+        // head-value array (the bounded kernel's only re-touches).
+        let mut heads: Vec<Option<i32>> = (0..k)
+            .map(|j| {
+                (cursors[j] < end[j]).then(|| {
+                    out.push(Ev::Read(layout.run(j, cursors[j])));
+                    runs[j][cursors[j]]
+                })
+            })
+            .collect();
+        for _ in 0..wlen {
+            let (best, _) = heads
+                .iter()
+                .enumerate()
+                .filter_map(|(j, h)| h.as_ref().map(|&v| (j, v)))
+                .min_by_key(|&(j, v)| (v, j))
+                .expect("window longer than its inputs");
+            cursors[best] += 1;
+            heads[best] = (cursors[best] < end[best]).then(|| {
+                out.push(Ev::Read(layout.run(best, cursors[best])));
+                runs[best][cursors[best]]
+            });
+            if writeback {
+                out.push(Ev::Write(layout.s(d)));
+            }
+            d += 1;
+        }
+    }
+    out
+}
+
+/// Shared partition stage of both k-way engines: thread `tid ≥ 1`
+/// performs the rank selection for boundary `tid·n/p` (the selections
+/// run concurrently, CREW-style, exactly as
+/// [`partition_kway_merge_path_with_pool`](crate::mergepath::partition_kway_merge_path_with_pool)
+/// schedules them), emitting its probes when the partition stage is
+/// recorded. Returns this thread's per-run `(start, end)` cuts.
+fn kway_segment_bounds(
+    runs: &[&[i32]],
+    p: usize,
+    tid: usize,
+    stage: Stage,
+    layout: &KwayLayout,
+    out: &mut Vec<Ev>,
+) -> (Vec<usize>, Vec<usize>) {
+    let n: usize = runs.iter().map(|r| r.len()).sum();
+    let start = if tid == 0 {
+        vec![0usize; runs.len()]
+    } else if stage.partition() {
+        emit_kway_rank_split(runs, tid * n / p, layout, out)
+    } else {
+        crate::mergepath::kway_rank_split(runs, tid * n / p)
+    };
+    // The segment's end cut steers the replay but is thread tid+1's
+    // boundary (each boundary is searched exactly once across the
+    // region) — probes are not re-emitted here.
+    let end = if tid + 1 == p {
+        runs.iter().map(|r| r.len()).collect()
+    } else {
+        crate::mergepath::kway_rank_split(runs, (tid + 1) * n / p)
+    };
+    (start, end)
+}
+
 /// Emit the access pattern of a binary search over `n` slots.
 fn emit_binary_probes(n: usize, addr_of: impl Fn(usize) -> u64, out: &mut Vec<Ev>) {
     let (mut lo, mut hi) = (0usize, n);
@@ -455,6 +765,71 @@ mod tests {
             assert_eq!((r_sv, w_sv), (n, n), "sv p={p}");
             assert_eq!((r_as, w_as), (n, n), "as p={p}");
         }
+    }
+
+    #[test]
+    fn kway_streams_write_every_output_once() {
+        let mut rng = Xoshiro256::seeded(0xE6);
+        let runs: Vec<Vec<i32>> = (0..7)
+            .map(|_| random_sorted(&mut rng, 311, 4000))
+            .collect();
+        let refs: Vec<&[i32]> = runs.iter().map(|r| r.as_slice()).collect();
+        let layout = KwayLayout::contiguous(&[311; 7]);
+        let n = 7 * 311;
+        for p in [1usize, 3, 8] {
+            let (mut fw, mut sw) = (0usize, 0usize);
+            for tid in 0..p {
+                let fe = kway_flat_events(&refs, p, tid, true, Stage::Both, &layout);
+                fw += fe.iter().filter(|e| matches!(e, Ev::Write(_))).count();
+                let se =
+                    kway_segmented_events(&refs, 64, p, tid, true, Stage::Both, &layout);
+                sw += se.iter().filter(|e| matches!(e, Ev::Write(_))).count();
+                // Writes land in the output array, reads in the runs.
+                for e in fe.iter().chain(se.iter()) {
+                    match e {
+                        Ev::Write(a) => assert!(*a >= layout.base_s),
+                        Ev::Read(a) => assert!(*a < layout.base_s),
+                        _ => {}
+                    }
+                }
+            }
+            assert_eq!(fw, n, "flat p={p}");
+            assert_eq!(sw, n, "segmented p={p}");
+        }
+    }
+
+    #[test]
+    fn kway_partition_stage_is_rank_split_probes_only() {
+        let mut rng = Xoshiro256::seeded(0xE7);
+        let runs: Vec<Vec<i32>> = (0..5)
+            .map(|_| random_sorted(&mut rng, 400, 1 << 16))
+            .collect();
+        let refs: Vec<&[i32]> = runs.iter().map(|r| r.as_slice()).collect();
+        let layout = KwayLayout::contiguous(&[400; 5]);
+        // Thread 0 owns no boundary: empty partition stream.
+        let evs = kway_flat_events(&refs, 4, 0, true, Stage::Partition, &layout);
+        assert!(evs.is_empty());
+        // Interior threads emit only random probes, identically for
+        // both engines (shared partition stage).
+        for tid in 1..4 {
+            let fe = kway_flat_events(&refs, 4, tid, true, Stage::Partition, &layout);
+            assert!(!fe.is_empty());
+            assert!(fe.iter().all(|e| matches!(e, Ev::ReadRand(_))), "tid={tid}");
+            let se =
+                kway_segmented_events(&refs, 100, 4, tid, true, Stage::Partition, &layout);
+            assert_eq!(fe, se, "tid={tid}");
+        }
+    }
+
+    #[test]
+    fn kway_layout_bases_are_line_aligned_and_disjoint() {
+        let layout = KwayLayout::contiguous(&[100, 3, 0, 77]);
+        assert_eq!(layout.bases.len(), 4);
+        for w in layout.bases.windows(2) {
+            assert!(w[1] % 64 == 0 && w[1] >= w[0]);
+        }
+        assert!(layout.base_s >= *layout.bases.last().unwrap() + 77 * 4);
+        assert_eq!(layout.base_s % 64, 0);
     }
 
     #[test]

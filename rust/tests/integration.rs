@@ -20,7 +20,11 @@ fn base_config() -> MergeflowConfig {
         max_batch: 8,
         batch_timeout_us: 100,
         backend: Backend::Native,
+        // Tests opt into the segmented routes explicitly.
+        segmented: false,
         segment_len: 0,
+        kway_segment_elems: 0,
+        cache_bytes: 0,
         kway_flat_max_k: 64,
         // Tests opt into sharding / eager streaming explicitly.
         compact_sharding: false,

@@ -22,7 +22,11 @@ fn base_config() -> MergeflowConfig {
         max_batch: 8,
         batch_timeout_us: 100,
         backend: Backend::Native,
+        // The segmented-route sweeps below opt in explicitly.
+        segmented: false,
         segment_len: 0,
+        kway_segment_elems: 0,
+        cache_bytes: 0,
         kway_flat_max_k: 64,
         compact_sharding: false,
         compact_shard_min_len: 0,
@@ -155,6 +159,135 @@ fn streamed_route_is_stable_and_overlaps_under_duplicates() {
     assert_eq!(res.backend, "native-kway-streamed");
     assert_eq!(res.output, expected, "streamed ties must keep provenance");
     assert_eq!(svc.stats().completed.get(), 1);
+    svc.shutdown();
+}
+
+/// The pairwise `"native-segmented"` route (Alg 3), which the backend
+/// sweeps above never force: duplicate-heavy keyed records through
+/// `Merge` jobs with the segmented route pinned on, across segment
+/// lengths including the `L = 1` degenerate and `L` larger than either
+/// input run (windows then span whole inputs) — bit-identical to the
+/// stable pairwise oracle (all of A's ties precede B's).
+#[test]
+fn pairwise_segmented_route_is_stable_under_duplicates() {
+    // Stable pairwise oracle: concatenate A then B, stable-sort by key.
+    let dup_pair = |na: usize, nb: usize, dup: usize| -> (Vec<Rec>, Vec<Rec>) {
+        let gen = |src: u64, n: usize| {
+            (0..n)
+                .map(|off| ((off / dup) as u64, (src << 32) | off as u64))
+                .collect::<Vec<Rec>>()
+        };
+        (gen(0, na), gen(1, nb))
+    };
+    for &(segment_len, na, nb) in &[
+        (1usize, 600usize, 400usize), // L = 1: one output per window
+        (64, 3000, 3000),
+        (4000, 3000, 5000), // L larger than either input
+    ] {
+        let mut cfg = base_config();
+        cfg.segmented = true;
+        cfg.segment_len = segment_len;
+        let svc = MergeService::<Rec>::start(cfg).unwrap();
+        let (a, b) = dup_pair(na, nb, 50);
+        let mut expected: Vec<Rec> = a.iter().chain(b.iter()).copied().collect();
+        expected.sort_by_key(|r| r.0);
+        let res = svc.submit_blocking(JobKind::Merge { a, b }).unwrap();
+        assert_eq!(res.backend, "native-segmented", "L={segment_len}");
+        assert_eq!(res.output, expected, "L={segment_len}: A-ties must precede B's");
+        svc.shutdown();
+    }
+}
+
+/// The `"native-kway-segmented"` route: duplicate-heavy keyed-record
+/// compactions through the segmented flat engine, across window
+/// lengths including `L = 1` and `L` larger than every run — vs the
+/// stable oracle, bit for bit.
+#[test]
+fn segmented_kway_route_is_stable_under_duplicates() {
+    for &(kway_segment_elems, k, run_len) in &[
+        (1usize, 4usize, 1200usize), // every output its own window
+        (256, 6, 3000),
+        (5000, 6, 2000), // window larger than any run (12000 >= 2L)
+    ] {
+        let mut cfg = base_config();
+        cfg.segmented = true;
+        cfg.kway_segment_elems = kway_segment_elems;
+        let svc = MergeService::<Rec>::start(cfg).unwrap();
+        let runs = dup_runs(k, run_len, 64);
+        let expected = stable_oracle(&runs);
+        let res = svc.submit_blocking(JobKind::Compact { runs }).unwrap();
+        assert_eq!(res.backend, "native-kway-segmented-typed", "L={kway_segment_elems}");
+        assert_eq!(
+            res.output, expected,
+            "L={kway_segment_elems}: ties must keep run-then-offset order"
+        );
+        assert_eq!(svc.stats().kway_segmented_jobs.get(), 1);
+        svc.shutdown();
+    }
+    // All five workload kinds through the segmented k-way route (the
+    // record generator's keys collide densely for Skewed), vs the
+    // stable oracle.
+    let mut cfg = base_config();
+    cfg.segmented = true;
+    cfg.kway_segment_elems = 512;
+    let svc = MergeService::<Rec>::start(cfg).unwrap();
+    for (w, kind) in WorkloadKind::all().iter().enumerate() {
+        let runs = gen_record_runs(*kind, 5, 2000, 0x5E60 + w as u64);
+        let expected = stable_oracle(&runs);
+        let res = svc.submit_blocking(JobKind::Compact { runs }).unwrap();
+        assert_eq!(res.backend, "native-kway-segmented-typed", "{kind:?}");
+        assert_eq!(res.output, expected, "{kind:?}");
+    }
+    svc.shutdown();
+}
+
+/// Sharded and streamed routes with segmented (windowed) sub-merges:
+/// the per-shard bounded windows must not disturb the stitched stable
+/// order, and the windowed sub-merges must be visible in the stats.
+#[test]
+fn sharded_and_streamed_routes_stable_with_windowed_submerges() {
+    let mut cfg = base_config();
+    cfg.segmented = true;
+    cfg.kway_segment_elems = 128;
+    cfg.compact_sharding = true;
+    cfg.compact_shard_min_len = 2048;
+    let svc = MergeService::<Rec>::start(cfg).unwrap();
+    let runs = dup_runs(6, 3000, 128);
+    let expected = stable_oracle(&runs);
+    let res = svc.submit_blocking(JobKind::Compact { runs }).unwrap();
+    assert_eq!(res.backend, "native-kway-sharded");
+    assert_eq!(res.output, expected);
+    assert!(svc.stats().segmented_shard_merges.get() >= 2);
+    svc.shutdown();
+
+    let mut cfg = base_config();
+    cfg.segmented = true;
+    cfg.kway_segment_elems = 128;
+    cfg.compact_eager_min_len = 512;
+    let svc = MergeService::<Rec>::start(cfg).unwrap();
+    let runs = dup_runs(4, 4096, 4096);
+    let expected = stable_oracle(&runs);
+    let mut session = svc.open_compaction(4).unwrap();
+    for chunk in 0..4 {
+        for (i, r) in runs.iter().enumerate() {
+            session.feed(i, r[chunk * 1024..(chunk + 1) * 1024].to_vec()).unwrap();
+        }
+    }
+    // Wait for a pre-seal eager shard, so the session provably takes
+    // the streamed route (a seal landing in the same batch would fall
+    // back to the classic routing).
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while svc.stats().eager_shards.get() == 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(svc.stats().eager_shards.get() >= 1, "eager shard must launch pre-seal");
+    for i in 0..4 {
+        session.seal_run(i).unwrap();
+    }
+    let res = session.seal().unwrap().wait().unwrap();
+    assert_eq!(res.backend, "native-kway-streamed");
+    assert_eq!(res.output, expected);
+    assert!(svc.stats().segmented_shard_merges.get() >= 1);
     svc.shutdown();
 }
 
