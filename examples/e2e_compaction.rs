@@ -14,7 +14,7 @@
 //! Run: `cargo run --release --example e2e_compaction`
 
 use mergeflow::bench::workload::{gen_sorted_pair, WorkloadKind};
-use mergeflow::config::{Backend, MergeflowConfig};
+use mergeflow::config::{Backend, InplaceMode, MergeflowConfig};
 use mergeflow::coordinator::{JobKind, MergeService};
 use mergeflow::metrics::{fmt_ns, fmt_throughput, Timer};
 use mergeflow::rng::Xoshiro256;
@@ -45,6 +45,8 @@ fn main() {
         compact_shard_min_len: 512 << 10, // rank-shard compactions above 1M keys
         compact_chunk_len: 1 << 20,       // one-shot runs stream in 1M-key chunks
         compact_eager_min_len: 64 << 10,  // eager-merge once 64K ranks settle
+        memory_budget: 0,                 // unbudgeted: the demo keeps every route open
+        inplace: InplaceMode::Auto,
         artifacts_dir: "artifacts".into(),
     };
     println!("config: {cfg:?}");
@@ -233,6 +235,8 @@ fn main() {
             compact_shard_min_len: 128 << 10,
             compact_chunk_len: 0,
             compact_eager_min_len: 0,
+            memory_budget: 0,
+            inplace: InplaceMode::Auto,
             artifacts_dir: "artifacts".into(),
         };
         let typed = MergeService::<(u64, u64)>::start(typed_cfg).expect("typed service");

@@ -19,7 +19,7 @@
 
 use mergeflow::bench::harness::{report_line, BenchTimer};
 use mergeflow::bench::workload::{gen_sorted_runs, WorkloadKind};
-use mergeflow::config::{Backend, MergeflowConfig};
+use mergeflow::config::{Backend, InplaceMode, MergeflowConfig};
 use mergeflow::coordinator::{JobKind, MergeService};
 
 /// `min_len == 0` builds the unsharded (flat-engine) baseline — the
@@ -48,6 +48,9 @@ fn service(compact_shard_min_len: usize) -> MergeService {
         // shard-size knob, so the streamed route must stay out of it.
         compact_chunk_len: 0,
         compact_eager_min_len: 0,
+        // No budget / no in-place: the allocating kernels are the baseline.
+        memory_budget: 0,
+        inplace: InplaceMode::Never,
         artifacts_dir: "artifacts".into(),
     };
     MergeService::start(cfg).expect("service start")

@@ -131,6 +131,37 @@ impl std::str::FromStr for Backend {
     }
 }
 
+/// Routing policy for the block-swap in-place pairwise merge kernel
+/// (`mergepath::inplace`): trades `O(n log n)` comparisons for a peak
+/// extra footprint of `min(|A|, |B|)` elements instead of the
+/// allocating kernel's `|A| + |B|` output buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum InplaceMode {
+    /// Route in-place only when memory pressure warrants it: a
+    /// [`memory_budget`](MergeflowConfig::memory_budget) is configured
+    /// and the job's allocating-route footprint (~2× its data) would
+    /// exceed it. With no budget set, `auto` never routes in-place.
+    #[default]
+    Auto,
+    /// Always merge pairwise jobs in place (benchmarks, memory-bound
+    /// deployments).
+    Always,
+    /// Never use the in-place kernel.
+    Never,
+}
+
+impl std::str::FromStr for InplaceMode {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "auto" => Ok(InplaceMode::Auto),
+            "always" => Ok(InplaceMode::Always),
+            "never" => Ok(InplaceMode::Never),
+            other => Err(Error::Config(format!("unknown inplace mode `{other}`"))),
+        }
+    }
+}
+
 /// Full service configuration.
 #[derive(Debug, Clone)]
 pub struct MergeflowConfig {
@@ -238,6 +269,18 @@ pub struct MergeflowConfig {
     /// ranks *before* the session seals. 0 disables eager dispatch
     /// (all merging starts at `seal()`).
     pub compact_eager_min_len: usize,
+    /// Service-wide memory budget (bytes) for admission control. When
+    /// non-zero, `submit`/`feed` reject fail-fast — without poisoning
+    /// the service or any open session — whenever the job's estimated
+    /// peak working set plus the bytes already resident
+    /// (`ServiceStats::resident_bytes`) would exceed this budget. It
+    /// also feeds the [`InplaceMode::Auto`] routing decision. **0 means
+    /// unlimited** (no admission check, `auto` never routes in-place).
+    pub memory_budget: usize,
+    /// Routing policy for the in-place pairwise merge kernel; see
+    /// [`InplaceMode`]. Parsed from `merge.inplace` =
+    /// `"auto"`/`"always"`/`"never"`.
+    pub inplace: InplaceMode,
     /// Directory holding AOT artifacts.
     pub artifacts_dir: String,
 }
@@ -260,6 +303,8 @@ impl Default for MergeflowConfig {
             compact_shard_min_len: 2 << 20,
             compact_chunk_len: 1 << 20,
             compact_eager_min_len: 1 << 20,
+            memory_budget: 0,
+            inplace: InplaceMode::Auto,
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -289,6 +334,8 @@ impl MergeflowConfig {
             compact_chunk_len: raw.get_usize("merge.compact_chunk_len", d.compact_chunk_len)?,
             compact_eager_min_len: raw
                 .get_usize("merge.compact_eager_min_len", d.compact_eager_min_len)?,
+            memory_budget: raw.get_usize("merge.memory_budget", d.memory_budget)?,
+            inplace: raw.get_str("merge.inplace", "auto").parse()?,
             artifacts_dir: raw.get_str("service.artifacts_dir", &d.artifacts_dir),
         };
         cfg.validate()?;
@@ -367,6 +414,22 @@ impl MergeflowConfig {
             1,
         )
         .segment_elems
+    }
+
+    /// Whether a pairwise merge over `total_bytes` of input should take
+    /// the in-place route. `Auto` routes in-place exactly when a
+    /// [`memory_budget`](Self::memory_budget) is set and the allocating
+    /// route's ~2× footprint (input + full output buffer) would not fit
+    /// in it — i.e. in-place is the lever that keeps the job admissible
+    /// under the budget.
+    pub fn inplace_route(&self, total_bytes: usize) -> bool {
+        match self.inplace {
+            InplaceMode::Never => false,
+            InplaceMode::Always => true,
+            InplaceMode::Auto => {
+                self.memory_budget > 0 && 2usize.saturating_mul(total_bytes) > self.memory_budget
+            }
+        }
     }
 
     /// Check invariants.
@@ -481,6 +544,8 @@ compact_sharding = false
 compact_shard_min_len = 65536
 compact_chunk_len = 8192
 compact_eager_min_len = 16384
+memory_budget = 268435456
+inplace = "always"
 "#;
 
     #[test]
@@ -501,6 +566,8 @@ compact_eager_min_len = 16384
         assert_eq!(cfg.compact_shard_min_len, 65536);
         assert_eq!(cfg.compact_chunk_len, 8192);
         assert_eq!(cfg.compact_eager_min_len, 16384);
+        assert_eq!(cfg.memory_budget, 256 << 20);
+        assert_eq!(cfg.inplace, InplaceMode::Always);
         assert_eq!(cfg.batch_timeout_us, 150);
     }
 
@@ -519,6 +586,8 @@ compact_eager_min_len = 16384
             cfg.compact_eager_min_len,
             MergeflowConfig::default().compact_eager_min_len
         );
+        assert_eq!(cfg.memory_budget, 0, "budget defaults to unlimited");
+        assert_eq!(cfg.inplace, InplaceMode::Auto);
     }
 
     #[test]
@@ -529,6 +598,34 @@ compact_eager_min_len = 16384
         assert!(MergeflowConfig::from_raw(&raw).is_err());
         let raw = RawConfig::parse("[service]\nbackend = \"gpu\"\n").unwrap();
         assert!(MergeflowConfig::from_raw(&raw).is_err());
+        let raw = RawConfig::parse("[merge]\ninplace = \"sometimes\"\n").unwrap();
+        assert!(MergeflowConfig::from_raw(&raw).is_err());
+    }
+
+    #[test]
+    fn inplace_routing_policy() {
+        // Auto without a budget never routes in-place.
+        let auto = MergeflowConfig::default();
+        assert!(!auto.inplace_route(usize::MAX / 4));
+        // Auto with a budget routes exactly when 2× data would bust it.
+        let budgeted = MergeflowConfig { memory_budget: 1 << 20, ..Default::default() };
+        assert!(!budgeted.inplace_route(512 << 10), "2×512Ki fits the 1Mi budget");
+        assert!(budgeted.inplace_route((512 << 10) + 1));
+        assert!(budgeted.inplace_route(usize::MAX), "no mul overflow");
+        // Always / Never override the budget entirely.
+        let always = MergeflowConfig { inplace: InplaceMode::Always, ..Default::default() };
+        assert!(always.inplace_route(16));
+        let never = MergeflowConfig {
+            inplace: InplaceMode::Never,
+            memory_budget: 1,
+            ..Default::default()
+        };
+        assert!(!never.inplace_route(usize::MAX));
+        // FromStr spellings.
+        assert_eq!("auto".parse::<InplaceMode>().unwrap(), InplaceMode::Auto);
+        assert_eq!("always".parse::<InplaceMode>().unwrap(), InplaceMode::Always);
+        assert_eq!("never".parse::<InplaceMode>().unwrap(), InplaceMode::Never);
+        assert!("on".parse::<InplaceMode>().is_err());
     }
 
     #[test]

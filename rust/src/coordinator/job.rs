@@ -13,7 +13,9 @@ use std::time::Instant;
 #[derive(Debug, Clone)]
 pub enum JobKind<R: Record = i32> {
     /// Merge two sorted arrays. Stable: on key ties all of `a`'s
-    /// records precede `b`'s.
+    /// records precede `b`'s. Sortedness of each input is validated
+    /// per input at admission by the service — there is no separate
+    /// whole-job validation pass.
     Merge {
         /// Sorted input A.
         a: Vec<R>,
@@ -88,37 +90,6 @@ impl<R: Record> JobKind<R> {
         }
     }
 
-    /// Validate sortedness preconditions on the submit path; returns a
-    /// human-readable violation if any. Sortedness is always *by key*
-    /// ([`Record::key`]) — payload order within equal keys is free.
-    /// Only `Merge` is walked here: `Compact` runs are validated chunk
-    /// by chunk on the streaming feed path (every one-shot `Compact` is
-    /// re-expressed as a session, see [`super::session`]), which bounds
-    /// admission cost per call instead of one O(total) walk of every
-    /// run.
-    pub fn validate(&self) -> Result<(), String> {
-        match self {
-            JobKind::Merge { a, b } => {
-                if !crate::record::is_sorted_by_key(a) {
-                    return Err("merge input A is not sorted by key".into());
-                }
-                if !crate::record::is_sorted_by_key(b) {
-                    return Err("merge input B is not sorted by key".into());
-                }
-            }
-            JobKind::Sort { .. } => {}
-            // Validated on the session feed path (chunk admission).
-            JobKind::Compact { .. } => {}
-            // Internal kinds carry data their producers already
-            // validated; clients cannot construct their payloads.
-            JobKind::CompactShard { .. }
-            | JobKind::CompactChunk { .. }
-            | JobKind::CompactSealRun { .. }
-            | JobKind::CompactSeal { .. }
-            | JobKind::StreamShard { .. } => {}
-        }
-        Ok(())
-    }
 }
 
 /// An admitted job.
@@ -188,28 +159,4 @@ mod tests {
         assert_eq!(j.input_len(), 3);
     }
 
-    #[test]
-    fn validation_catches_unsorted() {
-        assert!(JobKind::Merge { a: vec![2, 1], b: vec![] }.validate().is_err());
-        assert!(JobKind::Merge { a: vec![1, 2], b: vec![0, 5] }.validate().is_ok());
-        // Compact is deliberately NOT walked here: its runs are
-        // validated chunk by chunk on the session feed path (the
-        // service still rejects unsorted compactions at submit — see
-        // the service tests).
-        assert!(JobKind::Compact { runs: vec![vec![1, 0]] }.validate().is_ok());
-        assert!(JobKind::Sort { data: vec![5, 1] }.validate().is_ok());
-    }
-
-    #[test]
-    fn validation_is_key_only_for_records() {
-        // Payload disorder within equal keys is fine; key disorder is
-        // not — merging never looks at payloads.
-        let ok = JobKind::Merge {
-            a: vec![(1u64, 9u64), (1, 2), (4, 0)],
-            b: vec![],
-        };
-        assert!(ok.validate().is_ok());
-        let bad = JobKind::Merge { a: vec![(2u64, 0u64), (1, 0)], b: vec![] };
-        assert!(bad.validate().is_err());
-    }
 }

@@ -37,8 +37,6 @@ pub mod stats;
 pub use job::{Job, JobHandle, JobKind, JobResult};
 pub use queue::{BoundedQueue, PushError};
 pub use service::{I32MergeService, MergeService};
-#[allow(deprecated)]
-pub use service::LegacyMergeService;
 pub use session::CompactionSession;
 pub use shard::ShardTask;
 pub use stats::ServiceStats;

@@ -31,9 +31,9 @@ use super::stats::ServiceStats;
 use crate::config::{Backend, MergeflowConfig};
 use crate::exec::WorkerPool;
 use crate::mergepath::{
-    parallel_kway_merge, parallel_merge_sort_with_pool, parallel_merge_with_pool,
-    segmented_kway_merge, segmented_parallel_merge_with_pool, KwaySegmentedConfig,
-    SegmentedConfig,
+    concat_for_inplace, parallel_inplace_merge_with_pool, parallel_kway_merge,
+    parallel_merge_sort_with_pool, parallel_merge_with_pool, segmented_kway_merge,
+    segmented_parallel_merge_with_pool, KwaySegmentedConfig, SegmentedConfig,
 };
 use crate::record::{self, ByKey, Record};
 use crate::runtime::XlaExecutor;
@@ -91,14 +91,23 @@ impl InFlight {
 /// run `WorkerPool::drop` on a pool thread and self-join (hang).
 /// Dropping on unwind also keeps a panicking job from leaking its
 /// slot, which would wedge both dispatch and shutdown.
+///
+/// The guard also carries the job's plan-time working-set estimate:
+/// the dispatcher charges it to [`ServiceStats::resident_bytes`] at
+/// dispatch, and the drop releases it — on unwind too, so a panicking
+/// job cannot permanently inflate the figure budget admission checks
+/// against.
 struct SlotGuard {
     pool: Option<Arc<WorkerPool>>,
     in_flight: Arc<InFlight>,
+    stats: Arc<ServiceStats>,
+    est_bytes: u64,
 }
 
 impl Drop for SlotGuard {
     fn drop(&mut self) {
         self.pool.take();
+        self.stats.resident_bytes.sub(self.est_bytes);
         self.in_flight.release();
     }
 }
@@ -118,15 +127,10 @@ pub struct MergeService<R: Record = i32> {
 
 /// The classic `i32`-keyed service, spelled explicitly.
 /// `MergeService`'s default record parameter means the bare name still
-/// denotes this same type in type positions.
+/// denotes this same type in type positions. (The pre-typed-API
+/// `LegacyMergeService` shim has been removed; this alias is the
+/// supported spelling.)
 pub type I32MergeService = MergeService<i32>;
-
-/// Pre-typed-API spelling, kept as a migration shim.
-#[deprecated(
-    note = "the coordinator is generic over keyed records; use `MergeService<R>` \
-            (or the `I32MergeService` alias for the classic scalar service)"
-)]
-pub type LegacyMergeService = MergeService<i32>;
 
 impl<R: Record> std::fmt::Debug for MergeService<R> {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
@@ -226,10 +230,21 @@ impl<R: Record> MergeService<R> {
             JobKind::Compact { runs } => return self.submit_compact(runs),
             other => other,
         };
-        if let Err(msg) = kind.validate() {
-            self.stats.rejected.inc();
-            return Err(Error::InvalidInput(msg));
+        // Per-input admission validation (the compact analogue is the
+        // per-chunk check on the session feed path): each merge input
+        // is checked independently, so the error names the offending
+        // input and the walk is bounded by that input alone.
+        if let JobKind::Merge { a, b } = &kind {
+            for (name, input) in [("A", a.as_slice()), ("B", b.as_slice())] {
+                if !record::is_sorted_by_key(input) {
+                    self.stats.rejected.inc();
+                    return Err(Error::InvalidInput(format!(
+                        "merge input {name} is not sorted by key"
+                    )));
+                }
+            }
         }
+        self.check_budget(estimated_job_bytes(&self.cfg, &kind))?;
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = channel();
         let job = Job { id, kind, enqueued_at: Instant::now(), reply: tx };
@@ -291,7 +306,30 @@ impl<R: Record> MergeService<R> {
             runs,
             blocking,
             eager,
+            self.cfg.memory_budget as u64,
         ))
+    }
+
+    /// Budget admission: with `merge.memory_budget` configured, reject
+    /// fast when `estimate` on top of what the service already holds
+    /// resident would exceed it. Non-poisoning by construction —
+    /// nothing was enqueued and no state changed, so the service keeps
+    /// serving and the client may resubmit once completions (or
+    /// streaming reclamation) bring the resident figure back down.
+    fn check_budget(&self, estimate: u64) -> Result<()> {
+        let budget = self.cfg.memory_budget as u64;
+        if budget == 0 {
+            return Ok(());
+        }
+        let resident = self.stats.resident_bytes.get();
+        if estimate.saturating_add(resident) > budget {
+            self.stats.rejected.inc();
+            return Err(Error::Service(format!(
+                "memory budget exceeded: job estimated at {estimate} B on top of \
+                 {resident} B resident would pass merge.memory_budget={budget} B"
+            )));
+        }
+        Ok(())
     }
 
     /// The one-shot compaction wrapper over the session protocol. The
@@ -306,6 +344,11 @@ impl<R: Record> MergeService<R> {
             self.stats.rejected.inc();
             return Err(Error::Service("queue full (back-pressure)".into()));
         }
+        // Budget admission for the whole compaction up front (the
+        // session's own per-chunk budget checks are skipped in
+        // reject mode — its ingest is this job's already-admitted
+        // working set, and re-checking per chunk would self-reject).
+        self.check_budget(compact_estimate(&self.cfg, &runs))?;
         // Chunked feeding only buys overlap when the dispatcher could
         // actually dispatch eager shards for this job (same gates as
         // the session planner); otherwise feed whole runs by move —
@@ -393,6 +436,55 @@ fn feed_round_robin<R: Record>(
     Ok(())
 }
 
+/// Plan-time estimate of a pairwise merge's peak working set in bytes:
+/// inputs plus a full output buffer on the allocating routes, inputs
+/// plus the *smaller* run on the in-place route (the only transient
+/// [`concat_for_inplace`] pays). This asymmetry is the point of the
+/// in-place kernel — under a tight `merge.memory_budget` it is what
+/// keeps large merges admissible at all.
+fn pairwise_estimate<R: Record>(cfg: &MergeflowConfig, a_len: usize, b_len: usize) -> u64 {
+    let elem = std::mem::size_of::<R>() as u64;
+    let total = a_len as u64 + b_len as u64;
+    let extra = if cfg.inplace_route((a_len + b_len).saturating_mul(std::mem::size_of::<R>()))
+    {
+        a_len.min(b_len) as u64
+    } else {
+        total
+    };
+    (total + extra) * elem
+}
+
+/// Plan-time estimate of a compaction's peak working set: inputs plus
+/// output for the k-way engines; the pairwise figure (which may route
+/// in place) when exactly two runs survive.
+fn compact_estimate<R: Record>(cfg: &MergeflowConfig, runs: &[Vec<R>]) -> u64 {
+    if runs.len() == 2 {
+        return pairwise_estimate::<R>(cfg, runs[0].len(), runs[1].len());
+    }
+    let elem = std::mem::size_of::<R>() as u64;
+    let total: u64 = runs.iter().map(|r| r.len() as u64).sum();
+    2 * total * elem
+}
+
+/// Plan-time working-set estimate for one dispatched job, charged to
+/// [`ServiceStats::resident_bytes`] for the job's in-flight lifetime
+/// (released by its [`SlotGuard`]). Session protocol messages estimate
+/// zero — their ingest is accounted exactly, per chunk, by the session
+/// layer.
+fn estimated_job_bytes<R: Record>(cfg: &MergeflowConfig, kind: &JobKind<R>) -> u64 {
+    let elem = std::mem::size_of::<R>() as u64;
+    match kind {
+        JobKind::Merge { a, b } => pairwise_estimate::<R>(cfg, a.len(), b.len()),
+        JobKind::Sort { data } => 2 * data.len() as u64 * elem,
+        JobKind::Compact { runs } => compact_estimate(cfg, runs),
+        JobKind::CompactShard { shard } => 2 * shard.len() as u64 * elem,
+        JobKind::StreamShard { shard } => 2 * shard.len() as u64 * elem,
+        JobKind::CompactChunk { .. }
+        | JobKind::CompactSealRun { .. }
+        | JobKind::CompactSeal { .. } => 0,
+    }
+}
+
 fn dispatcher_loop<R: Record>(
     cfg: MergeflowConfig,
     queue: Arc<BoundedQueue<Job<R>>>,
@@ -407,7 +499,7 @@ fn dispatcher_loop<R: Record>(
         // Free the buffered ingest of any sessions aborted since the
         // last iteration (runs on idle ticks too, so an abort on a
         // quiet service is still reclaimed within one poll interval).
-        table.reap_aborted();
+        table.reap_aborted(&stats);
         // Block for the first job of a batch.
         let Some(first) = queue.pop_timeout(Duration::from_millis(50)) else {
             if queue.is_closed() && queue.is_empty() {
@@ -462,12 +554,20 @@ fn dispatcher_loop<R: Record>(
         let dispatch = |job: Job<R>| {
             for sub in shard::maybe_expand(&cfg, &stats, job) {
                 in_flight.acquire();
+                // Charge the job's working-set estimate for its
+                // in-flight lifetime; the guard releases it (on panic
+                // too). This is what budget admission and the
+                // peak-resident high-water mark observe.
+                let est_bytes = estimated_job_bytes(&cfg, &sub.kind);
                 let cfg = cfg.clone();
                 let runtime = runtime.clone();
                 let stats = Arc::clone(&stats);
+                stats.resident_bytes.add(est_bytes);
                 let guard = SlotGuard {
                     pool: Some(Arc::clone(&pool)),
                     in_flight: Arc::clone(&in_flight),
+                    stats: Arc::clone(&stats),
+                    est_bytes,
                 };
                 pool.submit(move || {
                     let pool = guard.pool.as_deref().expect("guard holds the pool");
@@ -601,6 +701,23 @@ fn run_merge<R: Record>(
             }
         }
     }
+    // In-place route: when the memory budget makes an allocating
+    // merge's 2× footprint unaffordable (`merge.inplace = auto` with a
+    // budget, or `always`), concatenate the runs — growing the larger
+    // buffer by the smaller, the only transient this route pays — and
+    // run the block-swap kernel under the same Merge Path partition.
+    // Stable and bit-identical to the allocating routes.
+    let total_bytes = (a.len() + b.len()).saturating_mul(std::mem::size_of::<R>());
+    if cfg.inplace_route(total_bytes) {
+        let (mut buf, mid) = concat_for_inplace(a, b);
+        parallel_inplace_merge_with_pool(
+            pool,
+            record::as_keyed_mut(&mut buf),
+            mid,
+            cfg.threads_per_job,
+        );
+        return (buf, "native-inplace");
+    }
     // Fully tiled by the merge below (see crate::uninit_vec).
     let mut out: Vec<ByKey<R>> = crate::uninit_vec(a.len() + b.len());
     let (ka, kb) = (record::as_keyed(&a), record::as_keyed(&b));
@@ -665,6 +782,25 @@ fn run_compaction<R: Record>(
         return (runs.pop().unwrap(), "native");
     }
     let total: usize = runs.iter().map(|r| r.len()).sum();
+    // Two surviving runs under a memory budget (or `inplace = always`)
+    // take the pairwise in-place route: same stable cut, no full
+    // second output buffer — mirrored by `compact_estimate` at
+    // admission, so this is the route that keeps budgeted two-run
+    // compactions admissible.
+    if runs.len() == 2
+        && cfg.inplace_route(total.saturating_mul(std::mem::size_of::<R>()))
+    {
+        let b = runs.pop().expect("two runs");
+        let a = runs.pop().expect("two runs");
+        let (mut buf, mid) = concat_for_inplace(a, b);
+        parallel_inplace_merge_with_pool(
+            pool,
+            record::as_keyed_mut(&mut buf),
+            mid,
+            cfg.threads_per_job,
+        );
+        return (buf, "native-inplace");
+    }
     let refs: Vec<&[ByKey<R>]> = runs.iter().map(|r| record::as_keyed(r)).collect();
     if total < 4096 || cfg.threads_per_job == 1 {
         // Small compactions: one sequential k-way pass beats any
@@ -715,6 +851,7 @@ fn run_compaction<R: Record>(
 mod tests {
     use super::*;
     use crate::bench::workload::{gen_sorted_pair, gen_unsorted, WorkloadKind};
+    use crate::config::InplaceMode;
 
     fn test_config() -> MergeflowConfig {
         MergeflowConfig {
@@ -739,6 +876,10 @@ mod tests {
             compact_shard_min_len: 0,
             compact_chunk_len: 0,
             compact_eager_min_len: 0,
+            // No budget → Auto never routes in place; tests opt in via
+            // `inplace = Always` or an explicit budget.
+            memory_budget: 0,
+            inplace: InplaceMode::Auto,
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -1050,18 +1191,89 @@ mod tests {
     }
 
     #[test]
-    fn legacy_alias_still_names_the_service() {
-        // The deprecated pre-typed-API alias must keep compiling for
-        // downstream migrations.
-        #[allow(deprecated)]
-        fn start_legacy(cfg: MergeflowConfig) -> Result<LegacyMergeService> {
-            MergeService::start(cfg)
-        }
-        let svc: I32MergeService = start_legacy(test_config()).unwrap();
+    fn i32_alias_names_the_service() {
+        // The explicit alias for the classic scalar service (the
+        // supported spelling now that the deprecated
+        // `LegacyMergeService` shim is gone) names the same type as
+        // the bare default-parameter name.
+        let svc: I32MergeService = MergeService::start(test_config()).unwrap();
         let res = svc
             .submit_blocking(JobKind::Compact { runs: vec![vec![1, 3], vec![2]] })
             .unwrap();
         assert_eq!(res.output, vec![1, 2, 3]);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn inplace_route_tags_and_matches() {
+        let mut cfg = test_config();
+        cfg.inplace = InplaceMode::Always;
+        let svc = MergeService::start(cfg).unwrap();
+        // Pairwise merge through the block-swap kernel: tagged, and
+        // bit-identical to the allocating route's stable output.
+        let (a, b) = gen_sorted_pair(WorkloadKind::Uniform, 5000, 3000, 11);
+        let mut expected: Vec<i32> = a.iter().chain(b.iter()).copied().collect();
+        expected.sort_unstable();
+        let res = svc.submit_blocking(JobKind::Merge { a, b }).unwrap();
+        assert_eq!(res.backend, "native-inplace");
+        assert_eq!(res.output, expected);
+        // Two-run compactions ride the same kernel.
+        let (c, d) = gen_sorted_pair(WorkloadKind::Uniform, 4000, 2500, 12);
+        let mut expected: Vec<i32> = c.iter().chain(d.iter()).copied().collect();
+        expected.sort_unstable();
+        let res = svc.submit_blocking(JobKind::Compact { runs: vec![c, d] }).unwrap();
+        assert_eq!(res.backend, "native-inplace");
+        assert_eq!(res.output, expected);
+        assert_eq!(svc.stats().inplace_jobs.get(), 2);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn over_budget_jobs_reject_without_poisoning() {
+        let mut cfg = test_config();
+        cfg.memory_budget = 64 << 10; // 64 KiB
+        let svc = MergeService::start(cfg).unwrap();
+        // 16K + 16K i32 is 128 KiB of input alone — over budget on any
+        // route. Fail-fast Service error, rejection counted, nothing
+        // admitted.
+        let (a, b) = gen_sorted_pair(WorkloadKind::Uniform, 16_384, 16_384, 21);
+        let err = svc
+            .submit(JobKind::Merge { a: a.clone(), b: b.clone() })
+            .unwrap_err();
+        assert!(matches!(err, Error::Service(_)));
+        assert_eq!(svc.stats().rejected.get(), 1);
+        assert_eq!(svc.stats().submitted.get(), 0);
+        // Non-poisoning: in-budget work keeps flowing afterwards.
+        let res = svc
+            .submit_blocking(JobKind::Merge { a: vec![1, 3], b: vec![2] })
+            .unwrap();
+        assert_eq!(res.output, vec![1, 2, 3]);
+        assert_eq!(svc.stats().completed.get(), 1);
+        // Over-budget compactions reject through the same gate.
+        let err = svc.submit(JobKind::Compact { runs: vec![a, b] }).unwrap_err();
+        assert!(matches!(err, Error::Service(_)));
+        assert_eq!(svc.stats().rejected.get(), 2);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn inplace_keeps_budgeted_jobs_admissible() {
+        // The budget lever the in-place kernel exists for: 512 KiB of
+        // input under a 768 KiB budget. The allocating route would
+        // estimate inputs + full output = 1 MiB (rejected); the
+        // in-place route's transient is only the smaller run, so the
+        // same job admits — and `Auto` picks that route precisely
+        // because 2× input exceeds the budget.
+        let mut cfg = test_config();
+        cfg.memory_budget = 768 << 10;
+        let svc = MergeService::start(cfg).unwrap();
+        let (a, b) = gen_sorted_pair(WorkloadKind::Uniform, 98_304, 32_768, 22);
+        let mut expected: Vec<i32> = a.iter().chain(b.iter()).copied().collect();
+        expected.sort_unstable();
+        let res = svc.submit_blocking(JobKind::Merge { a, b }).unwrap();
+        assert_eq!(res.backend, "native-inplace");
+        assert_eq!(res.output, expected);
+        assert!(svc.stats().peak_resident_bytes() > 0);
         svc.shutdown();
     }
 

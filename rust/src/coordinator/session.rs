@@ -87,6 +87,27 @@
 //! admission checks replace `JobKind::validate`'s former O(total) walk
 //! of every compaction on the submit path: validation cost is now
 //! amortized and bounded by the chunk size per call.
+//!
+//! ## Frontier-driven run reclamation
+//!
+//! Once an eager shard has copied its windows out, the covered run
+//! prefixes can never be read again: every later cut is at a higher
+//! rank, and stable cuts are nested (the prefix of the merge at rank
+//! `r₁ < r₂` is componentwise a prefix of the cut at `r₂`). So after
+//! each planning round the dispatcher **drops the planned prefixes
+//! from the live buffers** ([`RunIngest::base`] records how much was
+//! dropped; `base + buf.len()` is the run's fed length). A long-lived
+//! streamed session therefore holds O(unsettled) bytes — the data
+//! between the planned rank and the ingest tip — instead of O(total).
+//! All rank arithmetic stays absolute at the interfaces; cuts over the
+//! live tails use `rank − Σ base`, which equals the absolute cut minus
+//! the per-run bases precisely because stable cuts are nested.
+//!
+//! Reclaimed bytes are counted in
+//! [`ServiceStats::reclaimed_bytes`], and every session's live ingest
+//! is tracked in the [`ServiceStats::resident_bytes`] gauge (added per
+//! chunk, subtracted on reclaim / abort / seal hand-off), which is
+//! what `merge.memory_budget` admission is checked against.
 
 use super::job::{Job, JobHandle, JobKind, JobResult};
 use super::queue::{BoundedQueue, PushError};
@@ -482,14 +503,19 @@ impl<R: Record> SessionTable<R> {
     /// Drop the state of every aborted session. Called by the
     /// dispatcher once per loop iteration; in-flight messages that
     /// still reference a reaped id just find no entry and are ignored.
-    pub(super) fn reap_aborted(&self) {
+    /// Releases the reaped sessions' live ingest from the resident
+    /// gauge — an abort mid-reclaim must leave the accounting at zero,
+    /// not leak the unreclaimed tail.
+    pub(super) fn reap_aborted(&self, stats: &ServiceStats) {
         let ids: Vec<u64> = std::mem::take(&mut *self.aborted.lock().unwrap());
         if ids.is_empty() {
             return;
         }
         let mut map = self.sessions.lock().unwrap();
         for id in ids {
-            map.remove(&id);
+            if let Some(state) = map.remove(&id) {
+                stats.resident_bytes.sub(state.ingest_bytes);
+            }
         }
     }
 }
@@ -514,18 +540,38 @@ struct SessionState<R: Record> {
     /// depending on where batch boundaries happen to fall.
     eager: bool,
     eager_count: usize,
+    /// Bytes of live (unreclaimed) ingest currently buffered across the
+    /// session's runs — the amount held in
+    /// [`ServiceStats::resident_bytes`] on this session's behalf.
+    ingest_bytes: u64,
     aborted: bool,
 }
 
 #[derive(Debug)]
 struct RunIngest<R: Record> {
+    /// Live (unreclaimed) tail of the run's fed prefix.
     buf: Vec<R>,
+    /// Elements already reclaimed from the front of the run — settled
+    /// prefixes copied into eager shards and then dropped.
+    /// `base + buf.len()` is the run's total fed length; all ranks at
+    /// the planner interfaces stay absolute.
+    base: usize,
+    /// Last record fed to the run. The frontier needs it even after
+    /// reclamation drains the live buffer to empty.
+    last: Option<R>,
     sealed: bool,
 }
 
 impl<R: Record> Default for RunIngest<R> {
     fn default() -> Self {
-        Self { buf: Vec::new(), sealed: false }
+        Self { buf: Vec::new(), base: 0, last: None, sealed: false }
+    }
+}
+
+impl<R: Record> RunIngest<R> {
+    /// Total elements fed to this run (reclaimed prefix + live tail).
+    fn fed_len(&self) -> usize {
+        self.base + self.buf.len()
     }
 }
 
@@ -535,14 +581,20 @@ impl<R: Record> Default for RunIngest<R> {
 /// every run up to (and including) the lowest-indexed open run whose
 /// last key is `F` — later runs must wait for that run's possible
 /// future ties. Everything once all runs are sealed; nothing while an
-/// open run is still empty.
+/// open run has never been fed.
+///
+/// Reclamation-aware: the frontier reads each run's `last` fed record
+/// (which survives draining the live buffer), and each run counts its
+/// reclaimed `base` in full — reclaimed elements were settled when
+/// dropped and settledness is monotone (the frontier never retreats,
+/// and the tie owner never moves below a run whose ties it admitted).
 fn safe_rank<R: Record>(runs: &[RunIngest<R>]) -> usize {
     let mut frontier: Option<&R::Key> = None;
     let mut all_sealed = true;
     for r in runs {
         if !r.sealed {
             all_sealed = false;
-            match r.buf.last() {
+            match &r.last {
                 None => return 0,
                 Some(v) => {
                     let k = v.key();
@@ -555,23 +607,24 @@ fn safe_rank<R: Record>(runs: &[RunIngest<R>]) -> usize {
         }
     }
     if all_sealed {
-        return runs.iter().map(|r| r.buf.len()).sum();
+        return runs.iter().map(|r| r.fed_len()).sum();
     }
     let f = frontier.expect("an open run with data exists");
     // The tie owner: lowest-indexed open run whose last fed key is F.
     let owner = runs
         .iter()
-        .position(|r| !r.sealed && r.buf.last().map(|v| v.key()) == Some(f))
+        .position(|r| !r.sealed && r.last.as_ref().map(|v| v.key()) == Some(f))
         .expect("the frontier came from some open run");
     runs.iter()
         .enumerate()
         .map(|(j, r)| {
             let below = r.buf.partition_point(|x| x.key() < f);
-            if j <= owner {
-                below + r.buf[below..].partition_point(|x| x.key() == f)
-            } else {
-                below
-            }
+            r.base
+                + if j <= owner {
+                    below + r.buf[below..].partition_point(|x| x.key() == f)
+                } else {
+                    below
+                }
         })
         .sum()
 }
@@ -607,11 +660,16 @@ pub(super) fn handle_message<R: Record>(
         JobKind::CompactChunk { msg } => {
             let Some(state) = map.get_mut(&msg.session) else { return Vec::new() };
             if state.aborted {
-                map.remove(&msg.session);
+                let st = map.remove(&msg.session).expect("entry just found");
+                stats.resident_bytes.sub(st.ingest_bytes);
                 return Vec::new();
             }
+            let bytes = std::mem::size_of_val(msg.data.as_slice()) as u64;
             let r = &mut state.runs[msg.run];
             debug_assert!(!r.sealed, "chunk for a sealed run passed admission");
+            if let Some(v) = msg.data.last() {
+                r.last = Some(*v);
+            }
             if r.buf.is_empty() {
                 // First chunk of a run lands by move — the whole-run
                 // feeds of the one-shot wrapper never copy.
@@ -619,13 +677,16 @@ pub(super) fn handle_message<R: Record>(
             } else {
                 r.buf.extend_from_slice(&msg.data);
             }
+            state.ingest_bytes += bytes;
+            stats.resident_bytes.add(bytes);
             touched.push(msg.session);
             Vec::new()
         }
         JobKind::CompactSealRun { msg } => {
             let Some(state) = map.get_mut(&msg.session) else { return Vec::new() };
             if state.aborted {
-                map.remove(&msg.session);
+                let st = map.remove(&msg.session).expect("entry just found");
+                stats.resident_bytes.sub(st.ingest_bytes);
                 return Vec::new();
             }
             state.runs[msg.run].sealed = true;
@@ -635,6 +696,7 @@ pub(super) fn handle_message<R: Record>(
         JobKind::CompactSeal { msg } => {
             let Some(state) = map.remove(&msg.session) else { return Vec::new() };
             if state.aborted {
+                stats.resident_bytes.sub(state.ingest_bytes);
                 return Vec::new();
             }
             // `state` is owned now — release the table lock so client
@@ -708,19 +770,28 @@ fn maybe_plan_eager<R: Record>(
         && state.eager_count < MAX_EAGER_SHARDS
     {
         let target = state.planned_rank + eager_len;
+        // The cut over the live tails at `target − Σ base` equals the
+        // absolute cut at `target` minus the per-run bases: stable
+        // cuts are nested, and every base is a previously planned cut.
+        let base_sum: usize = state.runs.iter().map(|r| r.base).sum();
         let cut = {
             let prefixes: Vec<&[ByKey<R>]> =
                 state.runs.iter().map(|r| record::as_keyed(&r.buf)).collect();
-            kway_rank_split(&prefixes, target)
+            kway_rank_split(&prefixes, target - base_sum)
         };
         let windows: Vec<Vec<R>> = state
             .runs
             .iter()
             .zip(cut.iter().zip(state.planned.iter()))
-            .map(|(r, (&e, &s))| r.buf[s..e].to_vec())
+            .map(|(r, (&e_rel, &s_abs))| r.buf[s_abs - r.base..e_rel].to_vec())
             .collect();
         let idx = state.exec.push_slot(state.planned_rank..target);
-        state.planned = cut;
+        state.planned = state
+            .runs
+            .iter()
+            .zip(cut.iter())
+            .map(|(r, &e_rel)| r.base + e_rel)
+            .collect();
         state.planned_rank = target;
         state.eager_count += 1;
         stats.eager_shards.inc();
@@ -739,7 +810,35 @@ fn maybe_plan_eager<R: Record>(
             reply: state.reply.clone(),
         });
     }
+    if !jobs.is_empty() {
+        reclaim_planned(stats, state);
+    }
     jobs
+}
+
+/// Frontier-driven run reclamation: drop the planned prefixes from the
+/// live ingest buffers. Everything below `planned[j]` has been copied
+/// into eager shard windows and — stable cuts being nested — can never
+/// be read by a later cut, so a long-lived streamed session holds
+/// O(unsettled) bytes instead of O(total). Buffers whose live tail
+/// shrank below half their capacity are reallocated down so the freed
+/// memory actually returns to the allocator.
+fn reclaim_planned<R: Record>(stats: &ServiceStats, state: &mut SessionState<R>) {
+    for (r, &p) in state.runs.iter_mut().zip(state.planned.iter()) {
+        let rel = p - r.base;
+        if rel == 0 {
+            continue;
+        }
+        let bytes = (rel * std::mem::size_of::<R>()) as u64;
+        r.buf.drain(..rel);
+        if r.buf.capacity() / 2 > r.buf.len() {
+            r.buf.shrink_to_fit();
+        }
+        r.base = p;
+        state.ingest_bytes -= bytes;
+        stats.resident_bytes.sub(bytes);
+        stats.reclaimed_bytes.add(bytes);
+    }
 }
 
 /// Seal processing. With no eager work done the session degrades to the
@@ -761,12 +860,20 @@ fn finalize<R: Record>(
     for r in &mut state.runs {
         r.sealed = true;
     }
+    // The buffers leave session ownership here — as a classic Compact
+    // payload or as Arc'd frozen shard inputs, both re-estimated at
+    // dispatch — so the session's share of the resident gauge drops.
+    stats.resident_bytes.sub(state.ingest_bytes);
+    state.ingest_bytes = 0;
     // Latency accounting runs from session open, so the reported
     // end-to-end figure covers the whole ingest (and "queue wait" is
     // the open→seal ingest duration).
     let opened_at = state.enqueued_at;
-    let total: usize = state.runs.iter().map(|r| r.buf.len()).sum();
+    let total: usize = state.runs.iter().map(|r| r.fed_len()).sum();
     if state.eager_count == 0 {
+        // No eager shards means no reclamation ran: the live buffers
+        // are the complete runs and move into the classic route whole.
+        debug_assert!(state.runs.iter().all(|r| r.base == 0));
         let runs: Vec<Vec<R>> = state.runs.into_iter().map(|r| r.buf).collect();
         return vec![Job {
             id,
@@ -778,6 +885,12 @@ fn finalize<R: Record>(
     let queue_wait_ns =
         u64::try_from(opened_at.elapsed().as_nanos()).unwrap_or(u64::MAX);
     let remainder = total - state.planned_rank;
+    // Remainder planning works on the live tails; `bases` converts the
+    // absolute planner state (`planned`, output ranks) into positions
+    // relative to them. The `Windowed` ranges index the frozen live
+    // buffers; output windows stay absolute.
+    let bases: Vec<usize> = state.runs.iter().map(|r| r.base).collect();
+    let base_sum: usize = bases.iter().sum();
     let runs: Arc<Vec<Vec<R>>> =
         Arc::new(state.runs.into_iter().map(|r| r.buf).collect());
     // The final output buffer, allocated exactly once. Eager windows
@@ -807,14 +920,19 @@ fn finalize<R: Record>(
         };
         let refs: Vec<&[ByKey<R>]> =
             runs.iter().map(|r| record::as_keyed(r)).collect();
-        let mut prev = state.planned.clone();
+        let mut prev: Vec<usize> = state
+            .planned
+            .iter()
+            .zip(bases.iter())
+            .map(|(&p, &b)| p - b)
+            .collect();
         let mut prev_rank = state.planned_rank;
         for i in 1..=n {
             let (cut, rank): (Vec<usize>, usize) = if i == n {
                 (refs.iter().map(|r| r.len()).collect(), total)
             } else {
                 let rank = state.planned_rank + i * remainder / n;
-                (kway_rank_split(&refs, rank), rank)
+                (kway_rank_split(&refs, rank - base_sum), rank)
             };
             let ranges: Vec<Range<usize>> =
                 prev.iter().zip(cut.iter()).map(|(&s, &e)| s..e).collect();
@@ -905,6 +1023,11 @@ pub struct CompactionSession<R: Record = i32> {
     blocking: bool,
     /// Set after the first successful push (see `blocking`).
     admitted: bool,
+    /// `merge.memory_budget` in bytes (`0` = unlimited). Streaming
+    /// feeds are budget-checked per chunk; the one-shot wrapper is
+    /// checked once at submit instead (its own ingest is already
+    /// resident, so per-chunk checks would self-reject).
+    budget: u64,
 }
 
 #[derive(Debug)]
@@ -925,6 +1048,7 @@ pub(super) fn open<R: Record>(
     run_count: usize,
     blocking: bool,
     eager: bool,
+    budget: u64,
 ) -> CompactionSession<R> {
     let (tx, rx) = channel();
     table.insert(
@@ -938,6 +1062,7 @@ pub(super) fn open<R: Record>(
             enqueued_at: Instant::now(),
             eager,
             eager_count: 0,
+            ingest_bytes: 0,
             aborted: false,
         },
     );
@@ -952,6 +1077,7 @@ pub(super) fn open<R: Record>(
         sealed: false,
         blocking,
         admitted: false,
+        budget,
     }
 }
 
@@ -1035,12 +1161,28 @@ impl<R: Record> CompactionSession<R> {
                 )));
             }
         }
+        let bytes = std::mem::size_of_val(chunk.as_slice()) as u64;
+        // Budget admission (streaming clients only; the one-shot
+        // wrapper was budget-checked at submit): fail fast without
+        // poisoning the session — the chunk is simply not admitted,
+        // and the client may retry once reclamation or completions
+        // bring the resident figure back under budget.
+        if self.blocking
+            && self.budget > 0
+            && self.stats.resident_bytes.get().saturating_add(bytes) > self.budget
+        {
+            return Err(Error::Service(format!(
+                "memory budget exceeded: chunk of {bytes} bytes would push resident \
+                 {} past merge.memory_budget={}",
+                self.stats.resident_bytes.get(),
+                self.budget
+            )));
+        }
         // Client-side state and the admission counters advance only
         // after the push succeeds: a rejected push (full queue in
         // reject mode, or shutdown) must leave the session exactly as
         // it was, so the same chunk can be retried.
         let last = chunk.last().copied();
-        let bytes = std::mem::size_of_val(chunk.as_slice()) as u64;
         self.push(JobKind::CompactChunk {
             msg: ChunkMsg { session: self.id, run, data: chunk },
         })?;
@@ -1107,7 +1249,12 @@ mod tests {
     fn ingest(pairs: &[(&[i32], bool)]) -> Vec<RunIngest<i32>> {
         pairs
             .iter()
-            .map(|(buf, sealed)| RunIngest { buf: buf.to_vec(), sealed: *sealed })
+            .map(|(buf, sealed)| RunIngest {
+                buf: buf.to_vec(),
+                base: 0,
+                last: buf.last().copied(),
+                sealed: *sealed,
+            })
             .collect()
     }
 
@@ -1249,6 +1396,7 @@ mod tests {
             enqueued_at: Instant::now(),
             eager: true,
             eager_count: 0,
+            ingest_bytes: 40, // 10 × i32, as if fed through chunks
             aborted: false,
         };
         // Frontier = 50 → 8 settled ranks → two eager shards of 4.
@@ -1257,6 +1405,14 @@ mod tests {
         assert_eq!(state.planned_rank, 8);
         assert_eq!(state.planned, vec![4, 4]);
         assert_eq!(stats.eager_shards.get(), 2);
+        // Reclamation dropped the planned prefixes: only the two
+        // unsettled tails stay live, and the accounting says so.
+        assert_eq!(state.runs[0].buf, vec![50]);
+        assert_eq!(state.runs[1].buf, vec![60]);
+        assert_eq!(state.runs[0].base, 4);
+        assert_eq!(state.runs[1].base, 4);
+        assert_eq!(state.ingest_bytes, 8);
+        assert_eq!(stats.reclaimed_bytes.get(), 32);
         // Nothing new settled → no further shards.
         assert!(maybe_plan_eager(&cfg, &stats, &mut state, 1).is_empty());
         // All runs sealed → the seal will handle the tail zero-copy.
@@ -1303,18 +1459,99 @@ mod tests {
             enqueued_at: Instant::now(),
             eager: true,
             eager_count: 0,
+            ingest_bytes: 28, // 7 × i32
             aborted: false,
         };
         let jobs = maybe_plan_eager(&cfg, &stats, &mut state, 1);
         assert_eq!(jobs.len(), 2, "4 settled ranks / eager_len 2");
         assert_eq!(state.planned_rank, 4);
         assert_eq!(state.planned, vec![4, 0], "all shards cut from the tie owner");
+        // The tie owner's settled duplicates reclaim; the waiting run
+        // keeps everything.
+        assert!(state.runs[0].buf.is_empty());
+        assert_eq!(state.runs[0].base, 4);
+        assert_eq!(state.runs[1].buf.len(), 3);
+        assert_eq!(stats.reclaimed_bytes.get(), 16);
+    }
+
+    #[test]
+    fn safe_rank_counts_reclaimed_bases() {
+        // A run fully drained by reclamation still anchors the frontier
+        // through `last`, and its base counts as settled in full.
+        let runs = vec![
+            RunIngest { buf: vec![], base: 4, last: Some(6), sealed: false },
+            RunIngest { buf: vec![5, 8, 9], base: 2, last: Some(9), sealed: false },
+        ];
+        // Frontier = min(6, 9) = 6, owned by run 0 (its future ties
+        // land later). Run 0: base 4 + its tie at 6 already reclaimed.
+        // Run 1: base 2 + one live element below 6 (the 5).
+        assert_eq!(safe_rank(&runs), 4 + 2 + 1);
+        // All sealed: everything fed settles, bases included.
+        let sealed = vec![
+            RunIngest { buf: vec![], base: 4, last: Some(6), sealed: true },
+            RunIngest { buf: vec![5, 8, 9], base: 2, last: Some(9), sealed: true },
+        ];
+        assert_eq!(safe_rank(&sealed), 9);
+    }
+
+    #[test]
+    fn eager_plan_continues_after_reclamation() {
+        // Cuts after a reclamation use live-relative ranks; the planned
+        // state stays absolute and the windows line up bit-identically
+        // with what an unreclaimed session would have cut.
+        let cfg =
+            MergeflowConfig { compact_eager_min_len: 2, ..MergeflowConfig::default() };
+        let stats = ServiceStats::new();
+        let (tx, _rx) = channel();
+        let mut state = SessionState {
+            runs: ingest(&[(&[1, 3, 5, 7], false), (&[2, 4, 6, 8], false)]),
+            planned: vec![0, 0],
+            planned_rank: 0,
+            exec: Arc::new(StreamExec::default()),
+            reply: tx,
+            enqueued_at: Instant::now(),
+            eager: true,
+            eager_count: 0,
+            ingest_bytes: 32,
+            aborted: false,
+        };
+        // Frontier = 7 → 7 settled ranks → three shards of 2; then the
+        // planned prefixes reclaim.
+        let first = maybe_plan_eager(&cfg, &stats, &mut state, 1);
+        assert_eq!(first.len(), 3);
+        assert_eq!(state.planned_rank, 6);
+        assert_eq!(state.planned, vec![3, 3]);
+        assert!(state.runs.iter().all(|r| r.base == 3 && r.buf.len() == 1));
+        // More data arrives on the drained buffers; planning resumes
+        // across the reclaimed boundary.
+        for (r, tail) in state.runs.iter_mut().zip([[9i32, 11], [10, 12]]) {
+            r.buf.extend_from_slice(&tail);
+            r.last = Some(tail[1]);
+            state.ingest_bytes += 8;
+        }
+        let second = maybe_plan_eager(&cfg, &stats, &mut state, 1);
+        assert_eq!(second.len(), 2, "ranks 6..10 settle under frontier 11");
+        assert_eq!(state.planned_rank, 10);
+        assert_eq!(state.planned, vec![5, 5]);
+        // Execute everything; the rank-ordered slots must tile the
+        // stable merge of the fed prefixes exactly.
+        for job in first.into_iter().chain(second) {
+            match job.kind {
+                JobKind::StreamShard { shard } => execute_stream_shard(shard, &stats),
+                _ => unreachable!("eager planning emits stream shards"),
+            }
+        }
+        let st = state.exec.state.lock().unwrap();
+        let merged: Vec<i32> = st.parked.iter().flat_map(|o| o.clone().unwrap()).collect();
+        assert_eq!(merged, vec![1, 2, 3, 4, 5, 6, 7, 8, 9, 10]);
     }
 
     #[test]
     fn reap_frees_aborted_sessions() {
+        let stats = ServiceStats::new();
         let table: SessionTable<i32> = SessionTable::default();
         let (tx, _rx) = channel();
+        stats.resident_bytes.add(12);
         table.insert(
             7,
             SessionState {
@@ -1326,16 +1563,22 @@ mod tests {
                 enqueued_at: Instant::now(),
                 eager: true,
                 eager_count: 0,
+                ingest_bytes: 12,
                 aborted: false,
             },
         );
         table.mark_aborted(7);
         assert!(!table.sessions.lock().unwrap().is_empty(), "reap is deferred");
-        table.reap_aborted();
+        table.reap_aborted(&stats);
         assert!(table.sessions.lock().unwrap().is_empty(), "buffers freed");
+        assert_eq!(
+            stats.resident_bytes.get(),
+            0,
+            "aborted ingest must leave the resident gauge"
+        );
         // Aborting an id with no entry (already reaped) is a no-op.
         table.mark_aborted(99);
-        table.reap_aborted();
+        table.reap_aborted(&stats);
     }
 
     #[test]
@@ -1351,6 +1594,7 @@ mod tests {
             enqueued_at: Instant::now(),
             eager: true,
             eager_count: 0,
+            ingest_bytes: 0,
             aborted: false,
         };
         let off =

@@ -1,6 +1,6 @@
 //! Service-level metrics.
 
-use crate::metrics::{fmt_ns, Counter, Histogram};
+use crate::metrics::{fmt_ns, Counter, Gauge, Histogram};
 
 /// Counters + latency histogram for the running service.
 #[derive(Debug, Default)]
@@ -57,6 +57,11 @@ pub struct ServiceStats {
     pub eager_shards: Counter,
     /// Stream shards completed (eager + remainder).
     pub stream_shards_completed: Counter,
+    /// Pairwise merges executed on the block-swap in-place kernel
+    /// (backend "native-inplace") — the route that skips the full
+    /// output buffer when the memory budget makes 2× footprint
+    /// unaffordable (`merge.inplace`, `merge.memory_budget`).
+    pub inplace_jobs: Counter,
     /// Jobs executed on the XLA backend.
     pub xla_jobs: Counter,
     /// Elements processed in total.
@@ -67,6 +72,16 @@ pub struct ServiceStats {
     pub latency: Histogram,
     /// Queue wait latency (ns).
     pub queue_wait: Histogram,
+    /// Bytes the service currently holds live on behalf of jobs:
+    /// session ingest buffers plus plan-time estimates of dispatched
+    /// jobs' working sets. `peak()` is the service-wide high-water mark
+    /// — the number a `merge.memory_budget` is sized against.
+    pub resident_bytes: Gauge,
+    /// Bytes released early by frontier-driven run reclamation —
+    /// settled run prefixes dropped *before* session seal. Zero means
+    /// streamed sessions held O(total); anything above proves
+    /// O(unsettled).
+    pub reclaimed_bytes: Counter,
 }
 
 impl ServiceStats {
@@ -90,16 +105,24 @@ impl ServiceStats {
             }
             "native-kway-sharded" => self.sharded_jobs.inc(),
             "native-kway-streamed" => self.streamed_jobs.inc(),
+            "native-inplace" => self.inplace_jobs.inc(),
             _ => self.native_jobs.inc(),
         }
+    }
+
+    /// Service-wide peak resident bytes (high-water mark of
+    /// [`ServiceStats::resident_bytes`]).
+    pub fn peak_resident_bytes(&self) -> u64 {
+        self.resident_bytes.peak()
     }
 
     /// Human-readable snapshot (the `serve` CLI's stats dump).
     pub fn snapshot(&self) -> String {
         format!(
-            "jobs: submitted={} completed={} rejected={} | backends: native={} segmented={} kway={} kway-seg={} sharded={} streamed={} xla={} | \
+            "jobs: submitted={} completed={} rejected={} | backends: native={} segmented={} kway={} kway-seg={} sharded={} streamed={} inplace={} xla={} | \
              shards: planned={} done={} seg-merges={} | \
              streaming: sessions={} chunks={} bytes={} eager={} stream-done={} | \
+             mem: resident={} peak={} reclaimed={} | \
              batches={} elements={} | latency p50={} p95={} p99={} max={} | queue-wait p50={}",
             self.submitted.get(),
             self.completed.get(),
@@ -110,6 +133,7 @@ impl ServiceStats {
             self.kway_segmented_jobs.get(),
             self.sharded_jobs.get(),
             self.streamed_jobs.get(),
+            self.inplace_jobs.get(),
             self.xla_jobs.get(),
             self.compact_shards.get(),
             self.compact_shards_completed.get(),
@@ -119,6 +143,9 @@ impl ServiceStats {
             self.streamed_bytes.get(),
             self.eager_shards.get(),
             self.stream_shards_completed.get(),
+            self.resident_bytes.get(),
+            self.resident_bytes.peak(),
+            self.reclaimed_bytes.get(),
             self.batches.get(),
             self.elements.get(),
             fmt_ns(self.latency.quantile(0.5)),
@@ -146,7 +173,8 @@ mod tests {
         s.record_completion("native-kway-segmented-typed", 470, 4700, 47);
         s.record_completion("native-kway-sharded", 500, 5000, 50);
         s.record_completion("native-kway-streamed", 600, 6000, 60);
-        assert_eq!(s.completed.get(), 9);
+        s.record_completion("native-inplace", 700, 7000, 70);
+        assert_eq!(s.completed.get(), 10);
         assert_eq!(s.native_jobs.get(), 1);
         assert_eq!(s.xla_jobs.get(), 1);
         assert_eq!(s.segmented_jobs.get(), 1);
@@ -154,13 +182,15 @@ mod tests {
         assert_eq!(s.kway_segmented_jobs.get(), 2, "typed segmented tag too");
         assert_eq!(s.sharded_jobs.get(), 1);
         assert_eq!(s.streamed_jobs.get(), 1);
-        assert_eq!(s.elements.get(), 3500);
+        assert_eq!(s.inplace_jobs.get(), 1);
+        assert_eq!(s.elements.get(), 4200);
         let snap = s.snapshot();
-        assert!(snap.contains("completed=9"));
+        assert!(snap.contains("completed=10"));
         assert!(snap.contains("kway=2"));
         assert!(snap.contains("kway-seg=2"));
         assert!(snap.contains("sharded=1"));
         assert!(snap.contains("streamed=1"));
+        assert!(snap.contains("inplace=1"));
         assert!(snap.contains("xla=1"));
     }
 
@@ -194,5 +224,19 @@ mod tests {
         let snap = s.snapshot();
         assert!(snap.contains("planned=8"));
         assert!(snap.contains("seg-merges=3"));
+    }
+
+    #[test]
+    fn memory_counters_in_snapshot() {
+        let s = ServiceStats::new();
+        s.resident_bytes.add(8192);
+        s.resident_bytes.sub(4096);
+        s.reclaimed_bytes.add(4096);
+        assert_eq!(s.peak_resident_bytes(), 8192);
+        let snap = s.snapshot();
+        assert!(snap.contains("resident=4096"));
+        assert!(snap.contains("peak=8192"));
+        assert!(snap.contains("reclaimed=4096"));
+        assert_eq!(s.completed.get(), 0, "memory accounting is not a completion");
     }
 }

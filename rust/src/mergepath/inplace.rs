@@ -1,0 +1,416 @@
+//! In-place pairwise merge under the Merge Path partition.
+//!
+//! The allocating kernels in [`super::merge`] need a full output buffer,
+//! so a pairwise merge's peak footprint is ~2× its data. This module
+//! trades comparisons for memory: a **block-swap in-place merge** in the
+//! style of Bramas & Bramas (arxiv 2005.12648), built from the
+//! symmetric rotation merge of Kim & Kutzner (*Ratio based stable
+//! in-place merging*, the `symMerge` scheme) as the sequential kernel.
+//! `O((n_a + n_b) · log(n_a + n_b))` comparisons and moves, **zero heap
+//! allocation**, and — load-bearing for the typed-record API — *stable*:
+//! equal keys keep A-before-B order, bit-identical to
+//! [`super::merge::merge_into`].
+//!
+//! Parallelisation reuses the paper's machinery unchanged: a cross
+//! diagonal `d` is cut with [`super::diagonal::diagonal_intersection`]
+//! (A-priority, so ties stay stable), the middle region
+//! `buf[a_cut .. mid + b_cut]` is rotated to make both sides of the cut
+//! contiguous, and the two halves recurse on disjoint windows — thread
+//! counts are halved at each level, so `p` threads cost `O(log p)`
+//! sequential rotations of total `O(n · log p)` moves before the leaves
+//! merge independently (the same disjoint-window argument as
+//! [`super::parallel`], Thm 5). Scratch per thread is `O(log n)` stack
+//! frames — the "O(p·L) scratch" in the memory-model budget.
+
+use super::diagonal::diagonal_intersection;
+use super::parallel::SliceParts;
+use crate::exec::{fork_join, WorkerPool};
+
+/// Stable in-place merge of the two sorted halves `buf[..mid]` and
+/// `buf[mid..]`, sequential. Equal keys keep A-before-B order; output
+/// is bit-identical to [`super::merge::merge_into`] of the halves.
+///
+/// `O(n log n)` comparisons and moves, no allocation.
+///
+/// # Panics
+/// If `mid > buf.len()`.
+pub fn merge_in_place<T: Ord>(buf: &mut [T], mid: usize) {
+    assert!(mid <= buf.len(), "mid out of range");
+    debug_assert!(buf[..mid].windows(2).all(|w| w[0] <= w[1]));
+    debug_assert!(buf[mid..].windows(2).all(|w| w[0] <= w[1]));
+    if mid == 0 || mid == buf.len() {
+        return;
+    }
+    sym_merge(buf, 0, mid, buf.len());
+}
+
+/// Symmetric rotation merge of `d[a..m]` and `d[m..b]` (Kim–Kutzner).
+///
+/// Recursion: binary-search the longest symmetric prefix/suffix pair
+/// that is out of order across the boundary, rotate it into place, and
+/// recurse on the two halves around the midpoint `(a + b) / 2`. Depth
+/// `O(log (b - a))`. Both base cases are stable single-element binary
+/// insertions: an A element goes *before* equal B elements, a B element
+/// *after* equal A elements.
+fn sym_merge<T: Ord>(d: &mut [T], a: usize, m: usize, b: usize) {
+    debug_assert!(a < m && m < b);
+    if m - a == 1 {
+        // Insert the single A element d[a] into d[m..b): find the first
+        // B element >= it (ties keep A first), then bubble it up.
+        let mut i = m;
+        let mut j = b;
+        while i < j {
+            let h = (i + j) / 2;
+            if d[h] < d[a] {
+                i = h + 1;
+            } else {
+                j = h;
+            }
+        }
+        for k in a..i - 1 {
+            d.swap(k, k + 1);
+        }
+        return;
+    }
+    if b - m == 1 {
+        // Insert the single B element d[m] into d[a..m): it goes after
+        // every A element <= it (ties keep A first).
+        let mut i = a;
+        let mut j = m;
+        while i < j {
+            let h = (i + j) / 2;
+            if d[m] >= d[h] {
+                i = h + 1;
+            } else {
+                j = h;
+            }
+        }
+        for k in (i + 1..=m).rev() {
+            d.swap(k, k - 1);
+        }
+        return;
+    }
+    let mid = (a + b) / 2;
+    let n = mid + m;
+    let (mut start, mut r) = if m > mid { (n - b, mid) } else { (a, m) };
+    // Binary-search the symmetric split: the largest `start` such that
+    // the A suffix d[start..m] still belongs after the B prefix
+    // d[m..n-start]. The `>=` keeps ties with A (stability).
+    let p = n - 1;
+    while start < r {
+        let c = (start + r) / 2;
+        if d[p - c] >= d[c] {
+            start = c + 1;
+        } else {
+            r = c;
+        }
+    }
+    let end = n - start;
+    if start < m && m < end {
+        d[start..end].rotate_left(m - start);
+    }
+    if a < start && start < mid {
+        sym_merge(d, a, start, mid);
+    }
+    if mid < end && end < b {
+        sym_merge(d, mid, end, b);
+    }
+}
+
+/// Stable parallel in-place merge of `buf[..mid]` / `buf[mid..]` using
+/// `p` threads: Merge Path diagonal cuts + rotations partition the
+/// buffer into `p` disjoint windows, each merged in place with
+/// [`merge_in_place`]. Output is bit-identical to the sequential merge
+/// for every `p`.
+///
+/// # Panics
+/// If `mid > buf.len()` or `p == 0`.
+pub fn parallel_inplace_merge<T: Ord + Send>(buf: &mut [T], mid: usize, p: usize) {
+    assert!(p > 0);
+    run_partitioned(buf, mid, p, |shared, leaves| {
+        fork_join(leaves.len(), |tid| {
+            let (start, len, m) = leaves[tid];
+            // SAFETY: leaf windows are disjoint by construction (each
+            // split hands `[0, d)` / `[d, n)` to the two halves).
+            let w = unsafe { shared.slice_mut(start, len) };
+            merge_in_place(w, m);
+        });
+    });
+}
+
+/// Pool-based variant of [`parallel_inplace_merge`]: identical
+/// semantics, runs the leaf merges on a persistent [`WorkerPool`].
+pub fn parallel_inplace_merge_with_pool<T: Ord + Send>(
+    pool: &WorkerPool,
+    buf: &mut [T],
+    mid: usize,
+    p: usize,
+) {
+    assert!(p > 0);
+    run_partitioned(buf, mid, p, |shared, leaves| {
+        pool.run_scoped(leaves.len(), |tid| {
+            let (start, len, m) = leaves[tid];
+            // SAFETY: leaf windows are disjoint by construction.
+            let w = unsafe { shared.slice_mut(start, len) };
+            merge_in_place(w, m);
+        });
+    });
+}
+
+/// Shared partition-then-run scaffolding for the two parallel variants.
+fn run_partitioned<T, F>(buf: &mut [T], mid: usize, p: usize, run: F)
+where
+    T: Ord + Send,
+    F: FnOnce(&SliceParts<T>, &[(usize, usize, usize)]),
+{
+    assert!(mid <= buf.len(), "mid out of range");
+    let n = buf.len();
+    if p == 1 || n < 2 * p {
+        merge_in_place(buf, mid);
+        return;
+    }
+    let mut leaves = Vec::with_capacity(p);
+    split_windows(buf, mid, p, 0, &mut leaves);
+    let shared = SliceParts::new(buf);
+    run(&shared, &leaves);
+}
+
+/// Recursively cut the window for `p` threads, rotating at each cut so
+/// both halves are contiguous `(sorted A part, sorted B part)` windows.
+/// Pushes `(absolute start, window length, inner mid)` leaf descriptors.
+fn split_windows<T: Ord>(
+    buf: &mut [T],
+    m: usize,
+    p: usize,
+    abs: usize,
+    leaves: &mut Vec<(usize, usize, usize)>,
+) {
+    let n = buf.len();
+    if p <= 1 || n < 2 * p || m == 0 || m == n {
+        leaves.push((abs, n, m));
+        return;
+    }
+    let p_left = p / 2;
+    let d = n * p_left / p;
+    // A-priority cut of diagonal d: the stable merge's first d outputs
+    // are exactly a[..cut.a] ++ b[..cut.b].
+    let cut = diagonal_intersection(&buf[..m], &buf[m..], d);
+    // Rotate the middle so those d elements become the contiguous left
+    // window: [A-prefix | B-prefix | A-suffix | B-suffix]. Each block
+    // keeps its internal order, so stability is preserved.
+    buf[cut.a..m + cut.b].rotate_left(m - cut.a);
+    let (left, right) = buf.split_at_mut(d);
+    split_windows(left, cut.a, p_left, abs, leaves);
+    split_windows(right, m - cut.a, p - p_left, abs + d, leaves);
+}
+
+/// Concatenate two sorted runs into one buffer for in-place merging,
+/// growing the **larger** run's allocation by the smaller run's length —
+/// the step that makes the in-place route's peak extra footprint
+/// `min(|a|, |b|)` elements instead of `|a| + |b|` (the allocating
+/// route's fresh output buffer). Returns `(buffer, mid)` with
+/// `buffer[..mid] == a` and `buffer[mid..] == b`.
+///
+/// The growth goes through `Vec::reserve_exact`, i.e. the allocator's
+/// `realloc`: for the multi-megabyte runs the in-place route targets
+/// that is an address-space remap, not a copy-through-peak, which is
+/// why the counting-allocator test accounts realloc as a size delta.
+pub fn concat_for_inplace<T: Copy>(a: Vec<T>, b: Vec<T>) -> (Vec<T>, usize) {
+    let mid = a.len();
+    if b.len() <= a.len() {
+        let mut buf = a;
+        buf.reserve_exact(b.len());
+        buf.extend_from_slice(&b);
+        (buf, mid)
+    } else {
+        // b is larger: grow it and shift its contents up to vacate the
+        // prefix for a.
+        let blen = b.len();
+        let mut buf = b;
+        buf.reserve_exact(mid);
+        // SAFETY: capacity >= blen + mid after reserve_exact; the two
+        // copies stay in bounds, and T: Copy means no drop obligations
+        // on the moved-over bytes.
+        unsafe {
+            let ptr = buf.as_mut_ptr();
+            std::ptr::copy(ptr, ptr.add(mid), blen);
+            std::ptr::copy_nonoverlapping(a.as_ptr(), ptr, mid);
+            buf.set_len(blen + mid);
+        }
+        (buf, mid)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::record::{as_keyed_mut, ByKey};
+    use crate::rng::Xoshiro256;
+
+    fn oracle(a: &[i64], b: &[i64]) -> Vec<i64> {
+        let mut v: Vec<i64> = a.iter().chain(b.iter()).copied().collect();
+        v.sort();
+        v
+    }
+
+    fn random_sorted(rng: &mut Xoshiro256, n: usize, universe: u64) -> Vec<i64> {
+        let mut v: Vec<i64> = (0..n).map(|_| rng.below(universe) as i64).collect();
+        v.sort_unstable();
+        v
+    }
+
+    #[test]
+    fn sequential_matches_oracle() {
+        let mut rng = Xoshiro256::seeded(0x17E5);
+        for _ in 0..40 {
+            let (na, nb) = (rng.range(0, 200), rng.range(0, 200));
+            let a = random_sorted(&mut rng, na, 50);
+            let b = random_sorted(&mut rng, nb, 50);
+            let expected = oracle(&a, &b);
+            let mut buf = a.clone();
+            buf.extend_from_slice(&b);
+            let mid = a.len();
+            merge_in_place(&mut buf, mid);
+            assert_eq!(buf, expected);
+        }
+    }
+
+    #[test]
+    fn parallel_matches_for_all_p() {
+        let mut rng = Xoshiro256::seeded(0xF01D);
+        for _ in 0..20 {
+            let (na, nb) = (rng.range(0, 400), rng.range(0, 400));
+            let a = random_sorted(&mut rng, na, 100);
+            let b = random_sorted(&mut rng, nb, 100);
+            let expected = oracle(&a, &b);
+            for p in [1usize, 2, 3, 4, 7, 8, 16, 33] {
+                let mut buf = a.clone();
+                buf.extend_from_slice(&b);
+                parallel_inplace_merge(&mut buf, a.len(), p);
+                assert_eq!(buf, expected, "p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_variant_matches() {
+        let pool = WorkerPool::new(4);
+        let mut rng = Xoshiro256::seeded(0xBEE5);
+        for _ in 0..10 {
+            let (na, nb) = (rng.range(0, 300), rng.range(0, 300));
+            let a = random_sorted(&mut rng, na, 80);
+            let b = random_sorted(&mut rng, nb, 80);
+            let expected = oracle(&a, &b);
+            let mut buf = a.clone();
+            buf.extend_from_slice(&b);
+            parallel_inplace_merge_with_pool(&pool, &mut buf, a.len(), 4);
+            assert_eq!(buf, expected);
+        }
+    }
+
+    #[test]
+    fn adversarial_one_sided() {
+        // All of A greater than all of B — the naive-split killer (§1).
+        let a: Vec<i64> = (1000..2000).collect();
+        let b: Vec<i64> = (0..1000).collect();
+        let expected = oracle(&a, &b);
+        for p in [1usize, 2, 8, 40] {
+            let mut buf = a.clone();
+            buf.extend_from_slice(&b);
+            parallel_inplace_merge(&mut buf, a.len(), p);
+            assert_eq!(buf, expected, "p={p}");
+        }
+    }
+
+    #[test]
+    fn empty_and_degenerate() {
+        let mut empty: Vec<i64> = vec![];
+        merge_in_place(&mut empty, 0);
+        assert!(empty.is_empty());
+        let mut one = vec![5i64];
+        merge_in_place(&mut one, 0);
+        merge_in_place(&mut one, 1);
+        assert_eq!(one, vec![5]);
+        let mut both = vec![2i64, 1];
+        parallel_inplace_merge(&mut both, 1, 8);
+        assert_eq!(both, vec![1, 2]);
+    }
+
+    /// Stability is observable through payloads: equal keys must keep
+    /// A-before-B, and A/B internal order — bit-identical to the stable
+    /// allocating kernel for every p, duplicate-heavy included.
+    #[test]
+    fn stable_for_keyed_records() {
+        let mut rng = Xoshiro256::seeded(0x57AB);
+        for trial in 0..20 {
+            // Tiny key universe → masses of ties.
+            let mk = |rng: &mut Xoshiro256, n: usize, side: u32| {
+                let mut v: Vec<(u32, u32)> = (0..n)
+                    .map(|i| (rng.below(6) as u32, side * 1000 + i as u32))
+                    .collect();
+                v.sort_by_key(|r| r.0); // stable: offsets stay ordered per key
+                v
+            };
+            let (na, nb) = (rng.range(0, 300), rng.range(0, 300));
+            let a = mk(&mut rng, na, 1);
+            let b = mk(&mut rng, nb, 2);
+            let mut expected = vec![ByKey((0u32, 0u32)); a.len() + b.len()];
+            crate::mergepath::merge_into(
+                crate::record::as_keyed(&a),
+                crate::record::as_keyed(&b),
+                &mut expected,
+            );
+            let expected: Vec<(u32, u32)> = expected.iter().map(|k| k.0).collect();
+            for p in [1usize, 2, 4, 8] {
+                let mut buf = a.clone();
+                buf.extend_from_slice(&b);
+                let mid = a.len();
+                parallel_inplace_merge(as_keyed_mut(&mut buf), mid, p);
+                assert_eq!(buf, expected, "trial {trial} p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_ties_keep_run_order() {
+        let a: Vec<(u8, u16)> = (0..50).map(|i| (7u8, i as u16)).collect();
+        let b: Vec<(u8, u16)> = (0..30).map(|i| (7u8, 1000 + i as u16)).collect();
+        let mut buf = a.clone();
+        buf.extend_from_slice(&b);
+        parallel_inplace_merge(as_keyed_mut(&mut buf), a.len(), 6);
+        let expected: Vec<(u8, u16)> = a.iter().chain(b.iter()).copied().collect();
+        assert_eq!(buf, expected, "ties: all of A, in order, then all of B");
+    }
+
+    #[test]
+    fn concat_grows_larger_run_both_ways() {
+        let a = vec![1i64, 3, 5, 7];
+        let b = vec![2i64, 4];
+        let (buf, mid) = concat_for_inplace(a.clone(), b.clone());
+        assert_eq!(mid, 4);
+        assert_eq!(buf, vec![1, 3, 5, 7, 2, 4]);
+        // b larger: front-shift path.
+        let (buf, mid) = concat_for_inplace(b.clone(), a.clone());
+        assert_eq!(mid, 2);
+        assert_eq!(buf, vec![2, 4, 1, 3, 5, 7]);
+        // Degenerate sides.
+        let (buf, mid) = concat_for_inplace(Vec::<i64>::new(), a.clone());
+        assert_eq!((buf, mid), (a.clone(), 0));
+        let (buf, mid) = concat_for_inplace(a.clone(), Vec::<i64>::new());
+        assert_eq!((buf, mid), (a, 4));
+    }
+
+    #[test]
+    fn concat_then_merge_end_to_end() {
+        let mut rng = Xoshiro256::seeded(0xCAFE);
+        for _ in 0..20 {
+            let (na, nb) = (rng.range(0, 500), rng.range(0, 500));
+            let a = random_sorted(&mut rng, na, 200);
+            let b = random_sorted(&mut rng, nb, 200);
+            let expected = oracle(&a, &b);
+            let (mut buf, mid) = concat_for_inplace(a, b);
+            parallel_inplace_merge(&mut buf, mid, 4);
+            assert_eq!(buf, expected);
+        }
+    }
+}

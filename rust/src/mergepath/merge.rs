@@ -5,6 +5,11 @@
 //! element is emitted first), matching the Merge Path construction in
 //! [`super::diagonal`] — this is what makes independently merged
 //! segments concatenate into exactly the sequential result (Thm 5).
+//!
+//! Every kernel here writes into a caller-provided output buffer, i.e.
+//! costs a full second copy of the data; when memory is the constraint,
+//! [`super::inplace`] provides a stable zero-allocation alternative
+//! with the same output, bit for bit.
 
 /// Classic two-finger merge of the entirety of `a` and `b` into `out`.
 ///

@@ -7,6 +7,8 @@
 //!   a cross diagonal by binary search.
 //! - [`partition`] — Thm 14: `p`-way equisized partition of the path.
 //! - [`merge`] — sequential merge primitives (the per-segment kernels).
+//! - [`inplace`] — block-swap in-place pairwise merge (zero-allocation,
+//!   stable) under the same diagonal partition (arxiv 2005.12648).
 //! - [`parallel`] — Alg 1: `ParallelMerge`.
 //! - [`segmented`] — Alg 3: `SegmentedParallelMerge` (cache-efficient, §4.3).
 //! - [`sort`] — §3: parallel merge sort.
@@ -20,6 +22,7 @@
 
 pub mod cache_sort;
 pub mod diagonal;
+pub mod inplace;
 pub mod kway;
 pub mod kway_path;
 pub mod merge;
@@ -30,6 +33,10 @@ pub mod select;
 pub mod sort;
 
 pub use diagonal::{diagonal_intersection, PathPoint};
+pub use inplace::{
+    concat_for_inplace, merge_in_place, parallel_inplace_merge,
+    parallel_inplace_merge_with_pool,
+};
 pub use merge::{gallop_merge_into, hybrid_merge_bounded, merge_bounded, merge_into};
 pub use parallel::{parallel_merge, parallel_merge_with_pool};
 pub use partition::{partition_merge_path, MergeSegment};

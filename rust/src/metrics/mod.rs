@@ -33,6 +33,64 @@ impl Counter {
     }
 }
 
+/// Up/down gauge with a high-water mark (thread-safe).
+///
+/// Tracks a current value (`add`/`sub`) and the peak it ever reached.
+/// Used for resident-byte accounting: `add` on ingest/dispatch, `sub`
+/// on reclaim/completion, `peak` answers "what did this cost at worst".
+///
+/// `sub` saturates at zero rather than wrapping: concurrent add/sub
+/// interleavings can transiently observe more released than acquired,
+/// and a monitoring gauge must degrade gracefully, not panic.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    value: AtomicU64,
+    peak: AtomicU64,
+}
+
+impl Gauge {
+    /// New gauge at zero.
+    pub const fn new() -> Self {
+        Self {
+            value: AtomicU64::new(0),
+            peak: AtomicU64::new(0),
+        }
+    }
+
+    /// Raise the current value by `n` and fold it into the peak.
+    pub fn add(&self, n: u64) {
+        let now = self.value.fetch_add(n, Ordering::Relaxed) + n;
+        self.peak.fetch_max(now, Ordering::Relaxed);
+    }
+
+    /// Lower the current value by `n` (saturating at zero).
+    pub fn sub(&self, n: u64) {
+        let mut cur = self.value.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_sub(n);
+            match self.value.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+
+    /// Highest value ever observed by `add`.
+    pub fn peak(&self) -> u64 {
+        self.peak.load(Ordering::Relaxed)
+    }
+}
+
 /// Scope timer: measures from construction to `stop()` (or drop).
 #[derive(Debug)]
 pub struct Timer {
@@ -174,6 +232,23 @@ mod tests {
         c.inc();
         c.add(4);
         assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn gauge_tracks_current_and_peak() {
+        let g = Gauge::new();
+        g.add(100);
+        g.add(50);
+        g.sub(120);
+        assert_eq!(g.get(), 30);
+        assert_eq!(g.peak(), 150);
+        // Saturating sub: over-release clamps at zero, peak untouched.
+        g.sub(1000);
+        assert_eq!(g.get(), 0);
+        assert_eq!(g.peak(), 150);
+        g.add(10);
+        assert_eq!(g.get(), 10);
+        assert_eq!(g.peak(), 150, "peak is a high-water mark");
     }
 
     #[test]

@@ -227,6 +227,101 @@ pub fn sorted_vec(
     v
 }
 
+/// A counting wrapper over the system allocator for assertion-backed
+/// peak-memory tests. Register it as the test binary's global
+/// allocator and bracket the code under test with
+/// [`CountingAlloc::reset_peak`] / [`CountingAlloc::peak`]:
+///
+/// ```ignore
+/// #[global_allocator]
+/// static ALLOC: mergeflow::testutil::CountingAlloc =
+///     mergeflow::testutil::CountingAlloc;
+/// ```
+///
+/// Accounting is *realloc-delta* honest: a `realloc` charges only the
+/// size difference, matching how large `Vec` growth behaves on real
+/// allocators (an `mremap` does not transiently hold both copies), so
+/// a grow-in-place concatenation ([`crate::mergepath::concat_for_inplace`])
+/// is measured at its true cost instead of an apparent 2× spike.
+/// Counters are process-global atomics: peak assertions should run in
+/// their own integration-test binary (one `#[global_allocator]` per
+/// binary, one test per run for a clean high-water mark).
+pub struct CountingAlloc;
+
+use std::alloc::{GlobalAlloc, Layout, System};
+
+static ALLOC_CUR: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+static ALLOC_PEAK: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+
+impl CountingAlloc {
+    fn add(n: usize) {
+        use std::sync::atomic::Ordering;
+        let now = ALLOC_CUR.fetch_add(n, Ordering::Relaxed) + n;
+        ALLOC_PEAK.fetch_max(now, Ordering::Relaxed);
+    }
+
+    fn sub(n: usize) {
+        ALLOC_CUR.fetch_sub(n, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    /// Bytes currently outstanding.
+    pub fn current() -> usize {
+        ALLOC_CUR.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// High-water mark since the last [`CountingAlloc::reset_peak`].
+    pub fn peak() -> usize {
+        ALLOC_PEAK.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Reset the high-water mark to the current outstanding figure.
+    pub fn reset_peak() {
+        use std::sync::atomic::Ordering;
+        ALLOC_PEAK.store(ALLOC_CUR.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+}
+
+// SAFETY: delegates every operation to `std::alloc::System` verbatim;
+// the counters are side effects only and never affect the returned
+// pointers or layouts.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            Self::add(layout.size());
+        }
+        p
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc_zeroed(layout);
+        if !p.is_null() {
+            Self::add(layout.size());
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout);
+        Self::sub(layout.size());
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = System.realloc(ptr, layout, new_size);
+        if !p.is_null() {
+            // Delta accounting: only the size change is charged, so a
+            // large buffer growing in place (or via mremap) is not
+            // misread as a transient second copy.
+            if new_size >= layout.size() {
+                Self::add(new_size - layout.size());
+            } else {
+                Self::sub(layout.size() - new_size);
+            }
+        }
+        p
+    }
+}
+
 /// Generate an arbitrary (unsorted) `Vec<i64>`.
 pub fn any_vec(
     rng: &mut Xoshiro256,

@@ -8,7 +8,7 @@
 //! itself.
 
 use mergeflow::bench::workload::{gen_record_runs, WorkloadKind};
-use mergeflow::config::{Backend, MergeflowConfig};
+use mergeflow::config::{Backend, InplaceMode, MergeflowConfig};
 use mergeflow::coordinator::{JobKind, MergeService};
 use std::time::{Duration, Instant};
 
@@ -32,6 +32,8 @@ fn base_config() -> MergeflowConfig {
         compact_shard_min_len: 0,
         compact_chunk_len: 0,
         compact_eager_min_len: 0,
+        memory_budget: 0,
+        inplace: InplaceMode::Auto,
         artifacts_dir: "artifacts".into(),
     }
 }
@@ -159,6 +161,54 @@ fn streamed_route_is_stable_and_overlaps_under_duplicates() {
     assert_eq!(res.backend, "native-kway-streamed");
     assert_eq!(res.output, expected, "streamed ties must keep provenance");
     assert_eq!(svc.stats().completed.get(), 1);
+    svc.shutdown();
+}
+
+/// The forced in-place route (`"native-inplace"`): the rotation-based
+/// symMerge kernel under the Merge Path partition must honour the
+/// stable tie contract exactly like the allocating kernels — pairwise
+/// merges and 2-run compactions with dense duplicates, bit for bit
+/// against the stable oracle.
+#[test]
+fn inplace_route_is_stable_under_duplicates() {
+    let mut cfg = base_config();
+    cfg.inplace = InplaceMode::Always;
+    let svc = MergeService::<Rec>::start(cfg).unwrap();
+    // Pairwise: all of A's ties must precede B's. Shapes cover dense
+    // duplicates, all-keys-equal, and a degenerate one-record side.
+    let gen = |src: u64, n: usize, dup: usize| {
+        (0..n)
+            .map(|off| ((off / dup) as u64, (src << 32) | off as u64))
+            .collect::<Vec<Rec>>()
+    };
+    for &(na, nb, dup) in &[(3000usize, 3000usize, 64usize), (5000, 700, 5000), (1, 4000, 1)] {
+        let (a, b) = (gen(0, na, dup), gen(1, nb, dup));
+        let mut expected: Vec<Rec> = a.iter().chain(b.iter()).copied().collect();
+        expected.sort_by_key(|r| r.0);
+        let res = svc.submit_blocking(JobKind::Merge { a, b }).unwrap();
+        assert_eq!(res.backend, "native-inplace", "na={na} nb={nb} dup={dup}");
+        assert_eq!(res.output, expected, "na={na} nb={nb} dup={dup}: A-ties precede B's");
+    }
+    // A 2-run compaction takes the same kernel through the session
+    // machinery (run 0's ties must precede run 1's).
+    let runs = dup_runs(2, 3000, 128);
+    let expected = stable_oracle(&runs);
+    let res = svc.submit_blocking(JobKind::Compact { runs }).unwrap();
+    assert_eq!(res.backend, "native-inplace");
+    assert_eq!(res.output, expected, "2-run compact ties must keep run order");
+    // Every workload kind through the forced route.
+    for (w, kind) in WorkloadKind::all().iter().enumerate() {
+        let runs = gen_record_runs(*kind, 2, 2500, 0x1A7E + w as u64);
+        let expected = stable_oracle(&runs);
+        let res = svc.submit_blocking(JobKind::Compact { runs }).unwrap();
+        assert_eq!(res.backend, "native-inplace", "{kind:?}");
+        assert_eq!(res.output, expected, "{kind:?}");
+    }
+    assert_eq!(
+        svc.stats().inplace_jobs.get(),
+        (4 + WorkloadKind::all().len()) as u64,
+        "every job above must have taken the in-place kernel"
+    );
     svc.shutdown();
 }
 

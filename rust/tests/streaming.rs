@@ -5,7 +5,7 @@
 //! merging (eager shards dispatched before the final seal).
 
 use mergeflow::bench::workload::{gen_sorted_runs, WorkloadKind};
-use mergeflow::config::{Backend, MergeflowConfig};
+use mergeflow::config::{Backend, InplaceMode, MergeflowConfig};
 use mergeflow::coordinator::{JobKind, MergeService};
 use std::time::{Duration, Instant};
 
@@ -27,6 +27,8 @@ fn base_config() -> MergeflowConfig {
         compact_shard_min_len: 0,
         compact_chunk_len: 0,
         compact_eager_min_len: 0,
+        memory_budget: 0,
+        inplace: InplaceMode::Auto,
         artifacts_dir: "artifacts".into(),
     }
 }
@@ -246,6 +248,192 @@ fn single_chunk_degenerate_session() {
     let res = session.seal().unwrap().wait().unwrap();
     assert_eq!(res.output, vec![1, 2, 2, 7]);
     assert_eq!(res.backend, "native", "single run returns by move");
+    svc.shutdown();
+}
+
+/// Frontier-driven reclamation: once eager shards are planned, the
+/// settled run prefixes are dropped from the session buffers, so a
+/// long-lived streamed session holds O(unsettled) bytes — the
+/// `resident_bytes` gauge shrinks as the frontier advances even while
+/// the session keeps every run open.
+#[test]
+fn streamed_session_holds_o_unsettled_bytes() {
+    let mut cfg = base_config();
+    cfg.compact_eager_min_len = 1024;
+    let svc = MergeService::start(cfg).unwrap();
+    let k = 4usize;
+    let run: Vec<i32> = (0..4096).collect();
+    let total_bytes = (k * run.len() * 4) as u64;
+
+    let mut session = svc.open_compaction(k).unwrap();
+    for chunk in 0..4 {
+        for i in 0..k {
+            session.feed(i, run[chunk * 1024..(chunk + 1) * 1024].to_vec()).unwrap();
+        }
+    }
+    // Identical ascending runs: after all 16 chunks the settled prefix
+    // is k·4095 elements, so nearly everything is plannable. Poll until
+    // the dispatcher has planned, reclaimed, and the eager shards have
+    // retired their estimates — the live figure must fall to a small
+    // fraction of what was fed, while `reclaimed_bytes` records the
+    // dropped prefixes.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while (svc.stats().resident_bytes.get() * 4 >= total_bytes
+        || svc.stats().reclaimed_bytes.get() == 0)
+        && Instant::now() < deadline
+    {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let stats = svc.stats();
+    assert!(
+        stats.reclaimed_bytes.get() >= total_bytes / 2,
+        "settled prefixes must be reclaimed (reclaimed={} of {total_bytes} fed)",
+        stats.reclaimed_bytes.get()
+    );
+    assert!(
+        stats.resident_bytes.get() * 4 < total_bytes,
+        "live bytes must be O(unsettled), got {} of {total_bytes} fed",
+        stats.resident_bytes.get()
+    );
+
+    for i in 0..k {
+        session.seal_run(i).unwrap();
+    }
+    let res = session.seal().unwrap().wait().unwrap();
+    let mut expected: Vec<i32> = (0..k).flat_map(|_| run.clone()).collect();
+    expected.sort_unstable();
+    assert_eq!(res.output, expected, "reclamation must not disturb the output");
+    // Quiescence: the session's ingest and every shard estimate are
+    // released once the job completes.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while svc.stats().resident_bytes.get() != 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(svc.stats().resident_bytes.get(), 0, "gauge drains at quiescence");
+    assert!(svc.stats().peak_resident_bytes() > 0);
+    svc.shutdown();
+}
+
+/// Duplicate-heavy reclamation: with every key equal the tie-aware
+/// frontier settles only the owner run's duplicates, so reclamation
+/// drains the owner while the other runs stay live — still strictly
+/// less than everything fed, and bit-identical at seal.
+#[test]
+fn duplicate_heavy_session_reclaims_owner_prefix() {
+    let mut cfg = base_config();
+    cfg.compact_eager_min_len = 512;
+    let svc = MergeService::start(cfg).unwrap();
+    let k = 3usize;
+    let total_bytes = (k * 4096 * 4) as u64;
+    let mut session = svc.open_compaction(k).unwrap();
+    for _ in 0..4 {
+        for i in 0..k {
+            session.feed(i, vec![7; 1024]).unwrap();
+        }
+    }
+    // Wait for both reclamation *and* the dispatched shard estimates
+    // to retire — in-flight estimates transiently inflate the gauge.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while (svc.stats().reclaimed_bytes.get() == 0
+        || svc.stats().resident_bytes.get() >= total_bytes)
+        && Instant::now() < deadline
+    {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let stats = svc.stats();
+    assert!(stats.reclaimed_bytes.get() > 0, "owner-run ties must reclaim");
+    assert!(
+        stats.resident_bytes.get() < total_bytes,
+        "live bytes must shrink below the fed total even under ties"
+    );
+    for i in 0..k {
+        session.seal_run(i).unwrap();
+    }
+    let res = session.seal().unwrap().wait().unwrap();
+    assert_eq!(res.output, vec![7; k * 4096]);
+    svc.shutdown();
+}
+
+/// Aborting a session mid-reclamation (drop without seal, eager shards
+/// already dispatched and prefixes already dropped) must release every
+/// live ingest byte via the dispatcher's reaper and leave the service
+/// fully operational.
+#[test]
+fn abort_mid_reclaim_releases_ingest_and_keeps_serving() {
+    let mut cfg = base_config();
+    cfg.compact_eager_min_len = 1024;
+    let svc = MergeService::start(cfg).unwrap();
+    let k = 4usize;
+    let run: Vec<i32> = (0..4096).collect();
+    {
+        let mut session = svc.open_compaction(k).unwrap();
+        for chunk in 0..4 {
+            for i in 0..k {
+                session
+                    .feed(i, run[chunk * 1024..(chunk + 1) * 1024].to_vec())
+                    .unwrap();
+            }
+        }
+        // Wait for eager planning (and therefore reclamation) to have
+        // happened, then drop the session unsealed.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while svc.stats().reclaimed_bytes.get() == 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(svc.stats().reclaimed_bytes.get() > 0, "reclamation ran pre-abort");
+    } // <- abort
+
+    // The service still serves — and pumping a job through also drives
+    // the dispatcher loop that reaps the aborted session.
+    let res = svc
+        .submit_blocking(JobKind::Merge { a: vec![1, 3], b: vec![2, 4] })
+        .unwrap();
+    assert_eq!(res.output, vec![1, 2, 3, 4]);
+
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while svc.stats().resident_bytes.get() != 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(
+        svc.stats().resident_bytes.get(),
+        0,
+        "aborted ingest and in-flight estimates must all be released"
+    );
+    svc.shutdown();
+}
+
+/// A seal racing reclamation: runs are sealed and the session sealed
+/// immediately behind a burst of feeds, so the dispatcher's remainder
+/// planning races the eager planner's prefix drops. The output must
+/// stay bit-identical and the admission ledger balanced.
+#[test]
+fn seal_racing_reclaim_stays_bit_identical_and_balanced() {
+    let mut cfg = base_config();
+    cfg.compact_eager_min_len = 256;
+    let svc = MergeService::start(cfg).unwrap();
+    for round in 0..6u64 {
+        let k = 3usize;
+        let runs = gen_sorted_runs(WorkloadKind::Uniform, k, 4000, 0xACE0 + round);
+        let expected = sorted_oracle(&runs);
+        let mut session = svc.open_compaction(k).unwrap();
+        // Burst-feed in small chunks and seal with no pause: the seal
+        // message lands while eager planning/reclamation is mid-flight.
+        for (i, r) in runs.iter().enumerate() {
+            for c in r.chunks(500) {
+                session.feed(i, c.to_vec()).unwrap();
+            }
+            session.seal_run(i).unwrap();
+        }
+        let res = session.seal().unwrap().wait().unwrap();
+        assert_eq!(res.output, expected, "round {round} output must match oracle");
+    }
+    let stats = svc.stats();
+    assert_eq!(
+        stats.submitted.get(),
+        stats.completed.get() + stats.rejected.get(),
+        "ledger must balance at quiescence (no in-flight jobs remain)"
+    );
+    assert_eq!(stats.completed.get(), 6);
     svc.shutdown();
 }
 
