@@ -14,10 +14,11 @@
 //! Run: `cargo run --release --example e2e_compaction`
 
 use mergeflow::bench::workload::{gen_sorted_pair, WorkloadKind};
-use mergeflow::config::{Backend, InplaceMode, MergeflowConfig};
+use mergeflow::config::{Backend, InplaceMode, MergeflowConfig, ServerConfig};
 use mergeflow::coordinator::{JobKind, MergeService};
 use mergeflow::metrics::{fmt_ns, fmt_throughput, Timer};
 use mergeflow::rng::Xoshiro256;
+use mergeflow::server::{serve, Client};
 
 fn sorted_run(seed: u64, len: usize) -> Vec<i32> {
     let (run, _) = gen_sorted_pair(WorkloadKind::Uniform, len, 1, seed);
@@ -271,6 +272,88 @@ fn main() {
             res.backend
         );
         typed.shutdown();
+    }
+
+    // Phase 6 — the wire layer: the same coordinator surface served
+    // over a loopback TCP socket. Two tenants drive it through the
+    // typed client — one with a one-shot merge, one streaming a
+    // session chunk by chunk — every output oracle-checked, then a
+    // clean server shutdown.
+    {
+        let wire_cfg = MergeflowConfig {
+            workers: 2,
+            threads_per_job: 2,
+            queue_capacity: 64,
+            max_batch: 8,
+            batch_timeout_us: 100,
+            backend: Backend::Native,
+            segmented: false,
+            segment_len: 0,
+            kway_segment_elems: 0,
+            cache_bytes: 0,
+            kway_flat_max_k: 64,
+            compact_sharding: false,
+            compact_shard_min_len: 0,
+            compact_chunk_len: 0,
+            compact_eager_min_len: 16 << 10,
+            memory_budget: 0,
+            inplace: InplaceMode::Auto,
+            artifacts_dir: "artifacts".into(),
+        };
+        let wire_svc = std::sync::Arc::new(
+            MergeService::<i32>::start(wire_cfg).expect("wire service"),
+        );
+        let server = serve(
+            std::sync::Arc::clone(&wire_svc),
+            ServerConfig { listen: "127.0.0.1:0".into(), ..Default::default() },
+        )
+        .expect("wire server");
+        println!("wire server listening on {}", server.local_addr());
+
+        // Tenant "oneshot": a pairwise merge over the socket.
+        let mut one_shot =
+            Client::<i32>::connect(server.local_addr(), "oneshot").expect("connect");
+        let (wa, wb) = (sorted_run(31, 32 << 10), sorted_run(32, 32 << 10));
+        let mut expected: Vec<i32> = wa.iter().chain(&wb).copied().collect();
+        expected.sort_unstable();
+        let (backend, merged) = one_shot.merge(&wa, &wb).expect("wire merge");
+        assert_eq!(merged, expected, "wire merge output mismatch");
+        total_elems += merged.len() as u64;
+        println!("wire merge: {} keys via {backend}", merged.len());
+
+        // Tenant "streamer": a compaction session fed chunk by chunk.
+        let mut streamer =
+            Client::<i32>::connect(server.local_addr(), "streamer").expect("connect");
+        let k = 4usize;
+        let chunk_len = 8 << 10;
+        let chunks_per_run = 4usize;
+        let stream_runs: Vec<Vec<i32>> = (0..k)
+            .map(|i| sorted_run(40 + i as u64, chunk_len * chunks_per_run))
+            .collect();
+        let mut expected: Vec<i32> = stream_runs.iter().flatten().copied().collect();
+        expected.sort_unstable();
+        let sid = streamer.open(k).expect("wire open");
+        for c in 0..chunks_per_run {
+            for (r, run) in stream_runs.iter().enumerate() {
+                streamer
+                    .feed(sid, r, &run[c * chunk_len..(c + 1) * chunk_len])
+                    .expect("wire feed");
+            }
+        }
+        for r in 0..k {
+            streamer.seal_run(sid, r).expect("wire seal_run");
+        }
+        let (backend, streamed) = streamer.seal(sid).expect("wire seal");
+        assert_eq!(streamed, expected, "wire streamed output mismatch");
+        total_elems += streamed.len() as u64;
+        println!("wire streamed compaction: {} keys via {backend}", streamed.len());
+
+        // The STATS verb reports both tenants' admission lines.
+        let stats = streamer.stats().expect("wire stats");
+        assert!(stats.contains("tenant oneshot:"), "missing tenant line:\n{stats}");
+        assert!(stats.contains("tenant streamer:"), "missing tenant line:\n{stats}");
+        server.shutdown();
+        println!("wire server shut down cleanly");
     }
 
     // Collect the artifact-sized jobs (XLA route when artifacts exist).

@@ -3,7 +3,8 @@
 //! ```text
 //! mergeflow merge   --n 1M --kind uniform --threads 8 [--segment-len L]
 //! mergeflow sort    --n 16M --threads 8 [--cache-elems C]
-//! mergeflow serve   [--config mergeflow.toml] [--jobs N]
+//! mergeflow serve   [--config mergeflow.toml] [--listen ADDR]
+//!                   [--selfload --jobs N --job-size SIZE]
 //! mergeflow figure  fig4|fig5|fig7|fig8 [--scale S]
 //! mergeflow table   table1|table1b|table2 [--scale S]
 //! mergeflow probe   [--scale S]
@@ -103,7 +104,8 @@ USAGE:
   mergeflow merge   --n <SIZE> [--kind uniform|skewed|one-sided|interleaved|runs]
                     [--threads P] [--segment-len L] [--seed S]
   mergeflow sort    --n <SIZE> [--threads P] [--cache-elems C] [--seed S]
-  mergeflow serve   [--config FILE] [--jobs N] [--job-size SIZE]
+  mergeflow serve   [--config FILE] [--listen HOST:PORT|unix:/PATH]
+                    [--selfload --jobs N --job-size SIZE]
   mergeflow figure  <fig4|fig5|fig7|fig8> [--scale S]
   mergeflow table   <table1|table1b|table2> [--scale S]
   mergeflow probe   [--scale S]

@@ -450,6 +450,82 @@ impl MergeflowConfig {
     }
 }
 
+/// Wire-server configuration (`[serve]` section). Kept separate from
+/// [`MergeflowConfig`] — the engine knows nothing about sockets, and
+/// embedded users of the library never pay for (or spell) these knobs.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Listen address (`serve.listen`): `host:port` for TCP, or
+    /// `unix:/path/to.sock` for a Unix domain socket. Port 0 binds an
+    /// ephemeral port (tests/loopback).
+    pub listen: String,
+    /// Per-tenant cap (bytes) on ingest held live on the tenant's
+    /// behalf — open-session feeds plus in-flight one-shot payloads
+    /// (`serve.tenant_quota_bytes`). Exceeding it gets a fail-fast
+    /// `BUSY` reply, layered *on top of* the service-wide
+    /// `merge.memory_budget`. **0 means unlimited.**
+    pub tenant_quota_bytes: usize,
+    /// Per-tenant cap on concurrently open streaming sessions
+    /// (`serve.tenant_max_sessions`); `OPEN` past it gets `BUSY`.
+    /// **0 means unlimited.**
+    pub tenant_max_sessions: usize,
+    /// Connection lease (`serve.lease_ms`): the longest a client may go
+    /// without delivering bytes — any frame is a heartbeat, `PING` is
+    /// the no-op one — before the server reaps the connection, aborting
+    /// its open sessions and draining their `resident_bytes`. **0
+    /// disables lease reaping** (connections live until they close).
+    pub lease_ms: u64,
+    /// Largest frame payload the decoder will accept
+    /// (`serve.max_frame_bytes`). This caps the decoder's pre-read
+    /// allocation: a frame *declaring* more than this is answered with
+    /// a typed error frame without ever allocating or reading its
+    /// payload.
+    pub max_frame_bytes: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            listen: "127.0.0.1:7141".into(),
+            tenant_quota_bytes: 0,
+            tenant_max_sessions: 0,
+            lease_ms: 10_000,
+            max_frame_bytes: 64 << 20,
+        }
+    }
+}
+
+impl ServerConfig {
+    /// Build from a parsed raw config (`[serve]` section).
+    pub fn from_raw(raw: &RawConfig) -> Result<Self> {
+        let d = Self::default();
+        let cfg = Self {
+            listen: raw.get_str("serve.listen", &d.listen),
+            tenant_quota_bytes: raw
+                .get_usize("serve.tenant_quota_bytes", d.tenant_quota_bytes)?,
+            tenant_max_sessions: raw
+                .get_usize("serve.tenant_max_sessions", d.tenant_max_sessions)?,
+            lease_ms: raw.get_usize("serve.lease_ms", d.lease_ms as usize)? as u64,
+            max_frame_bytes: raw.get_usize("serve.max_frame_bytes", d.max_frame_bytes)?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Check invariants.
+    pub fn validate(&self) -> Result<()> {
+        if self.listen.is_empty() {
+            return Err(Error::Config("serve.listen must not be empty".into()));
+        }
+        // Below this even a HELLO with a modest tenant name cannot fit,
+        // and a tiny cap would make every well-formed frame "oversized".
+        if self.max_frame_bytes < 64 {
+            return Err(Error::Config("serve.max_frame_bytes must be >= 64".into()));
+        }
+        Ok(())
+    }
+}
+
 /// Bounds applied to both configured and detected cache sizes, so a
 /// misread sysfs entry (or an absurd knob) can never produce degenerate
 /// or overflowing window lengths.
@@ -546,6 +622,13 @@ compact_chunk_len = 8192
 compact_eager_min_len = 16384
 memory_budget = 268435456
 inplace = "always"
+
+[serve]
+listen = "unix:/tmp/mergeflow.sock"
+tenant_quota_bytes = 1048576
+tenant_max_sessions = 4
+lease_ms = 250
+max_frame_bytes = 65536
 "#;
 
     #[test]
@@ -588,6 +671,33 @@ inplace = "always"
         );
         assert_eq!(cfg.memory_budget, 0, "budget defaults to unlimited");
         assert_eq!(cfg.inplace, InplaceMode::Auto);
+    }
+
+    #[test]
+    fn server_config_parses_and_defaults() {
+        let raw = RawConfig::parse(SAMPLE).unwrap();
+        let scfg = ServerConfig::from_raw(&raw).unwrap();
+        assert_eq!(scfg.listen, "unix:/tmp/mergeflow.sock");
+        assert_eq!(scfg.tenant_quota_bytes, 1 << 20);
+        assert_eq!(scfg.tenant_max_sessions, 4);
+        assert_eq!(scfg.lease_ms, 250);
+        assert_eq!(scfg.max_frame_bytes, 64 << 10);
+        let d = ServerConfig::from_raw(&RawConfig::parse("").unwrap()).unwrap();
+        assert_eq!(d.listen, ServerConfig::default().listen);
+        assert_eq!(d.tenant_quota_bytes, 0, "quota defaults to unlimited");
+        assert_eq!(d.tenant_max_sessions, 0);
+        assert_eq!(d.lease_ms, 10_000);
+        assert_eq!(d.max_frame_bytes, 64 << 20);
+    }
+
+    #[test]
+    fn server_config_rejects_bad_values() {
+        let raw = RawConfig::parse("[serve]\nlisten = \"\"\n").unwrap();
+        assert!(ServerConfig::from_raw(&raw).is_err());
+        let raw = RawConfig::parse("[serve]\nmax_frame_bytes = 8\n").unwrap();
+        assert!(ServerConfig::from_raw(&raw).is_err());
+        let raw = RawConfig::parse("[serve]\nlease_ms = soon\n").unwrap();
+        assert!(ServerConfig::from_raw(&raw).is_err());
     }
 
     #[test]

@@ -214,6 +214,14 @@ impl<R: Record> MergeService<R> {
         &self.stats
     }
 
+    /// Owning handle to the live statistics — for threads that must
+    /// outlive any borrow of the service (the wire server's admission
+    /// control and connection handlers count `BUSY` replies and reaps
+    /// from their own threads).
+    pub fn stats_arc(&self) -> Arc<ServiceStats> {
+        Arc::clone(&self.stats)
+    }
+
     /// Submit a job; fails fast with back-pressure when the queue is
     /// full or the input violates preconditions.
     ///

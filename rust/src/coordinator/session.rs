@@ -1028,6 +1028,10 @@ pub struct CompactionSession<R: Record = i32> {
     /// checked once at submit instead (its own ingest is already
     /// resident, so per-chunk checks would self-reject).
     budget: u64,
+    /// Total bytes admitted through [`feed`](Self::feed) — the wire
+    /// server's per-tenant quota accounting reads this instead of
+    /// keeping a parallel ledger.
+    fed_bytes: u64,
 }
 
 #[derive(Debug)]
@@ -1078,6 +1082,7 @@ pub(super) fn open<R: Record>(
         blocking,
         admitted: false,
         budget,
+        fed_bytes: 0,
     }
 }
 
@@ -1187,9 +1192,19 @@ impl<R: Record> CompactionSession<R> {
             msg: ChunkMsg { session: self.id, run, data: chunk },
         })?;
         self.runs[run].last = last;
+        self.fed_bytes += bytes;
         self.stats.streamed_chunks.inc();
         self.stats.streamed_bytes.add(bytes);
         Ok(())
+    }
+
+    /// Total bytes admitted through [`feed`](Self::feed) so far — what
+    /// the session holds resident on the client's behalf at most (the
+    /// dispatcher may already have reclaimed settled prefixes). The
+    /// wire server drains exactly this figure from a tenant's quota
+    /// when the session seals or is reaped.
+    pub fn fed_bytes(&self) -> u64 {
+        self.fed_bytes
     }
 
     /// Declare that `run` will receive no more chunks. Sealing a run
@@ -1226,6 +1241,19 @@ impl<R: Record> CompactionSession<R> {
         self.sealed = true; // the seal is in: Drop must not abort now
         let rx = self.rx.take().expect("receiver taken only here");
         Ok(JobHandle::new(self.id, rx))
+    }
+
+    /// Explicitly abort the session: buffered ingest is reaped by the
+    /// dispatcher (its bytes leave [`ServiceStats::resident_bytes`] on
+    /// the next loop iteration) and no reply is ever delivered —
+    /// exactly what dropping an unsealed session does, plus a count in
+    /// [`ServiceStats::sessions_reaped`]. This is the wire server's
+    /// reap hook for dead clients (disconnect mid-feed, half-written
+    /// frame, lease expiry); plain drops stay uncounted so one-shot
+    /// error paths don't read as reaps.
+    pub fn abort(self) {
+        self.stats.sessions_reaped.inc();
+        // Drop performs the actual mark_aborted.
     }
 }
 

@@ -82,6 +82,20 @@ pub struct ServiceStats {
     /// streamed sessions held O(total); anything above proves
     /// O(unsettled).
     pub reclaimed_bytes: Counter,
+    /// Fail-fast `BUSY` replies sent by the wire server's admission
+    /// control (tenant byte/session quotas and budget rejections
+    /// surfaced over the socket). A `BUSY` is *not* a rejection in the
+    /// `submitted = completed + rejected` ledger — nothing was admitted
+    /// — which is exactly why it gets its own counter.
+    pub busy_rejections: Counter,
+    /// Sessions explicitly reaped
+    /// ([`super::CompactionSession::abort`]) — a wire client dropped
+    /// mid-stream, hung up on a half-written frame, or went silent past
+    /// its lease, and the server aborted its sessions so the dispatcher
+    /// could drain their ingest from [`ServiceStats::resident_bytes`].
+    /// Plain drops of unsealed sessions (one-shot error paths) abort
+    /// too but are not counted here.
+    pub sessions_reaped: Counter,
 }
 
 impl ServiceStats {
@@ -123,6 +137,7 @@ impl ServiceStats {
              shards: planned={} done={} seg-merges={} | \
              streaming: sessions={} chunks={} bytes={} eager={} stream-done={} | \
              mem: resident={} peak={} reclaimed={} | \
+             server: busy={} reaped={} | \
              batches={} elements={} | latency p50={} p95={} p99={} max={} | queue-wait p50={}",
             self.submitted.get(),
             self.completed.get(),
@@ -146,6 +161,8 @@ impl ServiceStats {
             self.resident_bytes.get(),
             self.resident_bytes.peak(),
             self.reclaimed_bytes.get(),
+            self.busy_rejections.get(),
+            self.sessions_reaped.get(),
             self.batches.get(),
             self.elements.get(),
             fmt_ns(self.latency.quantile(0.5)),
@@ -238,5 +255,19 @@ mod tests {
         assert!(snap.contains("peak=8192"));
         assert!(snap.contains("reclaimed=4096"));
         assert_eq!(s.completed.get(), 0, "memory accounting is not a completion");
+    }
+
+    #[test]
+    fn server_counters_in_snapshot() {
+        let s = ServiceStats::new();
+        s.busy_rejections.add(3);
+        s.sessions_reaped.add(2);
+        let snap = s.snapshot();
+        assert!(snap.contains("busy=3"));
+        assert!(snap.contains("reaped=2"));
+        // BUSY replies and reaps must not disturb the admission ledger.
+        assert_eq!(s.submitted.get(), 0);
+        assert_eq!(s.rejected.get(), 0);
+        assert_eq!(s.completed.get(), 0);
     }
 }

@@ -33,6 +33,10 @@
 //!   independent equisized sub-jobs by output rank.
 //! - [`bench`] — workload generators and the table/figure harness that
 //!   regenerates every table and figure of the paper's §6.
+//! - [`server`] — the wire layer: the coordinator surface served over
+//!   TCP/Unix sockets as a length-prefixed framed protocol, with
+//!   per-tenant admission quotas, lease-based liveness, and a typed
+//!   loopback client.
 //!
 //! Start with `docs/ARCHITECTURE.md` for the module-by-module map onto
 //! the paper's algorithms and the coordinator's job flow
@@ -50,6 +54,7 @@ pub mod metrics;
 pub mod record;
 pub mod rng;
 pub mod runtime;
+pub mod server;
 pub mod sim;
 pub mod testutil;
 

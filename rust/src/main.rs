@@ -5,13 +5,14 @@ use mergeflow::bench::harness::report_line;
 use mergeflow::bench::workload::{gen_sorted_pair, gen_unsorted, WorkloadKind};
 use mergeflow::bench::BenchTimer;
 use mergeflow::cli::{Cli, USAGE};
-use mergeflow::config::MergeflowConfig;
+use mergeflow::config::{MergeflowConfig, RawConfig, ServerConfig};
 use mergeflow::coordinator::{JobKind, MergeService};
 use mergeflow::mergepath::{
     cache_efficient_sort, parallel_merge, parallel_merge_sort, segmented_parallel_merge,
     CacheSortConfig, SegmentedConfig,
 };
 use mergeflow::metrics::{fmt_ns, fmt_throughput, Timer};
+use mergeflow::record::ensure_sorted_by_key;
 use mergeflow::{Error, Result};
 
 fn main() {
@@ -112,10 +113,34 @@ fn cmd_sort(cli: &Cli) -> Result<()> {
 }
 
 fn cmd_serve(cli: &Cli) -> Result<()> {
-    let cfg = match cli.flag("config") {
-        Some(path) => MergeflowConfig::from_file(std::path::Path::new(path))?,
-        None => MergeflowConfig::default(),
+    let (cfg, mut server_cfg) = match cli.flag("config") {
+        Some(path) => {
+            let raw = RawConfig::from_file(std::path::Path::new(path))?;
+            (MergeflowConfig::from_raw(&raw)?, ServerConfig::from_raw(&raw)?)
+        }
+        None => (MergeflowConfig::default(), ServerConfig::default()),
     };
+    if cli.bool_flag("selfload") {
+        return serve_selfload(cli, cfg);
+    }
+    if let Some(listen) = cli.flag("listen") {
+        server_cfg.listen = listen.to_string();
+    }
+    println!("starting service: {cfg:?}");
+    let svc = std::sync::Arc::new(MergeService::<i32>::start(cfg)?);
+    let handle = mergeflow::server::serve(std::sync::Arc::clone(&svc), server_cfg)?;
+    println!("listening on {}", handle.local_addr());
+    // Foreground server: periodic stats until the process is killed.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(10));
+        println!("{}", svc.stats().snapshot());
+    }
+}
+
+/// The pre-wire-server `serve` behavior, kept behind `--selfload`: the
+/// service merges a self-generated stream of jobs and reports
+/// throughput — a one-command smoke/load probe needing no client.
+fn serve_selfload(cli: &Cli, cfg: MergeflowConfig) -> Result<()> {
     let jobs = cli.usize_flag("jobs", 64)?;
     let job_size = cli.size_flag("job-size", 64 << 10)?;
     println!("starting service: {cfg:?}");
@@ -134,7 +159,7 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         .collect::<Result<_>>()?;
     for h in handles {
         let r = h.wait()?;
-        debug_assert!(r.output.windows(2).all(|w| w[0] <= w[1]));
+        ensure_sorted_by_key("served merge output", &r.output)?;
     }
     let ns = timer.elapsed_ns();
     println!(

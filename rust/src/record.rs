@@ -321,6 +321,24 @@ pub fn is_sorted_by_key<R: Record>(records: &[R]) -> bool {
     records.windows(2).all(|w| w[0].key() <= w[1].key())
 }
 
+/// Checked sortedness verification: [`is_sorted_by_key`] as a
+/// `Result`, naming `what` and the first offending position. Unlike a
+/// `debug_assert!`, this runs in release builds too — it is the output
+/// verification the `serve` self-load loop and the wire-protocol tests
+/// share.
+pub fn ensure_sorted_by_key<R: Record>(what: &str, records: &[R]) -> crate::Result<()> {
+    match records.windows(2).position(|w| w[0].key() > w[1].key()) {
+        None => Ok(()),
+        Some(i) => Err(crate::Error::InvalidInput(format!(
+            "{what} is not sorted by key: element {} ({:?}) > element {} ({:?})",
+            i,
+            records[i].key(),
+            i + 1,
+            records[i + 1].key()
+        ))),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -359,6 +377,18 @@ mod tests {
         assert!(is_sorted_by_key::<i32>(&[]));
         assert!(is_sorted_by_key(&[1i32, 1, 5]));
         assert!(!is_sorted_by_key(&[2i32, 1]));
+    }
+
+    #[test]
+    fn ensure_sorted_names_the_offender() {
+        assert!(ensure_sorted_by_key("out", &[1i32, 2, 2, 9]).is_ok());
+        assert!(ensure_sorted_by_key::<i32>("out", &[]).is_ok());
+        let err = ensure_sorted_by_key("served output", &[1i32, 5, 3]).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("served output"), "{msg}");
+        assert!(msg.contains("element 1"), "{msg}");
+        // Payload disorder on equal keys is fine — ordering is key-only.
+        assert!(ensure_sorted_by_key("pairs", &[(1u64, 9u64), (1, 2)]).is_ok());
     }
 
     #[test]

@@ -1,0 +1,179 @@
+//! Typed wire client: the loopback counterpart of [`serve`](super::serve)
+//! used by tests, examples and the e2e harness.
+//!
+//! One [`Client`] is one connection (one `HELLO`, one tenant identity,
+//! any number of interleaved sessions). The protocol is strictly
+//! request → reply, so every method blocks until its answer frame —
+//! which is exactly how server-side back-pressure reaches the caller:
+//! a `FEED` into a saturated service parks the connection handler on
+//! the session's blocking push, the handler stops reading, and this
+//! client's write (or its reply read) stalls until admission frees up.
+//!
+//! Admission verdicts surface as typed errors: a `BUSY` frame (tenant
+//! quota, memory budget, queue back-pressure) becomes
+//! [`Error::Service`] with a `"BUSY: …"` message — test for it with
+//! [`is_busy`] — and is *retryable*; the connection and its sessions
+//! remain fully usable. `ERR` frames map per their code:
+//! invalid-input codes to [`Error::InvalidInput`], everything else to
+//! [`Error::Service`].
+
+use super::frame::{
+    self, err, tag, Cursor, FrameError, ReadOpts, WireRecord, PROTOCOL_VERSION,
+};
+use super::Stream;
+use crate::{Error, Result};
+use std::marker::PhantomData;
+
+/// Reply-frame allocation cap. Replies carry whole merged outputs, so
+/// the client's bound is intentionally far above `serve.max_frame_bytes`
+/// (which guards the *server's* pre-read allocation, not ours).
+const REPLY_FRAME_CAP: usize = 1 << 30;
+
+/// True iff `e` is a fail-fast `BUSY` admission verdict (retryable;
+/// nothing was admitted server-side).
+pub fn is_busy(e: &Error) -> bool {
+    matches!(e, Error::Service(m) if m.starts_with("BUSY"))
+}
+
+/// A connected wire client for record type `R` (checked against the
+/// server's record type in the `HELLO` handshake).
+pub struct Client<R: WireRecord> {
+    stream: Stream,
+    _record: PhantomData<R>,
+}
+
+impl<R: WireRecord> Client<R> {
+    /// Dial `addr` (`host:port` or `unix:/path`) and complete the
+    /// `HELLO` handshake under `tenant`'s quota identity.
+    pub fn connect(addr: &str, tenant: &str) -> Result<Self> {
+        let mut client =
+            Self { stream: Stream::connect(addr)?, _record: PhantomData };
+        let mut hello = Vec::new();
+        frame::put_varint(&mut hello, PROTOCOL_VERSION);
+        frame::put_varint(&mut hello, u64::from(R::WIRE_ID));
+        hello.extend_from_slice(tenant.as_bytes());
+        client.expect(tag::HELLO_OK, tag::HELLO, &hello)?;
+        Ok(client)
+    }
+
+    /// Liveness probe — also the idiomatic lease heartbeat for a
+    /// client that is alive but has no data ready.
+    pub fn ping(&mut self) -> Result<()> {
+        self.expect(tag::PONG, tag::PING, &[])?;
+        Ok(())
+    }
+
+    /// Service stats snapshot plus the per-tenant admission lines.
+    pub fn stats(&mut self) -> Result<String> {
+        let payload = self.expect(tag::STATS_TEXT, tag::STATS, &[])?;
+        String::from_utf8(payload)
+            .map_err(|_| Error::Service("stats reply is not utf8".into()))
+    }
+
+    /// Open a streaming compaction of `runs` sorted runs; returns the
+    /// session id the other session verbs address.
+    pub fn open(&mut self, runs: usize) -> Result<u64> {
+        let mut p = Vec::new();
+        frame::put_varint(&mut p, runs as u64);
+        let reply = self.expect(tag::OPENED, tag::OPEN, &p)?;
+        Cursor::new(&reply).get_varint()
+    }
+
+    /// Feed one key-sorted chunk of `run` into session `session`.
+    pub fn feed(&mut self, session: u64, run: usize, chunk: &[R]) -> Result<()> {
+        let mut p = Vec::with_capacity(20 + chunk.len() * R::WIRE_BYTES);
+        frame::put_varint(&mut p, session);
+        frame::put_varint(&mut p, run as u64);
+        frame::put_records(&mut p, chunk);
+        self.expect(tag::OK, tag::FEED, &p)?;
+        Ok(())
+    }
+
+    /// Declare that `run` of `session` will receive no more chunks.
+    pub fn seal_run(&mut self, session: u64, run: usize) -> Result<()> {
+        let mut p = Vec::new();
+        frame::put_varint(&mut p, session);
+        frame::put_varint(&mut p, run as u64);
+        self.expect(tag::OK, tag::SEAL_RUN, &p)?;
+        Ok(())
+    }
+
+    /// Seal `session` and block for the merged output:
+    /// `(backend tag, records)`.
+    pub fn seal(&mut self, session: u64) -> Result<(String, Vec<R>)> {
+        let mut p = Vec::new();
+        frame::put_varint(&mut p, session);
+        let reply = self.expect(tag::RESULT, tag::SEAL, &p)?;
+        decode_result(&reply)
+    }
+
+    /// One-shot pairwise merge of two key-sorted inputs.
+    pub fn merge(&mut self, a: &[R], b: &[R]) -> Result<(String, Vec<R>)> {
+        let mut p = Vec::with_capacity(20 + (a.len() + b.len()) * R::WIRE_BYTES);
+        frame::put_records(&mut p, a);
+        frame::put_records(&mut p, b);
+        let reply = self.expect(tag::RESULT, tag::MERGE, &p)?;
+        decode_result(&reply)
+    }
+
+    /// One-shot k-way compaction of key-sorted runs.
+    pub fn compact(&mut self, runs: &[Vec<R>]) -> Result<(String, Vec<R>)> {
+        let total: usize = runs.iter().map(|r| r.len()).sum();
+        let mut p = Vec::with_capacity(20 + total * R::WIRE_BYTES);
+        frame::put_varint(&mut p, runs.len() as u64);
+        for run in runs {
+            frame::put_records(&mut p, run);
+        }
+        let reply = self.expect(tag::RESULT, tag::COMPACT, &p)?;
+        decode_result(&reply)
+    }
+
+    /// One-shot stable sort.
+    pub fn sort(&mut self, data: &[R]) -> Result<(String, Vec<R>)> {
+        let mut p = Vec::with_capacity(20 + data.len() * R::WIRE_BYTES);
+        frame::put_records(&mut p, data);
+        let reply = self.expect(tag::RESULT, tag::SORT, &p)?;
+        decode_result(&reply)
+    }
+
+    /// Send one request frame and read its reply, demanding reply tag
+    /// `want`; `ERR`/`BUSY` frames become typed errors instead.
+    fn expect(&mut self, want: u8, req: u8, payload: &[u8]) -> Result<Vec<u8>> {
+        frame::write_frame(&mut self.stream, req, payload)?;
+        let (t, reply) =
+            frame::read_frame(&mut self.stream, REPLY_FRAME_CAP, &ReadOpts::default())
+                .map_err(|e| match e {
+                    FrameError::Io(io) => Error::Io(io),
+                    other => Error::Service(format!("wire client: {other}")),
+                })?;
+        if t == want {
+            return Ok(reply);
+        }
+        Err(match t {
+            tag::BUSY => Error::Service(format!(
+                "BUSY: {}",
+                String::from_utf8_lossy(&reply)
+            )),
+            tag::ERR => {
+                let mut c = Cursor::new(&reply);
+                let code = c.get_u8().unwrap_or(0);
+                let msg = c.rest_str().unwrap_or_default();
+                match code {
+                    err::INVALID_INPUT => Error::InvalidInput(msg),
+                    _ => Error::Service(format!("server error (code {code}): {msg}")),
+                }
+            }
+            other => {
+                Error::Service(format!("unexpected reply tag {other:#04x}"))
+            }
+        })
+    }
+}
+
+/// Decode a `RESULT` payload: `[backend str][records]`.
+fn decode_result<R: WireRecord>(payload: &[u8]) -> Result<(String, Vec<R>)> {
+    let mut c = Cursor::new(payload);
+    let backend = c.get_str()?;
+    let records = c.get_records::<R>()?;
+    Ok((backend, records))
+}

@@ -1,0 +1,407 @@
+//! Per-connection handler: decode frames, map verbs 1:1 onto the
+//! coordinator surface, apply tenant admission, propagate blocking-push
+//! back-pressure to the socket.
+//!
+//! One thread per connection, request → reply in order. Streaming
+//! sessions are interleavable — a connection may hold any number of
+//! open sessions and `FEED` them in any order — but each frame is
+//! answered before the next is read, so the client's socket write
+//! stalls exactly when the service's admission queue does (the
+//! session's blocking push is what the server thread is parked on).
+//!
+//! Cleanup is unconditional: whatever ends the connection — clean
+//! close, half-written frame, transport error, lease expiry, server
+//! shutdown — every still-open session is aborted
+//! ([`CompactionSession::abort`]), which queues it for the
+//! dispatcher's reap so its ingest leaves `resident_bytes`, and every
+//! charged byte leaves the tenant's quota.
+
+use super::control::{TenantRegistry, TenantState};
+use super::frame::{
+    self, err, tag, Cursor, FrameError, ReadOpts, WireRecord, PROTOCOL_VERSION,
+};
+use super::Stream;
+use crate::config::ServerConfig;
+use crate::coordinator::{CompactionSession, JobKind, MergeService};
+use crate::Error;
+use std::collections::HashMap;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Socket read timeout — the granularity at which a parked reader
+/// notices server shutdown and checks the lease clock.
+pub(super) const POLL_INTERVAL: Duration = Duration::from_millis(25);
+
+/// What to do after answering a frame.
+enum Flow {
+    /// Keep serving this connection.
+    Continue,
+    /// Stop serving (stream desynchronized or peer gone).
+    Close,
+}
+
+/// Serve one connection to completion. Never panics on malformed
+/// input; all exits run the same session/quota cleanup.
+pub(super) fn handle<R: WireRecord>(
+    mut stream: Stream,
+    svc: &Arc<MergeService<R>>,
+    cfg: &ServerConfig,
+    tenants: &Arc<TenantRegistry>,
+    stop: &AtomicBool,
+) {
+    let _ = stream.set_read_timeout(Some(POLL_INTERVAL));
+    let lease = (cfg.lease_ms > 0).then(|| Duration::from_millis(cfg.lease_ms));
+    let opts = ReadOpts { idle: lease, stop: Some(stop) };
+
+    let Some(tenant) = handshake::<R>(&mut stream, cfg, &opts, tenants) else {
+        return;
+    };
+    let mut sessions: HashMap<u64, CompactionSession<R>> = HashMap::new();
+
+    loop {
+        match frame::read_frame(&mut stream, cfg.max_frame_bytes, &opts) {
+            Ok((t, payload)) => {
+                match dispatch(&mut stream, t, &payload, svc, tenants, &tenant, &mut sessions)
+                {
+                    Flow::Continue => {}
+                    Flow::Close => break,
+                }
+            }
+            Err(FrameError::Closed) | Err(FrameError::Stopped) => break,
+            Err(FrameError::TimedOut) => {
+                // Lease expired: the client went silent past
+                // `serve.lease_ms` (mid-frame or between frames).
+                let _ = frame::write_err(
+                    &mut stream,
+                    err::STATE,
+                    "lease expired: no bytes within serve.lease_ms",
+                );
+                break;
+            }
+            Err(e @ (FrameError::Eof | FrameError::Varint | FrameError::Io(_))) => {
+                // Stream desynchronized (half-written frame, transport
+                // fault): answer with a typed error if the peer can
+                // still read, then close.
+                let _ = frame::write_err(&mut stream, err::PROTOCOL, &e.to_string());
+                break;
+            }
+            Err(FrameError::TooLarge(n)) => {
+                let _ = frame::write_err(
+                    &mut stream,
+                    err::PROTOCOL,
+                    &format!(
+                        "declared payload of {n} bytes exceeds serve.max_frame_bytes={}",
+                        cfg.max_frame_bytes
+                    ),
+                );
+                break;
+            }
+        }
+    }
+
+    // Reap: any session still open when the connection ends was
+    // abandoned by its client.
+    let abandoned = sessions.len() as u64;
+    for (_, session) in sessions.drain() {
+        tenants.drain(&tenant, session.fed_bytes());
+        tenants.close_session(&tenant);
+        session.abort();
+    }
+    if abandoned > 0 {
+        tenants.reaped(&tenant, abandoned);
+    }
+    tenants.disconnect(&tenant);
+}
+
+/// Expect and answer the `HELLO` preamble; returns the tenant handle,
+/// or `None` after answering with a typed error.
+fn handshake<R: WireRecord>(
+    stream: &mut Stream,
+    cfg: &ServerConfig,
+    opts: &ReadOpts<'_>,
+    tenants: &TenantRegistry,
+) -> Option<Arc<TenantState>> {
+    let (t, payload) = match frame::read_frame(stream, cfg.max_frame_bytes, opts) {
+        Ok(f) => f,
+        Err(FrameError::Closed) | Err(FrameError::Stopped) => return None,
+        Err(e) => {
+            let _ = frame::write_err(stream, err::PROTOCOL, &e.to_string());
+            return None;
+        }
+    };
+    if t != tag::HELLO {
+        let _ = frame::write_err(stream, err::STATE, "expected HELLO before any verb");
+        return None;
+    }
+    let parsed = (|| {
+        let mut c = Cursor::new(&payload);
+        let version = c.get_varint()?;
+        let wire_id = c.get_varint()?;
+        let tenant = c.rest_str()?;
+        Ok::<_, Error>((version, wire_id, tenant))
+    })();
+    let (version, wire_id, tenant_name) = match parsed {
+        Ok(p) => p,
+        Err(e) => {
+            let _ = frame::write_err(stream, err::PROTOCOL, &e.to_string());
+            return None;
+        }
+    };
+    if version != PROTOCOL_VERSION {
+        let _ = frame::write_err(
+            stream,
+            err::UNSUPPORTED,
+            &format!("protocol version {version} (server speaks {PROTOCOL_VERSION})"),
+        );
+        return None;
+    }
+    if wire_id != u64::from(R::WIRE_ID) {
+        let _ = frame::write_err(
+            stream,
+            err::UNSUPPORTED,
+            &format!("record wire id {wire_id} (server serves {})", R::WIRE_ID),
+        );
+        return None;
+    }
+    let name = if tenant_name.is_empty() { "default" } else { &tenant_name };
+    let tenant = tenants.connect(name);
+    let mut ok = Vec::new();
+    frame::put_varint(&mut ok, PROTOCOL_VERSION);
+    if frame::write_frame(stream, tag::HELLO_OK, &ok).is_err() {
+        tenants.disconnect(&tenant);
+        return None;
+    }
+    Some(tenant)
+}
+
+/// Answer one well-formed frame. Payload-level failures reply with a
+/// typed error and keep the connection (the stream is still at a frame
+/// boundary); only transport write failures close it.
+#[allow(clippy::too_many_arguments)]
+fn dispatch<R: WireRecord>(
+    stream: &mut Stream,
+    t: u8,
+    payload: &[u8],
+    svc: &Arc<MergeService<R>>,
+    tenants: &TenantRegistry,
+    tenant: &Arc<TenantState>,
+    sessions: &mut HashMap<u64, CompactionSession<R>>,
+) -> Flow {
+    let reply = match t {
+        tag::PING => Reply::Frame(tag::PONG, Vec::new()),
+        tag::STATS => {
+            let text = format!("{}\n{}", svc.stats().snapshot(), tenants.render());
+            Reply::Frame(tag::STATS_TEXT, text.into_bytes())
+        }
+        tag::OPEN => verb_open(payload, svc, tenants, tenant, sessions),
+        tag::FEED => verb_feed(payload, tenants, tenant, sessions),
+        tag::SEAL_RUN => verb_seal_run(payload, sessions),
+        tag::SEAL => verb_seal(payload, tenants, tenant, sessions),
+        tag::MERGE => verb_one_shot(payload, svc, tenants, tenant, |c| {
+            let a = c.get_records::<R>()?;
+            let b = c.get_records::<R>()?;
+            Ok((a.len() + b.len(), JobKind::Merge { a, b }))
+        }),
+        tag::COMPACT => verb_one_shot(payload, svc, tenants, tenant, |c| {
+            let k = c.get_varint()? as usize;
+            let mut runs = Vec::new();
+            let mut total = 0usize;
+            for _ in 0..k {
+                let run = c.get_records::<R>()?;
+                total += run.len();
+                runs.push(run);
+            }
+            Ok((total, JobKind::Compact { runs }))
+        }),
+        tag::SORT => verb_one_shot(payload, svc, tenants, tenant, |c| {
+            let data = c.get_records::<R>()?;
+            Ok((data.len(), JobKind::Sort { data }))
+        }),
+        tag::HELLO => Reply::Err(err::STATE, "HELLO already completed".into()),
+        other => Reply::Err(err::UNKNOWN_VERB, format!("unknown verb tag {other:#04x}")),
+    };
+    let written = match reply {
+        Reply::Frame(t, payload) => frame::write_frame(stream, t, &payload),
+        Reply::Err(code, msg) => frame::write_err(stream, code, &msg),
+        Reply::Busy(msg) => frame::write_frame(stream, tag::BUSY, msg.as_bytes()),
+    };
+    if written.is_err() {
+        Flow::Close
+    } else {
+        Flow::Continue
+    }
+}
+
+/// A decided reply, built before anything touches the socket.
+enum Reply {
+    Frame(u8, Vec<u8>),
+    Err(u8, String),
+    Busy(String),
+}
+
+impl Reply {
+    fn result<R: WireRecord>(backend: &str, output: &[R]) -> Self {
+        let mut p = Vec::with_capacity(backend.len() + 12 + output.len() * R::WIRE_BYTES);
+        frame::put_str(&mut p, backend);
+        frame::put_records(&mut p, output);
+        Reply::Frame(tag::RESULT, p)
+    }
+
+    /// Map a coordinator error: admission back-pressure (queue full,
+    /// budget, shutdown) is `BUSY`; precondition violations are typed
+    /// invalid-input errors.
+    fn from_service_error(e: Error, tenants: &TenantRegistry, tenant: &TenantState) -> Self {
+        match e {
+            Error::Service(msg) => {
+                tenants.busy(tenant);
+                Reply::Busy(msg)
+            }
+            Error::InvalidInput(msg) => Reply::Err(err::INVALID_INPUT, msg),
+            other => Reply::Err(err::INTERNAL, other.to_string()),
+        }
+    }
+}
+
+fn verb_open<R: WireRecord>(
+    payload: &[u8],
+    svc: &Arc<MergeService<R>>,
+    tenants: &TenantRegistry,
+    tenant: &Arc<TenantState>,
+    sessions: &mut HashMap<u64, CompactionSession<R>>,
+) -> Reply {
+    let k = match Cursor::new(payload).get_varint() {
+        Ok(k) => k as usize,
+        Err(e) => return Reply::Err(err::PROTOCOL, e.to_string()),
+    };
+    if let Err(msg) = tenants.try_open_session(tenant) {
+        return Reply::Busy(msg);
+    }
+    match svc.open_compaction(k) {
+        Ok(session) => {
+            let id = session.id();
+            sessions.insert(id, session);
+            let mut p = Vec::new();
+            frame::put_varint(&mut p, id);
+            Reply::Frame(tag::OPENED, p)
+        }
+        Err(e) => {
+            tenants.close_session(tenant);
+            Reply::from_service_error(e, tenants, tenant)
+        }
+    }
+}
+
+fn verb_feed<R: WireRecord>(
+    payload: &[u8],
+    tenants: &TenantRegistry,
+    tenant: &Arc<TenantState>,
+    sessions: &mut HashMap<u64, CompactionSession<R>>,
+) -> Reply {
+    let mut c = Cursor::new(payload);
+    let parsed = (|| {
+        let id = c.get_varint()?;
+        let run = c.get_varint()? as usize;
+        let chunk = c.get_records::<R>()?;
+        Ok::<_, Error>((id, run, chunk))
+    })();
+    let (id, run, chunk) = match parsed {
+        Ok(p) => p,
+        Err(e) => return Reply::Err(err::PROTOCOL, e.to_string()),
+    };
+    let Some(session) = sessions.get_mut(&id) else {
+        return Reply::Err(err::STATE, format!("no open session {id} on this connection"));
+    };
+    let bytes = std::mem::size_of_val(chunk.as_slice()) as u64;
+    if let Err(msg) = tenants.try_charge(tenant, bytes) {
+        return Reply::Busy(msg);
+    }
+    match session.feed(run, chunk) {
+        Ok(()) => Reply::Frame(tag::OK, Vec::new()),
+        Err(e) => {
+            // Not admitted — the charge rolls back with it. The session
+            // itself stays open and usable (feed's mid-stream
+            // rejection contract).
+            tenants.drain(tenant, bytes);
+            Reply::from_service_error(e, tenants, tenant)
+        }
+    }
+}
+
+fn verb_seal_run<R: WireRecord>(
+    payload: &[u8],
+    sessions: &mut HashMap<u64, CompactionSession<R>>,
+) -> Reply {
+    let mut c = Cursor::new(payload);
+    let parsed = (|| Ok::<_, Error>((c.get_varint()?, c.get_varint()? as usize)))();
+    let (id, run) = match parsed {
+        Ok(p) => p,
+        Err(e) => return Reply::Err(err::PROTOCOL, e.to_string()),
+    };
+    let Some(session) = sessions.get_mut(&id) else {
+        return Reply::Err(err::STATE, format!("no open session {id} on this connection"));
+    };
+    match session.seal_run(run) {
+        Ok(()) => Reply::Frame(tag::OK, Vec::new()),
+        Err(Error::InvalidInput(msg)) => Reply::Err(err::INVALID_INPUT, msg),
+        Err(other) => Reply::Err(err::INTERNAL, other.to_string()),
+    }
+}
+
+fn verb_seal<R: WireRecord>(
+    payload: &[u8],
+    tenants: &TenantRegistry,
+    tenant: &Arc<TenantState>,
+    sessions: &mut HashMap<u64, CompactionSession<R>>,
+) -> Reply {
+    let id = match Cursor::new(payload).get_varint() {
+        Ok(id) => id,
+        Err(e) => return Reply::Err(err::PROTOCOL, e.to_string()),
+    };
+    let Some(session) = sessions.remove(&id) else {
+        return Reply::Err(err::STATE, format!("no open session {id} on this connection"));
+    };
+    let fed = session.fed_bytes();
+    tenants.close_session(tenant);
+    // Blocking by design: the reply to SEAL *is* the merged output, so
+    // this connection thread parks on the job like any submit_blocking
+    // caller. Other connections keep serving on their own threads.
+    let sealed = session.seal().and_then(|handle| handle.wait());
+    tenants.drain(tenant, fed);
+    match sealed {
+        Ok(res) => Reply::result(res.backend, &res.output),
+        Err(e) => Reply::from_service_error(e, tenants, tenant),
+    }
+}
+
+/// Decode + charge + submit for the one-shot verbs (`MERGE`, `COMPACT`,
+/// `SORT`): `decode` yields the element count (for the quota charge)
+/// and the job. The charge is held until the job completes — one-shot
+/// payloads are in-flight tenant bytes exactly like session feeds.
+fn verb_one_shot<'p, R, F>(
+    payload: &'p [u8],
+    svc: &Arc<MergeService<R>>,
+    tenants: &TenantRegistry,
+    tenant: &Arc<TenantState>,
+    decode: F,
+) -> Reply
+where
+    R: WireRecord,
+    F: FnOnce(&mut Cursor<'p>) -> crate::Result<(usize, JobKind<R>)>,
+{
+    let mut c = Cursor::new(payload);
+    let (elems, kind) = match decode(&mut c) {
+        Ok(d) => d,
+        Err(e) => return Reply::Err(err::PROTOCOL, e.to_string()),
+    };
+    let bytes = (elems * std::mem::size_of::<R>()) as u64;
+    if let Err(msg) = tenants.try_charge(tenant, bytes) {
+        return Reply::Busy(msg);
+    }
+    let result = svc.submit(kind).and_then(|handle| handle.wait());
+    tenants.drain(tenant, bytes);
+    match result {
+        Ok(res) => Reply::result(res.backend, &res.output),
+        Err(e) => Reply::from_service_error(e, tenants, tenant),
+    }
+}

@@ -1,0 +1,233 @@
+//! Admission control plane: per-tenant in-flight byte/session quotas
+//! with fail-fast `BUSY` verdicts, layered on top of the service-wide
+//! `merge.memory_budget`.
+//!
+//! A *tenant* is the name a connection declares at `HELLO`; several
+//! connections may share one tenant (and therefore one quota). The
+//! registry tracks, per tenant, the bytes currently held live on the
+//! tenant's behalf — open-session feeds plus in-flight one-shot
+//! payloads — and the number of open streaming sessions. Checks are
+//! admit-then-roll-back: the gauge is raised first and lowered again
+//! on a verdict of over-quota, so two connections of one tenant racing
+//! the same headroom can transiently observe the sum but never both
+//! keep it.
+
+use crate::config::ServerConfig;
+use crate::coordinator::ServiceStats;
+use crate::metrics::{Counter, Gauge};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Live per-tenant accounting. All fields are monitoring-grade atomics
+/// — readable from the `STATS` verb while connections mutate them.
+#[derive(Debug, Default)]
+pub struct TenantState {
+    /// Bytes currently charged to the tenant (quota numerator).
+    pub bytes: Gauge,
+    /// Open streaming sessions.
+    pub sessions: Gauge,
+    /// Live connections.
+    pub conns: Gauge,
+    /// Fail-fast `BUSY` verdicts issued to this tenant.
+    pub busy: Counter,
+    /// Sessions reaped after this tenant's connections died or leased
+    /// out.
+    pub reaped: Counter,
+}
+
+/// The registry: tenant name → state, plus the configured limits.
+#[derive(Debug)]
+pub struct TenantRegistry {
+    quota_bytes: u64,
+    max_sessions: u64,
+    stats: Arc<ServiceStats>,
+    tenants: Mutex<HashMap<String, Arc<TenantState>>>,
+}
+
+impl TenantRegistry {
+    /// New registry enforcing `cfg`'s per-tenant limits; `BUSY`
+    /// verdicts are also counted in the service-wide
+    /// [`ServiceStats::busy_rejections`].
+    pub fn new(cfg: &ServerConfig, stats: Arc<ServiceStats>) -> Self {
+        Self {
+            quota_bytes: cfg.tenant_quota_bytes as u64,
+            max_sessions: cfg.tenant_max_sessions as u64,
+            stats,
+            tenants: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Register a connection under `name` (created on first sight) and
+    /// return the tenant's state handle.
+    pub fn connect(&self, name: &str) -> Arc<TenantState> {
+        let state = Arc::clone(
+            self.tenants
+                .lock()
+                .unwrap()
+                .entry(name.to_string())
+                .or_default(),
+        );
+        state.conns.add(1);
+        state
+    }
+
+    /// The connection under `tenant` closed.
+    pub fn disconnect(&self, tenant: &TenantState) {
+        tenant.conns.sub(1);
+    }
+
+    /// Try to charge `bytes` against the tenant's quota. `Err` is the
+    /// `BUSY` message; nothing stays charged on failure.
+    pub fn try_charge(&self, tenant: &TenantState, bytes: u64) -> Result<(), String> {
+        if self.quota_bytes == 0 {
+            tenant.bytes.add(bytes);
+            return Ok(());
+        }
+        tenant.bytes.add(bytes);
+        let now = tenant.bytes.get();
+        if now > self.quota_bytes {
+            tenant.bytes.sub(bytes);
+            self.busy(tenant);
+            return Err(format!(
+                "tenant quota exceeded: {bytes} B on top of {} B in flight would pass \
+                 serve.tenant_quota_bytes={}",
+                now - bytes,
+                self.quota_bytes
+            ));
+        }
+        Ok(())
+    }
+
+    /// Release `bytes` previously charged with
+    /// [`try_charge`](Self::try_charge).
+    pub fn drain(&self, tenant: &TenantState, bytes: u64) {
+        tenant.bytes.sub(bytes);
+    }
+
+    /// Try to open one more streaming session for the tenant.
+    pub fn try_open_session(&self, tenant: &TenantState) -> Result<(), String> {
+        if self.max_sessions == 0 {
+            tenant.sessions.add(1);
+            return Ok(());
+        }
+        tenant.sessions.add(1);
+        if tenant.sessions.get() > self.max_sessions {
+            tenant.sessions.sub(1);
+            self.busy(tenant);
+            return Err(format!(
+                "tenant session quota exceeded: serve.tenant_max_sessions={}",
+                self.max_sessions
+            ));
+        }
+        Ok(())
+    }
+
+    /// A session of the tenant closed (sealed or reaped).
+    pub fn close_session(&self, tenant: &TenantState) {
+        tenant.sessions.sub(1);
+    }
+
+    /// Count a `BUSY` verdict that was decided outside the registry
+    /// (service budget / queue back-pressure surfaced over the wire).
+    pub fn busy(&self, tenant: &TenantState) {
+        tenant.busy.inc();
+        self.stats.busy_rejections.inc();
+    }
+
+    /// Count reaped sessions for the tenant (the service-wide figure is
+    /// counted by [`crate::coordinator::CompactionSession::abort`]).
+    pub fn reaped(&self, tenant: &TenantState, sessions: u64) {
+        tenant.reaped.add(sessions);
+    }
+
+    /// Per-tenant lines appended to the `STATS` verb's reply.
+    pub fn render(&self) -> String {
+        let tenants = self.tenants.lock().unwrap();
+        let mut names: Vec<&String> = tenants.keys().collect();
+        names.sort();
+        let mut out = String::new();
+        for name in names {
+            let t = &tenants[name];
+            out.push_str(&format!(
+                "tenant {name}: conns={} bytes={} peak={} sessions={} busy={} reaped={}\n",
+                t.conns.get(),
+                t.bytes.get(),
+                t.bytes.peak(),
+                t.sessions.get(),
+                t.busy.get(),
+                t.reaped.get(),
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServerConfig;
+
+    fn registry(quota: usize, sessions: usize) -> TenantRegistry {
+        let cfg = ServerConfig {
+            tenant_quota_bytes: quota,
+            tenant_max_sessions: sessions,
+            ..Default::default()
+        };
+        TenantRegistry::new(&cfg, Arc::new(ServiceStats::new()))
+    }
+
+    #[test]
+    fn byte_quota_admits_and_rolls_back() {
+        let reg = registry(100, 0);
+        let t = reg.connect("a");
+        assert!(reg.try_charge(&t, 60).is_ok());
+        assert!(reg.try_charge(&t, 40).is_ok());
+        let err = reg.try_charge(&t, 1).unwrap_err();
+        assert!(err.contains("tenant quota exceeded"), "{err}");
+        assert_eq!(t.bytes.get(), 100, "failed charge fully rolled back");
+        assert_eq!(t.busy.get(), 1);
+        reg.drain(&t, 100);
+        assert_eq!(t.bytes.get(), 0);
+        assert!(reg.try_charge(&t, 100).is_ok(), "drained quota is reusable");
+    }
+
+    #[test]
+    fn zero_quota_means_unlimited() {
+        let reg = registry(0, 0);
+        let t = reg.connect("a");
+        assert!(reg.try_charge(&t, u64::MAX / 2).is_ok());
+        assert!(reg.try_open_session(&t).is_ok());
+        assert_eq!(t.busy.get(), 0);
+    }
+
+    #[test]
+    fn session_quota_enforced_per_tenant() {
+        let reg = registry(0, 2);
+        let a = reg.connect("a");
+        let b = reg.connect("b");
+        assert!(reg.try_open_session(&a).is_ok());
+        assert!(reg.try_open_session(&a).is_ok());
+        assert!(reg.try_open_session(&a).is_err(), "third session busts the cap");
+        assert!(reg.try_open_session(&b).is_ok(), "quotas are per tenant");
+        reg.close_session(&a);
+        assert!(reg.try_open_session(&a).is_ok(), "closed slot is reusable");
+    }
+
+    #[test]
+    fn tenants_share_state_by_name_and_render() {
+        let reg = registry(1000, 0);
+        let c1 = reg.connect("shared");
+        let c2 = reg.connect("shared");
+        assert!(Arc::ptr_eq(&c1, &c2), "same name, same quota pool");
+        assert_eq!(c1.conns.get(), 2);
+        reg.try_charge(&c1, 700).unwrap();
+        assert!(reg.try_charge(&c2, 700).is_err(), "shared pool is shared");
+        reg.disconnect(&c2);
+        assert_eq!(c1.conns.get(), 1);
+        reg.reaped(&c1, 2);
+        let text = reg.render();
+        assert!(text.contains("tenant shared:"), "{text}");
+        assert!(text.contains("bytes=700"), "{text}");
+        assert!(text.contains("reaped=2"), "{text}");
+    }
+}

@@ -1,0 +1,590 @@
+//! Wire codec: length-prefixed frames with varint lengths, verb/reply
+//! tags, and typed-record payload encoding over the [`Record`] trait.
+//!
+//! Frame layout (both directions):
+//!
+//! ```text
+//! ┌────────┬──────────────────┬───────────────────────────┐
+//! │ tag u8 │ len varint (LEB) │ payload: len bytes        │
+//! └────────┴──────────────────┴───────────────────────────┘
+//! ```
+//!
+//! Integers inside payloads are unsigned LEB128 varints; records are
+//! fixed-width little-endian via [`WireRecord`], always prefixed by
+//! their count. The declared `len` is checked against the decoder's
+//! configured cap (`serve.max_frame_bytes`) *before* any allocation or
+//! payload read, and record counts are checked against the actual
+//! remaining payload bytes before a vector is reserved — a malformed
+//! or hostile frame can never make the decoder over-allocate.
+//!
+//! Payload-level failures (unknown verb, record count overrunning the
+//! payload, unsorted chunks) leave the stream at a frame boundary, so
+//! the connection answers with a typed [`tag::ERR`] frame and keeps
+//! serving. Header-level failures (truncated header, varint overflow,
+//! oversized declared length) desynchronize the stream: the connection
+//! answers with an error frame and closes.
+
+use crate::record::Record;
+use crate::{Error, Result};
+use std::io::{Read, Write};
+use std::time::{Duration, Instant};
+
+/// Protocol version carried in `HELLO` (bumped on incompatible layout
+/// changes).
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Frame tags. Requests are `0x01..=0x7f`, replies have the high bit
+/// set. The numeric values are the wire contract — append, never
+/// renumber.
+pub mod tag {
+    /// Connection preamble: `[version][wire_id][tenant utf8…]`.
+    pub const HELLO: u8 = 0x01;
+    /// Heartbeat / liveness probe (empty payload).
+    pub const PING: u8 = 0x02;
+    /// Stats snapshot request (empty payload).
+    pub const STATS: u8 = 0x03;
+    /// `OPEN k`: open a streaming compaction of `k` runs.
+    pub const OPEN: u8 = 0x04;
+    /// `FEED session run chunk`: one sorted chunk for an open session.
+    pub const FEED: u8 = 0x05;
+    /// `SEAL_RUN session run`: the run will receive no more chunks.
+    pub const SEAL_RUN: u8 = 0x06;
+    /// `SEAL session`: finish the session, reply with the merged output.
+    pub const SEAL: u8 = 0x07;
+    /// One-shot pairwise merge: `[a records][b records]`.
+    pub const MERGE: u8 = 0x08;
+    /// One-shot k-way compaction: `[k][k × records]`.
+    pub const COMPACT: u8 = 0x09;
+    /// One-shot sort: `[records]`.
+    pub const SORT: u8 = 0x0a;
+
+    /// `HELLO` accepted: `[version]`.
+    pub const HELLO_OK: u8 = 0x81;
+    /// `PING` reply (empty payload).
+    pub const PONG: u8 = 0x82;
+    /// Stats text (utf8).
+    pub const STATS_TEXT: u8 = 0x83;
+    /// Session opened: `[session id]`.
+    pub const OPENED: u8 = 0x84;
+    /// Generic acknowledgement (empty payload).
+    pub const OK: u8 = 0x85;
+    /// Merged output: `[backend utf8 (len-prefixed)][records]`.
+    pub const RESULT: u8 = 0x86;
+    /// Typed error: `[code u8][message utf8…]`. See [`super::err`].
+    pub const ERR: u8 = 0x87;
+    /// Fail-fast admission rejection (quota/budget/back-pressure):
+    /// `[message utf8…]`. Not an error in the protocol sense — the
+    /// connection and its sessions stay usable; retry later.
+    pub const BUSY: u8 = 0x88;
+}
+
+/// Error codes carried in [`tag::ERR`] payloads.
+pub mod err {
+    /// Malformed frame (header or payload failed to decode). The
+    /// connection closes after this when the stream desynchronized.
+    pub const PROTOCOL: u8 = 1;
+    /// Unknown verb tag (the frame itself was well-formed; the
+    /// connection keeps serving).
+    pub const UNKNOWN_VERB: u8 = 2;
+    /// Input violated a documented precondition (unsorted chunk, bad
+    /// run index). The session and connection stay usable.
+    pub const INVALID_INPUT: u8 = 3;
+    /// Protocol-state violation (verb before `HELLO`, unknown session
+    /// id, sealed run).
+    pub const STATE: u8 = 4;
+    /// Version or record-type mismatch at `HELLO`.
+    pub const UNSUPPORTED: u8 = 5;
+    /// Server-side failure executing an admitted job.
+    pub const INTERNAL: u8 = 6;
+}
+
+/// Fixed-width little-endian wire encoding for a record type. The
+/// server and client agree on the record type at `HELLO` time via
+/// [`WireRecord::WIRE_ID`]; the payload bytes then carry exactly
+/// [`WireRecord::WIRE_BYTES`] per record.
+///
+/// Implemented for the scalar keys the engine serves plus the
+/// `(key, payload)` pairs of the typed-record API. The `decode`
+/// contract mirrors `encode`: `bytes` is exactly `WIRE_BYTES` long.
+pub trait WireRecord: Record {
+    /// Stable identifier of this encoding (part of the wire contract).
+    const WIRE_ID: u32;
+    /// Encoded width of one record in bytes.
+    const WIRE_BYTES: usize;
+    /// Append the little-endian encoding to `buf`.
+    fn encode(&self, buf: &mut Vec<u8>);
+    /// Decode from exactly [`Self::WIRE_BYTES`](Self::WIRE_BYTES) bytes.
+    fn decode(bytes: &[u8]) -> Self;
+}
+
+macro_rules! scalar_wire {
+    ($($t:ty => $id:expr),* $(,)?) => {$(
+        impl WireRecord for $t {
+            const WIRE_ID: u32 = $id;
+            const WIRE_BYTES: usize = std::mem::size_of::<$t>();
+            #[inline]
+            fn encode(&self, buf: &mut Vec<u8>) {
+                buf.extend_from_slice(&self.to_le_bytes());
+            }
+            #[inline]
+            fn decode(bytes: &[u8]) -> Self {
+                <$t>::from_le_bytes(bytes.try_into().expect("caller sized the slice"))
+            }
+        }
+    )*};
+}
+
+scalar_wire!(i32 => 1, u32 => 2, i64 => 3, u64 => 4);
+
+macro_rules! pair_wire {
+    ($($k:ty, $v:ty => $id:expr),* $(,)?) => {$(
+        impl WireRecord for ($k, $v) {
+            const WIRE_ID: u32 = $id;
+            const WIRE_BYTES: usize =
+                std::mem::size_of::<$k>() + std::mem::size_of::<$v>();
+            #[inline]
+            fn encode(&self, buf: &mut Vec<u8>) {
+                buf.extend_from_slice(&self.0.to_le_bytes());
+                buf.extend_from_slice(&self.1.to_le_bytes());
+            }
+            #[inline]
+            fn decode(bytes: &[u8]) -> Self {
+                let k = std::mem::size_of::<$k>();
+                (
+                    <$k>::from_le_bytes(bytes[..k].try_into().expect("sized")),
+                    <$v>::from_le_bytes(bytes[k..].try_into().expect("sized")),
+                )
+            }
+        }
+    )*};
+}
+
+pair_wire!(u32, u32 => 5, u64, u64 => 6, i64, i64 => 7);
+
+// ---------------------------------------------------------------------
+// Varints and payload building.
+// ---------------------------------------------------------------------
+
+/// Append an unsigned LEB128 varint.
+pub fn put_varint(buf: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            buf.push(byte);
+            return;
+        }
+        buf.push(byte | 0x80);
+    }
+}
+
+/// Append a count-prefixed record slice.
+pub fn put_records<R: WireRecord>(buf: &mut Vec<u8>, records: &[R]) {
+    put_varint(buf, records.len() as u64);
+    buf.reserve(records.len() * R::WIRE_BYTES);
+    for r in records {
+        r.encode(buf);
+    }
+}
+
+/// Append a length-prefixed utf8 string.
+pub fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_varint(buf, s.len() as u64);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+/// Sequential payload reader with bounds-checked primitives. Every
+/// getter fails loudly (never panics, never reads past the payload),
+/// which is what lets the connection answer malformed payloads with a
+/// typed error frame instead of dying.
+pub struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    /// Read from the start of `buf`.
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(Error::InvalidInput(format!(
+                "payload truncated: wanted {n} bytes, {} left",
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// One byte.
+    pub fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Unsigned LEB128 varint (≤ 10 bytes).
+    pub fn get_varint(&mut self) -> Result<u64> {
+        let mut v: u64 = 0;
+        for shift in (0..64).step_by(7) {
+            let byte = self.get_u8()?;
+            v |= u64::from(byte & 0x7f) << shift;
+            if byte & 0x80 == 0 {
+                // Reject non-canonical overlong encodings of the top
+                // group (bits that would shift past 64).
+                if shift == 63 && byte > 1 {
+                    break;
+                }
+                return Ok(v);
+            }
+        }
+        Err(Error::InvalidInput("varint overflows u64".into()))
+    }
+
+    /// Count-prefixed record slice. The count is validated against the
+    /// bytes actually present *before* any allocation.
+    pub fn get_records<R: WireRecord>(&mut self) -> Result<Vec<R>> {
+        let n = self.get_varint()? as usize;
+        let need = n
+            .checked_mul(R::WIRE_BYTES)
+            .ok_or_else(|| Error::InvalidInput("record count overflows".into()))?;
+        if need > self.remaining() {
+            return Err(Error::InvalidInput(format!(
+                "record count {n} needs {need} bytes, payload has {}",
+                self.remaining()
+            )));
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(R::decode(self.take(R::WIRE_BYTES)?));
+        }
+        Ok(out)
+    }
+
+    /// Length-prefixed utf8 string.
+    pub fn get_str(&mut self) -> Result<String> {
+        let n = self.get_varint()? as usize;
+        if n > self.remaining() {
+            return Err(Error::InvalidInput(format!(
+                "string length {n} exceeds payload ({} left)",
+                self.remaining()
+            )));
+        }
+        String::from_utf8(self.take(n)?.to_vec())
+            .map_err(|_| Error::InvalidInput("string is not utf8".into()))
+    }
+
+    /// Everything left, as utf8 (messages, tenant names).
+    pub fn rest_str(&mut self) -> Result<String> {
+        let rest = self.take(self.remaining())?;
+        String::from_utf8(rest.to_vec())
+            .map_err(|_| Error::InvalidInput("trailing bytes are not utf8".into()))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Frame I/O.
+// ---------------------------------------------------------------------
+
+/// Why a frame could not be read.
+#[derive(Debug)]
+pub enum FrameError {
+    /// Peer closed cleanly at a frame boundary (not an error).
+    Closed,
+    /// Peer closed mid-frame (half-written frame then hangup).
+    Eof,
+    /// No bytes arrived within the idle limit (lease expiry).
+    TimedOut,
+    /// Cooperative stop flag was raised while waiting.
+    Stopped,
+    /// Varint header overflowed.
+    Varint,
+    /// Declared payload length exceeds the configured cap. Carries the
+    /// declared length; the payload was neither allocated nor read.
+    TooLarge(u64),
+    /// Underlying transport error.
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Closed => write!(f, "connection closed"),
+            FrameError::Eof => write!(f, "connection closed mid-frame"),
+            FrameError::TimedOut => write!(f, "no frame within the idle limit"),
+            FrameError::Stopped => write!(f, "server stopping"),
+            FrameError::Varint => write!(f, "frame length varint overflows"),
+            FrameError::TooLarge(n) => write!(f, "declared payload of {n} bytes exceeds cap"),
+            FrameError::Io(e) => write!(f, "frame i/o: {e}"),
+        }
+    }
+}
+
+/// Read-loop policy: how long silence may last and when to give up.
+/// The underlying socket's read timeout provides the polling
+/// granularity; this struct decides what a timeout *means*.
+#[derive(Default)]
+pub struct ReadOpts<'a> {
+    /// Maximum silent gap (no bytes arriving) before the read fails
+    /// with [`FrameError::TimedOut`] — the lease. `None` waits forever.
+    pub idle: Option<Duration>,
+    /// Checked whenever the socket read times out; `true` aborts with
+    /// [`FrameError::Stopped`].
+    pub stop: Option<&'a std::sync::atomic::AtomicBool>,
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+/// Fill `buf` completely, tolerating socket read timeouts up to the
+/// idle limit. Progress resets the idle clock — the lease bounds
+/// *silence*, not total transfer time.
+fn read_full(
+    r: &mut impl Read,
+    buf: &mut [u8],
+    opts: &ReadOpts<'_>,
+    last_progress: &mut Instant,
+) -> std::result::Result<(), FrameError> {
+    let mut off = 0;
+    while off < buf.len() {
+        match r.read(&mut buf[off..]) {
+            Ok(0) => return Err(FrameError::Eof),
+            Ok(n) => {
+                off += n;
+                *last_progress = Instant::now();
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) if is_timeout(&e) => {
+                if let Some(stop) = opts.stop {
+                    if stop.load(std::sync::atomic::Ordering::Relaxed) {
+                        return Err(FrameError::Stopped);
+                    }
+                }
+                if let Some(idle) = opts.idle {
+                    if last_progress.elapsed() > idle {
+                        return Err(FrameError::TimedOut);
+                    }
+                }
+            }
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    Ok(())
+}
+
+/// Read one frame: `(tag, payload)`. `cap` bounds the pre-read payload
+/// allocation (`serve.max_frame_bytes`); a frame declaring more fails
+/// with [`FrameError::TooLarge`] before any allocation. A clean close
+/// at a frame boundary is [`FrameError::Closed`]; mid-frame close is
+/// [`FrameError::Eof`].
+pub fn read_frame(
+    r: &mut impl Read,
+    cap: usize,
+    opts: &ReadOpts<'_>,
+) -> std::result::Result<(u8, Vec<u8>), FrameError> {
+    let mut last_progress = Instant::now();
+    // Tag byte — the only read where EOF means a clean close.
+    let mut tag = [0u8; 1];
+    loop {
+        match r.read(&mut tag) {
+            Ok(0) => return Err(FrameError::Closed),
+            Ok(_) => {
+                last_progress = Instant::now();
+                break;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) if is_timeout(&e) => {
+                if let Some(stop) = opts.stop {
+                    if stop.load(std::sync::atomic::Ordering::Relaxed) {
+                        return Err(FrameError::Stopped);
+                    }
+                }
+                if let Some(idle) = opts.idle {
+                    if last_progress.elapsed() > idle {
+                        return Err(FrameError::TimedOut);
+                    }
+                }
+            }
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    // Length varint, byte by byte.
+    let mut len: u64 = 0;
+    let mut shift = 0u32;
+    loop {
+        let mut b = [0u8; 1];
+        read_full(r, &mut b, opts, &mut last_progress)?;
+        len |= u64::from(b[0] & 0x7f) << shift;
+        if b[0] & 0x80 == 0 {
+            break;
+        }
+        shift += 7;
+        if shift >= 64 {
+            return Err(FrameError::Varint);
+        }
+    }
+    if len > cap as u64 {
+        return Err(FrameError::TooLarge(len));
+    }
+    let mut payload = vec![0u8; len as usize];
+    read_full(r, &mut payload, opts, &mut last_progress)?;
+    Ok((tag[0], payload))
+}
+
+/// Write one frame (single `write_all` of header + payload).
+pub fn write_frame(w: &mut impl Write, tag: u8, payload: &[u8]) -> std::io::Result<()> {
+    let mut frame = Vec::with_capacity(1 + 10 + payload.len());
+    frame.push(tag);
+    put_varint(&mut frame, payload.len() as u64);
+    frame.extend_from_slice(payload);
+    w.write_all(&frame)?;
+    w.flush()
+}
+
+/// Build and write a typed [`tag::ERR`] frame.
+pub fn write_err(w: &mut impl Write, code: u8, msg: &str) -> std::io::Result<()> {
+    let mut payload = Vec::with_capacity(1 + msg.len());
+    payload.push(code);
+    payload.extend_from_slice(msg.as_bytes());
+    write_frame(w, tag::ERR, &payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn varint_round_trip() {
+        for v in [0u64, 1, 127, 128, 300, 1 << 20, u64::MAX] {
+            let mut buf = Vec::new();
+            put_varint(&mut buf, v);
+            assert!(buf.len() <= 10);
+            assert_eq!(Cursor::new(&buf).get_varint().unwrap(), v, "v={v}");
+        }
+        // Canonical single-byte values stay single-byte.
+        let mut buf = Vec::new();
+        put_varint(&mut buf, 5);
+        assert_eq!(buf, vec![5]);
+    }
+
+    #[test]
+    fn varint_overflow_rejected() {
+        // 11 continuation bytes can never terminate within u64.
+        let buf = [0xffu8; 11];
+        assert!(Cursor::new(&buf).get_varint().is_err());
+    }
+
+    #[test]
+    fn records_round_trip_scalar_and_pair() {
+        let recs = vec![-5i32, 0, 7, i32::MAX];
+        let mut buf = Vec::new();
+        put_records(&mut buf, &recs);
+        assert_eq!(Cursor::new(&buf).get_records::<i32>().unwrap(), recs);
+
+        let pairs = vec![(1u64, 99u64), (u64::MAX, 0)];
+        let mut buf = Vec::new();
+        put_records(&mut buf, &pairs);
+        assert_eq!(Cursor::new(&buf).get_records::<(u64, u64)>().unwrap(), pairs);
+        assert_eq!(<(u64, u64) as WireRecord>::WIRE_BYTES, 16);
+        assert_ne!(<i32 as WireRecord>::WIRE_ID, <(u64, u64) as WireRecord>::WIRE_ID);
+    }
+
+    #[test]
+    fn record_count_checked_before_allocation() {
+        // Declares 2^40 records but carries 4 bytes: must error, not
+        // reserve a terabyte.
+        let mut buf = Vec::new();
+        put_varint(&mut buf, 1u64 << 40);
+        buf.extend_from_slice(&[0, 0, 0, 0]);
+        assert!(Cursor::new(&buf).get_records::<i32>().is_err());
+        // Count × width overflow is caught too.
+        let mut buf = Vec::new();
+        put_varint(&mut buf, u64::MAX);
+        assert!(Cursor::new(&buf).get_records::<(u64, u64)>().is_err());
+    }
+
+    #[test]
+    fn strings_round_trip() {
+        let mut buf = Vec::new();
+        put_str(&mut buf, "native-kway");
+        let mut c = Cursor::new(&buf);
+        assert_eq!(c.get_str().unwrap(), "native-kway");
+        assert_eq!(c.remaining(), 0);
+        // Length past the payload is rejected.
+        let mut buf = Vec::new();
+        put_varint(&mut buf, 100);
+        buf.extend_from_slice(b"short");
+        assert!(Cursor::new(&buf).get_str().is_err());
+    }
+
+    #[test]
+    fn frames_round_trip_over_a_pipe() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, tag::OPEN, &[42]).unwrap();
+        write_frame(&mut wire, tag::PING, &[]).unwrap();
+        let mut r = std::io::Cursor::new(wire);
+        let opts = ReadOpts::default();
+        let (t, p) = read_frame(&mut r, 1 << 20, &opts).unwrap();
+        assert_eq!((t, p.as_slice()), (tag::OPEN, &[42u8][..]));
+        let (t, p) = read_frame(&mut r, 1 << 20, &opts).unwrap();
+        assert_eq!((t, p.len()), (tag::PING, 0));
+        assert!(matches!(
+            read_frame(&mut r, 1 << 20, &opts),
+            Err(FrameError::Closed)
+        ));
+    }
+
+    #[test]
+    fn oversized_declared_payload_fails_before_allocation() {
+        let mut wire = Vec::new();
+        wire.push(tag::FEED);
+        put_varint(&mut wire, 1 << 40); // declares a terabyte
+        let mut r = std::io::Cursor::new(wire);
+        match read_frame(&mut r, 1 << 16, &ReadOpts::default()) {
+            Err(FrameError::TooLarge(n)) => assert_eq!(n, 1 << 40),
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_frames_are_eof_not_closed() {
+        // Tag only.
+        let mut r = std::io::Cursor::new(vec![tag::MERGE]);
+        assert!(matches!(
+            read_frame(&mut r, 1 << 16, &ReadOpts::default()),
+            Err(FrameError::Eof)
+        ));
+        // Header + partial payload.
+        let mut wire = Vec::new();
+        wire.push(tag::MERGE);
+        put_varint(&mut wire, 100);
+        wire.extend_from_slice(&[1, 2, 3]);
+        let mut r = std::io::Cursor::new(wire);
+        assert!(matches!(
+            read_frame(&mut r, 1 << 16, &ReadOpts::default()),
+            Err(FrameError::Eof)
+        ));
+    }
+
+    #[test]
+    fn length_varint_overflow_detected() {
+        let mut wire = vec![tag::MERGE];
+        wire.extend_from_slice(&[0xff; 11]);
+        let mut r = std::io::Cursor::new(wire);
+        assert!(matches!(
+            read_frame(&mut r, 1 << 16, &ReadOpts::default()),
+            Err(FrameError::Varint)
+        ));
+    }
+}

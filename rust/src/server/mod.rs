@@ -1,0 +1,318 @@
+//! Wire server: the coordinator surface served over TCP or Unix
+//! sockets as a length-prefixed framed byte protocol.
+//!
+//! Verbs map 1:1 onto the existing in-process API — `OPEN`/`FEED`/
+//! `SEAL_RUN`/`SEAL` onto
+//! [`CompactionSession`](crate::coordinator::CompactionSession),
+//! one-shot `MERGE`/`COMPACT`/`SORT` onto [`MergeService::submit`],
+//! plus `STATS` and `PING` — so a remote client gets exactly the
+//! semantics (validation,
+//! stability, back-pressure) an embedded one does. Layers:
+//!
+//! - [`frame`] — the codec: `[tag][len varint][payload]` frames,
+//!   LEB128 varints, fixed-width little-endian typed records
+//!   ([`frame::WireRecord`]), allocation-capped decoding.
+//! - [`conn`] (private) — one thread per connection; request → reply
+//!   in order, with the session's blocking push as the back-pressure
+//!   seam: while the service queue is full the handler is parked in
+//!   `feed`, stops reading the socket, and the client's own writes
+//!   stall.
+//! - [`control`] — per-tenant in-flight byte/session quotas with
+//!   fail-fast `BUSY` replies, layered on `merge.memory_budget`.
+//! - [`client`] — a typed loopback [`Client`] for tests, examples and
+//!   the e2e harness.
+//!
+//! Liveness is lease-based: `serve.lease_ms` bounds how long a
+//! connection may go completely silent (no bytes arriving — any frame,
+//! `PING` included, is a heartbeat; mid-frame progress counts too).
+//! A connection that leases out, hangs up, or dies mid-frame has all
+//! its open sessions aborted
+//! ([`CompactionSession::abort`](crate::coordinator::CompactionSession::abort)):
+//! the dispatcher reaps their buffered ingest (draining
+//! `resident_bytes`) and the tenant's quota is restored, so a dead
+//! client can never hold admission hostage.
+
+pub mod client;
+mod conn;
+pub mod control;
+pub mod frame;
+
+pub use client::{is_busy, Client};
+pub use frame::WireRecord;
+
+use crate::config::ServerConfig;
+use crate::coordinator::MergeService;
+use crate::{Error, Result};
+use control::TenantRegistry;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// A listen/connect address: `host:port`, or `unix:/path` for a Unix
+/// domain socket.
+enum Addr {
+    Tcp(String),
+    #[cfg(unix)]
+    Unix(std::path::PathBuf),
+}
+
+/// Parse `serve.listen` / client address syntax.
+fn parse_addr(addr: &str) -> Result<Addr> {
+    if let Some(path) = addr.strip_prefix("unix:") {
+        #[cfg(unix)]
+        {
+            if path.is_empty() {
+                return Err(Error::Config("empty unix socket path".into()));
+            }
+            return Ok(Addr::Unix(std::path::PathBuf::from(path)));
+        }
+        #[cfg(not(unix))]
+        {
+            let _ = path;
+            return Err(Error::Config(
+                "unix: addresses are not supported on this platform".into(),
+            ));
+        }
+    }
+    if addr.is_empty() {
+        return Err(Error::Config("empty listen address".into()));
+    }
+    Ok(Addr::Tcp(addr.to_string()))
+}
+
+/// One accepted or dialed connection — TCP and Unix streams behind one
+/// `Read + Write` face (no `dyn`: the match compiles away).
+pub(crate) enum Stream {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Stream {
+    /// Dial `addr` (client side).
+    fn connect(addr: &str) -> Result<Self> {
+        match parse_addr(addr)? {
+            Addr::Tcp(a) => Ok(Stream::Tcp(TcpStream::connect(a)?)),
+            #[cfg(unix)]
+            Addr::Unix(p) => Ok(Stream::Unix(UnixStream::connect(p)?)),
+        }
+    }
+
+    fn set_read_timeout(&mut self, dur: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_read_timeout(dur),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.set_read_timeout(dur),
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener),
+}
+
+impl Listener {
+    fn bind(addr: &Addr) -> Result<Self> {
+        match addr {
+            Addr::Tcp(a) => Ok(Listener::Tcp(TcpListener::bind(a)?)),
+            #[cfg(unix)]
+            Addr::Unix(p) => {
+                // A stale socket file from a previous run makes bind
+                // fail with AddrInUse even though nobody is listening —
+                // remove it first (connectable live sockets are the
+                // operator's problem, like any port collision).
+                if p.exists() {
+                    let _ = std::fs::remove_file(p);
+                }
+                Ok(Listener::Unix(UnixListener::bind(p)?))
+            }
+        }
+    }
+
+    fn accept(&self) -> std::io::Result<Stream> {
+        match self {
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s)),
+            #[cfg(unix)]
+            Listener::Unix(l) => l.accept().map(|(s, _)| Stream::Unix(s)),
+        }
+    }
+
+    /// The resolved address in the same syntax `parse_addr` accepts —
+    /// for TCP this includes the kernel-assigned port when the config
+    /// said `:0`, so tests can dial it back.
+    fn resolved(&self) -> String {
+        match self {
+            Listener::Tcp(l) => l
+                .local_addr()
+                .map(|a| a.to_string())
+                .unwrap_or_default(),
+            #[cfg(unix)]
+            Listener::Unix(l) => {
+                let path = l
+                    .local_addr()
+                    .ok()
+                    .and_then(|a| a.as_pathname().map(|p| p.to_path_buf()))
+                    .unwrap_or_default();
+                format!("unix:{}", path.display())
+            }
+        }
+    }
+}
+
+/// Handle to a running server: the resolved address and the switch to
+/// stop it. Dropping the handle shuts the server down too.
+pub struct ServerHandle {
+    addr: String,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+}
+
+impl ServerHandle {
+    /// The resolved listen address, dialable by [`Client::connect`]
+    /// (`host:port`, or `unix:/path`).
+    pub fn local_addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Stop accepting, wake every parked connection handler, and join
+    /// all server threads. In-flight requests finish first (a handler
+    /// checks the stop flag between frames, not mid-request); open
+    /// sessions of connections that never returned are aborted and
+    /// reaped as if their clients had hung up.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        let Some(accept) = self.accept_thread.take() else { return };
+        self.stop.store(true, Ordering::Relaxed);
+        // The accept loop is parked in accept(2); a throwaway dial is
+        // the portable wake-up.
+        let _ = Stream::connect(&self.addr);
+        let _ = accept.join();
+        let conns = std::mem::take(&mut *self.conns.lock().unwrap());
+        for c in conns {
+            let _ = c.join();
+        }
+        // Leave no stale socket file behind.
+        if let Some(path) = self.addr.strip_prefix("unix:") {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// Start serving `svc` per `cfg` and return immediately; connections
+/// are handled on their own threads until [`ServerHandle::shutdown`].
+///
+/// The record type is fixed per server (declared to clients via
+/// [`WireRecord::WIRE_ID`] in the `HELLO` handshake); a client
+/// connecting with a different record type is refused with a typed
+/// error before any verb runs.
+pub fn serve<R: WireRecord>(
+    svc: Arc<MergeService<R>>,
+    cfg: ServerConfig,
+) -> Result<ServerHandle> {
+    cfg.validate()?;
+    let addr = parse_addr(&cfg.listen)?;
+    let listener = Listener::bind(&addr)?;
+    let resolved = listener.resolved();
+    let stop = Arc::new(AtomicBool::new(false));
+    let tenants = Arc::new(TenantRegistry::new(&cfg, svc.stats_arc()));
+    let conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
+        Arc::new(Mutex::new(Vec::new()));
+
+    let accept_thread = {
+        let stop = Arc::clone(&stop);
+        let conns = Arc::clone(&conns);
+        std::thread::Builder::new()
+            .name("mergeflow-accept".into())
+            .spawn(move || loop {
+                let stream = match listener.accept() {
+                    Ok(s) => s,
+                    Err(_) => {
+                        if stop.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        continue;
+                    }
+                };
+                if stop.load(Ordering::Relaxed) {
+                    return; // the shutdown wake-up dial
+                }
+                let svc = Arc::clone(&svc);
+                let cfg = cfg.clone();
+                let tenants = Arc::clone(&tenants);
+                let stop2 = Arc::clone(&stop);
+                let handle = std::thread::Builder::new()
+                    .name("mergeflow-conn".into())
+                    .spawn(move || conn::handle(stream, &svc, &cfg, &tenants, &stop2))
+                    .expect("spawn connection handler");
+                conns.lock().unwrap().push(handle);
+            })
+            .map_err(Error::Io)?
+    };
+
+    Ok(ServerHandle {
+        addr: resolved,
+        stop,
+        accept_thread: Some(accept_thread),
+        conns,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn addr_syntax_parses() {
+        assert!(matches!(parse_addr("127.0.0.1:7141"), Ok(Addr::Tcp(_))));
+        assert!(parse_addr("").is_err());
+        #[cfg(unix)]
+        {
+            assert!(matches!(parse_addr("unix:/tmp/x.sock"), Ok(Addr::Unix(_))));
+            assert!(parse_addr("unix:").is_err());
+        }
+    }
+}

@@ -1,0 +1,611 @@
+//! Wire-server conformance and robustness, end to end over real
+//! sockets: every verb must be byte-identical to the in-process
+//! one-shot oracle for scalar and `(key, payload)` records; dead
+//! clients (clean drop, half-written frame, lease silence) must be
+//! reaped with `resident_bytes` drained back to zero; malformed frames
+//! must get typed error replies and never kill the server; and
+//! per-tenant quotas must answer fail-fast `BUSY` while well-behaved
+//! tenants keep streaming.
+
+use mergeflow::bench::workload::{
+    gen_sorted_pair, gen_sorted_runs, gen_unsorted, WorkloadKind,
+};
+use mergeflow::config::{Backend, InplaceMode, MergeflowConfig, ServerConfig};
+use mergeflow::coordinator::{JobKind, MergeService};
+use mergeflow::server::frame::{
+    self, err, tag, Cursor, FrameError, ReadOpts, PROTOCOL_VERSION,
+};
+use mergeflow::server::{is_busy, serve, Client, ServerHandle, WireRecord};
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn base_config() -> MergeflowConfig {
+    MergeflowConfig {
+        workers: 2,
+        threads_per_job: 2,
+        queue_capacity: 256,
+        max_batch: 8,
+        batch_timeout_us: 100,
+        backend: Backend::Native,
+        segmented: false,
+        segment_len: 0,
+        kway_segment_elems: 0,
+        cache_bytes: 0,
+        kway_flat_max_k: 64,
+        compact_sharding: false,
+        compact_shard_min_len: 0,
+        compact_chunk_len: 0,
+        compact_eager_min_len: 0,
+        memory_budget: 0,
+        inplace: InplaceMode::Auto,
+        artifacts_dir: "artifacts".into(),
+    }
+}
+
+/// Loopback TCP on a kernel-assigned port, lease disabled (the lease
+/// test opts in explicitly so slow CI cannot reap a healthy client).
+fn loopback() -> ServerConfig {
+    ServerConfig { listen: "127.0.0.1:0".into(), lease_ms: 0, ..Default::default() }
+}
+
+fn start<R: WireRecord>(
+    cfg: MergeflowConfig,
+    scfg: ServerConfig,
+) -> (Arc<MergeService<R>>, ServerHandle) {
+    let svc = Arc::new(MergeService::start(cfg).expect("service start"));
+    let server = serve(Arc::clone(&svc), scfg).expect("server start");
+    (svc, server)
+}
+
+fn sorted_oracle(runs: &[Vec<i32>]) -> Vec<i32> {
+    let mut v: Vec<i32> = runs.iter().flatten().copied().collect();
+    v.sort_unstable();
+    v
+}
+
+fn wait_for(what: &str, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Dial raw TCP and complete the `HELLO` handshake by hand — the
+/// fault-injection path that lets a test write arbitrary bytes where
+/// [`Client`] would only ever write well-formed frames.
+fn raw_hello(addr: &str, tenant: &str) -> TcpStream {
+    let mut s = TcpStream::connect(addr).expect("raw dial");
+    let mut hello = Vec::new();
+    frame::put_varint(&mut hello, PROTOCOL_VERSION);
+    frame::put_varint(&mut hello, u64::from(<i32 as WireRecord>::WIRE_ID));
+    hello.extend_from_slice(tenant.as_bytes());
+    frame::write_frame(&mut s, tag::HELLO, &hello).unwrap();
+    let (t, _) = read_reply(&mut s);
+    assert_eq!(t, tag::HELLO_OK);
+    s
+}
+
+fn read_reply(s: &mut TcpStream) -> (u8, Vec<u8>) {
+    frame::read_frame(s, 1 << 20, &ReadOpts::default()).expect("reply frame")
+}
+
+// ---------------------------------------------------------------------
+// Conformance: every verb × every workload kind × oracle.
+// ---------------------------------------------------------------------
+
+#[test]
+fn every_verb_matches_the_in_process_oracle() {
+    let (svc, server) = start::<i32>(base_config(), loopback());
+    let mut client = Client::<i32>::connect(server.local_addr(), "conformance").unwrap();
+    client.ping().unwrap();
+
+    for (w, kind) in WorkloadKind::all().into_iter().enumerate() {
+        let seed = 0xC0DE + w as u64;
+
+        // MERGE against the same service's in-process submission.
+        let (a, b) = gen_sorted_pair(kind, 3_000, 2_000, seed);
+        let oracle = svc
+            .submit_blocking(JobKind::Merge { a: a.clone(), b: b.clone() })
+            .unwrap();
+        let (backend, out) = client.merge(&a, &b).unwrap();
+        assert_eq!(out, oracle.output, "{kind:?} merge output");
+        assert_eq!(backend, oracle.backend, "{kind:?} merge backend");
+
+        // SORT.
+        let data = gen_unsorted(4_000, seed);
+        let oracle = svc
+            .submit_blocking(JobKind::Sort { data: data.clone() })
+            .unwrap();
+        let (backend, out) = client.sort(&data).unwrap();
+        assert_eq!(out, oracle.output, "{kind:?} sort output");
+        assert_eq!(backend, oracle.backend, "{kind:?} sort backend");
+
+        // COMPACT.
+        let runs = gen_sorted_runs(kind, 5, 800, seed);
+        let oracle = svc
+            .submit_blocking(JobKind::Compact { runs: runs.clone() })
+            .unwrap();
+        let (backend, out) = client.compact(&runs).unwrap();
+        assert_eq!(out, oracle.output, "{kind:?} compact output");
+        assert_eq!(backend, oracle.backend, "{kind:?} compact backend");
+
+        // OPEN / FEED / SEAL_RUN / SEAL: the chunked streaming protocol
+        // must reproduce the one-shot output bit for bit.
+        let sid = client.open(runs.len()).unwrap();
+        for (r, run) in runs.iter().enumerate() {
+            for chunk in run.chunks(257) {
+                client.feed(sid, r, chunk).unwrap();
+            }
+            client.seal_run(sid, r).unwrap();
+        }
+        let (_, streamed) = client.seal(sid).unwrap();
+        assert_eq!(streamed, oracle.output, "{kind:?} streamed session output");
+    }
+
+    let stats = client.stats().unwrap();
+    assert!(stats.contains("jobs:"), "{stats}");
+    assert!(stats.contains("tenant conformance:"), "{stats}");
+    server.shutdown();
+}
+
+#[test]
+fn hello_refuses_a_mismatched_record_type() {
+    let (_svc, server) = start::<i32>(base_config(), loopback());
+    let verdict = Client::<u64>::connect(server.local_addr(), "imposter").unwrap_err();
+    assert!(
+        verdict.to_string().contains("code 5"),
+        "expected the UNSUPPORTED verdict, got: {verdict}"
+    );
+    // The refusal is per-connection: a properly-typed client is served.
+    let mut ok = Client::<i32>::connect(server.local_addr(), "fine").unwrap();
+    ok.ping().unwrap();
+    server.shutdown();
+}
+
+#[cfg(unix)]
+#[test]
+fn typed_records_stream_over_a_unix_socket() {
+    let path = std::env::temp_dir()
+        .join(format!("mergeflow-wire-{}.sock", std::process::id()));
+    let scfg = ServerConfig {
+        listen: format!("unix:{}", path.display()),
+        lease_ms: 0,
+        ..Default::default()
+    };
+    let (svc, server) = start::<(u64, u64)>(base_config(), scfg);
+    assert!(server.local_addr().starts_with("unix:"), "{}", server.local_addr());
+    let mut client =
+        Client::<(u64, u64)>::connect(server.local_addr(), "typed").unwrap();
+
+    let k = 4usize;
+    let run_len = 1_200usize;
+    let runs: Vec<Vec<(u64, u64)>> = (0..k)
+        .map(|run| {
+            let (keys, _) =
+                gen_sorted_pair(WorkloadKind::Skewed, run_len, 1, 40 + run as u64);
+            keys.into_iter()
+                .enumerate()
+                .map(|(off, key)| {
+                    let key = (i64::from(key) - i64::from(i32::MIN)) as u64;
+                    (key, ((run as u64) << 32) | off as u64)
+                })
+                .collect()
+        })
+        .collect();
+    // Stable oracle: flatten in run order, stable-sort by key — ties
+    // must come out in run-index-then-offset order on the wire too.
+    let mut expected: Vec<(u64, u64)> = runs.iter().flatten().copied().collect();
+    expected.sort_by_key(|r| r.0);
+
+    let oracle = svc
+        .submit_blocking(JobKind::Compact { runs: runs.clone() })
+        .unwrap();
+    let (_, compacted) = client.compact(&runs).unwrap();
+    assert_eq!(compacted, oracle.output, "typed wire compaction vs oracle");
+    assert_eq!(compacted, expected, "typed wire compaction must keep stable ties");
+
+    // The session verbs carry typed records too.
+    let sid = client.open(k).unwrap();
+    for (r, run) in runs.iter().enumerate() {
+        for chunk in run.chunks(333) {
+            client.feed(sid, r, chunk).unwrap();
+        }
+        client.seal_run(sid, r).unwrap();
+    }
+    let (_, streamed) = client.seal(sid).unwrap();
+    assert_eq!(streamed, expected, "typed streamed session output");
+    server.shutdown();
+}
+
+#[test]
+fn interleaved_sessions_share_one_connection() {
+    let (_svc, server) = start::<i32>(base_config(), loopback());
+    let mut client = Client::<i32>::connect(server.local_addr(), "weaver").unwrap();
+    let runs_a = gen_sorted_runs(WorkloadKind::Skewed, 2, 1_500, 11);
+    let runs_b = gen_sorted_runs(WorkloadKind::Interleaved, 3, 900, 12);
+    let sa = client.open(runs_a.len()).unwrap();
+    let sb = client.open(runs_b.len()).unwrap();
+    assert_ne!(sa, sb);
+
+    let chunks = |runs: &[Vec<i32>]| -> Vec<(usize, Vec<i32>)> {
+        let mut v = Vec::new();
+        for (r, run) in runs.iter().enumerate() {
+            for chunk in run.chunks(301) {
+                v.push((r, chunk.to_vec()));
+            }
+        }
+        v
+    };
+    let qa = chunks(&runs_a);
+    let qb = chunks(&runs_b);
+    // Strictly alternating feeds between the two open sessions.
+    let (mut ia, mut ib) = (0usize, 0usize);
+    while ia < qa.len() || ib < qb.len() {
+        if ia < qa.len() {
+            let (r, chunk) = &qa[ia];
+            client.feed(sa, *r, chunk).unwrap();
+            ia += 1;
+        }
+        if ib < qb.len() {
+            let (r, chunk) = &qb[ib];
+            client.feed(sb, *r, chunk).unwrap();
+            ib += 1;
+        }
+    }
+    for r in 0..runs_a.len() {
+        client.seal_run(sa, r).unwrap();
+    }
+    for r in 0..runs_b.len() {
+        client.seal_run(sb, r).unwrap();
+    }
+    // Seal in the reverse order of opening: the map is id-addressed.
+    let (_, out_b) = client.seal(sb).unwrap();
+    let (_, out_a) = client.seal(sa).unwrap();
+    assert_eq!(out_a, sorted_oracle(&runs_a), "session A interleaved");
+    assert_eq!(out_b, sorted_oracle(&runs_b), "session B interleaved");
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Fault injection: dead clients must be reaped, not leak admission.
+// ---------------------------------------------------------------------
+
+#[test]
+fn a_dropped_client_is_reaped_and_its_quota_drained() {
+    let (svc, server) = start::<i32>(base_config(), loopback());
+    {
+        let mut victim = Client::<i32>::connect(server.local_addr(), "victim").unwrap();
+        let sid = victim.open(2).unwrap();
+        let (chunk, _) = gen_sorted_pair(WorkloadKind::Uniform, 1_000, 1, 77);
+        victim.feed(sid, 0, &chunk).unwrap();
+        assert!(svc.stats().resident_bytes.get() > 0, "ingest is resident");
+        // Dropped here: no SEAL, no goodbye — the socket just closes.
+    }
+    wait_for("reap after client drop", || svc.stats().sessions_reaped.get() >= 1);
+    wait_for("resident bytes drained", || svc.stats().resident_bytes.get() == 0);
+    let stats = svc.stats();
+    assert_eq!(
+        stats.submitted.get(),
+        stats.completed.get() + stats.rejected.get(),
+        "an abandoned session never enters the job ledger"
+    );
+
+    // The server keeps serving after the reap.
+    let mut next = Client::<i32>::connect(server.local_addr(), "survivor").unwrap();
+    let (a, b) = gen_sorted_pair(WorkloadKind::Uniform, 500, 500, 78);
+    let (_, out) = next.merge(&a, &b).unwrap();
+    assert_eq!(out.len(), 1_000);
+    let text = next.stats().unwrap();
+    assert!(text.contains("tenant victim:"), "{text}");
+    server.shutdown();
+}
+
+#[test]
+fn half_written_frame_gets_a_typed_error_and_the_session_reaped() {
+    let (svc, server) = start::<i32>(base_config(), loopback());
+    let mut s = raw_hello(server.local_addr(), "raw");
+
+    // OPEN a 1-run session by hand.
+    let mut p = Vec::new();
+    frame::put_varint(&mut p, 1);
+    frame::write_frame(&mut s, tag::OPEN, &p).unwrap();
+    let (t, reply) = read_reply(&mut s);
+    assert_eq!(t, tag::OPENED);
+    let sid = Cursor::new(&reply).get_varint().unwrap();
+
+    // One good FEED...
+    let mut p = Vec::new();
+    frame::put_varint(&mut p, sid);
+    frame::put_varint(&mut p, 0);
+    frame::put_records(&mut p, &[1i32, 2, 3]);
+    frame::write_frame(&mut s, tag::FEED, &p).unwrap();
+    let (t, _) = read_reply(&mut s);
+    assert_eq!(t, tag::OK);
+
+    // ...then a frame that declares 64 payload bytes, delivers 3, and
+    // hangs up its write half mid-frame.
+    let mut partial = vec![tag::FEED];
+    frame::put_varint(&mut partial, 64);
+    partial.extend_from_slice(&[9, 9, 9]);
+    s.write_all(&partial).unwrap();
+    s.shutdown(std::net::Shutdown::Write).unwrap();
+
+    let (t, payload) = read_reply(&mut s);
+    assert_eq!(t, tag::ERR, "typed error frame, not a silent hangup");
+    assert_eq!(payload[0], err::PROTOCOL);
+    assert!(
+        matches!(
+            frame::read_frame(&mut s, 1 << 20, &ReadOpts::default()),
+            Err(FrameError::Closed) | Err(FrameError::Eof)
+        ),
+        "the connection closes after a desynchronized stream"
+    );
+
+    wait_for("reap after mid-frame hangup", || {
+        svc.stats().sessions_reaped.get() >= 1
+    });
+    wait_for("resident bytes drained", || svc.stats().resident_bytes.get() == 0);
+    let stats = svc.stats();
+    assert_eq!(stats.submitted.get(), stats.completed.get() + stats.rejected.get());
+    server.shutdown();
+}
+
+#[test]
+fn lease_expiry_reaps_a_silent_client() {
+    let scfg = ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        lease_ms: 500,
+        ..Default::default()
+    };
+    let (svc, server) = start::<i32>(base_config(), scfg);
+    let mut client = Client::<i32>::connect(server.local_addr(), "sleepy").unwrap();
+    let sid = client.open(1).unwrap();
+    client.feed(sid, 0, &[1, 2, 3]).unwrap();
+
+    // Heartbeats (any frame — PING is the idiom) hold the lease...
+    for _ in 0..3 {
+        std::thread::sleep(Duration::from_millis(100));
+        client.ping().unwrap();
+    }
+    assert_eq!(svc.stats().sessions_reaped.get(), 0, "heartbeats hold the lease");
+
+    // ...then silence past serve.lease_ms gets the connection reaped.
+    wait_for("lease reap", || svc.stats().sessions_reaped.get() >= 1);
+    wait_for("resident bytes drained", || svc.stats().resident_bytes.get() == 0);
+    assert!(client.ping().is_err(), "the leased-out connection is dead");
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Decoder robustness: malformed frames get typed errors, never panics.
+// ---------------------------------------------------------------------
+
+#[test]
+fn malformed_frame_corpus_gets_typed_errors_and_never_kills_the_server() {
+    struct Case {
+        name: &'static str,
+        bytes: Vec<u8>,
+        hangup: bool,
+        code: u8,
+        msg_contains: &'static str,
+        closes: bool,
+    }
+    let frame_of = |t: u8, payload: &[u8]| {
+        let mut v = Vec::new();
+        frame::write_frame(&mut v, t, payload).unwrap();
+        v
+    };
+
+    // A length varint that cannot terminate within u64.
+    let mut overflow = vec![tag::MERGE];
+    overflow.extend_from_slice(&[0xff; 11]);
+    // A header declaring a terabyte payload (server cap is 64 MiB):
+    // must be refused before any allocation or payload read.
+    let mut oversized = vec![tag::FEED];
+    frame::put_varint(&mut oversized, 1 << 40);
+    // A FEED whose record count overruns the bytes actually present.
+    let mut overrun = Vec::new();
+    frame::put_varint(&mut overrun, 1); // session id
+    frame::put_varint(&mut overrun, 0); // run
+    frame::put_varint(&mut overrun, 1_000); // declares 1000 records...
+    overrun.extend_from_slice(&[0, 0, 0, 0]); // ...delivers 4 bytes
+    // A well-formed second HELLO after the handshake.
+    let mut hello_again = Vec::new();
+    frame::put_varint(&mut hello_again, PROTOCOL_VERSION);
+    frame::put_varint(&mut hello_again, u64::from(<i32 as WireRecord>::WIRE_ID));
+
+    let cases = vec![
+        Case {
+            name: "truncated header",
+            bytes: vec![tag::MERGE],
+            hangup: true,
+            code: err::PROTOCOL,
+            msg_contains: "mid-frame",
+            closes: true,
+        },
+        Case {
+            name: "length varint overflow",
+            bytes: overflow,
+            hangup: false,
+            code: err::PROTOCOL,
+            msg_contains: "varint",
+            closes: true,
+        },
+        Case {
+            name: "oversized declared payload",
+            bytes: oversized,
+            hangup: false,
+            code: err::PROTOCOL,
+            msg_contains: "serve.max_frame_bytes",
+            closes: true,
+        },
+        Case {
+            name: "unknown verb",
+            bytes: frame_of(0x5f, &[]),
+            hangup: false,
+            code: err::UNKNOWN_VERB,
+            msg_contains: "unknown verb",
+            closes: false,
+        },
+        Case {
+            name: "record count overruns payload",
+            bytes: frame_of(tag::FEED, &overrun),
+            hangup: false,
+            code: err::PROTOCOL,
+            msg_contains: "record count",
+            closes: false,
+        },
+        Case {
+            name: "second HELLO",
+            bytes: frame_of(tag::HELLO, &hello_again),
+            hangup: false,
+            code: err::STATE,
+            msg_contains: "HELLO",
+            closes: false,
+        },
+    ];
+
+    let (_svc, server) = start::<i32>(base_config(), loopback());
+    for case in cases {
+        let mut s = raw_hello(server.local_addr(), "fuzzer");
+        s.write_all(&case.bytes).unwrap();
+        if case.hangup {
+            s.shutdown(std::net::Shutdown::Write).unwrap();
+        }
+        let (t, payload) = read_reply(&mut s);
+        assert_eq!(t, tag::ERR, "{}: expected a typed error frame", case.name);
+        assert_eq!(payload[0], case.code, "{}: error code", case.name);
+        let msg = String::from_utf8_lossy(&payload[1..]);
+        assert!(
+            msg.contains(case.msg_contains),
+            "{}: message {msg:?} should mention {:?}",
+            case.name,
+            case.msg_contains
+        );
+        if case.closes {
+            assert!(
+                matches!(
+                    frame::read_frame(&mut s, 1 << 20, &ReadOpts::default()),
+                    Err(FrameError::Closed) | Err(FrameError::Eof)
+                ),
+                "{}: connection must close after a desync",
+                case.name
+            );
+        } else {
+            // Payload-level failure: the stream is still at a frame
+            // boundary, so the connection keeps serving.
+            frame::write_frame(&mut s, tag::PING, &[]).unwrap();
+            let (t, _) = read_reply(&mut s);
+            assert_eq!(t, tag::PONG, "{}: connection must keep serving", case.name);
+        }
+    }
+
+    // A well-typed client is still served after the whole corpus.
+    let mut ok = Client::<i32>::connect(server.local_addr(), "after").unwrap();
+    ok.ping().unwrap();
+    server.shutdown();
+}
+
+#[test]
+fn an_unsorted_chunk_is_rejected_and_the_session_stays_usable() {
+    let (_svc, server) = start::<i32>(base_config(), loopback());
+    let mut client = Client::<i32>::connect(server.local_addr(), "bumpy").unwrap();
+    let sid = client.open(1).unwrap();
+    let verdict = client.feed(sid, 0, &[5, 3, 4]).unwrap_err();
+    assert!(
+        matches!(verdict, mergeflow::Error::InvalidInput(_)),
+        "typed invalid-input, got: {verdict}"
+    );
+    // The rejection admitted nothing; the same run continues cleanly.
+    client.feed(sid, 0, &[1, 2, 3]).unwrap();
+    client.feed(sid, 0, &[4, 5]).unwrap();
+    client.seal_run(sid, 0).unwrap();
+    let (_, out) = client.seal(sid).unwrap();
+    assert_eq!(out, vec![1, 2, 3, 4, 5]);
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Multi-tenant admission under concurrency (the acceptance scenario).
+// ---------------------------------------------------------------------
+
+#[test]
+fn multi_tenant_quotas_busy_verdicts_and_a_mid_stream_kill() {
+    let scfg = ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        tenant_quota_bytes: 64 << 10, // 64 KiB in flight per tenant
+        lease_ms: 0,
+        ..Default::default()
+    };
+    let (svc, server) = start::<i32>(base_config(), scfg);
+    let addr = server.local_addr().to_string();
+
+    // Four well-behaved tenants stream concurrent sessions, each well
+    // under its own quota (3 × 2000 × 4 B = 24 KiB in flight).
+    let workers: Vec<_> = (0..4)
+        .map(|i| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut c =
+                    Client::<i32>::connect(&addr, &format!("tenant-{i}")).unwrap();
+                let runs =
+                    gen_sorted_runs(WorkloadKind::Uniform, 3, 2_000, 0xBEEF + i as u64);
+                let sid = c.open(runs.len()).unwrap();
+                for (r, run) in runs.iter().enumerate() {
+                    for chunk in run.chunks(500) {
+                        c.feed(sid, r, chunk).unwrap();
+                    }
+                    c.seal_run(sid, r).unwrap();
+                }
+                let (_, out) = c.seal(sid).unwrap();
+                let mut expected: Vec<i32> = runs.iter().flatten().copied().collect();
+                expected.sort_unstable();
+                assert_eq!(out, expected, "tenant-{i} output under concurrency");
+            })
+        })
+        .collect();
+
+    // A fifth client is killed mid-stream while the others are running.
+    {
+        let mut casualty = Client::<i32>::connect(&addr, "casualty").unwrap();
+        let sid = casualty.open(1).unwrap();
+        let (chunk, _) = gen_sorted_pair(WorkloadKind::Uniform, 2_000, 1, 7);
+        casualty.feed(sid, 0, &chunk).unwrap();
+        // Dropped without sealing.
+    }
+
+    // A hog blows straight through its quota with one 160 KiB one-shot:
+    // the verdict is a fail-fast BUSY, not a hang — and nothing stays
+    // charged, so a quota-sized retry is admitted immediately.
+    let mut hog = Client::<i32>::connect(&addr, "hog").unwrap();
+    let (a, b) = gen_sorted_pair(WorkloadKind::Uniform, 20_000, 20_000, 8);
+    let started = Instant::now();
+    let verdict = hog.merge(&a, &b).unwrap_err();
+    assert!(is_busy(&verdict), "expected a BUSY verdict, got: {verdict}");
+    assert!(started.elapsed() < Duration::from_secs(5), "BUSY must be fail-fast");
+    let (sa, sb) = gen_sorted_pair(WorkloadKind::Uniform, 1_000, 1_000, 9);
+    let (_, small) = hog.merge(&sa, &sb).unwrap();
+    assert_eq!(small.len(), 2_000, "the quota-sized retry is admitted");
+
+    for w in workers {
+        w.join().expect("tenant thread");
+    }
+    wait_for("casualty reaped", || svc.stats().sessions_reaped.get() >= 1);
+    wait_for("quiescent resident bytes", || svc.stats().resident_bytes.get() == 0);
+    let stats = svc.stats();
+    assert!(stats.busy_rejections.get() >= 1, "the hog's verdict is counted");
+    assert_eq!(
+        stats.submitted.get(),
+        stats.completed.get() + stats.rejected.get(),
+        "BUSY verdicts and reaped sessions never enter the job ledger"
+    );
+
+    let text = hog.stats().unwrap();
+    assert!(text.contains("tenant hog:"), "{text}");
+    assert!(text.contains("tenant tenant-0:"), "{text}");
+    assert!(text.contains("tenant casualty:"), "{text}");
+    server.shutdown();
+}
