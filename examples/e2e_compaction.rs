@@ -14,7 +14,7 @@
 //! Run: `cargo run --release --example e2e_compaction`
 
 use mergeflow::bench::workload::{gen_sorted_pair, WorkloadKind};
-use mergeflow::config::{Backend, InplaceMode, MergeflowConfig, ServerConfig};
+use mergeflow::config::{Backend, InplaceMode, MergeKernel, MergeflowConfig, ServerConfig};
 use mergeflow::coordinator::{JobKind, MergeService};
 use mergeflow::metrics::{fmt_ns, fmt_throughput, Timer};
 use mergeflow::rng::Xoshiro256;
@@ -48,6 +48,7 @@ fn main() {
         compact_eager_min_len: 64 << 10,  // eager-merge once 64K ranks settle
         memory_budget: 0,                 // unbudgeted: the demo keeps every route open
         inplace: InplaceMode::Auto,
+        kernel: MergeKernel::Auto,
         artifacts_dir: "artifacts".into(),
     };
     println!("config: {cfg:?}");
@@ -238,6 +239,7 @@ fn main() {
             compact_eager_min_len: 0,
             memory_budget: 0,
             inplace: InplaceMode::Auto,
+            kernel: MergeKernel::Auto,
             artifacts_dir: "artifacts".into(),
         };
         let typed = MergeService::<(u64, u64)>::start(typed_cfg).expect("typed service");
@@ -298,6 +300,7 @@ fn main() {
             compact_eager_min_len: 16 << 10,
             memory_budget: 0,
             inplace: InplaceMode::Auto,
+            kernel: MergeKernel::Auto,
             artifacts_dir: "artifacts".into(),
         };
         let wire_svc = std::sync::Arc::new(

@@ -1,0 +1,95 @@
+//! Leaf-kernel microbench: scalar vs branchless vs hybrid vs SIMD
+//! bounded merges, across workload shapes, run lengths and duplicate
+//! densities. Every timed configuration is first cross-checked
+//! bit-for-bit against the two-finger `merge_into` oracle, so a
+//! miscompiled or misdispatched kernel fails loudly instead of
+//! producing fast garbage.
+//!
+//! The SIMD rows only appear with `--features simd` on a CPU with
+//! SSE4.2 (otherwise `MergeKernel::Simd` resolves to branchless and is
+//! reported under that name — the degradation itself is visible in the
+//! kernel column).
+use mergeflow::bench::harness::{report_line, BenchTimer};
+use mergeflow::bench::workload::{gen_sorted_pair, WorkloadKind};
+use mergeflow::mergepath::merge::merge_into;
+use mergeflow::mergepath::{LeafKernel, MergeKernel};
+use mergeflow::rng::Xoshiro256;
+
+const REQUESTS: [MergeKernel; 4] = [
+    MergeKernel::Scalar,
+    MergeKernel::Branchless,
+    MergeKernel::Hybrid,
+    MergeKernel::Simd,
+];
+
+/// Run all four kernels over one `(a, b)` pair, verifying each against
+/// the oracle before timing it.
+fn sweep_i32(timer: &BenchTimer, a: &[i32], b: &[i32], label: &str) {
+    let n = a.len() + b.len();
+    let mut expected = vec![0i32; n];
+    merge_into(a, b, &mut expected);
+    let mut out = vec![0i32; n];
+    for req in REQUESTS {
+        let kernel = LeafKernel::<i32>::select(req);
+        kernel.merge(a, b, &mut out, n);
+        assert_eq!(out, expected, "kernel {} diverged on {label}", kernel.kind().name());
+        let m = timer.measure(|| kernel.merge(a, b, &mut out, n));
+        println!(
+            "{}",
+            report_line(&format!("{label} {}", kernel.kind().name()), &m, n as u64)
+        );
+    }
+}
+
+fn sweep_u64(timer: &BenchTimer, a: &[u64], b: &[u64], label: &str) {
+    let n = a.len() + b.len();
+    let mut expected = vec![0u64; n];
+    merge_into(a, b, &mut expected);
+    let mut out = vec![0u64; n];
+    for req in REQUESTS {
+        let kernel = LeafKernel::<u64>::select(req);
+        kernel.merge(a, b, &mut out, n);
+        assert_eq!(out, expected, "kernel {} diverged on {label}", kernel.kind().name());
+        let m = timer.measure(|| kernel.merge(a, b, &mut out, n));
+        println!(
+            "{}",
+            report_line(&format!("{label} {}", kernel.kind().name()), &m, n as u64)
+        );
+    }
+}
+
+/// Sorted run of `len` keys drawn from `universe` distinct values —
+/// `universe` is the duplicate-density dial (smaller = denser ties).
+fn dup_run(rng: &mut Xoshiro256, len: usize, universe: u64) -> Vec<u64> {
+    let mut v: Vec<u64> = (0..len).map(|_| rng.below(universe)).collect();
+    v.sort_unstable();
+    v
+}
+
+fn main() {
+    let n = std::env::var("MERGEFLOW_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1usize << 20);
+    let timer = BenchTimer::default();
+
+    println!("--- workload shapes (i32, |A|=|B|={}) ---", n / 2);
+    for kind in WorkloadKind::all() {
+        let (a, b) = gen_sorted_pair(kind, n / 2, n / 2, 42);
+        sweep_i32(&timer, &a, &b, kind.name());
+    }
+
+    println!("\n--- run lengths (i32 uniform) ---");
+    for len in [1usize << 10, 1 << 14, 1 << 18, 1 << 22] {
+        let (a, b) = gen_sorted_pair(WorkloadKind::Uniform, len / 2, len / 2, 7);
+        sweep_i32(&timer, &a, &b, &format!("n={len}"));
+    }
+
+    println!("\n--- duplicate density (u64, |A|=|B|={}) ---", n / 2);
+    let mut rng = Xoshiro256::seeded(0xD0_D0);
+    for universe in [4u64, 64, 4096, 1 << 40] {
+        let a = dup_run(&mut rng, n / 2, universe);
+        let b = dup_run(&mut rng, n / 2, universe);
+        sweep_u64(&timer, &a, &b, &format!("dups~1/{universe}"));
+    }
+}

@@ -19,7 +19,7 @@
 
 use mergeflow::bench::harness::{report_line, BenchTimer};
 use mergeflow::bench::workload::{gen_sorted_runs, WorkloadKind};
-use mergeflow::config::{Backend, InplaceMode, MergeflowConfig};
+use mergeflow::config::{Backend, InplaceMode, MergeKernel, MergeflowConfig};
 use mergeflow::coordinator::{JobKind, MergeService};
 
 /// `min_len == 0` builds the unsharded (flat-engine) baseline — the
@@ -51,6 +51,7 @@ fn service(compact_shard_min_len: usize) -> MergeService {
         // No budget / no in-place: the allocating kernels are the baseline.
         memory_budget: 0,
         inplace: InplaceMode::Never,
+        kernel: MergeKernel::Auto,
         artifacts_dir: "artifacts".into(),
     };
     MergeService::start(cfg).expect("service start")

@@ -9,6 +9,7 @@
 //! mergeflow table   table1|table1b|table2 [--scale S]
 //! mergeflow probe   [--scale S]
 //! mergeflow artifacts [--dir artifacts]
+//! mergeflow kernels
 //! ```
 
 use crate::{Error, Result};
@@ -110,6 +111,7 @@ USAGE:
   mergeflow table   <table1|table1b|table2> [--scale S]
   mergeflow probe   [--scale S]
   mergeflow artifacts [--dir DIR]
+  mergeflow kernels
   mergeflow help
 
 SIZE accepts binary suffixes: 64K, 1M, 10M (1M = 2^20 elements).

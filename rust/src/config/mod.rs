@@ -108,6 +108,8 @@ fn unquote(v: &str) -> &str {
         .unwrap_or(v)
 }
 
+pub use crate::mergepath::kernel::MergeKernel;
+
 /// Backend used to execute merge jobs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Backend {
@@ -281,6 +283,13 @@ pub struct MergeflowConfig {
     /// [`InplaceMode`]. Parsed from `merge.inplace` =
     /// `"auto"`/`"always"`/`"never"`.
     pub inplace: InplaceMode,
+    /// Leaf merge kernel used under every pairwise leaf (per-segment
+    /// merges, window merges, the sort's merge tree, two-run
+    /// compactions); see [`MergeKernel`]. Parsed from `merge.kernel` =
+    /// `"auto"`/`"scalar"`/`"branchless"`/`"hybrid"`/`"simd"`. When not
+    /// `auto`, completed jobs that ran the leaf kernel report a
+    /// `+<kernel>`-suffixed backend tag so the pin is visible in stats.
+    pub kernel: MergeKernel,
     /// Directory holding AOT artifacts.
     pub artifacts_dir: String,
 }
@@ -305,6 +314,7 @@ impl Default for MergeflowConfig {
             compact_eager_min_len: 1 << 20,
             memory_budget: 0,
             inplace: InplaceMode::Auto,
+            kernel: MergeKernel::Auto,
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -336,6 +346,7 @@ impl MergeflowConfig {
                 .get_usize("merge.compact_eager_min_len", d.compact_eager_min_len)?,
             memory_budget: raw.get_usize("merge.memory_budget", d.memory_budget)?,
             inplace: raw.get_str("merge.inplace", "auto").parse()?,
+            kernel: raw.get_str("merge.kernel", "auto").parse()?,
             artifacts_dir: raw.get_str("service.artifacts_dir", &d.artifacts_dir),
         };
         cfg.validate()?;
@@ -622,6 +633,7 @@ compact_chunk_len = 8192
 compact_eager_min_len = 16384
 memory_budget = 268435456
 inplace = "always"
+kernel = "branchless"
 
 [serve]
 listen = "unix:/tmp/mergeflow.sock"
@@ -651,6 +663,7 @@ max_frame_bytes = 65536
         assert_eq!(cfg.compact_eager_min_len, 16384);
         assert_eq!(cfg.memory_budget, 256 << 20);
         assert_eq!(cfg.inplace, InplaceMode::Always);
+        assert_eq!(cfg.kernel, MergeKernel::Branchless);
         assert_eq!(cfg.batch_timeout_us, 150);
     }
 
@@ -671,6 +684,7 @@ max_frame_bytes = 65536
         );
         assert_eq!(cfg.memory_budget, 0, "budget defaults to unlimited");
         assert_eq!(cfg.inplace, InplaceMode::Auto);
+        assert_eq!(cfg.kernel, MergeKernel::Auto);
     }
 
     #[test]
@@ -709,6 +723,8 @@ max_frame_bytes = 65536
         let raw = RawConfig::parse("[service]\nbackend = \"gpu\"\n").unwrap();
         assert!(MergeflowConfig::from_raw(&raw).is_err());
         let raw = RawConfig::parse("[merge]\ninplace = \"sometimes\"\n").unwrap();
+        assert!(MergeflowConfig::from_raw(&raw).is_err());
+        let raw = RawConfig::parse("[merge]\nkernel = \"avx512\"\n").unwrap();
         assert!(MergeflowConfig::from_raw(&raw).is_err());
     }
 

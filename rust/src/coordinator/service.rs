@@ -30,10 +30,12 @@ use super::shard;
 use super::stats::ServiceStats;
 use crate::config::{Backend, MergeflowConfig};
 use crate::exec::WorkerPool;
+use crate::mergepath::kernel::{tagged_backend, KernelKind, LeafKernel, MergeKernel};
 use crate::mergepath::{
-    concat_for_inplace, parallel_inplace_merge_with_pool, parallel_kway_merge,
-    parallel_merge_sort_with_pool, parallel_merge_with_pool, segmented_kway_merge,
-    segmented_parallel_merge_with_pool, KwaySegmentedConfig, SegmentedConfig,
+    concat_for_inplace, parallel_inplace_merge_with_pool, parallel_kway_merge_with,
+    parallel_merge_sort_with_pool_kernel, parallel_merge_with_pool_kernel,
+    segmented_kway_merge_with, segmented_parallel_merge_with_pool_kernel,
+    KwaySegmentedConfig, SegmentedConfig,
 };
 use crate::record::{self, ByKey, Record};
 use crate::runtime::XlaExecutor;
@@ -616,21 +618,24 @@ fn execute_job<R: Record>(
     let t0 = Instant::now();
     let elements = job.kind.input_len() as u64;
     let (output, backend) = match job.kind {
-        JobKind::Merge { a, b } => run_merge(cfg, runtime, a, b, pool),
+        JobKind::Merge { a, b } => run_merge(cfg, runtime, stats, a, b, pool),
         JobKind::Sort { mut data } => {
             // Sorts run on the persistent pool like the compaction
             // engines (we are already on one of its workers; the
             // helping scoped wait makes the nested fork-join sound) —
             // no scoped-thread spawning anywhere in execute_job. The
             // key-only ordering keeps the sort stable for records.
-            parallel_merge_sort_with_pool(
+            let kernel = LeafKernel::<ByKey<R>>::select(cfg.kernel);
+            parallel_merge_sort_with_pool_kernel(
                 pool,
                 record::as_keyed_mut(&mut data),
                 cfg.threads_per_job,
+                kernel,
             );
-            (data, "native")
+            stats.record_kernel(kernel.kind());
+            (data, kernel_tag(cfg, "native", kernel.kind()))
         }
-        JobKind::Compact { runs } => run_compaction(cfg, runs, pool),
+        JobKind::Compact { runs } => run_compaction(cfg, stats, runs, pool),
         JobKind::CompactShard { shard: task } => {
             // Shards reply through the group (only the last one sends);
             // per-shard and parent-completion accounting live in
@@ -672,6 +677,7 @@ fn execute_job<R: Record>(
 fn run_merge<R: Record>(
     cfg: &MergeflowConfig,
     runtime: Option<&XlaExecutor>,
+    stats: &ServiceStats,
     a: Vec<R>,
     b: Vec<R>,
     pool: &WorkerPool,
@@ -729,19 +735,40 @@ fn run_merge<R: Record>(
     // Fully tiled by the merge below (see crate::uninit_vec).
     let mut out: Vec<ByKey<R>> = crate::uninit_vec(a.len() + b.len());
     let (ka, kb) = (record::as_keyed(&a), record::as_keyed(&b));
+    let kernel = LeafKernel::<ByKey<R>>::select(cfg.kernel);
     let seg = cfg.effective_segment_len(std::mem::size_of::<R>());
     if seg > 0 && out.len() >= 2 * seg {
-        segmented_parallel_merge_with_pool(
+        segmented_parallel_merge_with_pool_kernel(
             pool,
             ka,
             kb,
             &mut out,
             SegmentedConfig { segment_len: seg, threads: cfg.threads_per_job },
+            kernel,
         );
-        (record::into_records(out), "native-segmented")
+        stats.record_kernel(kernel.kind());
+        (record::into_records(out), kernel_tag(cfg, "native-segmented", kernel.kind()))
     } else {
-        parallel_merge_with_pool(pool, ka, kb, &mut out, cfg.threads_per_job);
-        (record::into_records(out), "native")
+        parallel_merge_with_pool_kernel(pool, ka, kb, &mut out, cfg.threads_per_job, kernel);
+        stats.record_kernel(kernel.kind());
+        (record::into_records(out), kernel_tag(cfg, "native", kernel.kind()))
+    }
+}
+
+/// Backend tag for a kernel-dispatched route: the plain base tag under
+/// the default `merge.kernel = auto` (so existing exact-tag consumers
+/// see no change), or `base+<kernel>` when a kernel was forced via the
+/// knob. [`ServiceStats::record_completion`] strips the suffix again,
+/// so per-backend counters stay comparable across kernel settings.
+fn kernel_tag(
+    cfg: &MergeflowConfig,
+    base: &'static str,
+    kind: KernelKind,
+) -> &'static str {
+    if cfg.kernel == MergeKernel::Auto {
+        base
+    } else {
+        tagged_backend(base, kind)
     }
 }
 
@@ -778,6 +805,7 @@ fn run_merge<R: Record>(
 /// stable for records exactly as for scalars.
 fn run_compaction<R: Record>(
     cfg: &MergeflowConfig,
+    stats: &ServiceStats,
     mut runs: Vec<Vec<R>>,
     pool: &WorkerPool,
 ) -> (Vec<R>, &'static str) {
@@ -809,13 +837,16 @@ fn run_compaction<R: Record>(
         );
         return (buf, "native-inplace");
     }
+    let kernel = LeafKernel::<ByKey<R>>::select(cfg.kernel);
     let refs: Vec<&[ByKey<R>]> = runs.iter().map(|r| record::as_keyed(r)).collect();
     if total < 4096 || cfg.threads_per_job == 1 {
         // Small compactions: one sequential k-way pass beats any
-        // parallel setup cost.
+        // parallel setup cost (two runs short-circuit to the pairwise
+        // leaf kernel inside `loser_tree_merge_with`).
         let mut out: Vec<ByKey<R>> = crate::uninit_vec(total);
-        crate::mergepath::kway::loser_tree_merge(&refs, &mut out);
-        return (record::into_records(out), "native");
+        crate::mergepath::kway::loser_tree_merge_with(&refs, &mut out, kernel);
+        stats.record_kernel(kernel.kind());
+        return (record::into_records(out), kernel_tag(cfg, "native", kernel.kind()));
     }
     if cfg.kway_flat_max_k > 0 && refs.len() <= cfg.kway_flat_max_k {
         // Flat engine's segments tile [0, total): every slot written.
@@ -828,31 +859,39 @@ fn run_compaction<R: Record>(
             // windows so the live windows stay cache-resident. The
             // scalar/typed tag split mirrors the flat route, so typed
             // traffic stays visible in per-job results here too.
-            segmented_kway_merge(
+            segmented_kway_merge_with(
                 &refs,
                 &mut out,
                 KwaySegmentedConfig { segment_elems: seg, threads: cfg.threads_per_job },
                 Some(pool),
+                kernel,
             );
             let tag = if R::IS_SCALAR {
                 "native-kway-segmented"
             } else {
                 "native-kway-segmented-typed"
             };
-            return (record::into_records(out), tag);
+            stats.record_kernel(kernel.kind());
+            return (record::into_records(out), kernel_tag(cfg, tag, kernel.kind()));
         }
-        parallel_kway_merge(&refs, &mut out, cfg.threads_per_job, Some(pool));
+        parallel_kway_merge_with(&refs, &mut out, cfg.threads_per_job, Some(pool), kernel);
         let tag = if R::IS_SCALAR { "native-kway" } else { "native-kway-typed" };
-        return (record::into_records(out), tag);
+        stats.record_kernel(kernel.kind());
+        return (record::into_records(out), kernel_tag(cfg, tag, kernel.kind()));
     }
     // The job owns `runs`, so hand them to the consuming tree variant:
     // it frees each run buffer as its first-round merge completes,
     // keeping peak memory lower than merging out of borrows.
     drop(refs);
     let keyed: Vec<Vec<ByKey<R>>> = runs.into_iter().map(record::into_keyed).collect();
-    let merged =
-        crate::mergepath::kway::parallel_tree_merge(keyed, cfg.threads_per_job, Some(pool));
-    (record::into_records(merged), "native")
+    let merged = crate::mergepath::kway::parallel_tree_merge_kernel(
+        keyed,
+        cfg.threads_per_job,
+        Some(pool),
+        kernel,
+    );
+    stats.record_kernel(kernel.kind());
+    (record::into_records(merged), kernel_tag(cfg, "native", kernel.kind()))
 }
 
 #[cfg(test)]
@@ -888,6 +927,7 @@ mod tests {
             // `inplace = Always` or an explicit budget.
             memory_budget: 0,
             inplace: InplaceMode::Auto,
+            kernel: MergeKernel::Auto,
             artifacts_dir: "artifacts".into(),
         }
     }

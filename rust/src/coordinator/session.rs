@@ -114,7 +114,8 @@ use super::queue::{BoundedQueue, PushError};
 use super::shard::{self, SharedOut};
 use super::stats::ServiceStats;
 use crate::config::MergeflowConfig;
-use crate::mergepath::kway::loser_tree_merge_segmented;
+use crate::mergepath::kernel::{LeafKernel, MergeKernel};
+use crate::mergepath::kway::loser_tree_merge_segmented_with;
 use crate::mergepath::kway_path::kway_rank_split;
 use crate::record::{self, ByKey, Record};
 use crate::{Error, Result};
@@ -191,6 +192,11 @@ pub struct StreamShard<R: Record = i32> {
     /// resolved at plan time from `merge.kway_segment_elems` (auto =
     /// `C/(k+1)`), mirroring the rank-sharded route.
     seg_elems: usize,
+    /// Requested leaf kernel (`merge.kernel`), resolved at execute
+    /// time so two-run shards hit the same pairwise leaf kernels as
+    /// the in-process engines. Install tasks are memcpy-only and carry
+    /// the inert `Auto`.
+    kernel: MergeKernel,
 }
 
 #[derive(Debug, Clone)]
@@ -425,7 +431,12 @@ pub(crate) fn execute_stream_shard<R: Record>(shard: StreamShard<R>, stats: &Ser
             let total: usize = parts.iter().map(|p| p.len()).sum();
             // Fully tiled by the loser-tree merge (see crate::uninit_vec).
             let mut out: Vec<ByKey<R>> = crate::uninit_vec(total);
-            loser_tree_merge_segmented(&parts, &mut out, shard.seg_elems);
+            loser_tree_merge_segmented_with(
+                &parts,
+                &mut out,
+                shard.seg_elems,
+                LeafKernel::select(shard.kernel),
+            );
             complete_eager(&shard.exec, shard.idx, record::into_records(out), stats);
         }
         ShardInput::Windowed { runs, ranges, out, window } => {
@@ -440,7 +451,12 @@ pub(crate) fn execute_stream_shard<R: Record>(shard: StreamShard<R>, stats: &Ser
             let dst = unsafe {
                 std::slice::from_raw_parts_mut(out.base().add(window.start), window.len())
             };
-            loser_tree_merge_segmented(&parts, record::as_keyed_mut(dst), shard.seg_elems);
+            loser_tree_merge_segmented_with(
+                &parts,
+                record::as_keyed_mut(dst),
+                shard.seg_elems,
+                LeafKernel::select(shard.kernel),
+            );
             complete_windowed(&shard.exec, stats);
         }
         ShardInput::Install { items, out } => {
@@ -803,6 +819,7 @@ fn maybe_plan_eager<R: Record>(
                     idx,
                     input: ShardInput::Owned(windows),
                     seg_elems,
+                    kernel: cfg.kernel,
                 },
             },
             // Session open time: latency accounting covers the ingest.
@@ -950,6 +967,7 @@ fn finalize<R: Record>(
                             window: prev_rank..rank,
                         },
                         seg_elems,
+                        kernel: cfg.kernel,
                     },
                 },
                 enqueued_at: opened_at,
@@ -978,6 +996,7 @@ fn finalize<R: Record>(
                     idx: 0, // unused: installs have no slot of their own
                     input: ShardInput::Install { items: installs, out },
                     seg_elems: 0, // memcpy only, nothing to window
+                    kernel: MergeKernel::Auto, // memcpy only, no leaf merges
                 },
             },
             enqueued_at: opened_at,
@@ -1336,6 +1355,7 @@ mod tests {
             idx: 0,
             input: ShardInput::Owned(vec![vec![1, 2], vec![3]]),
             seg_elems: 0,
+            kernel: MergeKernel::Auto,
         };
         assert_eq!(owned.len(), 3);
         assert!(!owned.is_empty());
@@ -1349,6 +1369,7 @@ mod tests {
                 window: 2..6,
             },
             seg_elems: 2,
+            kernel: MergeKernel::Auto,
         };
         assert_eq!(windowed.len(), 4);
     }
@@ -1390,6 +1411,7 @@ mod tests {
                 idx: 0,
                 input: ShardInput::Install { items: installs, out },
                 seg_elems: 0,
+                kernel: MergeKernel::Auto,
             },
             &stats,
         );

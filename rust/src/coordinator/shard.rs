@@ -50,7 +50,8 @@
 use super::job::{Job, JobKind, JobResult};
 use super::stats::ServiceStats;
 use crate::config::MergeflowConfig;
-use crate::mergepath::kway::loser_tree_merge_segmented;
+use crate::mergepath::kernel::{LeafKernel, MergeKernel};
+use crate::mergepath::kway::loser_tree_merge_segmented_with;
 use crate::mergepath::kway_path::{partition_kway_merge_path, KwaySegment};
 use crate::record::{self, ByKey, Record};
 use std::cell::UnsafeCell;
@@ -162,6 +163,10 @@ pub struct ShardGroup<R: Record = i32> {
     /// `C/(k+1)`), so every shard merges its rank window in
     /// `(k+1)·L`-bounded segments like the flat segmented engine.
     seg_elems: usize,
+    /// Requested leaf kernel (`merge.kernel`), resolved per shard at
+    /// execute time so two-run shards hit the same pairwise leaf
+    /// kernels as the in-process engines.
+    kernel: MergeKernel,
 }
 
 impl<R: Record> std::fmt::Debug for ShardGroup<R> {
@@ -277,6 +282,7 @@ pub(crate) fn maybe_expand<R: Record>(
     let group = Arc::new(ShardGroup {
         seg_elems: cfg
             .effective_kway_segment_elems(std::mem::size_of::<R>(), runs.len()),
+        kernel: cfg.kernel,
         runs,
         segments,
         // Fully tiled by the shard windows — every slot written exactly
@@ -337,7 +343,12 @@ pub(crate) fn execute_shard<R: Record>(
         if group.seg_elems > 0 {
             stats.segmented_shard_merges.inc();
         }
-        loser_tree_merge_segmented(&parts, record::as_keyed_mut(window), group.seg_elems);
+        loser_tree_merge_segmented_with(
+            &parts,
+            record::as_keyed_mut(window),
+            group.seg_elems,
+            LeafKernel::select(group.kernel),
+        );
     }
     stats.compact_shards_completed.inc();
     // AcqRel: our window writes happen-before the final shard's read of

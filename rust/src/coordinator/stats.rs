@@ -1,5 +1,6 @@
 //! Service-level metrics.
 
+use crate::mergepath::kernel::KernelKind;
 use crate::metrics::{fmt_ns, Counter, Gauge, Histogram};
 
 /// Counters + latency histogram for the running service.
@@ -64,6 +65,18 @@ pub struct ServiceStats {
     pub inplace_jobs: Counter,
     /// Jobs executed on the XLA backend.
     pub xla_jobs: Counter,
+    /// Jobs whose leaf merges ran on the plain scalar kernel
+    /// (`merge.kernel = scalar`).
+    pub kernel_scalar_jobs: Counter,
+    /// Jobs whose leaf merges ran on the branchless kernel
+    /// (`merge.kernel = branchless`, or a `simd` request degraded on an
+    /// unsupported CPU / non-scalar record).
+    pub kernel_branchless_jobs: Counter,
+    /// Jobs whose leaf merges ran on the hybrid branchless+gallop
+    /// kernel (the `auto` default when SIMD is unavailable).
+    pub kernel_hybrid_jobs: Counter,
+    /// Jobs whose leaf merges ran on the SIMD bitonic-network kernel.
+    pub kernel_simd_jobs: Counter,
     /// Elements processed in total.
     pub elements: Counter,
     /// Batches dispatched.
@@ -105,11 +118,20 @@ impl ServiceStats {
     }
 
     /// Record a completed job.
+    ///
+    /// Backends tagged with a leaf-kernel suffix (e.g.
+    /// `"native-segmented+simd"`, produced by
+    /// [`tagged_backend`](crate::mergepath::kernel::tagged_backend)
+    /// when `merge.kernel` is forced away from `auto`) are stripped
+    /// back to their base tag here, so the per-backend counters stay
+    /// comparable across kernel settings. Kernel usage is counted
+    /// separately via [`ServiceStats::record_kernel`].
     pub fn record_completion(&self, backend: &str, elements: u64, latency_ns: u64, wait_ns: u64) {
         self.completed.inc();
         self.elements.add(elements);
         self.latency.record(latency_ns.max(1));
         self.queue_wait.record(wait_ns.max(1));
+        let backend = backend.split_once('+').map_or(backend, |(base, _)| base);
         match backend {
             "xla" => self.xla_jobs.inc(),
             "native-segmented" => self.segmented_jobs.inc(),
@@ -130,10 +152,25 @@ impl ServiceStats {
         self.resident_bytes.peak()
     }
 
+    /// Record which leaf kernel a job's pairwise merges ran on.
+    ///
+    /// Called once per job that routed through a
+    /// [`LeafKernel`](crate::mergepath::kernel::LeafKernel)-dispatched
+    /// engine; memcpy-only and XLA routes do not count.
+    pub fn record_kernel(&self, kind: KernelKind) {
+        match kind {
+            KernelKind::Scalar => self.kernel_scalar_jobs.inc(),
+            KernelKind::Branchless => self.kernel_branchless_jobs.inc(),
+            KernelKind::Hybrid => self.kernel_hybrid_jobs.inc(),
+            KernelKind::Simd => self.kernel_simd_jobs.inc(),
+        }
+    }
+
     /// Human-readable snapshot (the `serve` CLI's stats dump).
     pub fn snapshot(&self) -> String {
         format!(
             "jobs: submitted={} completed={} rejected={} | backends: native={} segmented={} kway={} kway-seg={} sharded={} streamed={} inplace={} xla={} | \
+             kernels: scalar={} branchless={} hybrid={} simd={} | \
              shards: planned={} done={} seg-merges={} | \
              streaming: sessions={} chunks={} bytes={} eager={} stream-done={} | \
              mem: resident={} peak={} reclaimed={} | \
@@ -150,6 +187,10 @@ impl ServiceStats {
             self.streamed_jobs.get(),
             self.inplace_jobs.get(),
             self.xla_jobs.get(),
+            self.kernel_scalar_jobs.get(),
+            self.kernel_branchless_jobs.get(),
+            self.kernel_hybrid_jobs.get(),
+            self.kernel_simd_jobs.get(),
             self.compact_shards.get(),
             self.compact_shards_completed.get(),
             self.segmented_shard_merges.get(),
@@ -209,6 +250,38 @@ mod tests {
         assert!(snap.contains("streamed=1"));
         assert!(snap.contains("inplace=1"));
         assert!(snap.contains("xla=1"));
+    }
+
+    #[test]
+    fn kernel_suffixed_tags_route_to_base_backend() {
+        let s = ServiceStats::new();
+        s.record_completion("native+branchless", 10, 100, 1);
+        s.record_completion("native-segmented+simd", 20, 200, 2);
+        s.record_completion("native-kway-typed+scalar", 30, 300, 3);
+        assert_eq!(s.native_jobs.get(), 1);
+        assert_eq!(s.segmented_jobs.get(), 1);
+        assert_eq!(s.kway_jobs.get(), 1);
+        assert_eq!(s.completed.get(), 3);
+    }
+
+    #[test]
+    fn kernel_counters_in_snapshot() {
+        let s = ServiceStats::new();
+        s.record_kernel(KernelKind::Scalar);
+        s.record_kernel(KernelKind::Branchless);
+        s.record_kernel(KernelKind::Branchless);
+        s.record_kernel(KernelKind::Hybrid);
+        s.record_kernel(KernelKind::Simd);
+        assert_eq!(s.kernel_scalar_jobs.get(), 1);
+        assert_eq!(s.kernel_branchless_jobs.get(), 2);
+        assert_eq!(s.kernel_hybrid_jobs.get(), 1);
+        assert_eq!(s.kernel_simd_jobs.get(), 1);
+        let snap = s.snapshot();
+        assert!(snap.contains("scalar=1"));
+        assert!(snap.contains("branchless=2"));
+        assert!(snap.contains("hybrid=1"));
+        assert!(snap.contains("simd=1"));
+        assert_eq!(s.completed.get(), 0, "kernel counts are not completions");
     }
 
     #[test]

@@ -39,6 +39,7 @@ fn run(args: Vec<String>) -> Result<()> {
             Ok(())
         }
         "artifacts" => cmd_artifacts(&cli),
+        "kernels" => cmd_kernels(),
         "" | "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -207,6 +208,37 @@ fn cmd_table(cli: &Cli) -> Result<()> {
             )))
         }
     }
+    Ok(())
+}
+
+/// `mergeflow kernels`: report the detected CPU features, whether the
+/// SIMD kernels are compiled in, and what `merge.kernel = auto|simd`
+/// resolve to per element type — the operator-facing view of the leaf
+/// kernel dispatch (per-job usage shows up in the `serve` stats
+/// snapshot under `kernels:`).
+fn cmd_kernels() -> Result<()> {
+    use mergeflow::mergepath::{cpu_features, LeafKernel, MergeKernel};
+    let feats = cpu_features();
+    println!(
+        "cpu features: sse4.2={} avx2={}",
+        feats.sse42, feats.avx2
+    );
+    println!("simd kernels compiled in: {}", cfg!(feature = "simd"));
+    println!("\nkernel resolution (requested -> selected):");
+    fn row<T: Ord + Copy + 'static>(name: &str) {
+        let auto = LeafKernel::<T>::select(MergeKernel::Auto);
+        let simd = LeafKernel::<T>::select(MergeKernel::Simd);
+        println!(
+            "  {name:<14} auto -> {:<10} simd -> {}",
+            auto.kind().name(),
+            simd.kind().name()
+        );
+    }
+    row::<i32>("i32");
+    row::<u32>("u32");
+    row::<i64>("i64");
+    row::<u64>("u64");
+    row::<(u64, u64)>("(u64, u64)");
     Ok(())
 }
 

@@ -1,0 +1,508 @@
+//! Leaf merge kernels — the innermost two-way merge loops that every
+//! engine in this crate bottoms out in, plus the per-job dispatch that
+//! picks one.
+//!
+//! The Merge Path partition (Alg 1/Alg 3) makes the *placement* of work
+//! optimal; after PR 5's segmented engine the per-thread windows are
+//! cache-resident, so the remaining cost is the per-element compare in
+//! the leaf loop itself. This module concentrates those leaves behind
+//! one dispatch point:
+//!
+//! - **scalar** — the classic branchy two-finger loop
+//!   ([`merge_bounded`](super::merge::merge_bounded)); the baseline.
+//! - **branchless** — conditional-move selection
+//!   ([`branchless_merge_bounded`](super::merge::branchless_merge_bounded));
+//!   on random keys it avoids the ~50% mispredict rate of the scalar
+//!   loop and is the portable default fallback.
+//! - **hybrid** — branchless blocks with a galloping escape
+//!   ([`hybrid_merge_bounded`](super::merge::hybrid_merge_bounded));
+//!   the incumbent default: branchless throughput on interleaved keys,
+//!   gallop throughput on run-structured ones.
+//! - **simd** — an in-register bitonic merge network over SSE4.2/AVX2
+//!   vectors ([`simd`] — `cargo` feature `simd`, runtime-detected),
+//!   available for the fixed-width scalar key types `i32`/`u32`/
+//!   `i64`/`u64` (bare or behind [`ByKey`](crate::record::ByKey)).
+//!
+//! Dispatch is **once per job**: the coordinator resolves the
+//! `merge.kernel` knob ([`MergeKernel`]) into a [`LeafKernel`] function
+//! pointer and threads it through the engines, so the hot loops contain
+//! no per-element (or even per-window) dispatch.
+//!
+//! # Stability
+//!
+//! Every kernel produces output bit-identical to
+//! [`merge_into`](super::merge::merge_into): stable with `A`-priority
+//! (on a tie the `A` element is emitted first). For the scalar,
+//! branchless and hybrid kernels this is by construction (`a[i] <=
+//! b[j]` takes from `A`). The SIMD network reorders *loaded* elements
+//! through min/max lanes and therefore cannot track element origin —
+//! which is exactly why its dispatch is restricted to scalar key types,
+//! where equal keys are bit-identical values and any tie order is the
+//! same bits; see [`simd`] for the full argument.
+
+use super::merge::{branchless_merge_bounded, hybrid_merge_bounded, merge_bounded};
+use crate::{Error, Result};
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub mod simd;
+
+/// The `merge.kernel` configuration knob: which leaf kernel jobs should
+/// use. Parsed from `"auto"` / `"scalar"` / `"branchless"` /
+/// `"hybrid"` / `"simd"`.
+///
+/// Everything except [`MergeKernel::Auto`] is a *request*: requests the
+/// build or the CPU cannot honor degrade along the documented fallback
+/// chain (see [`LeafKernel::select`]) rather than fail, and the
+/// degraded pick is what shows up in the stats tag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MergeKernel {
+    /// Pick per record type at dispatch: the SIMD network when the
+    /// build, the CPU and the key type all support it, the hybrid
+    /// kernel otherwise. The default.
+    #[default]
+    Auto,
+    /// Force the branchy two-finger baseline
+    /// ([`merge_bounded`](super::merge::merge_bounded)) — for
+    /// benchmarking and bisection.
+    Scalar,
+    /// Force the branchless conditional-move loop
+    /// ([`branchless_merge_bounded`](super::merge::branchless_merge_bounded)).
+    Branchless,
+    /// Force the branchless+gallop hybrid
+    /// ([`hybrid_merge_bounded`](super::merge::hybrid_merge_bounded)).
+    Hybrid,
+    /// Request the SSE4.2/AVX2 bitonic network ([`simd`]); degrades to
+    /// branchless when the `simd` feature is off, the CPU lacks
+    /// SSE4.2, or the record type is not a routed scalar key.
+    Simd,
+}
+
+impl MergeKernel {
+    /// The knob's config spelling (the string [`FromStr`] accepts).
+    ///
+    /// [`FromStr`]: std::str::FromStr
+    pub fn name(self) -> &'static str {
+        match self {
+            MergeKernel::Auto => "auto",
+            MergeKernel::Scalar => "scalar",
+            MergeKernel::Branchless => "branchless",
+            MergeKernel::Hybrid => "hybrid",
+            MergeKernel::Simd => "simd",
+        }
+    }
+}
+
+impl std::str::FromStr for MergeKernel {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "auto" => Ok(MergeKernel::Auto),
+            "scalar" => Ok(MergeKernel::Scalar),
+            "branchless" => Ok(MergeKernel::Branchless),
+            "hybrid" => Ok(MergeKernel::Hybrid),
+            "simd" => Ok(MergeKernel::Simd),
+            other => Err(Error::Config(format!("unknown merge kernel `{other}`"))),
+        }
+    }
+}
+
+/// The kernel a job actually resolved to — [`MergeKernel`] minus
+/// `Auto`, after every degrade rule has been applied. This is what the
+/// stats layer counts and what backend tags are suffixed with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum KernelKind {
+    /// Branchy two-finger baseline.
+    Scalar,
+    /// Conditional-move branchless loop.
+    Branchless,
+    /// Branchless blocks + galloping escape (the default pick).
+    Hybrid,
+    /// SSE4.2/AVX2 bitonic merge network.
+    Simd,
+}
+
+impl KernelKind {
+    /// Short name used in stats tags and the `kernels` CLI output.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Branchless => "branchless",
+            KernelKind::Hybrid => "hybrid",
+            KernelKind::Simd => "simd",
+        }
+    }
+}
+
+/// A resolved leaf kernel for element type `T`: one function pointer
+/// with the [`merge_bounded`](super::merge::merge_bounded) contract
+/// (merge the first `len` outputs of the stable A-priority merge of
+/// `a` and `b` into `out[..len]`), plus the [`KernelKind`] it resolved
+/// to for accounting.
+///
+/// `LeafKernel` is `Copy` (a tag and a function pointer), so the
+/// engines thread it by value down to every leaf; dispatch cost is one
+/// indirect call per *leaf invocation* — per segment, window, or tree
+/// pair — never per element.
+#[derive(Debug, Clone, Copy)]
+pub struct LeafKernel<T> {
+    kind: KernelKind,
+    merge: fn(&[T], &[T], &mut [T], usize),
+}
+
+impl<T: Ord + Copy> LeafKernel<T> {
+    /// The branchy two-finger baseline kernel.
+    pub fn scalar() -> Self {
+        Self { kind: KernelKind::Scalar, merge: merge_bounded::<T> }
+    }
+
+    /// The branchless conditional-move kernel.
+    pub fn branchless() -> Self {
+        Self { kind: KernelKind::Branchless, merge: branchless_merge_bounded::<T> }
+    }
+
+    /// The branchless+gallop hybrid kernel (the non-SIMD default).
+    pub fn hybrid() -> Self {
+        Self { kind: KernelKind::Hybrid, merge: hybrid_merge_bounded::<T> }
+    }
+
+    /// What this kernel resolved to (for stats tags and counters).
+    pub fn kind(&self) -> KernelKind {
+        self.kind
+    }
+
+    /// Merge the first `len` outputs of the stable A-priority merge of
+    /// `a` and `b` into `out[..len]` — the
+    /// [`merge_bounded`](super::merge::merge_bounded) contract,
+    /// whichever kernel is behind the pointer.
+    #[inline]
+    pub fn merge(&self, a: &[T], b: &[T], out: &mut [T], len: usize) {
+        (self.merge)(a, b, out, len)
+    }
+}
+
+impl<T: Ord + Copy + 'static> LeafKernel<T> {
+    /// Resolve a [`MergeKernel`] request for element type `T`.
+    ///
+    /// Degrade rules (applied in order, never failing):
+    /// - `Auto` → the SIMD network when available for `T` on this
+    ///   build+CPU, the hybrid kernel otherwise.
+    /// - `Simd` → the SIMD network when available, **branchless**
+    ///   otherwise (the explicitly-requested-but-unavailable case
+    ///   degrades to the portable branchless loop so the stats tag
+    ///   makes the miss visible, per the knob's contract).
+    /// - `Scalar` / `Branchless` / `Hybrid` → exactly that kernel.
+    ///
+    /// "Available for `T`" means: built with the `simd` cargo feature,
+    /// on `x86_64`, with SSE4.2 detected at runtime, and `T` is one of
+    /// `i32`/`u32`/`i64`/`u64` — bare or wrapped in
+    /// [`ByKey`](crate::record::ByKey), whose `repr(transparent)`
+    /// layout and key-only `Ord` coincide with the underlying scalar's.
+    pub fn select(req: MergeKernel) -> Self {
+        match req {
+            MergeKernel::Scalar => Self::scalar(),
+            MergeKernel::Branchless => Self::branchless(),
+            MergeKernel::Hybrid => Self::hybrid(),
+            MergeKernel::Simd => Self::simd_kernel().unwrap_or_else(Self::branchless),
+            MergeKernel::Auto => Self::simd_kernel().unwrap_or_else(Self::hybrid),
+        }
+    }
+
+    /// The SIMD kernel for `T`, when the build, the CPU and the type
+    /// all permit it.
+    fn simd_kernel() -> Option<Self> {
+        simd_merge_fn::<T>().map(|merge| Self { kind: KernelKind::Simd, merge })
+    }
+}
+
+/// Routed SIMD merge function for `T`, or `None` when unavailable.
+///
+/// The `TypeId` match routes the four supported scalar key types and
+/// their [`ByKey`](crate::record::ByKey) wrappers to the monomorphic
+/// vector kernels in [`simd`]. The function-pointer transmute is sound
+/// because `TypeId` equality proves the types identical up to the
+/// `repr(transparent)` `ByKey` wrapper, whose key-only `Ord` is the
+/// scalar's own order.
+#[allow(unused_mut, clippy::let_and_return)]
+fn simd_merge_fn<T: Ord + Copy + 'static>() -> Option<fn(&[T], &[T], &mut [T], usize)> {
+    let mut found: Option<fn(&[T], &[T], &mut [T], usize)> = None;
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if cpu_features().sse42 {
+        use crate::record::ByKey;
+        use std::any::TypeId;
+        let id = TypeId::of::<T>();
+        macro_rules! route {
+            ($ty:ty, $f:expr) => {
+                if found.is_none()
+                    && (id == TypeId::of::<$ty>() || id == TypeId::of::<ByKey<$ty>>())
+                {
+                    // SAFETY: `T` is `$ty` or `ByKey<$ty>` (TypeId
+                    // equality up to the repr(transparent) wrapper), so
+                    // the two fn-pointer types have identical ABIs and
+                    // identical Ord semantics.
+                    found = Some(unsafe {
+                        std::mem::transmute::<
+                            fn(&[$ty], &[$ty], &mut [$ty], usize),
+                            fn(&[T], &[T], &mut [T], usize),
+                        >($f)
+                    });
+                }
+            };
+        }
+        route!(i32, simd::merge_i32);
+        route!(u32, simd::merge_u32);
+        route!(i64, simd::merge_i64);
+        route!(u64, simd::merge_u64);
+    }
+    found
+}
+
+/// CPU vector features relevant to the SIMD kernels, detected once per
+/// process. On non-`x86_64` targets or builds without the `simd`
+/// feature both flags are `false`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CpuFeatures {
+    /// SSE4.2 available (128-bit kernels; implies the SSE4.1 min/max
+    /// and blend forms the 32-bit network uses).
+    pub sse42: bool,
+    /// AVX2 available (256-bit kernels; preferred over SSE when both
+    /// are present).
+    pub avx2: bool,
+}
+
+/// Detected [`CpuFeatures`] (cached after the first call).
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub fn cpu_features() -> CpuFeatures {
+    static FEATURES: std::sync::OnceLock<CpuFeatures> = std::sync::OnceLock::new();
+    *FEATURES.get_or_init(|| CpuFeatures {
+        sse42: std::arch::is_x86_feature_detected!("sse4.2"),
+        avx2: std::arch::is_x86_feature_detected!("avx2"),
+    })
+}
+
+/// Detected [`CpuFeatures`] — this build has no SIMD kernels (feature
+/// off or non-x86_64 target), so nothing is ever detected.
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+pub fn cpu_features() -> CpuFeatures {
+    CpuFeatures::default()
+}
+
+/// Suffix a backend tag with the kernel that served the job:
+/// `"native" + Branchless → "native+branchless"`. Interned so the
+/// result is `&'static str` like every other backend tag (the
+/// combination space is |backends| × |kernels|, so the leaked set is
+/// small and bounded). [`ServiceStats::record_completion`] strips the
+/// suffix before routing to per-backend counters.
+///
+/// [`ServiceStats::record_completion`]: crate::coordinator::ServiceStats::record_completion
+pub fn tagged_backend(base: &'static str, kind: KernelKind) -> &'static str {
+    use std::collections::BTreeMap;
+    use std::sync::Mutex;
+    static INTERNED: Mutex<BTreeMap<(&str, KernelKind), &'static str>> =
+        Mutex::new(BTreeMap::new());
+    let mut map = INTERNED.lock().unwrap_or_else(|e| e.into_inner());
+    if let Some(&tag) = map.get(&(base, kind)) {
+        return tag;
+    }
+    let tag: &'static str = Box::leak(format!("{base}+{}", kind.name()).into_boxed_str());
+    map.insert((base, kind), tag);
+    tag
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::record::ByKey;
+    use crate::rng::Xoshiro256;
+
+    fn random_sorted_i64(rng: &mut Xoshiro256, n: usize, universe: u64) -> Vec<i64> {
+        let mut v: Vec<i64> = (0..n).map(|_| rng.below(universe) as i64).collect();
+        v.sort_unstable();
+        v
+    }
+
+    fn all_requests() -> [MergeKernel; 5] {
+        [
+            MergeKernel::Auto,
+            MergeKernel::Scalar,
+            MergeKernel::Branchless,
+            MergeKernel::Hybrid,
+            MergeKernel::Simd,
+        ]
+    }
+
+    #[test]
+    fn parse_roundtrip_and_errors() {
+        for req in all_requests() {
+            assert_eq!(req.name().parse::<MergeKernel>().unwrap(), req);
+        }
+        assert!("".parse::<MergeKernel>().is_err());
+        assert!("avx512".parse::<MergeKernel>().is_err());
+        assert_eq!(MergeKernel::default(), MergeKernel::Auto);
+    }
+
+    /// Satellite property sweep: the branchless loop is bit-identical
+    /// to `merge_bounded` for every bounded prefix, including empty and
+    /// one-sided inputs and duplicate-heavy universes.
+    #[test]
+    fn branchless_property_sweep_vs_merge_bounded() {
+        let mut rng = Xoshiro256::seeded(0x5EAF);
+        for round in 0..60 {
+            // Duplicate-heavy small universes in half the rounds.
+            let universe = if round % 2 == 0 { 8 } else { 1000 };
+            let n_a = rng.range(0, 70);
+            let a = random_sorted_i64(&mut rng, n_a, universe);
+            let n_b = rng.range(0, 70);
+            let b = random_sorted_i64(&mut rng, n_b, universe);
+            for len in 0..=(a.len() + b.len()) {
+                let mut want = vec![0i64; len];
+                merge_bounded(&a, &b, &mut want, len);
+                let mut got = vec![0i64; len];
+                branchless_merge_bounded(&a, &b, &mut got, len);
+                assert_eq!(got, want, "len={len}");
+            }
+        }
+        // One-sided: the branchless safe-count loop must hand off to
+        // the tail copies immediately.
+        let a: Vec<i64> = (0..100).collect();
+        let e: Vec<i64> = vec![];
+        let mut out = vec![0i64; 100];
+        branchless_merge_bounded(&a, &e, &mut out, 100);
+        assert_eq!(out, a);
+        branchless_merge_bounded(&e, &a, &mut out, 100);
+        assert_eq!(out, a);
+    }
+
+    /// Every selectable kernel is bit-identical to `merge_bounded` on
+    /// i64 (routed for SIMD) across shapes and bounded prefixes.
+    #[test]
+    fn all_kernels_bit_identical_i64() {
+        let mut rng = Xoshiro256::seeded(0xC0DE);
+        for _ in 0..40 {
+            let n_a = rng.range(0, 200);
+            let a = random_sorted_i64(&mut rng, n_a, 50);
+            let n_b = rng.range(0, 200);
+            let b = random_sorted_i64(&mut rng, n_b, 50);
+            let total = a.len() + b.len();
+            let mut want = vec![0i64; total];
+            merge_bounded(&a, &b, &mut want, total);
+            for req in all_requests() {
+                let kernel = LeafKernel::<i64>::select(req);
+                for len in [0, 1, total / 2, total] {
+                    let mut got = vec![0i64; len];
+                    kernel.merge(&a, &b, &mut got, len);
+                    assert_eq!(got[..], want[..len], "req={req:?} len={len}");
+                }
+            }
+        }
+    }
+
+    /// ByKey-wrapped scalars route exactly like the bare scalar and
+    /// stay bit-identical.
+    #[test]
+    fn bykey_routes_like_bare_scalar() {
+        assert_eq!(
+            LeafKernel::<ByKey<u64>>::select(MergeKernel::Simd).kind(),
+            LeafKernel::<u64>::select(MergeKernel::Simd).kind(),
+        );
+        let mut rng = Xoshiro256::seeded(0xB5);
+        let a: Vec<ByKey<u64>> = {
+            let mut v: Vec<u64> = (0..300).map(|_| rng.below(40)).collect();
+            v.sort_unstable();
+            v.into_iter().map(ByKey).collect()
+        };
+        let b: Vec<ByKey<u64>> = {
+            let mut v: Vec<u64> = (0..277).map(|_| rng.below(40)).collect();
+            v.sort_unstable();
+            v.into_iter().map(ByKey).collect()
+        };
+        let total = a.len() + b.len();
+        let mut want = vec![ByKey(0u64); total];
+        merge_bounded(&a, &b, &mut want, total);
+        for req in all_requests() {
+            let kernel = LeafKernel::<ByKey<u64>>::select(req);
+            let mut got = vec![ByKey(0u64); total];
+            kernel.merge(&a, &b, &mut got, total);
+            assert!(
+                got.iter().zip(&want).all(|(g, w)| g.0 == w.0),
+                "req={req:?}"
+            );
+        }
+    }
+
+    /// Key-only-Ord records must keep A-priority through every kernel
+    /// that serves them (the SIMD route never serves them — `select`
+    /// degrades — so all selected kernels are origin-preserving).
+    #[test]
+    fn stability_ties_from_a_for_payload_records() {
+        #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+        struct K(i64, u8);
+        impl PartialOrd for K {
+            fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+                Some(self.cmp(o))
+            }
+        }
+        impl Ord for K {
+            fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+                self.0.cmp(&o.0)
+            }
+        }
+        let a: Vec<K> = (0..40).map(|i| K(i / 8, 0)).collect();
+        let b: Vec<K> = (0..40).map(|i| K(i / 8, 1)).collect();
+        let mut want = vec![K(0, 9); 80];
+        merge_bounded(&a, &b, &mut want, 80);
+        for req in all_requests() {
+            let kernel = LeafKernel::<K>::select(req);
+            assert_ne!(kernel.kind(), KernelKind::Simd, "payload records never SIMD");
+            let mut got = vec![K(0, 9); 80];
+            kernel.merge(&a, &b, &mut got, 80);
+            assert_eq!(
+                got.iter().map(|k| (k.0, k.1)).collect::<Vec<_>>(),
+                want.iter().map(|k| (k.0, k.1)).collect::<Vec<_>>(),
+                "req={req:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn select_degrades_as_documented() {
+        // Unrouted element types degrade: Simd → branchless, Auto → hybrid.
+        assert_eq!(
+            LeafKernel::<(i64, i64)>::select(MergeKernel::Simd).kind(),
+            KernelKind::Branchless
+        );
+        assert_eq!(
+            LeafKernel::<(i64, i64)>::select(MergeKernel::Auto).kind(),
+            KernelKind::Hybrid
+        );
+        // Forced kernels resolve exactly.
+        assert_eq!(LeafKernel::<i64>::select(MergeKernel::Scalar).kind(), KernelKind::Scalar);
+        assert_eq!(
+            LeafKernel::<i64>::select(MergeKernel::Branchless).kind(),
+            KernelKind::Branchless
+        );
+        assert_eq!(LeafKernel::<i64>::select(MergeKernel::Hybrid).kind(), KernelKind::Hybrid);
+        // Routed scalar: SIMD iff this build+CPU has it, else the
+        // documented fallbacks.
+        let simd_available = cpu_features().sse42
+            && cfg!(all(feature = "simd", target_arch = "x86_64"));
+        let forced = LeafKernel::<i64>::select(MergeKernel::Simd).kind();
+        let auto = LeafKernel::<i64>::select(MergeKernel::Auto).kind();
+        if simd_available {
+            assert_eq!(forced, KernelKind::Simd);
+            assert_eq!(auto, KernelKind::Simd);
+        } else {
+            assert_eq!(forced, KernelKind::Branchless);
+            assert_eq!(auto, KernelKind::Hybrid);
+        }
+    }
+
+    #[test]
+    fn tagged_backend_interns() {
+        let t1 = tagged_backend("native", KernelKind::Branchless);
+        assert_eq!(t1, "native+branchless");
+        let t2 = tagged_backend("native", KernelKind::Branchless);
+        // Same interned pointer, not merely equal contents.
+        assert!(std::ptr::eq(t1.as_ptr(), t2.as_ptr()));
+        assert_eq!(tagged_backend("native-segmented", KernelKind::Simd), "native-segmented+simd");
+    }
+}

@@ -1,0 +1,479 @@
+//! SSE4.2/AVX2 bitonic-network merge kernels for fixed-width scalar
+//! keys (`i32`/`u32`/`i64`/`u64`).
+//!
+//! # Algorithm
+//!
+//! The classic in-register streaming merge (Chhugani et al., also
+//! surveyed in arxiv 2202.08463): keep one vector register `va` of the
+//! `W` smallest in-flight elements. Each iteration merges `va` with a
+//! freshly loaded vector `vb` through a **bitonic merge network** —
+//! reverse `vb`, take lane-wise min/max (yielding two bitonic
+//! `W`-sequences), then sort each with `log2 W` compare–exchange
+//! stages — emits the low `W` results to the output, keeps the high
+//! `W` as the new `va`, and refills `vb` from whichever input stream
+//! has the smaller head (`a` on ties). The scalar heads it compares
+//! are exactly the next *unloaded* elements, so every element in
+//! flight is ≤ both stream heads and the emitted low half is final.
+//!
+//! When either stream has fewer than `W` elements left (or fewer than
+//! `W` output slots remain), the loop stops: the `W` elements still in
+//! `va` are **not** necessarily ≤ the remaining stream heads (only ≤
+//! the *unloaded* suffix of their own stream — the other stream may
+//! hold smaller still-unloaded elements). They are therefore spilled
+//! to a stack buffer and drained by a three-way scalar merge against
+//! both stream heads; the rest is delegated to
+//! [`branchless_merge_bounded`].
+//!
+//! # Stability
+//!
+//! The network routes elements through min/max lanes and cannot track
+//! which input an element came from, so it cannot implement
+//! "A-priority on ties" positionally. It doesn't have to: these
+//! kernels are only dispatched (see
+//! [`LeafKernel::select`](super::LeafKernel::select)) for bare scalar
+//! keys, where two equal keys are bit-identical values — any tie order
+//! produces bit-identical output, which is the contract
+//! ([`merge_bounded`](crate::mergepath::merge::merge_bounded)
+//! equivalence) the tests below check.
+//!
+//! # Safety
+//!
+//! All `unsafe` here is (a) `#[target_feature]` intrinsic calls, made
+//! sound by the `cpu_features()` runtime check in the public wrappers,
+//! and (b) raw vector loads/stores whose bounds are established by the
+//! loop guards (`i + W <= a.len()`, `j + W <= b.len()`, `k + W <= len
+//! <= out.len()`) — the wrappers assert the
+//! [`merge_bounded`](crate::mergepath::merge::merge_bounded) contract
+//! before entering the unsafe fns.
+
+use super::cpu_features;
+use crate::mergepath::merge::branchless_merge_bounded;
+use core::arch::x86_64::*;
+
+// ---------------------------------------------------------------------
+// Unaligned load/store helpers. 128-bit forms are baseline x86_64
+// (SSE2); the 256-bit forms carry the AVX target feature so they
+// inline cleanly into the AVX2 kernels.
+// ---------------------------------------------------------------------
+
+#[inline(always)]
+unsafe fn ld128<T>(p: *const T) -> __m128i {
+    _mm_loadu_si128(p.cast())
+}
+
+#[inline(always)]
+unsafe fn st128<T>(p: *mut T, v: __m128i) {
+    _mm_storeu_si128(p.cast(), v)
+}
+
+#[inline]
+#[target_feature(enable = "avx")]
+unsafe fn ld256<T>(p: *const T) -> __m256i {
+    _mm256_loadu_si256(p.cast())
+}
+
+#[inline]
+#[target_feature(enable = "avx")]
+unsafe fn st256<T>(p: *mut T, v: __m256i) {
+    _mm256_storeu_si256(p.cast(), v)
+}
+
+// ---------------------------------------------------------------------
+// 64-bit lane-wise min/max. SSE/AVX2 have no 64-bit integer min/max
+// instructions, so build them from cmpgt + blendv; unsigned variants
+// bias both operands by i64::MIN (an order-preserving map from u64 to
+// i64) before the signed compare.
+// ---------------------------------------------------------------------
+
+#[inline]
+#[target_feature(enable = "sse4.2")]
+unsafe fn sse_minmax_i64(a: __m128i, b: __m128i) -> (__m128i, __m128i) {
+    let gt = _mm_cmpgt_epi64(a, b);
+    (_mm_blendv_epi8(a, b, gt), _mm_blendv_epi8(b, a, gt))
+}
+
+#[inline]
+#[target_feature(enable = "sse4.2")]
+unsafe fn sse_minmax_u64(a: __m128i, b: __m128i) -> (__m128i, __m128i) {
+    let bias = _mm_set1_epi64x(i64::MIN);
+    let gt = _mm_cmpgt_epi64(_mm_xor_si128(a, bias), _mm_xor_si128(b, bias));
+    (_mm_blendv_epi8(a, b, gt), _mm_blendv_epi8(b, a, gt))
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn avx_minmax_i64(a: __m256i, b: __m256i) -> (__m256i, __m256i) {
+    let gt = _mm256_cmpgt_epi64(a, b);
+    (_mm256_blendv_epi8(a, b, gt), _mm256_blendv_epi8(b, a, gt))
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn avx_minmax_u64(a: __m256i, b: __m256i) -> (__m256i, __m256i) {
+    let bias = _mm256_set1_epi64x(i64::MIN);
+    let gt = _mm256_cmpgt_epi64(_mm256_xor_si256(a, bias), _mm256_xor_si256(b, bias));
+    (_mm256_blendv_epi8(a, b, gt), _mm256_blendv_epi8(b, a, gt))
+}
+
+// ---------------------------------------------------------------------
+// Bitonic merge networks. Each `$bmerge(va, vb)` takes two ascending
+// vectors and returns (low half, high half) of their 2W-element merge:
+// reverse vb, lane-wise min/max (two bitonic W-sequences), then log2 W
+// compare–exchange stages per half.
+// ---------------------------------------------------------------------
+
+/// 32-bit × 4 lanes (SSE4.2 — the blends/min/max are SSE4.1 forms).
+macro_rules! sse_net32 {
+    ($bmerge:ident, $sort:ident, $min:ident, $max:ident) => {
+        /// Sort a bitonic 4-sequence: distance-2 then distance-1
+        /// compare–exchange.
+        #[inline]
+        #[target_feature(enable = "sse4.2")]
+        unsafe fn $sort(v: __m128i) -> __m128i {
+            // Distance 2: pairs (0,2),(1,3); 0x4E swaps the 64-bit halves.
+            let p = _mm_shuffle_epi32::<0x4E>(v);
+            let v = _mm_blend_epi16::<0xF0>($min(v, p), $max(v, p));
+            // Distance 1: pairs (0,1),(2,3); 0xB1 swaps within halves.
+            let p = _mm_shuffle_epi32::<0xB1>(v);
+            _mm_blend_epi16::<0xCC>($min(v, p), $max(v, p))
+        }
+
+        #[inline]
+        #[target_feature(enable = "sse4.2")]
+        unsafe fn $bmerge(va: __m128i, vb: __m128i) -> (__m128i, __m128i) {
+            // Reverse vb (0x1B = lanes 3,2,1,0) so va ++ vb is bitonic.
+            let vb = _mm_shuffle_epi32::<0x1B>(vb);
+            ($sort($min(va, vb)), $sort($max(va, vb)))
+        }
+    };
+}
+
+/// 64-bit × 2 lanes (SSE4.2 for `_mm_cmpgt_epi64`).
+macro_rules! sse_net64 {
+    ($bmerge:ident, $minmax:ident) => {
+        #[inline]
+        #[target_feature(enable = "sse4.2")]
+        unsafe fn $bmerge(va: __m128i, vb: __m128i) -> (__m128i, __m128i) {
+            // Reverse vb: 0x4E swaps the two 64-bit lanes.
+            let vb = _mm_shuffle_epi32::<0x4E>(vb);
+            let (lo, hi) = $minmax(va, vb);
+            // Sort each bitonic pair: one distance-1 exchange.
+            let (l, lx) = $minmax(lo, _mm_shuffle_epi32::<0x4E>(lo));
+            let (h, hx) = $minmax(hi, _mm_shuffle_epi32::<0x4E>(hi));
+            (_mm_blend_epi16::<0xF0>(l, lx), _mm_blend_epi16::<0xF0>(h, hx))
+        }
+    };
+}
+
+/// 32-bit × 8 lanes (AVX2).
+macro_rules! avx_net32 {
+    ($bmerge:ident, $sort:ident, $min:ident, $max:ident) => {
+        /// Sort a bitonic 8-sequence: distance-4, -2, -1 exchanges.
+        #[inline]
+        #[target_feature(enable = "avx2")]
+        unsafe fn $sort(v: __m256i) -> __m256i {
+            // Distance 4: swap the 128-bit halves.
+            let p = _mm256_permute2x128_si256::<0x01>(v, v);
+            let v = _mm256_blend_epi32::<0xF0>($min(v, p), $max(v, p));
+            // Distance 2 within each half.
+            let p = _mm256_shuffle_epi32::<0x4E>(v);
+            let v = _mm256_blend_epi32::<0xCC>($min(v, p), $max(v, p));
+            // Distance 1 within each half.
+            let p = _mm256_shuffle_epi32::<0xB1>(v);
+            _mm256_blend_epi32::<0xAA>($min(v, p), $max(v, p))
+        }
+
+        #[inline]
+        #[target_feature(enable = "avx2")]
+        unsafe fn $bmerge(va: __m256i, vb: __m256i) -> (__m256i, __m256i) {
+            let rev = _mm256_setr_epi32(7, 6, 5, 4, 3, 2, 1, 0);
+            let vb = _mm256_permutevar8x32_epi32(vb, rev);
+            ($sort($min(va, vb)), $sort($max(va, vb)))
+        }
+    };
+}
+
+/// 64-bit × 4 lanes (AVX2).
+macro_rules! avx_net64 {
+    ($bmerge:ident, $sort:ident, $minmax:ident) => {
+        /// Sort a bitonic 4-sequence of 64-bit lanes.
+        #[inline]
+        #[target_feature(enable = "avx2")]
+        unsafe fn $sort(v: __m256i) -> __m256i {
+            // Distance 2: lanes (0,2),(1,3); permute4x64 0x4E = 2,3,0,1.
+            let p = _mm256_permute4x64_epi64::<0x4E>(v);
+            let (mn, mx) = $minmax(v, p);
+            let v = _mm256_blend_epi32::<0xF0>(mn, mx);
+            // Distance 1: lanes (0,1),(2,3); 0xB1 = 1,0,3,2.
+            let p = _mm256_permute4x64_epi64::<0xB1>(v);
+            let (mn, mx) = $minmax(v, p);
+            _mm256_blend_epi32::<0xCC>(mn, mx)
+        }
+
+        #[inline]
+        #[target_feature(enable = "avx2")]
+        unsafe fn $bmerge(va: __m256i, vb: __m256i) -> (__m256i, __m256i) {
+            // Reverse vb: 0x1B = lanes 3,2,1,0.
+            let vb = _mm256_permute4x64_epi64::<0x1B>(vb);
+            let (lo, hi) = $minmax(va, vb);
+            ($sort(lo), $sort(hi))
+        }
+    };
+}
+
+sse_net32!(sse_bmerge_i32, sse_sort4_i32, _mm_min_epi32, _mm_max_epi32);
+sse_net32!(sse_bmerge_u32, sse_sort4_u32, _mm_min_epu32, _mm_max_epu32);
+sse_net64!(sse_bmerge_i64, sse_minmax_i64);
+sse_net64!(sse_bmerge_u64, sse_minmax_u64);
+avx_net32!(avx_bmerge_i32, avx_sort8_i32, _mm256_min_epi32, _mm256_max_epi32);
+avx_net32!(avx_bmerge_u32, avx_sort8_u32, _mm256_min_epu32, _mm256_max_epu32);
+avx_net64!(avx_bmerge_i64, avx_sort4_i64, avx_minmax_i64);
+avx_net64!(avx_bmerge_u64, avx_sort4_u64, avx_minmax_u64);
+
+// ---------------------------------------------------------------------
+// The streaming merge loop, instantiated per (type, width, ISA).
+// ---------------------------------------------------------------------
+
+macro_rules! simd_merge_loop {
+    ($name:ident, $ty:ty, $w:expr, $load:ident, $store:ident, $bmerge:ident, $feat:literal) => {
+        /// Merge the first `len` outputs of the stable merge of `a`
+        /// and `b` into `out[..len]`.
+        ///
+        /// Safety: requires the `$feat` target feature at runtime and
+        /// `len <= a.len() + b.len()`, `out.len() >= len` (checked by
+        /// the public wrapper).
+        #[target_feature(enable = $feat)]
+        unsafe fn $name(a: &[$ty], b: &[$ty], out: &mut [$ty], len: usize) {
+            const W: usize = $w;
+            let mut i = 0usize;
+            let mut j = 0usize;
+            let mut k = 0usize;
+            let mut tmp: [$ty; W] = [0; W];
+            let mut have_tail = false;
+            if a.len() >= W && b.len() >= W && len >= W {
+                let mut va = $load(a.as_ptr());
+                let mut vb = $load(b.as_ptr());
+                i = W;
+                j = W;
+                loop {
+                    let (lo, hi) = $bmerge(va, vb);
+                    // In range: k + W <= len <= out.len() (first
+                    // iteration by the guard above, later ones by the
+                    // break check below).
+                    $store(out.as_mut_ptr().add(k), lo);
+                    k += W;
+                    va = hi;
+                    if k + W > len || i + W > a.len() || j + W > b.len() {
+                        break;
+                    }
+                    // Refill from the stream with the smaller head
+                    // (`<=` keeps the A-then-B order; for these scalar
+                    // types equal keys are bit-identical, so either
+                    // order yields identical bytes). The W elements
+                    // starting at the head are in range per the break
+                    // check.
+                    if a[i] <= b[j] {
+                        vb = $load(a.as_ptr().add(i));
+                        i += W;
+                    } else {
+                        vb = $load(b.as_ptr().add(j));
+                        j += W;
+                    }
+                }
+                $store(tmp.as_mut_ptr(), va);
+                have_tail = true;
+            }
+            // Drain the spilled register three-ways against both
+            // stream heads: tmp is sorted and <= the *unloaded* suffix
+            // of the stream each element came from, but not
+            // necessarily <= the other stream's head, so it must
+            // compete element-wise.
+            let mut t = if have_tail { 0 } else { W };
+            while t < W && k < len {
+                let x = tmp[t];
+                if (i >= a.len() || x <= a[i]) && (j >= b.len() || x <= b[j]) {
+                    out[k] = x;
+                    t += 1;
+                } else if i < a.len() && (j >= b.len() || a[i] <= b[j]) {
+                    out[k] = a[i];
+                    i += 1;
+                } else {
+                    out[k] = b[j];
+                    j += 1;
+                }
+                k += 1;
+            }
+            if k < len {
+                branchless_merge_bounded(&a[i..], &b[j..], &mut out[k..len], len - k);
+            }
+        }
+    };
+}
+
+simd_merge_loop!(sse_merge_i32, i32, 4, ld128, st128, sse_bmerge_i32, "sse4.2");
+simd_merge_loop!(sse_merge_u32, u32, 4, ld128, st128, sse_bmerge_u32, "sse4.2");
+simd_merge_loop!(sse_merge_i64, i64, 2, ld128, st128, sse_bmerge_i64, "sse4.2");
+simd_merge_loop!(sse_merge_u64, u64, 2, ld128, st128, sse_bmerge_u64, "sse4.2");
+simd_merge_loop!(avx_merge_i32, i32, 8, ld256, st256, avx_bmerge_i32, "avx2");
+simd_merge_loop!(avx_merge_u32, u32, 8, ld256, st256, avx_bmerge_u32, "avx2");
+simd_merge_loop!(avx_merge_i64, i64, 4, ld256, st256, avx_bmerge_i64, "avx2");
+simd_merge_loop!(avx_merge_u64, u64, 4, ld256, st256, avx_bmerge_u64, "avx2");
+
+// ---------------------------------------------------------------------
+// Safe wrappers: assert the merge_bounded contract, pick the widest
+// detected ISA, fall back to the branchless scalar loop when neither
+// vector path is available (defensive — dispatch shouldn't route here
+// without SSE4.2, but the wrappers stay safe regardless).
+// ---------------------------------------------------------------------
+
+macro_rules! simd_wrapper {
+    ($(#[$doc:meta])* $name:ident, $ty:ty, $sse:ident, $avx:ident) => {
+        $(#[$doc])*
+        ///
+        /// Same contract as
+        /// [`merge_bounded`](crate::mergepath::merge::merge_bounded):
+        /// writes the first `len` outputs of the stable merge of `a`
+        /// and `b` into `out[..len]`.
+        ///
+        /// # Panics
+        ///
+        /// If `len > a.len() + b.len()` or `out.len() < len`.
+        pub fn $name(a: &[$ty], b: &[$ty], out: &mut [$ty], len: usize) {
+            assert!(len <= a.len() + b.len(), "len exceeds total input");
+            assert!(out.len() >= len, "output shorter than len");
+            let feats = cpu_features();
+            if feats.avx2 {
+                // SAFETY: AVX2 detected at runtime; bounds asserted.
+                unsafe { $avx(a, b, out, len) }
+            } else if feats.sse42 {
+                // SAFETY: SSE4.2 detected at runtime; bounds asserted.
+                unsafe { $sse(a, b, out, len) }
+            } else {
+                branchless_merge_bounded(a, b, out, len);
+            }
+        }
+    };
+}
+
+simd_wrapper!(
+    /// Vectorized bounded merge for `i32` keys (AVX2 → SSE4.2 → branchless).
+    merge_i32,
+    i32,
+    sse_merge_i32,
+    avx_merge_i32
+);
+simd_wrapper!(
+    /// Vectorized bounded merge for `u32` keys (AVX2 → SSE4.2 → branchless).
+    merge_u32,
+    u32,
+    sse_merge_u32,
+    avx_merge_u32
+);
+simd_wrapper!(
+    /// Vectorized bounded merge for `i64` keys (AVX2 → SSE4.2 → branchless).
+    merge_i64,
+    i64,
+    sse_merge_i64,
+    avx_merge_i64
+);
+simd_wrapper!(
+    /// Vectorized bounded merge for `u64` keys (AVX2 → SSE4.2 → branchless).
+    merge_u64,
+    u64,
+    sse_merge_u64,
+    avx_merge_u64
+);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mergepath::merge::merge_bounded;
+    use crate::rng::Xoshiro256;
+
+    /// Conformance sweep for one element type: random duplicate-heavy
+    /// and wide universes, varying lengths (below/at/above the vector
+    /// width), every interesting bounded prefix, plus disjoint-range
+    /// and one-sided shapes — each checked bit-for-bit against
+    /// `merge_bounded` on both the SSE and (when detected) AVX2 paths.
+    macro_rules! conformance {
+        ($test:ident, $ty:ty, $w:expr, $sse:ident, $avx:ident, $wrapper:ident) => {
+            #[test]
+            fn $test() {
+                let feats = cpu_features();
+                if !feats.sse42 {
+                    eprintln!("skipping {}: no SSE4.2 at runtime", stringify!($test));
+                    return;
+                }
+                let w: usize = $w;
+                let mut cases: Vec<(Vec<$ty>, Vec<$ty>)> = Vec::new();
+                let mut rng = Xoshiro256::seeded(0x51D0 + w as u64);
+                for round in 0..60 {
+                    let universe: u64 = match round % 4 {
+                        0 => 2,
+                        1 => 8,
+                        2 => 64,
+                        _ => 1 << 20,
+                    };
+                    let mut a: Vec<$ty> = (0..rng.range(0, 130))
+                        .map(|_| <$ty>::try_from(rng.below(universe)).unwrap())
+                        .collect();
+                    a.sort_unstable();
+                    let mut b: Vec<$ty> = (0..rng.range(0, 130))
+                        .map(|_| <$ty>::try_from(rng.below(universe)).unwrap())
+                        .collect();
+                    b.sort_unstable();
+                    cases.push((a, b));
+                }
+                // Disjoint ranges (forces long same-stream runs), a
+                // strict interleave, one-sided and empty inputs.
+                let lo: Vec<$ty> = (0u64..97).map(|x| <$ty>::try_from(x).unwrap()).collect();
+                let hi: Vec<$ty> =
+                    (1000u64..1113).map(|x| <$ty>::try_from(x).unwrap()).collect();
+                let even: Vec<$ty> =
+                    (0u64..80).map(|x| <$ty>::try_from(2 * x).unwrap()).collect();
+                let odd: Vec<$ty> =
+                    (0u64..80).map(|x| <$ty>::try_from(2 * x + 1).unwrap()).collect();
+                cases.push((lo.clone(), hi.clone()));
+                cases.push((hi, lo.clone()));
+                cases.push((even, odd));
+                cases.push((lo.clone(), Vec::new()));
+                cases.push((Vec::new(), lo));
+                cases.push((Vec::new(), Vec::new()));
+                for (a, b) in cases {
+                    let total = a.len() + b.len();
+                    let mut lens = vec![0, 1, w - 1, w, w + 1, total / 2, total];
+                    lens.push(total.saturating_sub(1));
+                    for len in lens {
+                        let len = len.min(total);
+                        let mut want = vec![<$ty>::default(); len];
+                        merge_bounded(&a, &b, &mut want, len);
+                        let mut got = vec![<$ty>::default(); len];
+                        // SAFETY: SSE4.2 checked above; buffers sized.
+                        unsafe { $sse(&a, &b, &mut got, len) };
+                        assert_eq!(got, want, "sse len={len} |a|={} |b|={}", a.len(), b.len());
+                        if feats.avx2 {
+                            let mut got = vec![<$ty>::default(); len];
+                            // SAFETY: AVX2 checked; buffers sized.
+                            unsafe { $avx(&a, &b, &mut got, len) };
+                            assert_eq!(
+                                got,
+                                want,
+                                "avx len={len} |a|={} |b|={}",
+                                a.len(),
+                                b.len()
+                            );
+                        }
+                        let mut got = vec![<$ty>::default(); len];
+                        super::$wrapper(&a, &b, &mut got, len);
+                        assert_eq!(got, want, "wrapper len={len}");
+                    }
+                }
+            }
+        };
+    }
+
+    conformance!(conformance_i32, i32, 4, sse_merge_i32, avx_merge_i32, merge_i32);
+    conformance!(conformance_u32, u32, 4, sse_merge_u32, avx_merge_u32, merge_u32);
+    conformance!(conformance_i64, i64, 2, sse_merge_i64, avx_merge_i64, merge_i64);
+    conformance!(conformance_u64, u64, 2, sse_merge_u64, avx_merge_u64, merge_u64);
+}

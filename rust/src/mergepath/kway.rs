@@ -26,7 +26,8 @@
 //! large-`k` fallback and as the oracle the flat engine is benchmarked
 //! against (`benches/kway_flat_vs_tree.rs`).
 
-use super::parallel::parallel_merge;
+use super::diagonal::diagonal_intersection;
+use super::kernel::LeafKernel;
 use crate::exec::WorkerPool;
 
 /// Sequential k-way tournament merge (linear argmin for `k ≤ 16`,
@@ -91,6 +92,26 @@ pub fn loser_tree_merge<T: Ord + Copy>(runs: &[&[T]], out: &mut [T]) {
             heap.push(Reverse((nv, i)));
         }
     }
+}
+
+/// [`loser_tree_merge`] with an explicit [`LeafKernel`] for the
+/// pairwise case: at `k == 2` the tournament is just a two-way merge,
+/// and the tournament's tie rule (lower run index wins) coincides with
+/// the kernel contract's A-priority — so the configured leaf kernel
+/// can serve the whole merge, bit-identically. Other `k` delegate to
+/// [`loser_tree_merge`] unchanged.
+pub fn loser_tree_merge_with<T: Ord + Copy>(
+    runs: &[&[T]],
+    out: &mut [T],
+    kernel: LeafKernel<T>,
+) {
+    if runs.len() == 2 {
+        let total = runs[0].len() + runs[1].len();
+        assert_eq!(out.len(), total, "output must hold all input elements");
+        kernel.merge(runs[0], runs[1], out, total);
+        return;
+    }
+    loser_tree_merge(runs, out);
 }
 
 /// Cursor-carrying bounded k-way merge: emit exactly `out.len()`
@@ -272,6 +293,49 @@ pub fn loser_tree_merge_segmented<T: Ord + Copy>(
     }
 }
 
+/// [`loser_tree_merge_segmented`] with an explicit [`LeafKernel`] for
+/// the pairwise case: at `k == 2` each output window is a two-way
+/// window merge under the Alg 3 cursor walk (bit-identical to the
+/// tournament — same tie rule, see [`loser_tree_merge_with`]), so the
+/// window leaves run on the configured kernel. Other `k` delegate to
+/// [`loser_tree_merge_segmented`] unchanged.
+pub fn loser_tree_merge_segmented_with<T: Ord + Copy>(
+    runs: &[&[T]],
+    out: &mut [T],
+    segment_elems: usize,
+    kernel: LeafKernel<T>,
+) {
+    if runs.len() != 2 {
+        loser_tree_merge_segmented(runs, out, segment_elems);
+        return;
+    }
+    let (a, b) = (runs[0], runs[1]);
+    let total = a.len() + b.len();
+    assert_eq!(out.len(), total, "output must hold all input elements");
+    if segment_elems == 0 {
+        kernel.merge(a, b, out, total);
+        return;
+    }
+    // Serial Alg 3 walk: merge one `segment_elems`-output window at a
+    // time; Lemma 16 bounds each window's inputs to `wlen` consecutive
+    // elements of each run starting at the cursor.
+    let mut a0 = 0usize;
+    let mut b0 = 0usize;
+    let mut done = 0usize;
+    while done < total {
+        let wlen = segment_elems.min(total - done);
+        let a_win = &a[a0..(a0 + wlen).min(a.len())];
+        let b_win = &b[b0..(b0 + wlen).min(b.len())];
+        kernel.merge(a_win, b_win, &mut out[done..done + wlen], wlen);
+        let end = diagonal_intersection(a_win, b_win, wlen);
+        a0 += end.a;
+        b0 += end.b;
+        done += wlen;
+    }
+    debug_assert_eq!(a0, a.len());
+    debug_assert_eq!(b0, b.len());
+}
+
 /// One tree-level pair merge into a freshly allocated buffer, routed
 /// through the pool when one is provided. Shared by both tree entry
 /// points so the uninit-buffer handling lives in exactly one place.
@@ -280,12 +344,15 @@ fn merge_pair<T: Ord + Copy + Send + Sync>(
     y: &[T],
     p: usize,
     pool: Option<&WorkerPool>,
+    kernel: LeafKernel<T>,
 ) -> Vec<T> {
     // Fully overwritten by the merge below (see crate::uninit_vec).
     let mut out = crate::uninit_vec(x.len() + y.len());
     match pool {
-        Some(pl) => super::parallel::parallel_merge_with_pool(pl, x, y, &mut out, p),
-        None => parallel_merge(x, y, &mut out, p),
+        Some(pl) => {
+            super::parallel::parallel_merge_with_pool_kernel(pl, x, y, &mut out, p, kernel)
+        }
+        None => super::parallel::parallel_merge_kernel(x, y, &mut out, p, kernel),
     }
     out
 }
@@ -296,9 +363,20 @@ fn merge_pair<T: Ord + Copy + Send + Sync>(
 /// persistent worker pool (spawns scoped threads otherwise). Returns
 /// the merged vector.
 pub fn parallel_tree_merge<T: Ord + Copy + Send + Sync>(
+    runs: Vec<Vec<T>>,
+    p: usize,
+    pool: Option<&WorkerPool>,
+) -> Vec<T> {
+    parallel_tree_merge_kernel(runs, p, pool, LeafKernel::hybrid())
+}
+
+/// [`parallel_tree_merge`] with an explicit [`LeafKernel`] threaded
+/// into every pairwise level's per-segment leaves.
+pub fn parallel_tree_merge_kernel<T: Ord + Copy + Send + Sync>(
     mut runs: Vec<Vec<T>>,
     p: usize,
     pool: Option<&WorkerPool>,
+    kernel: LeafKernel<T>,
 ) -> Vec<T> {
     assert!(p > 0);
     runs.retain(|r| !r.is_empty());
@@ -310,7 +388,7 @@ pub fn parallel_tree_merge<T: Ord + Copy + Send + Sync>(
         let mut it = runs.into_iter();
         while let Some(x) = it.next() {
             match it.next() {
-                Some(y) => next.push(merge_pair(&x, &y, p, pool)),
+                Some(y) => next.push(merge_pair(&x, &y, p, pool, kernel)),
                 None => next.push(x),
             }
         }
@@ -343,7 +421,7 @@ pub fn parallel_tree_merge_refs<T: Ord + Copy + Send + Sync>(
     for pair in runs.chunks(2) {
         match pair {
             [single] => next.push(single.to_vec()),
-            _ => next.push(merge_pair(pair[0], pair[1], p, pool)),
+            _ => next.push(merge_pair(pair[0], pair[1], p, pool, LeafKernel::hybrid())),
         }
     }
     parallel_tree_merge(next, p, pool)
@@ -497,6 +575,35 @@ mod tests {
         let mut cursors = vec![0usize];
         let mut out = vec![0i64; 2];
         loser_tree_merge_bounded(&refs, &mut cursors, &mut out);
+    }
+
+    #[test]
+    fn kernel_variants_match_tournament() {
+        use super::super::kernel::MergeKernel;
+        let mut rng = Xoshiro256::seeded(0x6B33);
+        for k in [0usize, 1, 2, 3, 5] {
+            let runs = random_runs(&mut rng, k, 90);
+            let refs: Vec<&[i64]> = runs.iter().map(|r| r.as_slice()).collect();
+            let n: usize = refs.iter().map(|r| r.len()).sum();
+            let mut expected = vec![0i64; n];
+            loser_tree_merge(&refs, &mut expected);
+            for req in [
+                MergeKernel::Scalar,
+                MergeKernel::Branchless,
+                MergeKernel::Hybrid,
+                MergeKernel::Simd,
+            ] {
+                let kernel = LeafKernel::<i64>::select(req);
+                let mut out = vec![0i64; n];
+                loser_tree_merge_with(&refs, &mut out, kernel);
+                assert_eq!(out, expected, "unsegmented req={req:?} k={k}");
+                for window in [0usize, 1, 7, 1 << 20] {
+                    let mut out = vec![0i64; n];
+                    loser_tree_merge_segmented_with(&refs, &mut out, window, kernel);
+                    assert_eq!(out, expected, "req={req:?} k={k} window={window}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -299,6 +299,23 @@ pub fn parallel_kway_merge<T: Ord + Copy + Send + Sync>(
     p: usize,
     pool: Option<&WorkerPool>,
 ) {
+    parallel_kway_merge_with(runs, out, p, pool, super::kernel::LeafKernel::hybrid());
+}
+
+/// [`parallel_kway_merge`] with an explicit
+/// [`LeafKernel`](super::kernel::LeafKernel) for the pairwise
+/// (`k == 2`) leaves — both the degenerate sequential pass and every
+/// per-segment merge route through
+/// [`loser_tree_merge_with`](super::kway::loser_tree_merge_with), so
+/// two-run jobs run on the configured kernel while true k-way shapes
+/// use the tournament unchanged.
+pub fn parallel_kway_merge_with<T: Ord + Copy + Send + Sync>(
+    runs: &[&[T]],
+    out: &mut [T],
+    p: usize,
+    pool: Option<&WorkerPool>,
+    kernel: super::kernel::LeafKernel<T>,
+) {
     let total: usize = runs.iter().map(|r| r.len()).sum();
     assert_eq!(out.len(), total, "output must hold all input elements");
     assert!(p > 0);
@@ -308,7 +325,7 @@ pub fn parallel_kway_merge<T: Ord + Copy + Send + Sync>(
     if p == 1 || total < 2 * p || runs.len() < 2 {
         // Degenerate shapes: one sequential pass is both correct and
         // faster than any parallel setup.
-        super::kway::loser_tree_merge(runs, out);
+        super::kway::loser_tree_merge_with(runs, out, kernel);
         return;
     }
     let segments = partition_kway_merge_path_with_pool(runs, p, pool);
@@ -328,7 +345,7 @@ pub fn parallel_kway_merge<T: Ord + Copy + Send + Sync>(
         // [0, total) by construction, so each thread gets an exclusive
         // window.
         let chunk = unsafe { shared.slice_mut(seg.out_range.start, seg.out_range.len()) };
-        super::kway::loser_tree_merge(&parts, chunk);
+        super::kway::loser_tree_merge_with(&parts, chunk, kernel);
     };
     match pool {
         Some(pl) => pl.run_scoped(p, body),
@@ -406,6 +423,21 @@ pub fn segmented_kway_merge<T: Ord + Copy + Send + Sync>(
     cfg: KwaySegmentedConfig,
     pool: Option<&WorkerPool>,
 ) {
+    segmented_kway_merge_with(runs, out, cfg, pool, super::kernel::LeafKernel::hybrid());
+}
+
+/// [`segmented_kway_merge`] with an explicit
+/// [`LeafKernel`](super::kernel::LeafKernel) for the pairwise window
+/// leaves (via
+/// [`loser_tree_merge_segmented_with`](super::kway::loser_tree_merge_segmented_with));
+/// true k-way shapes use the bounded tournament unchanged.
+pub fn segmented_kway_merge_with<T: Ord + Copy + Send + Sync>(
+    runs: &[&[T]],
+    out: &mut [T],
+    cfg: KwaySegmentedConfig,
+    pool: Option<&WorkerPool>,
+    kernel: super::kernel::LeafKernel<T>,
+) {
     let total: usize = runs.iter().map(|r| r.len()).sum();
     assert_eq!(out.len(), total, "output must hold all input elements");
     assert!(cfg.segment_elems > 0, "segment_elems must be positive");
@@ -417,7 +449,7 @@ pub fn segmented_kway_merge<T: Ord + Copy + Send + Sync>(
     if p == 1 || total < 2 * p || runs.len() < 2 {
         // Degenerate parallel shapes still merge windowed — the cache
         // bound is the point of this entry, not the thread count.
-        super::kway::loser_tree_merge_segmented(runs, out, cfg.segment_elems);
+        super::kway::loser_tree_merge_segmented_with(runs, out, cfg.segment_elems, kernel);
         return;
     }
     let segments = partition_kway_merge_path_with_pool(runs, p, pool);
@@ -437,7 +469,7 @@ pub fn segmented_kway_merge<T: Ord + Copy + Send + Sync>(
         // [0, total) by construction (same invariant as the flat
         // engine), so each thread gets an exclusive window.
         let chunk = unsafe { shared.slice_mut(seg.out_range.start, seg.out_range.len()) };
-        super::kway::loser_tree_merge_segmented(&parts, chunk, cfg.segment_elems);
+        super::kway::loser_tree_merge_segmented_with(&parts, chunk, cfg.segment_elems, kernel);
     };
     match pool {
         Some(pl) => pl.run_scoped(p, body),

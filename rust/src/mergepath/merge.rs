@@ -46,16 +46,17 @@ pub fn merge_bounded<T: Ord + Copy>(a: &[T], b: &[T], out: &mut [T], len: usize)
         }
         k += 1;
     }
-    // Tails.
-    while k < len && i < a.len() {
-        out[k] = a[i];
-        i += 1;
-        k += 1;
+    // Tails: exactly one input can be unexhausted here, so the rest is
+    // a bulk copy (memcpy) rather than a per-element bounds-checked loop.
+    if k < len && i < a.len() {
+        let take = (len - k).min(a.len() - i);
+        out[k..k + take].copy_from_slice(&a[i..i + take]);
+        k += take;
     }
-    while k < len && j < b.len() {
-        out[k] = b[j];
-        j += 1;
-        k += 1;
+    if k < len && j < b.len() {
+        let take = (len - k).min(b.len() - j);
+        out[k..k + take].copy_from_slice(&b[j..j + take]);
+        k += take;
     }
     debug_assert_eq!(k, len);
 }
@@ -87,15 +88,16 @@ pub fn branchless_merge_bounded<T: Ord + Copy>(a: &[T], b: &[T], out: &mut [T], 
             k += 1;
         }
     }
-    while k < len && i < a.len() {
-        out[k] = a[i];
-        i += 1;
-        k += 1;
+    // Tails as bulk copies, as in `merge_bounded`.
+    if k < len && i < a.len() {
+        let take = (len - k).min(a.len() - i);
+        out[k..k + take].copy_from_slice(&a[i..i + take]);
+        k += take;
     }
-    while k < len && j < b.len() {
-        out[k] = b[j];
-        j += 1;
-        k += 1;
+    if k < len && j < b.len() {
+        let take = (len - k).min(b.len() - j);
+        out[k..k + take].copy_from_slice(&b[j..j + take]);
+        k += take;
     }
     debug_assert_eq!(k, len);
 }

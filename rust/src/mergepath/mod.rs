@@ -7,6 +7,9 @@
 //!   a cross diagonal by binary search.
 //! - [`partition`] — Thm 14: `p`-way equisized partition of the path.
 //! - [`merge`] — sequential merge primitives (the per-segment kernels).
+//! - [`kernel`] — leaf-kernel dispatch: branchless / hybrid / SIMD
+//!   bitonic-network bounded merges behind one per-job [`LeafKernel`]
+//!   function pointer, selected by the `merge.kernel` knob.
 //! - [`inplace`] — block-swap in-place pairwise merge (zero-allocation,
 //!   stable) under the same diagonal partition (arxiv 2005.12648).
 //! - [`parallel`] — Alg 1: `ParallelMerge`.
@@ -23,6 +26,7 @@
 pub mod cache_sort;
 pub mod diagonal;
 pub mod inplace;
+pub mod kernel;
 pub mod kway;
 pub mod kway_path;
 pub mod merge;
@@ -33,25 +37,37 @@ pub mod select;
 pub mod sort;
 
 pub use diagonal::{diagonal_intersection, PathPoint};
+pub use kernel::{cpu_features, tagged_backend, CpuFeatures, KernelKind, LeafKernel, MergeKernel};
 pub use inplace::{
     concat_for_inplace, merge_in_place, parallel_inplace_merge,
     parallel_inplace_merge_with_pool,
 };
-pub use merge::{gallop_merge_into, hybrid_merge_bounded, merge_bounded, merge_into};
-pub use parallel::{parallel_merge, parallel_merge_with_pool};
+pub use merge::{
+    branchless_merge_bounded, gallop_merge_into, hybrid_merge_bounded, merge_bounded, merge_into,
+};
+pub use parallel::{
+    parallel_merge, parallel_merge_kernel, parallel_merge_with_pool,
+    parallel_merge_with_pool_kernel,
+};
 pub use partition::{partition_merge_path, MergeSegment};
 pub use segmented::{
-    segmented_parallel_merge, segmented_parallel_merge_with_pool, SegmentedConfig,
+    segmented_parallel_merge, segmented_parallel_merge_kernel,
+    segmented_parallel_merge_with_pool, segmented_parallel_merge_with_pool_kernel,
+    SegmentedConfig,
 };
-pub use sort::{parallel_merge_sort, parallel_merge_sort_with_pool};
+pub use sort::{
+    parallel_merge_sort, parallel_merge_sort_kernel, parallel_merge_sort_with_pool,
+    parallel_merge_sort_with_pool_kernel,
+};
 pub use cache_sort::{cache_efficient_sort, CacheSortConfig};
 pub use kway::{
     loser_tree_merge, loser_tree_merge_bounded, loser_tree_merge_segmented,
-    parallel_tree_merge, parallel_tree_merge_refs,
+    loser_tree_merge_segmented_with, loser_tree_merge_with, parallel_tree_merge,
+    parallel_tree_merge_kernel, parallel_tree_merge_refs,
 };
 pub use kway_path::{
-    kway_rank_split, parallel_kway_merge, partition_kway_merge_path,
-    partition_kway_merge_path_with_pool, segmented_kway_merge, KwaySegment,
-    KwaySegmentedConfig,
+    kway_rank_split, parallel_kway_merge, parallel_kway_merge_with,
+    partition_kway_merge_path, partition_kway_merge_path_with_pool, segmented_kway_merge,
+    segmented_kway_merge_with, KwaySegment, KwaySegmentedConfig,
 };
 pub use select::{multiselect, multiselect_independent};

@@ -9,7 +9,7 @@
 //! `O(N + p·log N)`.
 
 use super::diagonal::diagonal_intersection;
-use super::merge::hybrid_merge_bounded;
+use super::kernel::LeafKernel;
 use crate::exec::{fork_join, WorkerPool};
 
 /// Merge sorted `a` and `b` into `out` using `p` threads.
@@ -25,17 +25,30 @@ pub fn parallel_merge<T: Ord + Copy + Send + Sync>(
     out: &mut [T],
     p: usize,
 ) {
+    parallel_merge_kernel(a, b, out, p, LeafKernel::hybrid());
+}
+
+/// [`parallel_merge`] with an explicit per-segment [`LeafKernel`]
+/// (resolved once by the caller — typically the coordinator, from the
+/// `merge.kernel` knob).
+pub fn parallel_merge_kernel<T: Ord + Copy + Send + Sync>(
+    a: &[T],
+    b: &[T],
+    out: &mut [T],
+    p: usize,
+    kernel: LeafKernel<T>,
+) {
     assert_eq!(out.len(), a.len() + b.len());
     assert!(p > 0);
     let n = out.len();
     if p == 1 || n < 2 * p {
         // Degenerate sizes: sequential is both correct and faster.
-        hybrid_merge_bounded(a, b, out, n);
+        kernel.merge(a, b, out, n);
         return;
     }
     let shared = SliceParts::new(out);
     fork_join(p, |tid| {
-        merge_segment(a, b, &shared, n, p, tid);
+        merge_segment(a, b, &shared, n, p, tid, kernel);
     });
 }
 
@@ -49,16 +62,29 @@ pub fn parallel_merge_with_pool<T: Ord + Copy + Send + Sync>(
     out: &mut [T],
     p: usize,
 ) {
+    parallel_merge_with_pool_kernel(pool, a, b, out, p, LeafKernel::hybrid());
+}
+
+/// [`parallel_merge_with_pool`] with an explicit per-segment
+/// [`LeafKernel`].
+pub fn parallel_merge_with_pool_kernel<T: Ord + Copy + Send + Sync>(
+    pool: &WorkerPool,
+    a: &[T],
+    b: &[T],
+    out: &mut [T],
+    p: usize,
+    kernel: LeafKernel<T>,
+) {
     assert_eq!(out.len(), a.len() + b.len());
     assert!(p > 0);
     let n = out.len();
     if p == 1 || n < 2 * p {
-        hybrid_merge_bounded(a, b, out, n);
+        kernel.merge(a, b, out, n);
         return;
     }
     let shared = SliceParts::new(out);
     pool.run_scoped(p, |tid| {
-        merge_segment(a, b, &shared, n, p, tid);
+        merge_segment(a, b, &shared, n, p, tid, kernel);
     });
 }
 
@@ -72,6 +98,7 @@ fn merge_segment<T: Ord + Copy>(
     n: usize,
     p: usize,
     tid: usize,
+    kernel: LeafKernel<T>,
 ) {
     let d_start = tid * n / p;
     let d_end = (tid + 1) * n / p;
@@ -82,7 +109,7 @@ fn merge_segment<T: Ord + Copy>(
     // SAFETY: output ranges [d_start, d_end) are disjoint across tids
     // and tile [0, n) (Thm 9), so each thread gets an exclusive window.
     let chunk = unsafe { out.slice_mut(d_start, d_end - d_start) };
-    hybrid_merge_bounded(&a[start.a..], &b[start.b..], chunk, d_end - d_start);
+    kernel.merge(&a[start.a..], &b[start.b..], chunk, d_end - d_start);
 }
 
 /// Shared-output helper: hands out *disjoint* mutable windows of one
@@ -209,6 +236,33 @@ mod tests {
             let mut out = vec![0i64; a.len() + b.len()];
             parallel_merge_with_pool(&pool, &a, &b, &mut out, 4);
             assert_eq!(out, expected);
+        }
+    }
+
+    #[test]
+    fn kernel_variants_match_for_all_p() {
+        use super::super::kernel::MergeKernel;
+        let mut rng = Xoshiro256::seeded(0x6B31);
+        for _ in 0..8 {
+            let n_a = rng.range(0, 300);
+            let a = random_sorted(&mut rng, n_a, 40);
+            let n_b = rng.range(0, 300);
+            let b = random_sorted(&mut rng, n_b, 40);
+            let expected = oracle(&a, &b);
+            for req in [
+                MergeKernel::Auto,
+                MergeKernel::Scalar,
+                MergeKernel::Branchless,
+                MergeKernel::Hybrid,
+                MergeKernel::Simd,
+            ] {
+                let kernel = LeafKernel::<i64>::select(req);
+                for p in [1, 3, 8] {
+                    let mut out = vec![0i64; a.len() + b.len()];
+                    parallel_merge_kernel(&a, &b, &mut out, p, kernel);
+                    assert_eq!(out, expected, "req={req:?} p={p}");
+                }
+            }
         }
     }
 

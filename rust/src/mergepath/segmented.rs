@@ -16,7 +16,7 @@
 //! (Table 1).
 
 use super::diagonal::diagonal_intersection;
-use super::merge::hybrid_merge_bounded;
+use super::kernel::LeafKernel;
 use super::parallel::SliceParts;
 use crate::exec::{fork_join, WorkerPool};
 
@@ -66,7 +66,20 @@ pub fn segmented_parallel_merge<T: Ord + Copy + Send + Sync>(
     out: &mut [T],
     cfg: SegmentedConfig,
 ) {
-    segmented_merge_impl(a, b, out, cfg, None);
+    segmented_merge_impl(a, b, out, cfg, None, LeafKernel::hybrid());
+}
+
+/// [`segmented_parallel_merge`] with an explicit window-leaf
+/// [`LeafKernel`] (resolved once by the caller from the `merge.kernel`
+/// knob).
+pub fn segmented_parallel_merge_kernel<T: Ord + Copy + Send + Sync>(
+    a: &[T],
+    b: &[T],
+    out: &mut [T],
+    cfg: SegmentedConfig,
+    kernel: LeafKernel<T>,
+) {
+    segmented_merge_impl(a, b, out, cfg, None, kernel);
 }
 
 /// [`segmented_parallel_merge`] with every per-segment fork-join
@@ -81,7 +94,20 @@ pub fn segmented_parallel_merge_with_pool<T: Ord + Copy + Send + Sync>(
     out: &mut [T],
     cfg: SegmentedConfig,
 ) {
-    segmented_merge_impl(a, b, out, cfg, Some(pool));
+    segmented_merge_impl(a, b, out, cfg, Some(pool), LeafKernel::hybrid());
+}
+
+/// [`segmented_parallel_merge_with_pool`] with an explicit window-leaf
+/// [`LeafKernel`].
+pub fn segmented_parallel_merge_with_pool_kernel<T: Ord + Copy + Send + Sync>(
+    pool: &WorkerPool,
+    a: &[T],
+    b: &[T],
+    out: &mut [T],
+    cfg: SegmentedConfig,
+    kernel: LeafKernel<T>,
+) {
+    segmented_merge_impl(a, b, out, cfg, Some(pool), kernel);
 }
 
 fn segmented_merge_impl<T: Ord + Copy + Send + Sync>(
@@ -90,6 +116,7 @@ fn segmented_merge_impl<T: Ord + Copy + Send + Sync>(
     out: &mut [T],
     cfg: SegmentedConfig,
     pool: Option<&WorkerPool>,
+    kernel: LeafKernel<T>,
 ) {
     assert_eq!(out.len(), a.len() + b.len());
     assert!(cfg.segment_len > 0, "segment_len must be positive");
@@ -112,7 +139,7 @@ fn segmented_merge_impl<T: Ord + Copy + Send + Sync>(
         let out_seg = &mut out[done..done + wlen];
 
         if p == 1 || wlen < 2 * p {
-            hybrid_merge_bounded(a_win, b_win, out_seg, wlen);
+            kernel.merge(a_win, b_win, out_seg, wlen);
         } else {
             // Parallel merge *within* the window: each core searches its
             // sub-diagonal of the window's (local) merge matrix and
@@ -128,12 +155,7 @@ fn segmented_merge_impl<T: Ord + Copy + Send + Sync>(
                 let start = diagonal_intersection(a_win, b_win, d_start);
                 // SAFETY: [d_start, d_end) windows are disjoint across tids.
                 let chunk = unsafe { shared.slice_mut(d_start, d_end - d_start) };
-                hybrid_merge_bounded(
-                    &a_win[start.a..],
-                    &b_win[start.b..],
-                    chunk,
-                    d_end - d_start,
-                );
+                kernel.merge(&a_win[start.a..], &b_win[start.b..], chunk, d_end - d_start);
             };
             match pool {
                 Some(pl) => pl.run_scoped(p, body),
@@ -280,5 +302,41 @@ mod tests {
             SegmentedConfig { segment_len: 8, threads: 2 },
         );
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn kernel_variants_match_incl_l1_windows() {
+        use super::super::kernel::{LeafKernel, MergeKernel};
+        let mut rng = Xoshiro256::seeded(0x6B32);
+        for _ in 0..6 {
+            let n_a = rng.range(0, 300);
+            let a = random_sorted(&mut rng, n_a, 16);
+            let n_b = rng.range(0, 300);
+            let b = random_sorted(&mut rng, n_b, 16);
+            let expected = oracle(&a, &b);
+            for req in [
+                MergeKernel::Scalar,
+                MergeKernel::Branchless,
+                MergeKernel::Hybrid,
+                MergeKernel::Simd,
+            ] {
+                let kernel = LeafKernel::<i64>::select(req);
+                // L = 1 degenerates every window to a single-output
+                // leaf call; larger L exercises in-window parallelism.
+                for l in [1, 7, 128] {
+                    for p in [1, 4] {
+                        let mut out = vec![0i64; a.len() + b.len()];
+                        segmented_parallel_merge_kernel(
+                            &a,
+                            &b,
+                            &mut out,
+                            SegmentedConfig { segment_len: l, threads: p },
+                            kernel,
+                        );
+                        assert_eq!(out, expected, "req={req:?} L={l} p={p}");
+                    }
+                }
+            }
+        }
     }
 }

@@ -11,11 +11,23 @@
 //!
 //! Time `O(N/p·log N + log p·log N)`.
 
-use super::parallel::{parallel_merge, SliceParts};
+use super::kernel::LeafKernel;
+use super::parallel::SliceParts;
 use crate::exec::{fork_join, WorkerPool};
 
 /// Sort `data` in place (stable) using `p` threads.
 pub fn parallel_merge_sort<T: Ord + Copy + Send + Sync>(data: &mut [T], p: usize) {
+    parallel_merge_sort_kernel(data, p, LeafKernel::hybrid());
+}
+
+/// [`parallel_merge_sort`] with an explicit [`LeafKernel`] for every
+/// pairwise merge leaf of the sort's merge tree (the base-case chunk
+/// sorts are unaffected — they use the standard library's stable sort).
+pub fn parallel_merge_sort_kernel<T: Ord + Copy + Send + Sync>(
+    data: &mut [T],
+    p: usize,
+    kernel: LeafKernel<T>,
+) {
     assert!(p > 0);
     let n = data.len();
     if n <= 1 {
@@ -31,7 +43,7 @@ pub fn parallel_merge_sort<T: Ord + Copy + Send + Sync>(data: &mut [T], p: usize
     unsafe {
         buf.set_len(n);
     }
-    sort_rounds(data, &mut buf, p, None);
+    sort_rounds(data, &mut buf, p, None, kernel);
 }
 
 /// Pool variant of [`parallel_merge_sort`].
@@ -39,6 +51,17 @@ pub fn parallel_merge_sort_with_pool<T: Ord + Copy + Send + Sync>(
     pool: &WorkerPool,
     data: &mut [T],
     p: usize,
+) {
+    parallel_merge_sort_with_pool_kernel(pool, data, p, LeafKernel::hybrid());
+}
+
+/// [`parallel_merge_sort_with_pool`] with an explicit [`LeafKernel`]
+/// for the merge-tree leaves.
+pub fn parallel_merge_sort_with_pool_kernel<T: Ord + Copy + Send + Sync>(
+    pool: &WorkerPool,
+    data: &mut [T],
+    p: usize,
+    kernel: LeafKernel<T>,
 ) {
     assert!(p > 0);
     let n = data.len();
@@ -54,7 +77,7 @@ pub fn parallel_merge_sort_with_pool<T: Ord + Copy + Send + Sync>(
     unsafe {
         buf.set_len(n);
     }
-    sort_rounds(data, &mut buf, p, Some(pool));
+    sort_rounds(data, &mut buf, p, Some(pool), kernel);
 }
 
 /// Chunk boundaries `i·n/p` used for the base sorting stage.
@@ -67,6 +90,7 @@ fn sort_rounds<T: Ord + Copy + Send + Sync>(
     buf: &mut [T],
     p: usize,
     pool: Option<&WorkerPool>,
+    kernel: LeafKernel<T>,
 ) {
     let n = data.len();
     // Round up the leaf count to a power of two so the merge tree is a
@@ -118,12 +142,7 @@ fn sort_rounds<T: Ord + Copy + Send + Sync>(
                         (bounds_ref[2 * k], bounds_ref[2 * k + 1], bounds_ref[2 * k + 2]);
                     // SAFETY: output ranges [s0, s2) disjoint across pairs.
                     let out = unsafe { shared.slice_mut(s0, s2 - s0) };
-                    super::merge::hybrid_merge_bounded(
-                        &src[s0..s1],
-                        &src[s1..s2],
-                        out,
-                        s2 - s0,
-                    );
+                    kernel.merge(&src[s0..s1], &src[s1..s2], out, s2 - s0);
                     k += p;
                 }
             };
@@ -137,14 +156,21 @@ fn sort_rounds<T: Ord + Copy + Send + Sync>(
                 let (s0, s1, s2) = (bounds[2 * k], bounds[2 * k + 1], bounds[2 * k + 2]);
                 let out = &mut dst[s0..s2];
                 match pool {
-                    Some(pl) => super::parallel::parallel_merge_with_pool(
+                    Some(pl) => super::parallel::parallel_merge_with_pool_kernel(
                         pl,
                         &src[s0..s1],
                         &src[s1..s2],
                         out,
                         p,
+                        kernel,
                     ),
-                    None => parallel_merge(&src[s0..s1], &src[s1..s2], out, p),
+                    None => super::parallel::parallel_merge_kernel(
+                        &src[s0..s1],
+                        &src[s1..s2],
+                        out,
+                        p,
+                        kernel,
+                    ),
                 }
             }
         }
@@ -229,6 +255,25 @@ mod tests {
             let mut got = v;
             parallel_merge_sort_with_pool(&pool, &mut got, 4);
             assert_eq!(got, expected);
+        }
+    }
+
+    #[test]
+    fn kernel_variants_sort_identically() {
+        use super::super::kernel::MergeKernel;
+        let mut rng = Xoshiro256::seeded(0x6B34);
+        let v: Vec<i64> = (0..3000).map(|_| rng.next_i32() as i64).collect();
+        let mut expected = v.clone();
+        expected.sort();
+        for req in [
+            MergeKernel::Scalar,
+            MergeKernel::Branchless,
+            MergeKernel::Hybrid,
+            MergeKernel::Simd,
+        ] {
+            let mut got = v.clone();
+            parallel_merge_sort_kernel(&mut got, 4, LeafKernel::select(req));
+            assert_eq!(got, expected, "req={req:?}");
         }
     }
 

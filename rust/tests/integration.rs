@@ -2,7 +2,7 @@
 //! working together, including the XLA route when artifacts exist.
 
 use mergeflow::bench::workload::{gen_sorted_pair, gen_sorted_runs, gen_unsorted, WorkloadKind};
-use mergeflow::config::{Backend, InplaceMode, MergeflowConfig, RawConfig};
+use mergeflow::config::{Backend, InplaceMode, MergeKernel, MergeflowConfig, RawConfig};
 use mergeflow::coordinator::{JobKind, MergeService};
 use mergeflow::mergepath::{loser_tree_merge, parallel_kway_merge};
 use mergeflow::runtime::{ArtifactManifest, XlaExecutor};
@@ -33,6 +33,7 @@ fn base_config() -> MergeflowConfig {
         compact_eager_min_len: 0,
         memory_budget: 0,
         inplace: InplaceMode::Auto,
+        kernel: MergeKernel::Auto,
         artifacts_dir: "artifacts".into(),
     }
 }

@@ -10,7 +10,7 @@
 #[global_allocator]
 static ALLOC: mergeflow::testutil::CountingAlloc = mergeflow::testutil::CountingAlloc;
 
-use mergeflow::config::{Backend, InplaceMode, MergeflowConfig};
+use mergeflow::config::{Backend, InplaceMode, MergeKernel, MergeflowConfig};
 use mergeflow::coordinator::{JobKind, MergeService};
 use mergeflow::mergepath::{concat_for_inplace, merge_in_place};
 use mergeflow::testutil::CountingAlloc;
@@ -82,6 +82,7 @@ fn inplace_route_never_allocates_a_second_output_buffer() {
         compact_eager_min_len: 0, // eager off: classic 2-run routing
         memory_budget: 0,
         inplace: InplaceMode::Always,
+        kernel: MergeKernel::Auto,
         artifacts_dir: "artifacts".into(),
     };
     let svc = MergeService::start(cfg).unwrap();

@@ -10,7 +10,7 @@
 use mergeflow::bench::workload::{
     gen_sorted_pair, gen_sorted_runs, gen_unsorted, WorkloadKind,
 };
-use mergeflow::config::{Backend, InplaceMode, MergeflowConfig, ServerConfig};
+use mergeflow::config::{Backend, InplaceMode, MergeKernel, MergeflowConfig, ServerConfig};
 use mergeflow::coordinator::{JobKind, MergeService};
 use mergeflow::server::frame::{
     self, err, tag, Cursor, FrameError, ReadOpts, PROTOCOL_VERSION,
@@ -40,6 +40,7 @@ fn base_config() -> MergeflowConfig {
         compact_eager_min_len: 0,
         memory_budget: 0,
         inplace: InplaceMode::Auto,
+        kernel: MergeKernel::Auto,
         artifacts_dir: "artifacts".into(),
     }
 }

@@ -8,7 +8,7 @@
 //! itself.
 
 use mergeflow::bench::workload::{gen_record_runs, WorkloadKind};
-use mergeflow::config::{Backend, InplaceMode, MergeflowConfig};
+use mergeflow::config::{Backend, InplaceMode, MergeKernel, MergeflowConfig};
 use mergeflow::coordinator::{JobKind, MergeService};
 use std::time::{Duration, Instant};
 
@@ -34,6 +34,7 @@ fn base_config() -> MergeflowConfig {
         compact_eager_min_len: 0,
         memory_budget: 0,
         inplace: InplaceMode::Auto,
+        kernel: MergeKernel::Auto,
         artifacts_dir: "artifacts".into(),
     }
 }
@@ -387,4 +388,112 @@ fn typed_service_end_to_end_all_paths_agree() {
     let streamed = session.seal().unwrap().wait().unwrap();
     assert_eq!(streamed.output, expected, "route={}", streamed.backend);
     stream_svc.shutdown();
+}
+
+/// Forced leaf kernels (`merge.kernel = branchless`) through the
+/// service: duplicate-heavy record merges must stay bit-identical to
+/// the stable oracle, and the backend tag must carry the resolved
+/// kernel suffix (which the per-backend counters strip again).
+#[test]
+fn forced_branchless_kernel_is_stable_and_tagged() {
+    let mut cfg = base_config();
+    cfg.kernel = MergeKernel::Branchless;
+    let svc = MergeService::<Rec>::start(cfg).unwrap();
+    // Pairwise with dense ties, incl. empty and one-sided inputs.
+    let gen = |src: u64, n: usize, dup: usize| -> Vec<Rec> {
+        (0..n)
+            .map(|off| ((off / dup) as u64, (src << 32) | off as u64))
+            .collect()
+    };
+    for &(na, nb, dup) in
+        &[(3000usize, 3000usize, 64usize), (0, 2000, 1), (2500, 0, 50), (1, 4000, 1)]
+    {
+        let (a, b) = (gen(0, na, dup), gen(1, nb, dup));
+        let mut expected: Vec<Rec> = a.iter().chain(b.iter()).copied().collect();
+        expected.sort_by_key(|r| r.0);
+        let res = svc.submit_blocking(JobKind::Merge { a, b }).unwrap();
+        assert_eq!(res.backend, "native+branchless", "na={na} nb={nb}");
+        assert_eq!(res.output, expected, "na={na} nb={nb} dup={dup}");
+    }
+    // Compactions: the flat typed route keeps its base tag + suffix.
+    let runs = dup_runs(6, 3000, 64);
+    let expected = stable_oracle(&runs);
+    let res = svc.submit_blocking(JobKind::Compact { runs }).unwrap();
+    assert_eq!(res.backend, "native-kway-typed+branchless");
+    assert_eq!(res.output, expected);
+    // Suffixes are stripped for the per-backend counters; the kernel
+    // counter sees every kernel-dispatched job.
+    assert_eq!(svc.stats().native_jobs.get(), 4);
+    assert_eq!(svc.stats().kway_jobs.get(), 1);
+    assert_eq!(svc.stats().kernel_branchless_jobs.get(), 5);
+    svc.shutdown();
+
+    // The L = 1 segmented-window degenerate under the forced kernel.
+    let mut cfg = base_config();
+    cfg.kernel = MergeKernel::Branchless;
+    cfg.segmented = true;
+    cfg.segment_len = 1;
+    let svc = MergeService::<Rec>::start(cfg).unwrap();
+    let (a, b) = (gen(0, 600, 50), gen(1, 400, 50));
+    let mut expected: Vec<Rec> = a.iter().chain(b.iter()).copied().collect();
+    expected.sort_by_key(|r| r.0);
+    let res = svc.submit_blocking(JobKind::Merge { a, b }).unwrap();
+    assert_eq!(res.backend, "native-segmented+branchless");
+    assert_eq!(res.output, expected, "L=1 windows under the forced kernel");
+    svc.shutdown();
+}
+
+/// `merge.kernel = simd` must degrade to branchless for payload
+/// records (the suffix shows the kernel that actually ran), and serve
+/// scalar keys with the SIMD kernel when the build and CPU support it
+/// — bit-identical to the stable oracle either way.
+#[test]
+fn forced_simd_kernel_degrades_and_serves_scalars() {
+    // Payload records can never take the SIMD kernel.
+    let mut cfg = base_config();
+    cfg.kernel = MergeKernel::Simd;
+    let svc = MergeService::<Rec>::start(cfg).unwrap();
+    let runs = dup_runs(4, 2000, 64);
+    let expected = stable_oracle(&runs);
+    let res = svc.submit_blocking(JobKind::Compact { runs }).unwrap();
+    assert_eq!(
+        res.backend, "native-kway-typed+branchless",
+        "payload records degrade to branchless"
+    );
+    assert_eq!(res.output, expected);
+    assert_eq!(svc.stats().kernel_branchless_jobs.get(), 1);
+    assert_eq!(svc.stats().kernel_simd_jobs.get(), 0);
+    svc.shutdown();
+
+    // Scalar u64 keys: SIMD when compiled in and the CPU has SSE4.2,
+    // branchless otherwise — the suffix records which one ran. Equal
+    // scalar keys are bit-identical, so the stable contract is
+    // trivially preserved even under the in-register networks.
+    let mut cfg = base_config();
+    cfg.kernel = MergeKernel::Simd;
+    let svc = MergeService::<u64>::start(cfg).unwrap();
+    let simd_live = cfg!(feature = "simd") && mergeflow::mergepath::cpu_features().sse42;
+    let suffix = if simd_live { "+simd" } else { "+branchless" };
+    let a: Vec<u64> = (0..4000u64).map(|i| i / 64).collect();
+    let b: Vec<u64> = (0..3000u64).map(|i| i / 8).collect();
+    let mut expected: Vec<u64> = a.iter().chain(b.iter()).copied().collect();
+    expected.sort_unstable();
+    let res = svc.submit_blocking(JobKind::Merge { a, b }).unwrap();
+    assert_eq!(res.backend, format!("native{suffix}"));
+    assert_eq!(res.output, expected);
+    // Flat scalar compaction route keeps its base tag + suffix too.
+    let runs: Vec<Vec<u64>> = (0..5u64)
+        .map(|r| (0..2000u64).map(|i| (i + r) / 16).collect())
+        .collect();
+    let mut expected: Vec<u64> = runs.iter().flatten().copied().collect();
+    expected.sort_unstable();
+    let res = svc.submit_blocking(JobKind::Compact { runs }).unwrap();
+    assert_eq!(res.backend, format!("native-kway{suffix}"));
+    assert_eq!(res.output, expected);
+    if simd_live {
+        assert_eq!(svc.stats().kernel_simd_jobs.get(), 2);
+    } else {
+        assert_eq!(svc.stats().kernel_branchless_jobs.get(), 2);
+    }
+    svc.shutdown();
 }

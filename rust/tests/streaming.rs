@@ -5,7 +5,7 @@
 //! merging (eager shards dispatched before the final seal).
 
 use mergeflow::bench::workload::{gen_sorted_runs, WorkloadKind};
-use mergeflow::config::{Backend, InplaceMode, MergeflowConfig};
+use mergeflow::config::{Backend, InplaceMode, MergeKernel, MergeflowConfig};
 use mergeflow::coordinator::{JobKind, MergeService};
 use std::time::{Duration, Instant};
 
@@ -29,6 +29,7 @@ fn base_config() -> MergeflowConfig {
         compact_eager_min_len: 0,
         memory_budget: 0,
         inplace: InplaceMode::Auto,
+        kernel: MergeKernel::Auto,
         artifacts_dir: "artifacts".into(),
     }
 }
