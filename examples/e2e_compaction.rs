@@ -9,16 +9,25 @@
 //!
 //! The run reports throughput, latency quantiles and backend routing,
 //! and verifies every output against a numpy-style oracle. Quoted in
-//! EXPERIMENTS.md §E2E.
+//! EXPERIMENTS.md §E2E. The final phase exercises the persistent run
+//! store: a memory-budgeted service spills more data than fits in its
+//! budget, background compaction folds the levels, and a simulated
+//! restart recovers and reassembles everything bit-identically.
 //!
 //! Run: `cargo run --release --example e2e_compaction`
 
 use mergeflow::bench::workload::{gen_sorted_pair, WorkloadKind};
-use mergeflow::config::{Backend, InplaceMode, MergeKernel, MergeflowConfig, ServerConfig};
+use mergeflow::config::{
+    Backend, InplaceMode, MergeKernel, MergeflowConfig, ServerConfig, StoreConfig,
+    StorePolicy,
+};
 use mergeflow::coordinator::{JobKind, MergeService};
 use mergeflow::metrics::{fmt_ns, fmt_throughput, Timer};
 use mergeflow::rng::Xoshiro256;
 use mergeflow::server::{serve, Client};
+use mergeflow::store::{LevelScheduler, RunStore, StoreBridge};
+use mergeflow::Error;
+use std::sync::Arc;
 
 fn sorted_run(seed: u64, len: usize) -> Vec<i32> {
     let (run, _) = gen_sorted_pair(WorkloadKind::Uniform, len, 1, seed);
@@ -357,6 +366,148 @@ fn main() {
         assert!(stats.contains("tenant streamer:"), "missing tenant line:\n{stats}");
         server.shutdown();
         println!("wire server shut down cleanly");
+    }
+
+    // Phase 7 — the persistent run store: a memory-budgeted service
+    // spills twice its budget's worth of sorted runs to disk while a
+    // background LevelScheduler compacts the level-0 backlog, a FLUSH
+    // drains the store to policy, and after a simulated restart the
+    // surviving runs stream from their run files through a fresh
+    // compaction session into one sorted result — oracle-checked bit
+    // for bit. The budget is the point: at no moment do 4 MiB of keys
+    // sit in memory, yet all of them flow spill → compact → merge.
+    {
+        let budget = 2 << 20; // 2 MiB resident cap
+        let spill_runs = 32usize;
+        let spill_len = 32 << 10; // 32 runs × 128 KiB = 4 MiB = 2× budget
+        let store_dir = std::env::temp_dir()
+            .join(format!("mergeflow-e2e-store-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&store_dir);
+        let spill_cfg = MergeflowConfig {
+            workers: 2,
+            threads_per_job: 2,
+            queue_capacity: 64,
+            max_batch: 8,
+            batch_timeout_us: 100,
+            backend: Backend::Native,
+            segmented: false,
+            segment_len: 0,
+            kway_segment_elems: 0,
+            cache_bytes: 0,
+            kway_flat_max_k: 64,
+            compact_sharding: false,
+            compact_shard_min_len: 0,
+            compact_chunk_len: 0,
+            compact_eager_min_len: 0,
+            memory_budget: budget,
+            inplace: InplaceMode::Auto,
+            kernel: MergeKernel::Auto,
+            artifacts_dir: "artifacts".into(),
+        };
+        // level0_max_runs = 8 keeps every compaction pass (8 × 128 KiB
+        // = 1 MiB of ingest) admissible under the 2 MiB budget;
+        // level_fanout = 8 keeps L1 within policy for this volume.
+        let store_cfg = StoreConfig {
+            dir: store_dir.to_string_lossy().into_owned(),
+            policy: StorePolicy::Tiered,
+            level0_max_runs: 8,
+            level_fanout: 8,
+            block_bytes: 64 << 10,
+            compact_backoff_ms: 5,
+        };
+        let spill_svc =
+            Arc::new(MergeService::<i32>::start(spill_cfg.clone()).expect("spill service"));
+        let store = Arc::new(RunStore::<i32>::open(&store_cfg).expect("open store"));
+        spill_svc
+            .attach_store(Arc::new(StoreBridge::new(
+                Arc::clone(&store),
+                spill_svc.stats_arc(),
+            )))
+            .expect("attach store");
+        let scheduler = LevelScheduler::start(Arc::clone(&store), Arc::clone(&spill_svc));
+
+        let mut oracle: Vec<i32> = Vec::with_capacity(spill_runs * spill_len);
+        for i in 0..spill_runs {
+            let run = sorted_run(7_000 + i as u64, spill_len);
+            oracle.extend_from_slice(&run);
+            // Spills retry on BUSY: while a background compaction holds
+            // the budget, admission answers fail-fast Service errors.
+            loop {
+                match spill_svc.submit(JobKind::Spill { run: run.clone() }) {
+                    Ok(h) => {
+                        h.wait().expect("spill job");
+                        break;
+                    }
+                    Err(Error::Service(_)) => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(e) => panic!("spill rejected: {e}"),
+                }
+            }
+        }
+        oracle.sort_unstable();
+        total_elems += (spill_runs * spill_len) as u64;
+
+        // Drain to policy, then stop the scheduler before teardown.
+        let flushed = spill_svc.submit_blocking(JobKind::Flush).expect("flush job");
+        assert_eq!(flushed.backend, "store-flush");
+        scheduler.stop();
+        let stats = spill_svc.stats();
+        println!(
+            "store spill: {} B through a {budget} B budget \
+             ({} spills, {} compactions, generation {})",
+            stats.store_spilled_bytes.get(),
+            stats.store_spills.get(),
+            stats.store_compactions.get(),
+            store.generation()
+        );
+        assert!(
+            stats.store_spilled_bytes.get() > budget as u64,
+            "the phase must push more bytes through the store than the budget"
+        );
+        print!("{}", store.describe(false));
+        spill_svc.shutdown();
+        drop(store);
+
+        // Simulated restart: recover the store from disk, then stream
+        // every surviving run file block-by-block through a compaction
+        // session on a fresh service — the read path never materializes
+        // a whole run either.
+        let store = RunStore::<i32>::open(&store_cfg).expect("reopen store");
+        let (generation, live) = store.snapshot();
+        let reader_svc = MergeService::<i32>::start(MergeflowConfig {
+            memory_budget: 0,
+            ..spill_cfg
+        })
+        .expect("reader service");
+        let mut session =
+            reader_svc.open_compaction(live.len()).expect("open final merge");
+        for (i, meta) in live.iter().enumerate() {
+            let mut reader = store.reader(meta).expect("run reader");
+            while let Some(block) = reader.next_block().expect("read block") {
+                session.feed(i, block).expect("feed block");
+            }
+            session.seal_run(i).expect("seal run");
+        }
+        let merged = session
+            .seal()
+            .expect("seal final merge")
+            .wait()
+            .expect("final merge");
+        assert_eq!(
+            merged.output, oracle,
+            "store round-trip (spill → compact → restart → merge) must be bit-identical"
+        );
+        println!(
+            "store round-trip: {} keys from {} surviving runs (generation {}) via {} \
+             — oracle-identical",
+            merged.output.len(),
+            live.len(),
+            generation,
+            merged.backend
+        );
+        reader_svc.shutdown();
+        let _ = std::fs::remove_dir_all(&store_dir);
     }
 
     // Collect the artifact-sized jobs (XLA route when artifacts exist).

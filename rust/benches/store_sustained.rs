@@ -1,0 +1,144 @@
+//! Sustained spill + background-compaction throughput of the
+//! persistent run store, end to end through the coordinator.
+//!
+//! Two questions: (1) raw spill bandwidth — how fast do sealed runs
+//! become durable level-0 run files (encode + CRC + fsync per run)?
+//! (2) steady-state cost — with compaction folded in, what does a
+//! record cost on its whole journey from spill to its settled level?
+//! The second number is the one a capacity plan needs: it includes the
+//! re-read, re-merge, and re-write amplification the policy implies.
+//!
+//! Env: MERGEFLOW_BENCH_N      = records per spilled run (default 256K),
+//!      MERGEFLOW_BENCH_RUNS   = runs spilled per iteration (default 8),
+//!      MERGEFLOW_BENCH_POLICY = tiered|leveled (default tiered).
+
+use mergeflow::bench::harness::{report_line, BenchTimer};
+use mergeflow::config::{
+    Backend, InplaceMode, MergeKernel, MergeflowConfig, StoreConfig, StorePolicy,
+};
+use mergeflow::coordinator::{JobKind, MergeService};
+use mergeflow::store::{RunStore, StoreBridge};
+use std::sync::Arc;
+
+fn service() -> MergeService {
+    let cfg = MergeflowConfig {
+        workers: 4,
+        threads_per_job: 2,
+        queue_capacity: 1024,
+        max_batch: 32,
+        batch_timeout_us: 100,
+        backend: Backend::Native,
+        segmented: false,
+        segment_len: 0,
+        kway_segment_elems: 0,
+        cache_bytes: 0,
+        kway_flat_max_k: 128,
+        compact_sharding: false,
+        compact_shard_min_len: 0,
+        compact_chunk_len: 0,
+        compact_eager_min_len: 0,
+        memory_budget: 0,
+        inplace: InplaceMode::Never,
+        kernel: MergeKernel::Auto,
+        artifacts_dir: "artifacts".into(),
+    };
+    MergeService::start(cfg).expect("service start")
+}
+
+struct TempDir(std::path::PathBuf);
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+fn main() {
+    let run_len: usize = std::env::var("MERGEFLOW_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(256 << 10);
+    let runs_per_iter: usize = std::env::var("MERGEFLOW_BENCH_RUNS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8);
+    let policy = match std::env::var("MERGEFLOW_BENCH_POLICY").ok().as_deref() {
+        Some("leveled") => StorePolicy::Leveled,
+        _ => StorePolicy::Tiered,
+    };
+    let dir = std::env::temp_dir()
+        .join(format!("mergeflow-bench-store-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let _guard = TempDir(dir.clone());
+    let store_cfg = StoreConfig {
+        dir: dir.to_string_lossy().into_owned(),
+        policy,
+        level0_max_runs: runs_per_iter.max(2),
+        level_fanout: 8,
+        block_bytes: 256 << 10,
+        compact_backoff_ms: 1,
+    };
+    let timer = BenchTimer::quick();
+    println!(
+        "workload: {runs_per_iter} runs x {run_len} records per iteration, policy {policy}",
+        policy = store_cfg.policy
+    );
+
+    // Pre-built sorted runs; each iteration clones (owned job input) —
+    // measured first so readers can subtract the bias.
+    let runs: Vec<Vec<i32>> = (0..runs_per_iter)
+        .map(|r| (0..run_len as i32).map(|i| i * 2 + r as i32 % 2).collect())
+        .collect();
+    let per_iter = (runs_per_iter * run_len) as u64;
+    let m = timer.measure(|| {
+        let c = runs.clone();
+        std::hint::black_box(&c);
+    });
+    println!("{}", report_line("input clone (bias in all rows)", &m, per_iter));
+
+    // Row 1: raw spill bandwidth — runs become durable L0 files and
+    // nothing else happens: no scheduler thread is started and no
+    // flush is issued, so L0 just accumulates and the timer sees only
+    // encode + CRC + fsync + manifest commit per run.
+    {
+        let svc = Arc::new(service());
+        let store = Arc::new(RunStore::<i32>::open(&store_cfg).expect("open store"));
+        svc.attach_store(Arc::new(StoreBridge::new(Arc::clone(&store), svc.stats_arc())))
+            .expect("attach store");
+        let m = timer.measure(|| {
+            for run in &runs {
+                let r = svc
+                    .submit_blocking(JobKind::Spill { run: run.clone() })
+                    .expect("spill job");
+                std::hint::black_box(&r.output);
+            }
+        });
+        println!("{}", report_line("spill      (durable L0)", &m, per_iter));
+        svc.shutdown();
+    }
+
+    // Row 2: steady state — every iteration spills a full threshold's
+    // worth of runs and then drains to policy, so the measured cost
+    // includes the whole compaction journey (read back + merge +
+    // rewrite + manifest churn).
+    {
+        let dir2 = dir.join("steady");
+        let store_cfg =
+            StoreConfig { dir: dir2.to_string_lossy().into_owned(), ..store_cfg.clone() };
+        let svc = Arc::new(service());
+        let store = Arc::new(RunStore::<i32>::open(&store_cfg).expect("open store"));
+        svc.attach_store(Arc::new(StoreBridge::new(Arc::clone(&store), svc.stats_arc())))
+            .expect("attach store");
+        let m = timer.measure(|| {
+            for run in &runs {
+                svc.submit_blocking(JobKind::Spill { run: run.clone() })
+                    .expect("spill job");
+            }
+            let r = svc.submit_blocking(JobKind::Flush).expect("flush job");
+            std::hint::black_box(&r.backend);
+        });
+        println!("{}", report_line("spill+flush (to policy)", &m, per_iter));
+        println!("{}", svc.stats().snapshot());
+        svc.shutdown();
+    }
+}

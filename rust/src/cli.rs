@@ -9,6 +9,7 @@
 //! mergeflow table   table1|table1b|table2 [--scale S]
 //! mergeflow probe   [--scale S]
 //! mergeflow artifacts [--dir artifacts]
+//! mergeflow store   [verify] --dir DIR [--verbose]
 //! mergeflow kernels
 //! ```
 
@@ -111,6 +112,7 @@ USAGE:
   mergeflow table   <table1|table1b|table2> [--scale S]
   mergeflow probe   [--scale S]
   mergeflow artifacts [--dir DIR]
+  mergeflow store   [verify] --dir DIR [--verbose]
   mergeflow kernels
   mergeflow help
 

@@ -537,6 +537,124 @@ impl ServerConfig {
     }
 }
 
+/// Level-scoring policy of the persistent store's background
+/// compaction scheduler (`store.policy`); see
+/// [`store::scheduler`](crate::store::scheduler) for the exact
+/// semantics of each.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StorePolicy {
+    /// Merge a whole level into one run of the next level once it
+    /// holds its run threshold. Write-optimized.
+    #[default]
+    Tiered,
+    /// Score levels against an exponentially growing run limit and
+    /// merge a bounded slice of the worst level (plus the next level's
+    /// overlapping runs) downward. Read-optimized.
+    Leveled,
+}
+
+impl std::str::FromStr for StorePolicy {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "tiered" => Ok(StorePolicy::Tiered),
+            "leveled" => Ok(StorePolicy::Leveled),
+            other => Err(Error::Config(format!("unknown store policy `{other}`"))),
+        }
+    }
+}
+
+impl std::fmt::Display for StorePolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            StorePolicy::Tiered => "tiered",
+            StorePolicy::Leveled => "leveled",
+        })
+    }
+}
+
+/// Persistent run store configuration (`[store]` section). Separate
+/// from [`MergeflowConfig`] for the same reason [`ServerConfig`] is:
+/// the merge engine knows nothing about disks, and embedded users who
+/// never spill never spell these knobs.
+#[derive(Debug, Clone)]
+pub struct StoreConfig {
+    /// Store directory (`store.dir`). **Empty means the store is
+    /// disabled** — `mergeflow serve` then runs RAM-only exactly as
+    /// before, and `FLUSH`/`STORE_STATS` answer with a typed `STATE`
+    /// error.
+    pub dir: String,
+    /// Level-scoring policy (`store.policy`): `"tiered"` (default) or
+    /// `"leveled"`; see [`StorePolicy`].
+    pub policy: StorePolicy,
+    /// Spilled (level-0) runs tolerated before the scheduler compacts
+    /// (`store.level0_max_runs`). Must be ≥ 2.
+    pub level0_max_runs: usize,
+    /// Growth factor between level run limits, and the per-pass input
+    /// fan-in of `leveled` compactions (`store.level_fanout`). Must be
+    /// ≥ 2.
+    pub level_fanout: usize,
+    /// Payload bytes per CRC-checked block in run files
+    /// (`store.block_bytes`) — also the granularity at which store
+    /// readers feed compaction sessions, so it bounds per-run residency
+    /// during a disk compaction. Must be ≥ 64.
+    pub block_bytes: usize,
+    /// Scheduler sleep between idle/rejected passes
+    /// (`store.compact_backoff_ms`).
+    pub compact_backoff_ms: u64,
+}
+
+impl Default for StoreConfig {
+    fn default() -> Self {
+        Self {
+            dir: String::new(),
+            policy: StorePolicy::Tiered,
+            level0_max_runs: 4,
+            level_fanout: 8,
+            block_bytes: 256 << 10,
+            compact_backoff_ms: 50,
+        }
+    }
+}
+
+impl StoreConfig {
+    /// Build from a parsed raw config (`[store]` section).
+    pub fn from_raw(raw: &RawConfig) -> Result<Self> {
+        let d = Self::default();
+        let cfg = Self {
+            dir: raw.get_str("store.dir", &d.dir),
+            policy: raw.get_str("store.policy", "tiered").parse()?,
+            level0_max_runs: raw.get_usize("store.level0_max_runs", d.level0_max_runs)?,
+            level_fanout: raw.get_usize("store.level_fanout", d.level_fanout)?,
+            block_bytes: raw.get_usize("store.block_bytes", d.block_bytes)?,
+            compact_backoff_ms: raw
+                .get_usize("store.compact_backoff_ms", d.compact_backoff_ms as usize)?
+                as u64,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Whether a store directory is configured at all.
+    pub fn enabled(&self) -> bool {
+        !self.dir.is_empty()
+    }
+
+    /// Check invariants.
+    pub fn validate(&self) -> Result<()> {
+        if self.level0_max_runs < 2 {
+            return Err(Error::Config("store.level0_max_runs must be >= 2".into()));
+        }
+        if self.level_fanout < 2 {
+            return Err(Error::Config("store.level_fanout must be >= 2".into()));
+        }
+        if self.block_bytes < 64 {
+            return Err(Error::Config("store.block_bytes must be >= 64".into()));
+        }
+        Ok(())
+    }
+}
+
 /// Bounds applied to both configured and detected cache sizes, so a
 /// misread sysfs entry (or an absurd knob) can never produce degenerate
 /// or overflowing window lengths.
@@ -641,6 +759,14 @@ tenant_quota_bytes = 1048576
 tenant_max_sessions = 4
 lease_ms = 250
 max_frame_bytes = 65536
+
+[store]
+dir = "/tmp/mergeflow-store"
+policy = "leveled"
+level0_max_runs = 6
+level_fanout = 4
+block_bytes = 131072
+compact_backoff_ms = 25
 "#;
 
     #[test]
@@ -712,6 +838,41 @@ max_frame_bytes = 65536
         assert!(ServerConfig::from_raw(&raw).is_err());
         let raw = RawConfig::parse("[serve]\nlease_ms = soon\n").unwrap();
         assert!(ServerConfig::from_raw(&raw).is_err());
+    }
+
+    #[test]
+    fn store_config_parses_and_defaults() {
+        let raw = RawConfig::parse(SAMPLE).unwrap();
+        let cfg = StoreConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.dir, "/tmp/mergeflow-store");
+        assert!(cfg.enabled());
+        assert_eq!(cfg.policy, StorePolicy::Leveled);
+        assert_eq!(cfg.level0_max_runs, 6);
+        assert_eq!(cfg.level_fanout, 4);
+        assert_eq!(cfg.block_bytes, 128 << 10);
+        assert_eq!(cfg.compact_backoff_ms, 25);
+        let d = StoreConfig::from_raw(&RawConfig::parse("").unwrap()).unwrap();
+        assert!(!d.enabled(), "store defaults to disabled");
+        assert_eq!(d.policy, StorePolicy::Tiered);
+        assert_eq!(d.level0_max_runs, 4);
+        assert_eq!(d.level_fanout, 8);
+        assert_eq!(d.block_bytes, 256 << 10);
+        assert_eq!(d.compact_backoff_ms, 50);
+    }
+
+    #[test]
+    fn store_config_rejects_bad_values() {
+        let raw = RawConfig::parse("[store]\npolicy = \"sorted\"\n").unwrap();
+        assert!(StoreConfig::from_raw(&raw).is_err());
+        let raw = RawConfig::parse("[store]\nlevel0_max_runs = 1\n").unwrap();
+        assert!(StoreConfig::from_raw(&raw).is_err());
+        let raw = RawConfig::parse("[store]\nlevel_fanout = 1\n").unwrap();
+        assert!(StoreConfig::from_raw(&raw).is_err());
+        let raw = RawConfig::parse("[store]\nblock_bytes = 8\n").unwrap();
+        assert!(StoreConfig::from_raw(&raw).is_err());
+        // Display/FromStr round-trip.
+        assert_eq!(StorePolicy::Tiered.to_string(), "tiered");
+        assert_eq!("leveled".parse::<StorePolicy>().unwrap(), StorePolicy::Leveled);
     }
 
     #[test]

@@ -74,6 +74,30 @@ pub enum JobKind<R: Record = i32> {
         /// The shard's input windows and completion slot.
         shard: super::session::StreamShard<R>,
     },
+    /// Spill one sealed, sorted run to level 0 of the attached
+    /// persistent store ([`crate::store`]). Executes on a pool worker
+    /// like any other job; the result's `output` echoes the spilled
+    /// records (so wire clients get their RESULT frame) and the
+    /// backend tag is `"store-spill"`. Requires a store to be attached
+    /// ([`super::MergeService::attach_store`]) — submit fails fast
+    /// otherwise. On a store write failure the job's reply channel is
+    /// dropped (there is no typed error channel), so `wait()` observes
+    /// `Error::Service("job N dropped by service")` and the failure is
+    /// counted in `rejected_jobs`.
+    Spill {
+        /// The sorted run to persist. Sortedness is validated at
+        /// admission like `Merge` inputs.
+        run: Vec<R>,
+    },
+    /// Drive the attached store's compaction scheduler synchronously
+    /// until every level is within policy (the engine behind the
+    /// `FLUSH` wire verb, and the test barrier for "background
+    /// compaction has caught up"). Intercepted at `submit` and run on
+    /// the *caller's* thread — a flush occupies no pool worker, so the
+    /// compactions it drives can never deadlock against it. The
+    /// result's `output` is empty and the backend tag is
+    /// `"store-flush"`.
+    Flush,
 }
 
 impl<R: Record> JobKind<R> {
@@ -87,6 +111,8 @@ impl<R: Record> JobKind<R> {
             JobKind::CompactChunk { msg } => msg.len(),
             JobKind::CompactSealRun { .. } | JobKind::CompactSeal { .. } => 0,
             JobKind::StreamShard { shard } => shard.len(),
+            JobKind::Spill { run } => run.len(),
+            JobKind::Flush => 0,
         }
     }
 

@@ -36,7 +36,7 @@ pub mod stats;
 
 pub use job::{Job, JobHandle, JobKind, JobResult};
 pub use queue::{BoundedQueue, PushError};
-pub use service::{I32MergeService, MergeService};
+pub use service::{I32MergeService, MergeService, StoreSink};
 pub use session::CompactionSession;
 pub use shard::ShardTask;
 pub use stats::ServiceStats;

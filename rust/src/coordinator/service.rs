@@ -42,8 +42,34 @@ use crate::runtime::XlaExecutor;
 use crate::{Error, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::channel;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::{Duration, Instant};
+
+/// Durability hooks a persistent store plugs into the service (the
+/// concrete implementation is [`crate::store::StoreBridge`]; the trait
+/// lives here so the coordinator stays ignorant of file formats).
+/// Attached once via [`MergeService::attach_store`]; `JobKind::Spill`
+/// jobs call [`StoreSink::spill`] from pool workers, and the
+/// synchronous `JobKind::Flush` path calls [`StoreSink::flush`] on the
+/// submitting thread — deliberately *not* on a pool worker, since a
+/// flush drives whole compactions through the service and must never
+/// occupy the workers those compactions need.
+pub trait StoreSink<R: Record>: Send + Sync {
+    /// Persist one sealed, sorted run to level 0. Returns the bytes
+    /// written.
+    fn spill(&self, run: &[R]) -> Result<u64>;
+    /// Run compaction passes against `svc` until the store is within
+    /// policy. Returns the number of compactions installed.
+    fn flush(&self, svc: &MergeService<R>) -> Result<u64>;
+    /// Human-readable store description (the `STORE_STATS` wire verb).
+    fn stats_text(&self) -> String;
+}
+
+/// The attach-once slot a service and its dispatcher share. The
+/// dispatcher thread captures the slot at `start()` — before any store
+/// exists — so attachment is a later, lock-free publication rather
+/// than a service restart.
+type StoreSlot<R> = Arc<OnceLock<Arc<dyn StoreSink<R>>>>;
 
 /// Counting semaphore bounding in-flight (dispatched, not yet
 /// completed) jobs — this is what propagates back-pressure from slow
@@ -123,6 +149,7 @@ pub struct MergeService<R: Record = i32> {
     table: Arc<SessionTable<R>>,
     stats: Arc<ServiceStats>,
     runtime: Option<Arc<XlaExecutor>>,
+    store: StoreSlot<R>,
     next_id: AtomicU64,
     dispatcher: Option<std::thread::JoinHandle<()>>,
 }
@@ -165,6 +192,7 @@ impl<R: Record> MergeService<R> {
         let table = Arc::new(SessionTable::<R>::default());
         let stats = Arc::new(ServiceStats::new());
         let pool = Arc::new(WorkerPool::new(cfg.workers));
+        let store: StoreSlot<R> = Arc::new(OnceLock::new());
 
         let dispatcher = {
             let queue = Arc::clone(&queue);
@@ -172,9 +200,12 @@ impl<R: Record> MergeService<R> {
             let stats = Arc::clone(&stats);
             let cfg2 = cfg.clone();
             let runtime = runtime.clone();
+            let store = Arc::clone(&store);
             std::thread::Builder::new()
                 .name("mergeflow-dispatcher".into())
-                .spawn(move || dispatcher_loop(cfg2, queue, table, pool, runtime, stats))
+                .spawn(move || {
+                    dispatcher_loop(cfg2, queue, table, pool, runtime, stats, store)
+                })
                 .expect("spawn dispatcher")
         };
 
@@ -184,9 +215,31 @@ impl<R: Record> MergeService<R> {
             table,
             stats,
             runtime,
+            store,
             next_id: AtomicU64::new(1),
             dispatcher: Some(dispatcher),
         })
+    }
+
+    /// Attach the persistent store's sink. At most one store per
+    /// service lifetime; a second attach is an error. Jobs submitted
+    /// before attachment that need the store (`Spill`, `Flush`) fail
+    /// fast with a typed error rather than queueing.
+    pub fn attach_store(&self, sink: Arc<dyn StoreSink<R>>) -> Result<()> {
+        self.store
+            .set(sink)
+            .map_err(|_| Error::Service("a store is already attached".into()))
+    }
+
+    /// Whether a store sink is attached.
+    pub fn has_store(&self) -> bool {
+        self.store.get().is_some()
+    }
+
+    /// The attached store's description text (`STORE_STATS`), or
+    /// `None` when no store is attached.
+    pub fn store_stats_text(&self) -> Option<String> {
+        self.store.get().map(|s| s.stats_text())
     }
 
     /// Whether an XLA runtime actually started for this service.
@@ -238,6 +291,7 @@ impl<R: Record> MergeService<R> {
     pub fn submit(&self, kind: JobKind<R>) -> Result<JobHandle<R>> {
         let kind = match kind {
             JobKind::Compact { runs } => return self.submit_compact(runs),
+            JobKind::Flush => return self.submit_flush(),
             other => other,
         };
         // Per-input admission validation (the compact analogue is the
@@ -252,6 +306,27 @@ impl<R: Record> MergeService<R> {
                         "merge input {name} is not sorted by key"
                     )));
                 }
+            }
+        }
+        // Spill preconditions, all fail-fast at admission: a store to
+        // spill into, a non-empty run (a run file must have a key
+        // range), and sortedness — a store run file *is* a sorted run,
+        // and the worker-side writer rejecting it later could only
+        // surface as a dropped reply channel.
+        if let JobKind::Spill { run } = &kind {
+            if self.store.get().is_none() {
+                self.stats.rejected.inc();
+                return Err(Error::Service(
+                    "no store attached (configure store.dir and attach a StoreBridge)".into(),
+                ));
+            }
+            if run.is_empty() {
+                self.stats.rejected.inc();
+                return Err(Error::InvalidInput("refusing to spill an empty run".into()));
+            }
+            if !record::is_sorted_by_key(run) {
+                self.stats.rejected.inc();
+                return Err(Error::InvalidInput("spill run is not sorted by key".into()));
             }
         }
         self.check_budget(estimated_job_bytes(&self.cfg, &kind))?;
@@ -277,6 +352,44 @@ impl<R: Record> MergeService<R> {
     /// Submit and wait.
     pub fn submit_blocking(&self, kind: JobKind<R>) -> Result<JobResult<R>> {
         self.submit(kind)?.wait()
+    }
+
+    /// The synchronous `Flush` path: drive the attached store's
+    /// compaction scheduler on the *caller's* thread until every level
+    /// is within policy, then hand back a pre-completed handle. Runs
+    /// here rather than on the pool because the compactions a flush
+    /// drives are themselves pool jobs — a flush parked on a worker
+    /// could deadlock a one-worker pool against its own work.
+    fn submit_flush(&self) -> Result<JobHandle<R>> {
+        let Some(sink) = self.store.get() else {
+            self.stats.rejected.inc();
+            return Err(Error::Service(
+                "no store attached (configure store.dir and attach a StoreBridge)".into(),
+            ));
+        };
+        let sink = Arc::clone(sink);
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.stats.submitted.inc();
+        let t0 = Instant::now();
+        match sink.flush(self) {
+            Ok(_installed) => {
+                let latency_ns =
+                    u64::try_from(t0.elapsed().as_nanos()).unwrap_or(u64::MAX);
+                self.stats.record_completion("store-flush", 0, latency_ns, 0);
+                let (tx, rx) = channel();
+                let _ = tx.send(JobResult {
+                    id,
+                    output: Vec::new(),
+                    backend: "store-flush",
+                    latency_ns,
+                });
+                Ok(JobHandle::new(id, rx))
+            }
+            Err(e) => {
+                self.stats.rejected.inc();
+                Err(e)
+            }
+        }
     }
 
     /// Open a streaming compaction of `runs` sorted runs: feed chunks
@@ -489,6 +602,12 @@ fn estimated_job_bytes<R: Record>(cfg: &MergeflowConfig, kind: &JobKind<R>) -> u
         JobKind::Compact { runs } => compact_estimate(cfg, runs),
         JobKind::CompactShard { shard } => 2 * shard.len() as u64 * elem,
         JobKind::StreamShard { shard } => 2 * shard.len() as u64 * elem,
+        // A spill holds its run resident until the writer finishes;
+        // the write path itself buffers O(block_bytes) on top, which
+        // is noise at plan granularity. A flush never reaches the
+        // dispatcher (intercepted at submit).
+        JobKind::Spill { run } => run.len() as u64 * elem,
+        JobKind::Flush => 0,
         JobKind::CompactChunk { .. }
         | JobKind::CompactSealRun { .. }
         | JobKind::CompactSeal { .. } => 0,
@@ -502,6 +621,7 @@ fn dispatcher_loop<R: Record>(
     pool: Arc<WorkerPool>,
     runtime: Option<Arc<XlaExecutor>>,
     stats: Arc<ServiceStats>,
+    store: StoreSlot<R>,
 ) {
     let timeout = Duration::from_micros(cfg.batch_timeout_us.max(1));
     let in_flight = Arc::new(InFlight::new(cfg.workers * 2));
@@ -572,6 +692,7 @@ fn dispatcher_loop<R: Record>(
                 let cfg = cfg.clone();
                 let runtime = runtime.clone();
                 let stats = Arc::clone(&stats);
+                let store = Arc::clone(&store);
                 stats.resident_bytes.add(est_bytes);
                 let guard = SlotGuard {
                     pool: Some(Arc::clone(&pool)),
@@ -581,7 +702,7 @@ fn dispatcher_loop<R: Record>(
                 };
                 pool.submit(move || {
                     let pool = guard.pool.as_deref().expect("guard holds the pool");
-                    execute_job(&cfg, runtime.as_deref(), &stats, pool, sub);
+                    execute_job(&cfg, runtime.as_deref(), &stats, pool, sub, &store);
                     // `guard` drops here: pool handle first, then
                     // the in-flight slot — on unwind too.
                 });
@@ -612,6 +733,7 @@ fn execute_job<R: Record>(
     stats: &ServiceStats,
     pool: &WorkerPool,
     job: Job<R>,
+    store: &OnceLock<Arc<dyn StoreSink<R>>>,
 ) {
     let wait_ns =
         u64::try_from(job.enqueued_at.elapsed().as_nanos()).unwrap_or(u64::MAX);
@@ -648,6 +770,31 @@ fn execute_job<R: Record>(
             // reply live in the session's shared exec state.
             session::execute_stream_shard(task, stats);
             return;
+        }
+        JobKind::Spill { run } => {
+            // Admission verified a sink is attached, and the slot is
+            // write-once — `get()` cannot fail here except by a
+            // harness bug, which the error path below still reports.
+            let spilled = match store.get() {
+                Some(sink) => sink.spill(&run),
+                None => Err(Error::Service("store detached mid-flight".into())),
+            };
+            match spilled {
+                Ok(_bytes) => (run, "store-spill"),
+                Err(e) => {
+                    // No typed error channel on jobs: report, count
+                    // the failure (submitted = completed + rejected +
+                    // in-flight stays balanced), and drop the reply
+                    // sender so the client's `wait()` observes
+                    // `job N dropped by service`.
+                    eprintln!("mergeflow: spill job {} failed: {e}", job.id);
+                    stats.rejected.inc();
+                    return;
+                }
+            }
+        }
+        JobKind::Flush => {
+            unreachable!("flush is intercepted at submit and runs on the caller")
         }
         JobKind::CompactChunk { .. }
         | JobKind::CompactSealRun { .. }

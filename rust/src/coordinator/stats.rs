@@ -109,6 +109,35 @@ pub struct ServiceStats {
     /// Plain drops of unsealed sessions (one-shot error paths) abort
     /// too but are not counted here.
     pub sessions_reaped: Counter,
+    /// `Spill` jobs completed (runs persisted to level 0 of the
+    /// attached store).
+    pub store_spills: Counter,
+    /// `Flush` requests served (each drives compaction passes until
+    /// the store is within policy).
+    pub store_flushes: Counter,
+    /// Bytes written to the store by spills (run file bytes, including
+    /// framing/CRC overhead).
+    pub store_spilled_bytes: Counter,
+    /// Compactions installed into the store (background scheduler and
+    /// synchronous flush passes alike).
+    pub store_compactions: Counter,
+    /// Input bytes consumed by installed store compactions.
+    pub store_compacted_bytes: Counter,
+    /// Live run files in the store right now (seeded from the
+    /// recovered manifest at attach; +1 per spill, −(k−1) per k-input
+    /// compaction).
+    pub store_runs: Gauge,
+    /// Manifest generations committed, seeded from the recovered
+    /// generation at attach — monotone, so restarts never appear to
+    /// rewind it.
+    pub store_generation: Counter,
+    /// Scheduler passes that installed a compaction.
+    pub scheduler_passes: Counter,
+    /// Scheduler passes that found every level within policy.
+    pub scheduler_skips: Counter,
+    /// Scheduler passes rejected by the service (BUSY / budget) and
+    /// retried after backoff.
+    pub scheduler_backoffs: Counter,
 }
 
 impl ServiceStats {
@@ -142,6 +171,8 @@ impl ServiceStats {
             "native-kway-sharded" => self.sharded_jobs.inc(),
             "native-kway-streamed" => self.streamed_jobs.inc(),
             "native-inplace" => self.inplace_jobs.inc(),
+            "store-spill" => self.store_spills.inc(),
+            "store-flush" => self.store_flushes.inc(),
             _ => self.native_jobs.inc(),
         }
     }
@@ -175,6 +206,8 @@ impl ServiceStats {
              streaming: sessions={} chunks={} bytes={} eager={} stream-done={} | \
              mem: resident={} peak={} reclaimed={} | \
              server: busy={} reaped={} | \
+             store: spills={} flushes={} spilled={} compactions={} compacted={} runs={} gen={} | \
+             scheduler: passes={} skips={} backoffs={} | \
              batches={} elements={} | latency p50={} p95={} p99={} max={} | queue-wait p50={}",
             self.submitted.get(),
             self.completed.get(),
@@ -204,6 +237,16 @@ impl ServiceStats {
             self.reclaimed_bytes.get(),
             self.busy_rejections.get(),
             self.sessions_reaped.get(),
+            self.store_spills.get(),
+            self.store_flushes.get(),
+            self.store_spilled_bytes.get(),
+            self.store_compactions.get(),
+            self.store_compacted_bytes.get(),
+            self.store_runs.get(),
+            self.store_generation.get(),
+            self.scheduler_passes.get(),
+            self.scheduler_skips.get(),
+            self.scheduler_backoffs.get(),
             self.batches.get(),
             self.elements.get(),
             fmt_ns(self.latency.quantile(0.5)),
@@ -328,6 +371,38 @@ mod tests {
         assert!(snap.contains("peak=8192"));
         assert!(snap.contains("reclaimed=4096"));
         assert_eq!(s.completed.get(), 0, "memory accounting is not a completion");
+    }
+
+    #[test]
+    fn store_counters_in_snapshot() {
+        let s = ServiceStats::new();
+        // Spill/flush completions route to their own counters, not the
+        // native fallback.
+        s.record_completion("store-spill", 1000, 500, 5);
+        s.record_completion("store-flush", 0, 900, 0);
+        assert_eq!(s.store_spills.get(), 1);
+        assert_eq!(s.store_flushes.get(), 1);
+        assert_eq!(s.native_jobs.get(), 0, "store tags must not count as native");
+        assert_eq!(s.completed.get(), 2);
+        s.store_spilled_bytes.add(4096);
+        s.store_compactions.inc();
+        s.store_compacted_bytes.add(8192);
+        s.store_runs.add(3);
+        s.store_generation.add(4);
+        s.scheduler_passes.inc();
+        s.scheduler_skips.add(2);
+        s.scheduler_backoffs.add(5);
+        let snap = s.snapshot();
+        assert!(snap.contains("spills=1"));
+        assert!(snap.contains("flushes=1"));
+        assert!(snap.contains("spilled=4096"));
+        assert!(snap.contains("compactions=1"));
+        assert!(snap.contains("compacted=8192"));
+        assert!(snap.contains("runs=3"));
+        assert!(snap.contains("gen=4"));
+        assert!(snap.contains("passes=1"));
+        assert!(snap.contains("skips=2"));
+        assert!(snap.contains("backoffs=5"));
     }
 
     #[test]

@@ -56,6 +56,7 @@ pub mod rng;
 pub mod runtime;
 pub mod server;
 pub mod sim;
+pub mod store;
 pub mod testutil;
 
 pub use record::{ByKey, F32Key, F64Key, KeyedI32, Record, XlaSeam};

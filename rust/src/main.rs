@@ -5,7 +5,7 @@ use mergeflow::bench::harness::report_line;
 use mergeflow::bench::workload::{gen_sorted_pair, gen_unsorted, WorkloadKind};
 use mergeflow::bench::BenchTimer;
 use mergeflow::cli::{Cli, USAGE};
-use mergeflow::config::{MergeflowConfig, RawConfig, ServerConfig};
+use mergeflow::config::{MergeflowConfig, RawConfig, ServerConfig, StoreConfig};
 use mergeflow::coordinator::{JobKind, MergeService};
 use mergeflow::mergepath::{
     cache_efficient_sort, parallel_merge, parallel_merge_sort, segmented_parallel_merge,
@@ -39,6 +39,7 @@ fn run(args: Vec<String>) -> Result<()> {
             Ok(())
         }
         "artifacts" => cmd_artifacts(&cli),
+        "store" => cmd_store(&cli),
         "kernels" => cmd_kernels(),
         "" | "help" | "--help" | "-h" => {
             print!("{USAGE}");
@@ -114,12 +115,20 @@ fn cmd_sort(cli: &Cli) -> Result<()> {
 }
 
 fn cmd_serve(cli: &Cli) -> Result<()> {
-    let (cfg, mut server_cfg) = match cli.flag("config") {
+    let (cfg, mut server_cfg, store_cfg) = match cli.flag("config") {
         Some(path) => {
             let raw = RawConfig::from_file(std::path::Path::new(path))?;
-            (MergeflowConfig::from_raw(&raw)?, ServerConfig::from_raw(&raw)?)
+            (
+                MergeflowConfig::from_raw(&raw)?,
+                ServerConfig::from_raw(&raw)?,
+                StoreConfig::from_raw(&raw)?,
+            )
         }
-        None => (MergeflowConfig::default(), ServerConfig::default()),
+        None => (
+            MergeflowConfig::default(),
+            ServerConfig::default(),
+            StoreConfig::default(),
+        ),
     };
     if cli.bool_flag("selfload") {
         return serve_selfload(cli, cfg);
@@ -129,6 +138,30 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     }
     println!("starting service: {cfg:?}");
     let svc = std::sync::Arc::new(MergeService::<i32>::start(cfg)?);
+    // Optional persistent run store: spills/flushes route through the
+    // attached bridge, and a background scheduler keeps levels within
+    // policy. The scheduler handle lives for the whole (infinite)
+    // serve loop, so it is never joined here.
+    let _scheduler = if store_cfg.enabled() {
+        let store =
+            std::sync::Arc::new(mergeflow::store::RunStore::<i32>::open(&store_cfg)?);
+        let bridge =
+            mergeflow::store::StoreBridge::new(std::sync::Arc::clone(&store), svc.stats_arc());
+        svc.attach_store(std::sync::Arc::new(bridge))?;
+        println!(
+            "store: {} (policy={}, generation={}, runs={})",
+            store_cfg.dir,
+            store_cfg.policy,
+            store.generation(),
+            store.run_count()
+        );
+        Some(mergeflow::store::LevelScheduler::start(
+            store,
+            std::sync::Arc::clone(&svc),
+        ))
+    } else {
+        None
+    };
     let handle = mergeflow::server::serve(std::sync::Arc::clone(&svc), server_cfg)?;
     println!("listening on {}", handle.local_addr());
     // Foreground server: periodic stats until the process is killed.
@@ -240,6 +273,68 @@ fn cmd_kernels() -> Result<()> {
     row::<u64>("u64");
     row::<(u64, u64)>("(u64, u64)");
     Ok(())
+}
+
+/// `mergeflow store [verify] --dir DIR [--verbose]`: inspect a
+/// persistent run store offline — manifest generation, per-level run
+/// counts/records/bytes, and (verbose) each run's key range. The
+/// `verify` action additionally re-reads every live run file end to
+/// end, re-checking every block CRC against the manifest.
+///
+/// The record type is recovered from the manifest's wire id, so the
+/// command works on any store a `mergeflow` server could have written.
+fn cmd_store(cli: &Cli) -> Result<()> {
+    use mergeflow::server::WireRecord;
+    use mergeflow::store::{peek_wire_id, RunStore};
+
+    let dir = cli
+        .flag("dir")
+        .ok_or_else(|| Error::Config("store: --dir <DIR> is required".into()))?
+        .to_string();
+    let verify = match cli.positional.first().map(|s| s.as_str()) {
+        None => false,
+        Some("verify") => true,
+        Some(other) => {
+            return Err(Error::Config(format!(
+                "unknown store action `{other}` (expected nothing or `verify`)"
+            )))
+        }
+    };
+    let verbose = cli.bool_flag("verbose");
+    let wire_id = match peek_wire_id(std::path::Path::new(&dir))? {
+        Some(id) => id,
+        None => {
+            println!("store {dir}: empty (no manifest yet)");
+            return Ok(());
+        }
+    };
+
+    fn report<R: WireRecord>(dir: &str, verify: bool, verbose: bool) -> Result<()> {
+        let cfg = StoreConfig { dir: dir.to_string(), ..StoreConfig::default() };
+        let store = RunStore::<R>::open(&cfg)?;
+        print!("{}", store.describe(verbose));
+        if verify {
+            let report = store.verify()?;
+            println!(
+                "verify: OK — {} runs, {} records, {} bytes re-checksummed",
+                report.runs, report.records, report.bytes
+            );
+        }
+        Ok(())
+    }
+
+    match wire_id {
+        1 => report::<i32>(&dir, verify, verbose),
+        2 => report::<u32>(&dir, verify, verbose),
+        3 => report::<i64>(&dir, verify, verbose),
+        4 => report::<u64>(&dir, verify, verbose),
+        5 => report::<(u32, u32)>(&dir, verify, verbose),
+        6 => report::<(u64, u64)>(&dir, verify, verbose),
+        7 => report::<(i64, i64)>(&dir, verify, verbose),
+        other => Err(Error::Config(format!(
+            "store {dir}: unsupported wire id {other}"
+        ))),
+    }
 }
 
 fn cmd_artifacts(cli: &Cli) -> Result<()> {

@@ -136,6 +136,35 @@ impl<R: WireRecord> Client<R> {
         decode_result(&reply)
     }
 
+    /// Spill one key-sorted run to level 0 of the server's persistent
+    /// store. The result echoes the spilled records under backend
+    /// `"store-spill"`. Requires a store (`store.dir`) server-side.
+    pub fn spill(&mut self, run: &[R]) -> Result<(String, Vec<R>)> {
+        let mut p = Vec::with_capacity(20 + run.len() * R::WIRE_BYTES);
+        frame::put_records(&mut p, run);
+        let reply = self.expect(tag::RESULT, tag::FLUSH, &p)?;
+        decode_result(&reply)
+    }
+
+    /// Drive the server's store compaction until every level is within
+    /// policy (a `FLUSH` with no records). Blocks for as long as the
+    /// compactions take; the result is empty under backend
+    /// `"store-flush"`.
+    pub fn flush(&mut self) -> Result<(String, Vec<R>)> {
+        let mut p = Vec::new();
+        frame::put_records::<R>(&mut p, &[]);
+        let reply = self.expect(tag::RESULT, tag::FLUSH, &p)?;
+        decode_result(&reply)
+    }
+
+    /// The store's description text (generation, per-level run
+    /// counts); a typed `STATE` error when the server has no store.
+    pub fn store_stats(&mut self) -> Result<String> {
+        let payload = self.expect(tag::STATS_TEXT, tag::STORE_STATS, &[])?;
+        String::from_utf8(payload)
+            .map_err(|_| Error::Service("store stats reply is not utf8".into()))
+    }
+
     /// Send one request frame and read its reply, demanding reply tag
     /// `want`; `ERR`/`BUSY` frames become typed errors instead.
     fn expect(&mut self, want: u8, req: u8, payload: &[u8]) -> Result<Vec<u8>> {

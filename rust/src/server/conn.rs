@@ -62,6 +62,16 @@ pub(super) fn handle<R: WireRecord>(
     loop {
         match frame::read_frame(&mut stream, cfg.max_frame_bytes, &opts) {
             Ok((t, payload)) => {
+                // Deterministic server-side fault injection: die at
+                // this frame boundary without answering, exactly as a
+                // crashed handler thread would. The tail reap below
+                // must then abort every open session and drain the
+                // tenant's quota — the property the fault tests pin.
+                // Scoped by tenant so concurrently-running tests'
+                // connections can never consume each other's kill.
+                if crate::testutil::FailPoint::hit(&format!("server.conn.kill.{tenant}")) {
+                    break;
+                }
                 match dispatch(&mut stream, t, &payload, svc, tenants, &tenant, &mut sessions)
                 {
                     Flow::Continue => {}
@@ -218,6 +228,25 @@ fn dispatch<R: WireRecord>(
             let data = c.get_records::<R>()?;
             Ok((data.len(), JobKind::Sort { data }))
         }),
+        tag::FLUSH => verb_one_shot(payload, svc, tenants, tenant, |c| {
+            let records = c.get_records::<R>()?;
+            let elems = records.len();
+            // Non-empty payload = spill this run; empty = drain the
+            // store (drive compactions until within policy).
+            let kind = if records.is_empty() {
+                JobKind::Flush
+            } else {
+                JobKind::Spill { run: records }
+            };
+            Ok((elems, kind))
+        }),
+        tag::STORE_STATS => match svc.store_stats_text() {
+            Some(text) => Reply::Frame(tag::STATS_TEXT, text.into_bytes()),
+            None => Reply::Err(
+                err::STATE,
+                "no store attached (configure store.dir)".into(),
+            ),
+        },
         tag::HELLO => Reply::Err(err::STATE, "HELLO already completed".into()),
         other => Reply::Err(err::UNKNOWN_VERB, format!("unknown verb tag {other:#04x}")),
     };

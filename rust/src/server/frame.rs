@@ -57,6 +57,15 @@ pub mod tag {
     pub const COMPACT: u8 = 0x09;
     /// One-shot sort: `[records]`.
     pub const SORT: u8 = 0x0a;
+    /// Store ingest/drain: `[records]`. Non-empty spills the sorted
+    /// run to level 0 of the attached store (`JobKind::Spill`; the
+    /// `RESULT` echoes the records with backend `"store-spill"`);
+    /// empty drives compaction passes until the store is within policy
+    /// (`JobKind::Flush`; empty `RESULT`, backend `"store-flush"`).
+    pub const FLUSH: u8 = 0x0b;
+    /// Store description request (empty payload); answered with
+    /// `STATS_TEXT`, or a `STATE` error when no store is attached.
+    pub const STORE_STATS: u8 = 0x0c;
 
     /// `HELLO` accepted: `[version]`.
     pub const HELLO_OK: u8 = 0x81;

@@ -1,0 +1,448 @@
+//! Append-only run file format: fixed-width [`WireRecord`] LE payload
+//! blocks with per-block CRC32, and a footer carrying the record
+//! count and key range.
+//!
+//! File layout:
+//!
+//! ```text
+//! ┌──────────────────┬───────────────┬──────────────────┐
+//! │ magic "MFRUN1\0\0" │ wire_id u32   │ wire_bytes u32   │  header (16 B)
+//! ├──────────────────┴───────────────┴──────────────────┤
+//! │ count u32 │ crc32 u32 │ count × WIRE_BYTES records  │  block (repeated)
+//! ├─────────────────────────────────────────────────────┤
+//! │ 0xFFFFFFFF │ count u64 │ first rec │ last rec │ crc │  footer
+//! │ magic "MFEND1\0\0"                                  │
+//! └─────────────────────────────────────────────────────┘
+//! ```
+//!
+//! All integers are little-endian. A block never declares
+//! `u32::MAX` records (the writer caps block size far below it), so
+//! the footer marker is unambiguous to a sequential reader. Records
+//! within and across blocks are non-decreasing by key — the writer
+//! enforces it, so a run file is a sorted run by construction and its
+//! blocks can feed [`CompactionSession::feed`]
+//! (crate::coordinator::CompactionSession::feed) directly, one block
+//! per chunk, without materializing the whole run.
+
+use super::StoreConfig;
+use crate::server::frame::WireRecord;
+use crate::{Error, Result};
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+/// Run file header magic.
+pub(crate) const RUN_MAGIC: [u8; 8] = *b"MFRUN1\0\0";
+/// Run file trailing magic (after the footer).
+pub(crate) const RUN_END_MAGIC: [u8; 8] = *b"MFEND1\0\0";
+/// Block-count value that marks the footer instead of a block.
+const FOOTER_MARKER: u32 = u32::MAX;
+
+// ---------------------------------------------------------------------
+// CRC32 (IEEE 802.3, table-driven; hand-rolled — no crc crates in the
+// offline image).
+// ---------------------------------------------------------------------
+
+const fn make_crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            bit += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+const CRC_TABLE: [u32; 256] = make_crc_table();
+
+/// CRC32 (IEEE) of `bytes`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ u32::from(b)) & 0xff) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+// ---------------------------------------------------------------------
+// Writer.
+// ---------------------------------------------------------------------
+
+/// Summary of a finished run file (what the manifest records).
+#[derive(Debug, Clone, Copy)]
+pub struct RunFileInfo<R> {
+    /// Records in the run.
+    pub count: u64,
+    /// File size in bytes (header + blocks + footer).
+    pub bytes: u64,
+    /// First (minimum-key) record.
+    pub first: R,
+    /// Last (maximum-key) record.
+    pub last: R,
+}
+
+/// Streaming writer for one run file. Feed sorted records with
+/// [`RunWriter::append`] (monotonicity is enforced across calls), then
+/// [`RunWriter::finish`] to write the footer and fsync.
+pub struct RunWriter<R: WireRecord> {
+    file: BufWriter<File>,
+    path: PathBuf,
+    block: Vec<u8>,
+    block_records: u32,
+    block_bytes: usize,
+    count: u64,
+    first: Option<R>,
+    last: Option<R>,
+}
+
+impl<R: WireRecord> RunWriter<R> {
+    /// Create `path` (truncating any previous file) and write the
+    /// header. `block_bytes` bounds each block's payload.
+    pub fn create(path: &Path, block_bytes: usize) -> Result<Self> {
+        let file = File::create(path)?;
+        let mut w = BufWriter::new(file);
+        w.write_all(&RUN_MAGIC)?;
+        w.write_all(&R::WIRE_ID.to_le_bytes())?;
+        w.write_all(&(R::WIRE_BYTES as u32).to_le_bytes())?;
+        Ok(Self {
+            file: w,
+            path: path.to_path_buf(),
+            block: Vec::with_capacity(block_bytes.max(R::WIRE_BYTES)),
+            block_records: 0,
+            block_bytes: block_bytes.max(R::WIRE_BYTES),
+            count: 0,
+            first: None,
+            last: None,
+        })
+    }
+
+    /// Append sorted records; keys must be non-decreasing across every
+    /// call (a run file *is* a sorted run — violating that here would
+    /// poison every future compaction over the file).
+    pub fn append(&mut self, records: &[R]) -> Result<()> {
+        for r in records {
+            if let Some(last) = &self.last {
+                if r.key() < last.key() {
+                    return Err(Error::InvalidInput(format!(
+                        "run records out of order: {r:?} after {last:?}"
+                    )));
+                }
+            }
+            if self.first.is_none() {
+                self.first = Some(*r);
+            }
+            self.last = Some(*r);
+            r.encode(&mut self.block);
+            self.block_records += 1;
+            self.count += 1;
+            if self.block.len() >= self.block_bytes {
+                self.flush_block()?;
+            }
+        }
+        Ok(())
+    }
+
+    fn flush_block(&mut self) -> Result<()> {
+        if self.block_records == 0 {
+            return Ok(());
+        }
+        self.file.write_all(&self.block_records.to_le_bytes())?;
+        self.file.write_all(&crc32(&self.block).to_le_bytes())?;
+        self.file.write_all(&self.block)?;
+        self.block.clear();
+        self.block_records = 0;
+        Ok(())
+    }
+
+    /// Flush the last block, write the footer, fsync, and return the
+    /// run summary. Empty runs are refused — the store never spills
+    /// them, and a zero-record file would have no key range.
+    pub fn finish(mut self) -> Result<RunFileInfo<R>> {
+        self.flush_block()?;
+        let (Some(first), Some(last)) = (self.first, self.last) else {
+            return Err(Error::InvalidInput("refusing to write an empty run".into()));
+        };
+        let mut footer = Vec::with_capacity(8 + 2 * R::WIRE_BYTES);
+        footer.extend_from_slice(&self.count.to_le_bytes());
+        first.encode(&mut footer);
+        last.encode(&mut footer);
+        self.file.write_all(&FOOTER_MARKER.to_le_bytes())?;
+        self.file.write_all(&footer)?;
+        self.file.write_all(&crc32(&footer).to_le_bytes())?;
+        self.file.write_all(&RUN_END_MAGIC)?;
+        self.file.flush()?;
+        let file = self.file.into_inner().map_err(|e| Error::Io(e.into_error()))?;
+        file.sync_all()?;
+        let bytes = std::fs::metadata(&self.path)?.len();
+        Ok(RunFileInfo { count: self.count, bytes, first, last })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Reader.
+// ---------------------------------------------------------------------
+
+/// Buffered, chunked reader over one run file. [`RunReader::next_block`]
+/// yields one CRC-validated block at a time, so a compaction feeding
+/// from disk holds O(block) of a run resident, never the whole run.
+pub struct RunReader<R: WireRecord> {
+    file: BufReader<File>,
+    path: PathBuf,
+    read: u64,
+    done: bool,
+    _record: std::marker::PhantomData<R>,
+}
+
+impl<R: WireRecord> RunReader<R> {
+    /// Open `path` and validate the header (magic, wire id, width).
+    pub fn open(path: &Path) -> Result<Self> {
+        let mut file = BufReader::new(File::open(path)?);
+        let mut header = [0u8; 16];
+        file.read_exact(&mut header).map_err(|_| corrupt(path, "truncated header"))?;
+        if header[..8] != RUN_MAGIC {
+            return Err(corrupt(path, "bad magic"));
+        }
+        let wire_id = u32::from_le_bytes(header[8..12].try_into().unwrap());
+        let wire_bytes = u32::from_le_bytes(header[12..16].try_into().unwrap());
+        if wire_id != R::WIRE_ID || wire_bytes as usize != R::WIRE_BYTES {
+            return Err(corrupt(
+                path,
+                &format!(
+                    "record type mismatch: file has wire_id={wire_id} ({wire_bytes} B), \
+                     reader expects {} ({} B)",
+                    R::WIRE_ID,
+                    R::WIRE_BYTES
+                ),
+            ));
+        }
+        Ok(Self {
+            file,
+            path: path.to_path_buf(),
+            read: 0,
+            done: false,
+            _record: std::marker::PhantomData,
+        })
+    }
+
+    /// Next CRC-validated block of records, or `None` after the footer
+    /// (which is itself validated: count, CRC, trailing magic).
+    pub fn next_block(&mut self) -> Result<Option<Vec<R>>> {
+        if self.done {
+            return Ok(None);
+        }
+        let mut count = [0u8; 4];
+        self.file
+            .read_exact(&mut count)
+            .map_err(|_| corrupt(&self.path, "truncated at block boundary"))?;
+        let count = u32::from_le_bytes(count);
+        if count == FOOTER_MARKER {
+            self.read_footer()?;
+            self.done = true;
+            return Ok(None);
+        }
+        let mut crc = [0u8; 4];
+        self.file
+            .read_exact(&mut crc)
+            .map_err(|_| corrupt(&self.path, "truncated block header"))?;
+        let want_crc = u32::from_le_bytes(crc);
+        let mut payload = vec![0u8; count as usize * R::WIRE_BYTES];
+        self.file
+            .read_exact(&mut payload)
+            .map_err(|_| corrupt(&self.path, "truncated block payload"))?;
+        if crc32(&payload) != want_crc {
+            return Err(corrupt(&self.path, "block crc mismatch"));
+        }
+        let mut out = Vec::with_capacity(count as usize);
+        for chunk in payload.chunks_exact(R::WIRE_BYTES) {
+            out.push(R::decode(chunk));
+        }
+        self.read += u64::from(count);
+        Ok(Some(out))
+    }
+
+    fn read_footer(&mut self) -> Result<RunFileInfo<R>> {
+        let mut footer = vec![0u8; 8 + 2 * R::WIRE_BYTES];
+        self.file
+            .read_exact(&mut footer)
+            .map_err(|_| corrupt(&self.path, "truncated footer"))?;
+        let mut tail = [0u8; 12];
+        self.file
+            .read_exact(&mut tail)
+            .map_err(|_| corrupt(&self.path, "truncated footer tail"))?;
+        if crc32(&footer) != u32::from_le_bytes(tail[..4].try_into().unwrap()) {
+            return Err(corrupt(&self.path, "footer crc mismatch"));
+        }
+        if tail[4..] != RUN_END_MAGIC {
+            return Err(corrupt(&self.path, "bad end magic"));
+        }
+        let count = u64::from_le_bytes(footer[..8].try_into().unwrap());
+        if count != self.read {
+            return Err(corrupt(
+                &self.path,
+                &format!("footer count {count} != {} records read", self.read),
+            ));
+        }
+        let first = R::decode(&footer[8..8 + R::WIRE_BYTES]);
+        let last = R::decode(&footer[8 + R::WIRE_BYTES..]);
+        let bytes = std::fs::metadata(&self.path)?.len();
+        Ok(RunFileInfo { count, bytes, first, last })
+    }
+}
+
+/// Read and validate only the footer (seek from the end) — how
+/// recovery cross-checks a manifest entry without scanning the run.
+pub fn read_footer<R: WireRecord>(path: &Path) -> Result<RunFileInfo<R>> {
+    let footer_len = (4 + 8 + 2 * R::WIRE_BYTES + 4 + 8) as u64;
+    let mut file = File::open(path)?;
+    let len = file.metadata()?.len();
+    if len < 16 + footer_len {
+        return Err(corrupt(path, "file too short for a footer"));
+    }
+    file.seek(SeekFrom::End(-(footer_len as i64)))?;
+    let mut buf = vec![0u8; footer_len as usize];
+    file.read_exact(&mut buf)?;
+    if u32::from_le_bytes(buf[..4].try_into().unwrap()) != FOOTER_MARKER {
+        return Err(corrupt(path, "missing footer marker"));
+    }
+    let body = &buf[4..4 + 8 + 2 * R::WIRE_BYTES];
+    let crc_at = 4 + 8 + 2 * R::WIRE_BYTES;
+    if crc32(body) != u32::from_le_bytes(buf[crc_at..crc_at + 4].try_into().unwrap()) {
+        return Err(corrupt(path, "footer crc mismatch"));
+    }
+    if buf[crc_at + 4..] != RUN_END_MAGIC {
+        return Err(corrupt(path, "bad end magic"));
+    }
+    let count = u64::from_le_bytes(body[..8].try_into().unwrap());
+    let first = R::decode(&body[8..8 + R::WIRE_BYTES]);
+    let last = R::decode(&body[8 + R::WIRE_BYTES..]);
+    Ok(RunFileInfo { count, bytes: len, first, last })
+}
+
+/// Full-file verification: walk every block (validating each CRC) to
+/// the footer. Returns the footer summary on success.
+pub fn verify_run<R: WireRecord>(path: &Path) -> Result<RunFileInfo<R>> {
+    let mut reader = RunReader::<R>::open(path)?;
+    let mut prev: Option<R> = None;
+    while let Some(block) = reader.next_block()? {
+        for r in &block {
+            if let Some(p) = &prev {
+                if r.key() < p.key() {
+                    return Err(corrupt(path, "records out of key order"));
+                }
+            }
+            prev = Some(*r);
+        }
+    }
+    read_footer::<R>(path)
+}
+
+/// Convenience writer: one call for an in-memory sorted run.
+pub fn write_run<R: WireRecord>(
+    path: &Path,
+    records: &[R],
+    cfg: &StoreConfig,
+) -> Result<RunFileInfo<R>> {
+    let mut w = RunWriter::<R>::create(path, cfg.block_bytes)?;
+    w.append(records)?;
+    w.finish()
+}
+
+fn corrupt(path: &Path, what: &str) -> Error {
+    Error::InvalidInput(format!("corrupt run file {}: {what}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("mergeflow-format-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join("run.mfr")
+    }
+
+    fn small_cfg() -> StoreConfig {
+        StoreConfig { block_bytes: 64, ..StoreConfig::default() }
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // The standard IEEE check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn run_round_trips_in_blocks() {
+        let path = tmp("roundtrip");
+        let records: Vec<i32> = (0..1000).collect();
+        let info = write_run(&path, &records, &small_cfg()).unwrap();
+        assert_eq!(info.count, 1000);
+        assert_eq!((info.first, info.last), (0, 999));
+        let mut reader = RunReader::<i32>::open(&path).unwrap();
+        let mut got = Vec::new();
+        let mut blocks = 0;
+        while let Some(block) = reader.next_block().unwrap() {
+            assert!(block.len() * 4 <= 64 + 4, "blocks bounded by block_bytes");
+            got.extend(block);
+            blocks += 1;
+        }
+        assert_eq!(got, records);
+        assert!(blocks > 1, "small block_bytes must split the run");
+        // Footer-only read agrees.
+        let f = read_footer::<i32>(&path).unwrap();
+        assert_eq!((f.count, f.first, f.last), (1000, 0, 999));
+        verify_run::<i32>(&path).unwrap();
+    }
+
+    #[test]
+    fn pair_records_round_trip() {
+        let path = tmp("pairs");
+        let records: Vec<(u64, u64)> = (0..300u64).map(|k| (k / 3, k)).collect();
+        write_run(&path, &records, &small_cfg()).unwrap();
+        let mut reader = RunReader::<(u64, u64)>::open(&path).unwrap();
+        let mut got = Vec::new();
+        while let Some(block) = reader.next_block().unwrap() {
+            got.extend(block);
+        }
+        assert_eq!(got, records);
+    }
+
+    #[test]
+    fn unsorted_append_and_empty_finish_are_refused() {
+        let path = tmp("refused");
+        let mut w = RunWriter::<i32>::create(&path, 64).unwrap();
+        w.append(&[5, 6]).unwrap();
+        assert!(w.append(&[4]).is_err(), "key regression across appends");
+        let w = RunWriter::<i32>::create(&path, 64).unwrap();
+        assert!(w.finish().is_err(), "empty run refused");
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let path = tmp("corrupt");
+        let records: Vec<i32> = (0..500).collect();
+        write_run(&path, &records, &small_cfg()).unwrap();
+        // Flip one payload byte mid-file.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(verify_run::<i32>(&path).is_err());
+        // Truncation is detected too.
+        let ok = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &ok[..ok.len() - 7]).unwrap();
+        assert!(verify_run::<i32>(&path).is_err());
+        // Wrong record type at open.
+        write_run(&path, &records, &small_cfg()).unwrap();
+        assert!(RunReader::<u64>::open(&path).is_err());
+    }
+}

@@ -1,0 +1,445 @@
+//! Persistent run store: disk-backed sorted runs under an LSM-style
+//! level structure, with crash-safe manifest generations and a
+//! background level-compaction scheduler.
+//!
+//! The store is the durability layer below the in-memory compaction
+//! engine. Sealed runs are *spilled* to level 0 as append-only run
+//! files ([`format`]); a versioned manifest ([`manifest`]) records
+//! which files are live at which level; the [`scheduler`] scores
+//! levels under the configured [`StorePolicy`], streams overlapping
+//! run sets through the coordinator's `open_compaction` sessions
+//! block-by-block (never materializing a whole run), and installs the
+//! merged output via a new manifest generation *before* deleting its
+//! inputs. Crash recovery is therefore always "load the highest
+//! complete generation, delete everything it doesn't reference".
+//!
+//! Fault injection (tests only, compiled in but dormant): the
+//! [`FailPoint`](crate::testutil::FailPoint) names honored here are
+//! `store.spill.precommit` (crash after writing a run file, before the
+//! manifest commit), `store.manifest.torn` (crash mid-manifest-write,
+//! leaving a truncated image), and `store.compact.predelete` (crash
+//! after installing a compaction output, before deleting its inputs).
+
+pub mod format;
+pub mod manifest;
+pub mod scheduler;
+
+pub use crate::config::{StoreConfig, StorePolicy};
+pub use format::{read_footer, verify_run, RunFileInfo, RunReader, RunWriter};
+pub use manifest::{manifest_name, peek_wire_id, run_file_name, RunMeta};
+pub use scheduler::LevelScheduler;
+
+use crate::coordinator::{MergeService, ServiceStats, StoreSink};
+use crate::server::frame::WireRecord;
+use crate::testutil::FailPoint;
+use crate::{Error, Result};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+struct StoreState<R> {
+    runs: Vec<RunMeta<R>>,
+    generation: u64,
+    next_file_id: u64,
+}
+
+/// Totals returned by [`RunStore::verify`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VerifyReport {
+    /// Run files fully scanned.
+    pub runs: u64,
+    /// Records across all runs.
+    pub records: u64,
+    /// Bytes across all run files.
+    pub bytes: u64,
+}
+
+/// Disk-backed store of sorted runs organized into LSM levels.
+///
+/// All mutation goes through the manifest protocol: write new run
+/// files first, commit a manifest generation naming the new live set,
+/// and only then delete obsolete files. The `state` mutex serializes
+/// manifest commits (an fsync under the lock — deliberate: generation
+/// order *is* the correctness story); `compact_lock` additionally
+/// serializes whole compaction passes so the background scheduler and
+/// a synchronous `FLUSH` never pick overlapping input sets.
+pub struct RunStore<R: WireRecord> {
+    dir: PathBuf,
+    cfg: StoreConfig,
+    state: Mutex<StoreState<R>>,
+    compact_lock: Mutex<()>,
+}
+
+impl<R: WireRecord> RunStore<R> {
+    /// Open (creating the directory if needed) and run crash recovery:
+    /// load the highest complete manifest generation, delete orphans.
+    pub fn open(cfg: &StoreConfig) -> Result<Self> {
+        if !cfg.enabled() {
+            return Err(Error::Config("store.dir is empty — store disabled".into()));
+        }
+        let dir = PathBuf::from(&cfg.dir);
+        std::fs::create_dir_all(&dir)?;
+        let (generation, runs) = manifest::recover::<R>(&dir)?;
+        let next_file_id = runs.iter().map(|r| r.file_id).max().map_or(0, |m| m + 1);
+        Ok(Self {
+            dir,
+            cfg: cfg.clone(),
+            state: Mutex::new(StoreState { runs, generation, next_file_id }),
+            compact_lock: Mutex::new(()),
+        })
+    }
+
+    /// Store directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Store configuration this instance was opened with.
+    pub fn config(&self) -> &StoreConfig {
+        &self.cfg
+    }
+
+    /// Current manifest generation.
+    pub fn generation(&self) -> u64 {
+        self.state.lock().unwrap().generation
+    }
+
+    /// Number of live runs.
+    pub fn run_count(&self) -> usize {
+        self.state.lock().unwrap().runs.len()
+    }
+
+    /// `(generation, live runs)` snapshot.
+    pub fn snapshot(&self) -> (u64, Vec<RunMeta<R>>) {
+        let st = self.state.lock().unwrap();
+        (st.generation, st.runs.clone())
+    }
+
+    /// Live runs grouped by level (index = level; empty levels kept).
+    pub fn levels(&self) -> Vec<Vec<RunMeta<R>>> {
+        let st = self.state.lock().unwrap();
+        let depth = st.runs.iter().map(|r| r.level as usize + 1).max().unwrap_or(0);
+        let mut by_level: Vec<Vec<RunMeta<R>>> = vec![Vec::new(); depth];
+        for r in &st.runs {
+            by_level[r.level as usize].push(*r);
+        }
+        for level in &mut by_level {
+            level.sort_by_key(|r| r.file_id);
+        }
+        by_level
+    }
+
+    fn run_path(&self, file_id: u64) -> PathBuf {
+        self.dir.join(run_file_name(file_id))
+    }
+
+    /// Buffered chunked reader over one live run.
+    pub fn reader(&self, meta: &RunMeta<R>) -> Result<RunReader<R>> {
+        RunReader::open(&self.run_path(meta.file_id))
+    }
+
+    fn allocate_file_id(&self) -> u64 {
+        let mut st = self.state.lock().unwrap();
+        let id = st.next_file_id;
+        st.next_file_id += 1;
+        id
+    }
+
+    /// Spill one sealed, sorted run to level 0. The run file is
+    /// written and fsynced first; the manifest commit that makes it
+    /// live happens second — a crash between the two leaves an orphan
+    /// that the next recovery deletes (failpoint
+    /// `store.spill.precommit` exercises exactly that window).
+    pub fn spill(&self, records: &[R]) -> Result<RunMeta<R>> {
+        if records.is_empty() {
+            return Err(Error::InvalidInput("refusing to spill an empty run".into()));
+        }
+        let file_id = self.allocate_file_id();
+        let path = self.run_path(file_id);
+        let info = format::write_run(&path, records, &self.cfg)?;
+        if FailPoint::hit("store.spill.precommit") {
+            return Err(Error::Service(format!(
+                "failpoint store.spill.precommit: crashed before manifest commit of {}",
+                path.display()
+            )));
+        }
+        let meta = RunMeta {
+            file_id,
+            level: 0,
+            count: info.count,
+            bytes: info.bytes,
+            min: info.first,
+            max: info.last,
+        };
+        let mut st = self.state.lock().unwrap();
+        let mut next = st.runs.clone();
+        next.push(meta);
+        manifest::commit(&self.dir, st.generation + 1, &next)?;
+        st.generation += 1;
+        st.runs = next;
+        Ok(meta)
+    }
+
+    /// Serialize a whole compaction pass (scheduler vs. synchronous
+    /// flush) — hold the guard across pick + merge + install.
+    pub fn compaction_permit(&self) -> MutexGuard<'_, ()> {
+        self.compact_lock.lock().unwrap()
+    }
+
+    /// Install a compaction output: write the merged run at
+    /// `to_level`, commit a manifest generation that swaps it in for
+    /// `input_ids`, and only then delete the input files. A crash in
+    /// the install/delete window (failpoint `store.compact.predelete`)
+    /// leaves the *new* generation authoritative and the inputs as
+    /// orphans for recovery to reclaim — never data loss, never
+    /// duplicates.
+    pub fn install_compaction(
+        &self,
+        input_ids: &[u64],
+        output: &[R],
+        to_level: u32,
+    ) -> Result<RunMeta<R>> {
+        if output.is_empty() {
+            return Err(Error::InvalidInput(
+                "refusing to install an empty compaction output".into(),
+            ));
+        }
+        let file_id = self.allocate_file_id();
+        let path = self.run_path(file_id);
+        let info = format::write_run(&path, output, &self.cfg)?;
+        let meta = RunMeta {
+            file_id,
+            level: to_level,
+            count: info.count,
+            bytes: info.bytes,
+            min: info.first,
+            max: info.last,
+        };
+        {
+            let mut st = self.state.lock().unwrap();
+            for id in input_ids {
+                if !st.runs.iter().any(|r| r.file_id == *id) {
+                    return Err(Error::Service(format!(
+                        "compaction input run {id} is no longer live"
+                    )));
+                }
+            }
+            let mut next: Vec<RunMeta<R>> =
+                st.runs.iter().filter(|r| !input_ids.contains(&r.file_id)).copied().collect();
+            next.push(meta);
+            manifest::commit(&self.dir, st.generation + 1, &next)?;
+            st.generation += 1;
+            st.runs = next;
+        }
+        if FailPoint::hit("store.compact.predelete") {
+            return Err(Error::Service(
+                "failpoint store.compact.predelete: crashed before deleting inputs".into(),
+            ));
+        }
+        for id in input_ids {
+            let _ = std::fs::remove_file(self.run_path(*id));
+        }
+        Ok(meta)
+    }
+
+    /// Re-verify every live run file end to end (header, every block
+    /// CRC, footer), cross-checking counts against the manifest.
+    pub fn verify(&self) -> Result<VerifyReport> {
+        let (_, runs) = self.snapshot();
+        let mut report = VerifyReport { runs: 0, records: 0, bytes: 0 };
+        for meta in &runs {
+            let path = self.run_path(meta.file_id);
+            let info = verify_run::<R>(&path)?;
+            if info.count != meta.count || info.bytes != meta.bytes {
+                return Err(Error::InvalidInput(format!(
+                    "run {} disagrees with manifest: file has {} records / {} bytes, \
+                     manifest says {} / {}",
+                    path.display(),
+                    info.count,
+                    info.bytes,
+                    meta.count,
+                    meta.bytes
+                )));
+            }
+            report.runs += 1;
+            report.records += info.count;
+            report.bytes += info.bytes;
+        }
+        Ok(report)
+    }
+
+    /// Human-readable listing: generation, per-level run counts, and
+    /// (when `verbose`) each run's id, count, bytes, and key range.
+    pub fn describe(&self, verbose: bool) -> String {
+        use std::fmt::Write as _;
+        let (gen, runs) = self.snapshot();
+        let total_records: u64 = runs.iter().map(|r| r.count).sum();
+        let total_bytes: u64 = runs.iter().map(|r| r.bytes).sum();
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "store {}: generation={gen} runs={} records={total_records} bytes={total_bytes} \
+             policy={}",
+            self.dir.display(),
+            runs.len(),
+            self.cfg.policy
+        );
+        for (level, level_runs) in self.levels().iter().enumerate() {
+            let records: u64 = level_runs.iter().map(|r| r.count).sum();
+            let bytes: u64 = level_runs.iter().map(|r| r.bytes).sum();
+            let _ = writeln!(
+                out,
+                "  L{level}: {} runs, {records} records, {bytes} bytes",
+                level_runs.len()
+            );
+            if verbose {
+                for r in level_runs {
+                    let _ = writeln!(
+                        out,
+                        "    {}  count={} bytes={} keys=[{:?} .. {:?}]",
+                        run_file_name(r.file_id),
+                        r.count,
+                        r.bytes,
+                        r.min.key(),
+                        r.max.key()
+                    );
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Adapter that plugs a [`RunStore`] into the coordinator as its
+/// [`StoreSink`]: `JobKind::Spill` jobs land here from pool workers,
+/// `JobKind::Flush` drives synchronous compaction passes, and store
+/// counters are mirrored into [`ServiceStats`].
+pub struct StoreBridge<R: WireRecord> {
+    store: Arc<RunStore<R>>,
+    stats: Arc<ServiceStats>,
+}
+
+impl<R: WireRecord> StoreBridge<R> {
+    /// Build the bridge and seed the stats gauges from the recovered
+    /// store state (runs and generation survive restarts; counters
+    /// must agree with what `STORE_STATS` reports).
+    pub fn new(store: Arc<RunStore<R>>, stats: Arc<ServiceStats>) -> Self {
+        let (gen, runs) = store.snapshot();
+        stats.store_runs.add(runs.len() as u64);
+        stats.store_generation.add(gen);
+        Self { store, stats }
+    }
+
+    /// The wrapped store.
+    pub fn store(&self) -> &Arc<RunStore<R>> {
+        &self.store
+    }
+}
+
+impl<R: WireRecord> StoreSink<R> for StoreBridge<R> {
+    fn spill(&self, run: &[R]) -> Result<u64> {
+        let meta = self.store.spill(run)?;
+        self.stats.store_spills.inc();
+        self.stats.store_spilled_bytes.add(meta.bytes);
+        self.stats.store_runs.add(1);
+        self.stats.store_generation.inc();
+        Ok(meta.bytes)
+    }
+
+    fn flush(&self, svc: &MergeService<R>) -> Result<u64> {
+        self.stats.store_flushes.inc();
+        scheduler::flush_until_quiescent(&self.store, svc, &self.stats)
+    }
+
+    fn stats_text(&self) -> String {
+        self.store.describe(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct TempDir(PathBuf);
+    impl TempDir {
+        fn new(name: &str) -> Self {
+            let dir = std::env::temp_dir()
+                .join(format!("mergeflow-store-mod-{}-{name}", std::process::id()));
+            let _ = std::fs::remove_dir_all(&dir);
+            Self(dir)
+        }
+        fn cfg(&self) -> StoreConfig {
+            StoreConfig {
+                dir: self.0.to_string_lossy().into_owned(),
+                block_bytes: 64,
+                ..StoreConfig::default()
+            }
+        }
+    }
+    impl Drop for TempDir {
+        fn drop(&mut self) {
+            let _ = std::fs::remove_dir_all(&self.0);
+        }
+    }
+
+    #[test]
+    fn spill_reopen_round_trip() {
+        let t = TempDir::new("spill-reopen");
+        let store = RunStore::<i32>::open(&t.cfg()).unwrap();
+        let a: Vec<i32> = (0..500).collect();
+        let b: Vec<i32> = (250..750).collect();
+        store.spill(&a).unwrap();
+        store.spill(&b).unwrap();
+        assert_eq!((store.generation(), store.run_count()), (2, 2));
+        drop(store);
+        let store = RunStore::<i32>::open(&t.cfg()).unwrap();
+        assert_eq!((store.generation(), store.run_count()), (2, 2));
+        let (_, runs) = store.snapshot();
+        let mut got = Vec::new();
+        for meta in &runs {
+            let mut rd = store.reader(meta).unwrap();
+            let mut run = Vec::new();
+            while let Some(block) = rd.next_block().unwrap() {
+                run.extend(block);
+            }
+            assert_eq!(run.len() as u64, meta.count);
+            got.push(run);
+        }
+        assert_eq!(got, vec![a, b]);
+        let report = store.verify().unwrap();
+        assert_eq!((report.runs, report.records), (2, 1000));
+    }
+
+    #[test]
+    fn install_compaction_swaps_inputs_for_output() {
+        let t = TempDir::new("install");
+        let store = RunStore::<i32>::open(&t.cfg()).unwrap();
+        let m1 = store.spill(&(0..100).collect::<Vec<i32>>()).unwrap();
+        let m2 = store.spill(&(50..150).collect::<Vec<i32>>()).unwrap();
+        let mut merged: Vec<i32> = (0..100).chain(50..150).collect();
+        merged.sort_unstable();
+        let out = store
+            .install_compaction(&[m1.file_id, m2.file_id], &merged, 1)
+            .unwrap();
+        assert_eq!(out.level, 1);
+        assert_eq!(store.run_count(), 1);
+        assert_eq!(store.generation(), 3);
+        assert!(!t.0.join(run_file_name(m1.file_id)).exists());
+        assert!(!t.0.join(run_file_name(m2.file_id)).exists());
+        let levels = store.levels();
+        assert_eq!(levels[0].len(), 0);
+        assert_eq!(levels[1].len(), 1);
+        assert_eq!(levels[1][0].count, 200);
+        let text = store.describe(true);
+        assert!(text.contains("generation=3"), "describe lists generation: {text}");
+        assert!(text.contains("L1: 1 runs"), "describe lists levels: {text}");
+    }
+
+    #[test]
+    fn empty_spill_and_disabled_config_are_refused() {
+        let t = TempDir::new("refused");
+        let store = RunStore::<i32>::open(&t.cfg()).unwrap();
+        assert!(store.spill(&[]).is_err());
+        let disabled = StoreConfig::default();
+        assert!(RunStore::<i32>::open(&disabled).is_err());
+    }
+}

@@ -1,0 +1,326 @@
+//! Background level-compaction scheduler.
+//!
+//! A single thread repeatedly scores the store's levels under the
+//! configured [`StorePolicy`], picks a set of input runs, streams them
+//! block-by-block through the coordinator's `open_compaction` session
+//! (so the merge is budget-admitted and flow-controlled exactly like
+//! any client workload), installs the merged output via a new manifest
+//! generation, and only then lets the store delete the inputs.
+//!
+//! Policies:
+//!
+//! * `tiered` — the lowest level holding at least its run threshold
+//!   (`level0_max_runs` at L0, `level_fanout` deeper) has *all* its
+//!   runs merged into one run at the next level. Write-optimized:
+//!   every record is rewritten once per level it descends.
+//! * `leveled` — levels are scored `runs / limit(L)` with
+//!   `limit(L) = level0_max_runs · level_fanout^L`; the worst level at
+//!   or over its limit contributes up to `level_fanout` of its oldest
+//!   runs plus every key-range-overlapping run of the next level, all
+//!   merged into a single run at the next level. Read-optimized: deep
+//!   levels converge toward few, wide runs. (Simplification vs.
+//!   textbook leveled compaction: output is one run and levels are not
+//!   forced to be non-overlapping — runs are always independent sorted
+//!   runs, so this affects compaction economics, never correctness.)
+//!
+//! BUSY / budget rejections from the service surface as
+//! `Error::Service`; the scheduler counts a backoff and retries after
+//! `compact_backoff_ms`. A pass that finds nothing to do counts a
+//! skip and sleeps the same backoff.
+
+use super::{RunMeta, RunStore, StoreConfig, StorePolicy};
+use crate::coordinator::{MergeService, ServiceStats};
+use crate::server::frame::WireRecord;
+use crate::{Error, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Largest number of runs merged in one pass (bounds session fan-in
+/// and the dispatcher's planning cost for pathological backlogs).
+const MAX_COMPACTION_K: usize = 64;
+
+/// Retry bound for [`flush_until_quiescent`] — a flush that sees this
+/// many consecutive BUSY/budget rejections gives up instead of
+/// spinning forever against a service that is shutting down.
+const FLUSH_MAX_BACKOFFS: u32 = 1000;
+
+fn group_by_level<R: WireRecord>(runs: &[RunMeta<R>]) -> Vec<Vec<RunMeta<R>>> {
+    let depth = runs.iter().map(|r| r.level as usize + 1).max().unwrap_or(0);
+    let mut levels: Vec<Vec<RunMeta<R>>> = vec![Vec::new(); depth];
+    for r in runs {
+        levels[r.level as usize].push(*r);
+    }
+    for level in &mut levels {
+        level.sort_by_key(|r| r.file_id);
+    }
+    levels
+}
+
+/// Score the levels and pick `(inputs, output_level)` for the next
+/// compaction, or `None` when every level is within policy.
+pub(crate) fn pick<R: WireRecord>(
+    runs: &[RunMeta<R>],
+    cfg: &StoreConfig,
+) -> Option<(Vec<RunMeta<R>>, u32)> {
+    let levels = group_by_level(runs);
+    match cfg.policy {
+        StorePolicy::Tiered => {
+            for (l, level_runs) in levels.iter().enumerate() {
+                let threshold = if l == 0 { cfg.level0_max_runs } else { cfg.level_fanout };
+                if level_runs.len() >= threshold {
+                    let mut inputs = level_runs.clone();
+                    inputs.truncate(MAX_COMPACTION_K);
+                    return Some((inputs, l as u32 + 1));
+                }
+            }
+            None
+        }
+        StorePolicy::Leveled => {
+            let mut worst: Option<(usize, f64)> = None;
+            for (l, level_runs) in levels.iter().enumerate() {
+                if level_runs.is_empty() {
+                    continue;
+                }
+                let limit = (cfg.level0_max_runs as u64)
+                    .saturating_mul((cfg.level_fanout as u64).saturating_pow(l as u32))
+                    .max(1);
+                let score = level_runs.len() as f64 / limit as f64;
+                if score >= 1.0 && worst.map_or(true, |(_, s)| score > s) {
+                    worst = Some((l, score));
+                }
+            }
+            let (l, _) = worst?;
+            let mut inputs: Vec<RunMeta<R>> =
+                levels[l].iter().take(cfg.level_fanout).copied().collect();
+            if let Some(next) = levels.get(l + 1) {
+                for r in next {
+                    if inputs.iter().any(|sel| sel.level as usize == l && sel.overlaps(r)) {
+                        inputs.push(*r);
+                    }
+                }
+            }
+            inputs.truncate(MAX_COMPACTION_K);
+            Some((inputs, l as u32 + 1))
+        }
+    }
+}
+
+/// One compaction attempt: pick inputs, stream them through a
+/// compaction session, install the output. Returns `Ok(true)` if a
+/// compaction was installed, `Ok(false)` if the store is within
+/// policy (nothing to do). `Error::Service` means the service refused
+/// admission (BUSY / budget) — retry after backoff.
+pub fn run_pass<R: WireRecord>(
+    store: &RunStore<R>,
+    svc: &MergeService<R>,
+    stats: &ServiceStats,
+) -> Result<bool> {
+    let _permit = store.compaction_permit();
+    let (_, runs) = store.snapshot();
+    let Some((inputs, to_level)) = pick(&runs, store.config()) else {
+        stats.scheduler_skips.inc();
+        return Ok(false);
+    };
+    let mut session = svc.open_compaction(inputs.len())?;
+    let mut in_bytes = 0u64;
+    for (i, meta) in inputs.iter().enumerate() {
+        let mut reader = store.reader(meta)?;
+        while let Some(block) = reader.next_block()? {
+            session.feed(i, block)?;
+        }
+        session.seal_run(i)?;
+        in_bytes += meta.bytes;
+    }
+    let merged = session.seal()?.wait()?;
+    let input_ids: Vec<u64> = inputs.iter().map(|m| m.file_id).collect();
+    store.install_compaction(&input_ids, &merged.output, to_level)?;
+    stats.store_compactions.inc();
+    stats.store_compacted_bytes.add(in_bytes);
+    stats.store_runs.sub(input_ids.len() as u64 - 1);
+    stats.store_generation.inc();
+    stats.scheduler_passes.inc();
+    Ok(true)
+}
+
+/// Run compaction passes until the store is within policy; the
+/// synchronous engine behind the `FLUSH` wire verb. Returns the
+/// number of compactions installed. BUSY/budget rejections back off
+/// and retry (bounded), other errors propagate.
+pub fn flush_until_quiescent<R: WireRecord>(
+    store: &RunStore<R>,
+    svc: &MergeService<R>,
+    stats: &ServiceStats,
+) -> Result<u64> {
+    let backoff = Duration::from_millis(store.config().compact_backoff_ms.max(1));
+    let mut installed = 0u64;
+    let mut backoffs = 0u32;
+    loop {
+        match run_pass(store, svc, stats) {
+            Ok(true) => {
+                installed += 1;
+                backoffs = 0;
+            }
+            Ok(false) => return Ok(installed),
+            Err(Error::Service(msg)) => {
+                stats.scheduler_backoffs.inc();
+                backoffs += 1;
+                if backoffs >= FLUSH_MAX_BACKOFFS {
+                    return Err(Error::Service(format!(
+                        "flush gave up after {backoffs} rejected compaction attempts \
+                         (last: {msg})"
+                    )));
+                }
+                std::thread::sleep(backoff);
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Handle to the background scheduler thread. Stop it explicitly with
+/// [`LevelScheduler::stop`] (also run on drop) *before* tearing down
+/// the service it feeds.
+pub struct LevelScheduler {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl LevelScheduler {
+    /// Spawn the scheduler thread over `store`, submitting compaction
+    /// work to `svc`. Backoff cadence comes from the store's
+    /// `compact_backoff_ms`.
+    pub fn start<R: WireRecord>(store: Arc<RunStore<R>>, svc: Arc<MergeService<R>>) -> Self {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("mergeflow-store-scheduler".into())
+            .spawn(move || {
+                let stats = svc.stats_arc();
+                let backoff =
+                    Duration::from_millis(store.config().compact_backoff_ms.max(1));
+                while !stop_flag.load(Ordering::Relaxed) {
+                    match run_pass(&store, &svc, &stats) {
+                        // Installed one — immediately look for more.
+                        Ok(true) => {}
+                        Ok(false) => sleep_unless_stopped(&stop_flag, backoff),
+                        Err(Error::Service(_)) => {
+                            stats.scheduler_backoffs.inc();
+                            sleep_unless_stopped(&stop_flag, backoff);
+                        }
+                        Err(e) => {
+                            eprintln!("mergeflow: store scheduler error: {e}");
+                            sleep_unless_stopped(&stop_flag, backoff);
+                        }
+                    }
+                }
+            })
+            .expect("spawn store scheduler thread");
+        Self { stop, handle: Some(handle) }
+    }
+
+    /// Signal the thread to stop and join it.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(handle) = self.handle.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for LevelScheduler {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Sleep `total` in short slices so a stop request never waits out a
+/// full backoff.
+fn sleep_unless_stopped(stop: &AtomicBool, total: Duration) {
+    let slice = Duration::from_millis(5);
+    let mut remaining = total;
+    while !stop.load(Ordering::Relaxed) && remaining > Duration::ZERO {
+        let step = remaining.min(slice);
+        std::thread::sleep(step);
+        remaining -= step;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(file_id: u64, level: u32, min: i32, max: i32) -> RunMeta<i32> {
+        RunMeta { file_id, level, count: 16, bytes: 64, min, max }
+    }
+
+    fn cfg(policy: StorePolicy) -> StoreConfig {
+        StoreConfig {
+            policy,
+            level0_max_runs: 4,
+            level_fanout: 2,
+            ..StoreConfig::default()
+        }
+    }
+
+    #[test]
+    fn tiered_waits_for_the_level0_threshold() {
+        let cfg = cfg(StorePolicy::Tiered);
+        let runs: Vec<_> = (0..3).map(|i| meta(i, 0, 0, 100)).collect();
+        assert!(pick(&runs, &cfg).is_none(), "3 < level0_max_runs");
+        let runs: Vec<_> = (0..4).map(|i| meta(i, 0, 0, 100)).collect();
+        let (inputs, to) = pick(&runs, &cfg).unwrap();
+        assert_eq!((inputs.len(), to), (4, 1));
+    }
+
+    #[test]
+    fn tiered_prefers_the_lowest_eligible_level() {
+        let cfg = cfg(StorePolicy::Tiered);
+        let mut runs: Vec<_> = (0..4).map(|i| meta(i, 0, 0, 100)).collect();
+        runs.extend((10..12).map(|i| meta(i, 1, 0, 100)));
+        let (inputs, to) = pick(&runs, &cfg).unwrap();
+        assert_eq!(to, 1, "L0 backlog compacts before L1");
+        assert!(inputs.iter().all(|r| r.level == 0));
+        // With L0 quiet, the L1 backlog (2 >= fanout) is chosen.
+        let runs: Vec<_> = (10..12).map(|i| meta(i, 1, 0, 100)).collect();
+        let (inputs, to) = pick(&runs, &cfg).unwrap();
+        assert_eq!((inputs.len(), to), (2, 2));
+    }
+
+    #[test]
+    fn leveled_pulls_overlapping_next_level_runs() {
+        let cfg = cfg(StorePolicy::Leveled);
+        let mut runs: Vec<_> = (0..4).map(|i| meta(i, 0, 0, 50)).collect();
+        runs.push(meta(10, 1, 40, 60)); // overlaps the selection
+        runs.push(meta(11, 1, 200, 300)); // disjoint — must stay put
+        let (inputs, to) = pick(&runs, &cfg).unwrap();
+        assert_eq!(to, 1);
+        let ids: Vec<u64> = inputs.iter().map(|r| r.file_id).collect();
+        // fanout=2 oldest L0 runs + the one overlapping L1 run.
+        assert_eq!(ids, vec![0, 1, 10]);
+    }
+
+    #[test]
+    fn leveled_within_limits_is_quiet() {
+        let cfg = cfg(StorePolicy::Leveled);
+        let runs: Vec<_> = (0..3).map(|i| meta(i, 0, 0, 50)).collect();
+        assert!(pick(&runs, &cfg).is_none());
+        // limit(L1) = 4·2 = 8, so 7 runs at L1 is within policy.
+        let runs: Vec<_> = (0..7).map(|i| meta(i, 1, 0, 50)).collect();
+        assert!(pick(&runs, &cfg).is_none());
+        let runs: Vec<_> = (0..8).map(|i| meta(i, 1, 0, 50)).collect();
+        let (inputs, to) = pick(&runs, &cfg).unwrap();
+        assert_eq!((inputs.len(), to), (2, 2), "fanout oldest runs move down");
+    }
+
+    #[test]
+    fn empty_store_picks_nothing() {
+        assert!(pick::<i32>(&[], &cfg(StorePolicy::Tiered)).is_none());
+        assert!(pick::<i32>(&[], &cfg(StorePolicy::Leveled)).is_none());
+    }
+}

@@ -322,6 +322,79 @@ unsafe impl GlobalAlloc for CountingAlloc {
     }
 }
 
+/// Deterministic, thread-safe fault-injection points.
+///
+/// A fail point is a named counter armed by a test
+/// ([`FailPoint::arm`]) and checked by production code at a hazard
+/// site ([`FailPoint::hit`]). The Nth check of an armed point (1-based)
+/// returns `true` exactly once, then the point disarms itself — the
+/// "fail once at N" contract crash-safety tests need to stop a
+/// multi-step protocol at a precise step (mid-spill, pre-delete,
+/// between manifest commit and input reclamation) and assert recovery.
+///
+/// The un-armed fast path is one relaxed atomic load, so hit sites are
+/// free in production. State is process-global: concurrent tests must
+/// use distinct point names (the store/server suites embed the test
+/// name).
+pub struct FailPoint;
+static FAILPOINTS_ARMED: std::sync::atomic::AtomicUsize =
+    std::sync::atomic::AtomicUsize::new(0);
+static FAILPOINTS: std::sync::Mutex<Option<std::collections::HashMap<String, u64>>> =
+    std::sync::Mutex::new(None);
+
+impl FailPoint {
+    /// Arm `name` to fire on its `at`-th [`FailPoint::hit`] (1-based).
+    /// Re-arming an already-armed point resets its countdown.
+    pub fn arm(name: &str, at: u64) {
+        use std::sync::atomic::Ordering;
+        let mut map = FAILPOINTS.lock().unwrap();
+        let map = map.get_or_insert_with(Default::default);
+        if map.insert(name.to_string(), at.max(1)).is_none() {
+            FAILPOINTS_ARMED.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Check (and advance) the point. Returns `true` exactly once: on
+    /// the armed Nth call, after which the point is disarmed.
+    pub fn hit(name: &str) -> bool {
+        use std::sync::atomic::Ordering;
+        if FAILPOINTS_ARMED.load(Ordering::Relaxed) == 0 {
+            return false; // fast path: nothing armed anywhere
+        }
+        let mut guard = FAILPOINTS.lock().unwrap();
+        let Some(map) = guard.as_mut() else { return false };
+        let Some(remaining) = map.get_mut(name) else { return false };
+        *remaining -= 1;
+        if *remaining == 0 {
+            map.remove(name);
+            FAILPOINTS_ARMED.fetch_sub(1, Ordering::Relaxed);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Disarm `name` (no-op when not armed).
+    pub fn clear(name: &str) {
+        use std::sync::atomic::Ordering;
+        let mut guard = FAILPOINTS.lock().unwrap();
+        if let Some(map) = guard.as_mut() {
+            if map.remove(name).is_some() {
+                FAILPOINTS_ARMED.fetch_sub(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Whether `name` is currently armed (not yet fired or cleared).
+    pub fn is_armed(name: &str) -> bool {
+        FAILPOINTS
+            .lock()
+            .unwrap()
+            .as_ref()
+            .is_some_and(|m| m.contains_key(name))
+    }
+}
+
 /// Generate an arbitrary (unsorted) `Vec<i64>`.
 pub fn any_vec(
     rng: &mut Xoshiro256,
@@ -396,6 +469,30 @@ mod tests {
             );
         }
         assert!(Vec::<Vec<i64>>::new().shrink_candidates().is_empty());
+    }
+
+    #[test]
+    fn failpoint_fires_once_at_n() {
+        assert!(!FailPoint::hit("testutil.unit.never-armed"));
+        FailPoint::arm("testutil.unit.third", 3);
+        assert!(FailPoint::is_armed("testutil.unit.third"));
+        assert!(!FailPoint::hit("testutil.unit.third"));
+        assert!(!FailPoint::hit("testutil.unit.third"));
+        assert!(FailPoint::hit("testutil.unit.third"), "fires on the 3rd hit");
+        assert!(!FailPoint::hit("testutil.unit.third"), "fires exactly once");
+        assert!(!FailPoint::is_armed("testutil.unit.third"));
+    }
+
+    #[test]
+    fn failpoint_clear_and_rearm() {
+        FailPoint::arm("testutil.unit.cleared", 1);
+        FailPoint::clear("testutil.unit.cleared");
+        assert!(!FailPoint::hit("testutil.unit.cleared"));
+        // Re-arming resets the countdown.
+        FailPoint::arm("testutil.unit.rearm", 5);
+        assert!(!FailPoint::hit("testutil.unit.rearm"));
+        FailPoint::arm("testutil.unit.rearm", 1);
+        assert!(FailPoint::hit("testutil.unit.rearm"));
     }
 
     #[test]

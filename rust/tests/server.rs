@@ -275,17 +275,26 @@ fn interleaved_sessions_share_one_connection() {
 // ---------------------------------------------------------------------
 
 #[test]
-fn a_dropped_client_is_reaped_and_its_quota_drained() {
+fn a_killed_connection_is_reaped_and_its_quota_drained() {
+    use mergeflow::testutil::FailPoint;
     let (svc, server) = start::<i32>(base_config(), loopback());
-    {
-        let mut victim = Client::<i32>::connect(server.local_addr(), "victim").unwrap();
-        let sid = victim.open(2).unwrap();
-        let (chunk, _) = gen_sorted_pair(WorkloadKind::Uniform, 1_000, 1, 77);
-        victim.feed(sid, 0, &chunk).unwrap();
-        assert!(svc.stats().resident_bytes.get() > 0, "ingest is resident");
-        // Dropped here: no SEAL, no goodbye — the socket just closes.
-    }
-    wait_for("reap after client drop", || svc.stats().sessions_reaped.get() >= 1);
+    let mut victim = Client::<i32>::connect(server.local_addr(), "victim").unwrap();
+    let sid = victim.open(2).unwrap();
+    let (chunk, _) = gen_sorted_pair(WorkloadKind::Uniform, 1_000, 1, 77);
+    victim.feed(sid, 0, &chunk).unwrap();
+    assert!(svc.stats().resident_bytes.get() > 0, "ingest is resident");
+    // Deterministic server-side kill: the handler drops the very next
+    // frame it reads (modeling a crashed connection task at a frame
+    // boundary) — replacing the old ad-hoc scope-drop ordering, which
+    // raced the reaper against the client's TCP teardown. The point is
+    // tenant-scoped, so concurrent tests cannot consume the kill.
+    FailPoint::arm("server.conn.kill.victim", 1);
+    assert!(victim.ping().is_err(), "the killed connection is dead");
+    assert!(
+        !FailPoint::is_armed("server.conn.kill.victim"),
+        "the kill point fired exactly once"
+    );
+    wait_for("reap after connection kill", || svc.stats().sessions_reaped.get() >= 1);
     wait_for("resident bytes drained", || svc.stats().resident_bytes.get() == 0);
     let stats = svc.stats();
     assert_eq!(

@@ -1,0 +1,400 @@
+//! Persistent run store: crash-safety under injected kill points,
+//! scheduler/flush end-to-end behavior, and the coordinator + wire
+//! integration of `Spill`/`Flush`/`STORE_STATS`.
+//!
+//! The crash-recovery property pinned here: after a kill at *any*
+//! injected point (mid-spill, mid-manifest-write, between compaction
+//! install and input delete), reopening the store yields exactly the
+//! records of the last complete manifest generation — bit-identical to
+//! the oracle, no loss, no duplicates — and every orphaned file is
+//! reclaimed.
+//!
+//! `FailPoint`s are process-global, so every test in this file takes
+//! the `serial()` guard: a concurrent test's spill must never consume
+//! another test's armed kill.
+
+use mergeflow::config::{Backend, InplaceMode, MergeKernel, MergeflowConfig, ServerConfig};
+use mergeflow::coordinator::{JobKind, MergeService};
+use mergeflow::server::{serve, Client};
+use mergeflow::store::scheduler::run_pass;
+use mergeflow::store::{
+    manifest_name, run_file_name, LevelScheduler, RunStore, StoreBridge, StoreConfig,
+    StorePolicy,
+};
+use mergeflow::testutil::FailPoint;
+use mergeflow::Error;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::{Duration, Instant};
+
+/// Serialize all tests in this binary (see module docs).
+fn serial() -> MutexGuard<'static, ()> {
+    static GATE: OnceLock<Mutex<()>> = OnceLock::new();
+    GATE.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+struct TempDir(PathBuf);
+
+impl TempDir {
+    fn new(name: &str) -> Self {
+        let dir = std::env::temp_dir()
+            .join(format!("mergeflow-store-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        Self(dir)
+    }
+
+    /// Tiny blocks (64 B) so even small runs span many blocks.
+    fn cfg(&self) -> StoreConfig {
+        StoreConfig {
+            dir: self.0.to_string_lossy().into_owned(),
+            policy: StorePolicy::Tiered,
+            level0_max_runs: 4,
+            level_fanout: 4,
+            block_bytes: 64,
+            compact_backoff_ms: 5,
+        }
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+fn base_config() -> MergeflowConfig {
+    MergeflowConfig {
+        workers: 2,
+        threads_per_job: 2,
+        queue_capacity: 256,
+        max_batch: 8,
+        batch_timeout_us: 100,
+        backend: Backend::Native,
+        segmented: false,
+        segment_len: 0,
+        kway_segment_elems: 0,
+        cache_bytes: 0,
+        kway_flat_max_k: 64,
+        compact_sharding: false,
+        compact_shard_min_len: 0,
+        compact_chunk_len: 0,
+        compact_eager_min_len: 0,
+        memory_budget: 0,
+        inplace: InplaceMode::Auto,
+        kernel: MergeKernel::Auto,
+        artifacts_dir: "artifacts".into(),
+    }
+}
+
+/// All live records, read back through the chunked readers, flattened
+/// and key-sorted — the store-side image to compare against an oracle.
+fn contents(store: &RunStore<i32>) -> Vec<i32> {
+    let (_, runs) = store.snapshot();
+    let mut all = Vec::new();
+    for meta in &runs {
+        let mut rd = store.reader(meta).expect("open reader");
+        while let Some(block) = rd.next_block().expect("read block") {
+            all.extend(block);
+        }
+    }
+    all.sort_unstable();
+    all
+}
+
+fn run_files(dir: &PathBuf) -> Vec<String> {
+    let mut v: Vec<String> = std::fs::read_dir(dir)
+        .expect("read store dir")
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .filter(|n| n.starts_with("run-"))
+        .collect();
+    v.sort();
+    v
+}
+
+fn sorted_run(lo: i32, n: i32) -> Vec<i32> {
+    (lo..lo + n).collect()
+}
+
+fn wait_for(what: &str, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Crash safety: every injected kill point must recover to the last
+// complete generation, bit-identical, with orphans reclaimed.
+// ---------------------------------------------------------------------
+
+#[test]
+fn kill_mid_spill_recovers_without_the_orphan() {
+    let _g = serial();
+    let t = TempDir::new("kill-mid-spill");
+    let store = RunStore::<i32>::open(&t.cfg()).unwrap();
+    let survivor = sorted_run(0, 300);
+    store.spill(&survivor).unwrap();
+
+    // The second spill dies after writing its run file, before the
+    // manifest commit that would make it live.
+    FailPoint::arm("store.spill.precommit", 1);
+    let verdict = store.spill(&sorted_run(1_000, 300)).unwrap_err();
+    assert!(matches!(verdict, Error::Service(_)), "crash surfaces as Service: {verdict}");
+    assert!(!FailPoint::is_armed("store.spill.precommit"));
+    assert_eq!(store.generation(), 1, "the torn spill never committed");
+    assert_eq!(run_files(&t.0).len(), 2, "the orphan run file is on disk");
+    drop(store);
+
+    let store = RunStore::<i32>::open(&t.cfg()).unwrap();
+    assert_eq!((store.generation(), store.run_count()), (1, 1));
+    assert_eq!(contents(&store), survivor, "recovery is bit-identical to gen 1");
+    assert_eq!(run_files(&t.0).len(), 1, "recovery reclaimed the orphan");
+    store.verify().unwrap();
+}
+
+#[test]
+fn torn_manifest_falls_back_one_generation() {
+    let _g = serial();
+    let t = TempDir::new("torn-manifest");
+    let store = RunStore::<i32>::open(&t.cfg()).unwrap();
+    let survivor = sorted_run(0, 500);
+    store.spill(&survivor).unwrap();
+
+    // The next spill is killed mid-manifest-write: a truncated
+    // generation-2 image lands under the *final* manifest name.
+    FailPoint::arm("store.manifest.torn", 1);
+    store.spill(&sorted_run(2_000, 500)).unwrap_err();
+    assert!(t.0.join(manifest_name(2)).exists(), "the torn image exists");
+    drop(store);
+
+    let store = RunStore::<i32>::open(&t.cfg()).unwrap();
+    assert_eq!(store.generation(), 1, "recovery fell back past the torn image");
+    assert_eq!(contents(&store), survivor, "gen 1 is intact, bit for bit");
+    assert!(!t.0.join(manifest_name(2)).exists(), "the torn image was deleted");
+    assert_eq!(run_files(&t.0).len(), 1, "the uncommitted run was deleted");
+
+    // The store is fully usable after the fallback: the next commit
+    // simply takes the next generation number.
+    store.spill(&sorted_run(2_000, 500)).unwrap();
+    assert_eq!((store.generation(), store.run_count()), (2, 2));
+    store.verify().unwrap();
+}
+
+#[test]
+fn kill_between_install_and_delete_reclaims_the_inputs() {
+    let _g = serial();
+    let t = TempDir::new("install-predelete");
+    let store = RunStore::<i32>::open(&t.cfg()).unwrap();
+    let svc = MergeService::<i32>::start(base_config()).unwrap();
+    let mut oracle = Vec::new();
+    for i in 0..4 {
+        let run = sorted_run(i * 100, 250); // overlapping key ranges
+        oracle.extend_from_slice(&run);
+        store.spill(&run).unwrap();
+    }
+    oracle.sort_unstable();
+
+    // One full compaction pass (4 L0 runs >= level0_max_runs) that is
+    // killed after installing the merged output, before deleting the
+    // four inputs.
+    FailPoint::arm("store.compact.predelete", 1);
+    let verdict = run_pass(&store, &svc, svc.stats()).unwrap_err();
+    assert!(matches!(verdict, Error::Service(_)), "{verdict}");
+    assert_eq!(
+        run_files(&t.0).len(),
+        5,
+        "output installed, inputs not yet deleted — the dangerous window"
+    );
+    drop(store);
+
+    // Recovery: the new generation is authoritative; the four input
+    // files are orphans. No loss, no duplicates.
+    let store = RunStore::<i32>::open(&t.cfg()).unwrap();
+    assert_eq!(store.run_count(), 1, "only the merged output is live");
+    assert_eq!(run_files(&t.0).len(), 1, "input orphans reclaimed");
+    assert_eq!(contents(&store), oracle, "merged output is bit-identical");
+    store.verify().unwrap();
+    svc.shutdown();
+}
+
+#[test]
+fn verify_detects_a_flipped_bit() {
+    let _g = serial();
+    let t = TempDir::new("verify-corruption");
+    let store = RunStore::<i32>::open(&t.cfg()).unwrap();
+    let meta = store.spill(&sorted_run(0, 400)).unwrap();
+    store.verify().unwrap();
+
+    // Flip one byte inside the first data block's payload (past the
+    // 16-byte file header and the 8-byte block header).
+    let path = t.0.join(run_file_name(meta.file_id));
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes[16 + 8] ^= 0x40;
+    std::fs::write(&path, &bytes).unwrap();
+    let verdict = store.verify().unwrap_err();
+    assert!(
+        verdict.to_string().contains("crc"),
+        "the block CRC catches the flip: {verdict}"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Coordinator integration: Spill/Flush jobs, stats, scheduler.
+// ---------------------------------------------------------------------
+
+#[test]
+fn spill_and_flush_jobs_compact_the_store_to_policy() {
+    let _g = serial();
+    let t = TempDir::new("svc-flush");
+    let store = Arc::new(RunStore::<i32>::open(&t.cfg()).unwrap());
+    let svc = MergeService::<i32>::start(base_config()).unwrap();
+
+    // Spill without a store attached fails fast and is ledgered.
+    assert!(svc.submit(JobKind::Spill { run: vec![1, 2, 3] }).is_err());
+    svc.attach_store(Arc::new(StoreBridge::new(Arc::clone(&store), svc.stats_arc())))
+        .unwrap();
+    assert!(svc.has_store());
+
+    // Unsorted and empty spills are refused at submit.
+    assert!(matches!(
+        svc.submit(JobKind::Spill { run: vec![5, 3, 4] }).unwrap_err(),
+        Error::InvalidInput(_)
+    ));
+    assert!(matches!(
+        svc.submit(JobKind::Spill { run: vec![] }).unwrap_err(),
+        Error::InvalidInput(_)
+    ));
+
+    // Eight spill jobs through the pool; the result echoes the run.
+    let mut oracle = Vec::new();
+    for i in 0..8 {
+        let run = sorted_run(i * 64, 256);
+        oracle.extend_from_slice(&run);
+        let r = svc.submit_blocking(JobKind::Spill { run: run.clone() }).unwrap();
+        assert_eq!(r.backend, "store-spill");
+        assert_eq!(r.output, run, "spill echoes its input");
+    }
+    oracle.sort_unstable();
+    wait_for("all spills durable", || store.run_count() == 8);
+
+    // A synchronous Flush drives compaction until within policy:
+    // tiered with 8 >= level0_max_runs merges all eight into one L1 run.
+    let r = svc.submit_blocking(JobKind::Flush).unwrap();
+    assert_eq!(r.backend, "store-flush");
+    assert!(r.output.is_empty(), "flush returns no records");
+    assert_eq!(store.run_count(), 1, "eight L0 runs became one L1 run");
+    assert_eq!(contents(&store), oracle, "compacted store is bit-identical");
+
+    let stats = svc.stats();
+    assert_eq!(stats.store_spills.get(), 8);
+    assert_eq!(stats.store_flushes.get(), 1);
+    assert!(stats.store_compactions.get() >= 1);
+    assert_eq!(stats.store_runs.get(), 1);
+    assert_eq!(stats.rejected.get(), 3, "the three precondition refusals were counted");
+    assert_eq!(
+        stats.submitted.get(),
+        stats.completed.get(),
+        "every admitted spill/flush (and the flush's internal compaction) completed"
+    );
+    let text = svc.store_stats_text().expect("store stats text");
+    assert!(text.contains("generation="), "{text}");
+    let snapshot = stats.snapshot();
+    assert!(snapshot.contains("spills=8"), "{snapshot}");
+    svc.shutdown();
+}
+
+#[test]
+fn background_scheduler_compacts_while_spills_arrive() {
+    let _g = serial();
+    let t = TempDir::new("bg-scheduler");
+    let store = Arc::new(RunStore::<i32>::open(&t.cfg()).unwrap());
+    let svc = Arc::new(MergeService::<i32>::start(base_config()).unwrap());
+    let scheduler = LevelScheduler::start(Arc::clone(&store), Arc::clone(&svc));
+
+    let mut oracle = Vec::new();
+    for i in 0..10 {
+        let run = sorted_run(i * 37, 200);
+        oracle.extend_from_slice(&run);
+        store.spill(&run).unwrap();
+    }
+    oracle.sort_unstable();
+
+    // The scheduler must converge the backlog below the L0 threshold
+    // without any explicit flush.
+    wait_for("scheduler converges L0", || {
+        store.levels().first().map_or(true, |l0| l0.len() < 4)
+    });
+    scheduler.stop();
+    assert!(svc.stats().scheduler_passes.get() >= 1, "at least one pass ran");
+    assert_eq!(contents(&store), oracle, "no records lost or duplicated");
+    store.verify().unwrap();
+    svc.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Wire integration: FLUSH (spill + drain) and STORE_STATS verbs.
+// ---------------------------------------------------------------------
+
+#[test]
+fn spill_flush_and_store_stats_over_the_wire() {
+    let _g = serial();
+    let t = TempDir::new("wire");
+    let store = Arc::new(RunStore::<i32>::open(&t.cfg()).unwrap());
+    let svc = Arc::new(MergeService::<i32>::start(base_config()).unwrap());
+    svc.attach_store(Arc::new(StoreBridge::new(Arc::clone(&store), svc.stats_arc())))
+        .unwrap();
+    let scfg = ServerConfig { listen: "127.0.0.1:0".into(), lease_ms: 0, ..Default::default() };
+    let server = serve(Arc::clone(&svc), scfg).unwrap();
+    let mut client = Client::<i32>::connect(server.local_addr(), "store-user").unwrap();
+
+    let mut oracle = Vec::new();
+    for i in 0..5 {
+        let run = sorted_run(i * 50, 120);
+        oracle.extend_from_slice(&run);
+        let (backend, echoed) = client.spill(&run).unwrap();
+        assert_eq!(backend, "store-spill");
+        assert_eq!(echoed, run);
+    }
+    oracle.sort_unstable();
+    assert!(
+        matches!(client.spill(&[3, 1, 2]).unwrap_err(), Error::InvalidInput(_)),
+        "unsorted spill is a typed invalid-input on the wire"
+    );
+
+    // An empty FLUSH payload means drain: 5 >= level0_max_runs merges.
+    let (backend, out) = client.flush().unwrap();
+    assert_eq!(backend, "store-flush");
+    assert!(out.is_empty());
+    assert_eq!(store.run_count(), 1);
+    assert_eq!(contents(&store), oracle, "wire-fed store is bit-identical");
+
+    let text = client.store_stats().unwrap();
+    assert!(text.contains("generation="), "{text}");
+    assert!(text.contains("L1:"), "{text}");
+    server.shutdown();
+}
+
+#[test]
+fn store_verbs_without_a_store_get_typed_refusals() {
+    let _g = serial();
+    let svc = Arc::new(MergeService::<i32>::start(base_config()).unwrap());
+    let scfg = ServerConfig { listen: "127.0.0.1:0".into(), lease_ms: 0, ..Default::default() };
+    let server = serve(Arc::clone(&svc), scfg).unwrap();
+    let mut client = Client::<i32>::connect(server.local_addr(), "storeless").unwrap();
+    let verdict = client.spill(&[1, 2, 3]).unwrap_err();
+    assert!(
+        verdict.to_string().contains("no store"),
+        "spill names the missing store: {verdict}"
+    );
+    let verdict = client.store_stats().unwrap_err();
+    assert!(
+        verdict.to_string().contains("no store"),
+        "store_stats names the missing store: {verdict}"
+    );
+    // The connection keeps serving after both refusals.
+    client.ping().unwrap();
+    server.shutdown();
+}
