@@ -58,6 +58,12 @@ fn main() {
         memory_budget: 0,                 // unbudgeted: the demo keeps every route open
         inplace: InplaceMode::Auto,
         kernel: MergeKernel::Auto,
+        // Single dispatcher shard, calibration probes off:
+        // deterministic control plane and knob values.
+        dispatch_shards: 1,
+        dispatch_steal: true,
+        calibrate: false,
+        shard_floor: 1 << 18,
         artifacts_dir: "artifacts".into(),
     };
     println!("config: {cfg:?}");
@@ -249,6 +255,12 @@ fn main() {
             memory_budget: 0,
             inplace: InplaceMode::Auto,
             kernel: MergeKernel::Auto,
+            // Single dispatcher shard, calibration probes off:
+            // deterministic control plane and knob values.
+            dispatch_shards: 1,
+            dispatch_steal: true,
+            calibrate: false,
+            shard_floor: 1 << 18,
             artifacts_dir: "artifacts".into(),
         };
         let typed = MergeService::<(u64, u64)>::start(typed_cfg).expect("typed service");
@@ -310,6 +322,12 @@ fn main() {
             memory_budget: 0,
             inplace: InplaceMode::Auto,
             kernel: MergeKernel::Auto,
+            // Single dispatcher shard, calibration probes off:
+            // deterministic control plane and knob values.
+            dispatch_shards: 1,
+            dispatch_steal: true,
+            calibrate: false,
+            shard_floor: 1 << 18,
             artifacts_dir: "artifacts".into(),
         };
         let wire_svc = std::sync::Arc::new(
@@ -402,6 +420,12 @@ fn main() {
             memory_budget: budget,
             inplace: InplaceMode::Auto,
             kernel: MergeKernel::Auto,
+            // Single dispatcher shard, calibration probes off:
+            // deterministic control plane and knob values.
+            dispatch_shards: 1,
+            dispatch_steal: true,
+            calibrate: false,
+            shard_floor: 1 << 18,
             artifacts_dir: "artifacts".into(),
         };
         // level0_max_runs = 8 keeps every compaction pass (8 × 128 KiB

@@ -1,0 +1,129 @@
+//! Control-plane throughput: floods of tiny jobs through 1 vs N
+//! dispatcher shards, with and without work stealing.
+//!
+//! Tiny jobs make dispatch overhead the bottleneck — the merge itself
+//! is tens of nanoseconds, so jobs/sec measures the cost of admission,
+//! batch assembly, routing and dispatch. The interesting comparisons:
+//! shards=1 (the legacy single dispatcher) vs shards>=2, and stealing
+//! on vs off under a skew where one shard's queue runs hot.
+//!
+//! Env: MERGEFLOW_BENCH_JOBS     = jobs per run       (default 20000),
+//!      MERGEFLOW_BENCH_JOB_SIZE = elems per side     (default 64),
+//!      MERGEFLOW_BENCH_SHARDS   = max shards swept   (default 4).
+
+use mergeflow::bench::workload::{gen_sorted_pair, WorkloadKind};
+use mergeflow::config::{Backend, InplaceMode, MergeKernel, MergeflowConfig};
+use mergeflow::coordinator::{JobKind, MergeService};
+use mergeflow::metrics::{fmt_ns, fmt_throughput};
+use std::time::Instant;
+
+fn config(shards: usize, steal: bool) -> MergeflowConfig {
+    MergeflowConfig {
+        workers: 4,
+        threads_per_job: 1,
+        queue_capacity: 4096,
+        max_batch: 64,
+        batch_timeout_us: 50,
+        backend: Backend::Native,
+        segmented: false,
+        segment_len: 0,
+        kway_segment_elems: 0,
+        cache_bytes: 0,
+        kway_flat_max_k: 64,
+        compact_sharding: false,
+        compact_shard_min_len: 0,
+        compact_chunk_len: 0,
+        compact_eager_min_len: 0,
+        memory_budget: 0,
+        inplace: InplaceMode::Never,
+        kernel: MergeKernel::Auto,
+        dispatch_shards: shards,
+        dispatch_steal: steal,
+        calibrate: false,
+        shard_floor: 1 << 18,
+        artifacts_dir: "artifacts".into(),
+    }
+}
+
+/// One run: flood `jobs` tiny merges through the service, wait for
+/// all, report jobs/sec and the p99 admission->plan queue age.
+fn run(shards: usize, steal: bool, jobs: usize, job_size: usize) {
+    let svc = MergeService::start(config(shards, steal)).expect("service start");
+    // A small pool of pre-generated inputs, cycled: generation cost
+    // stays out of the submit loop.
+    let inputs: Vec<(Vec<i32>, Vec<i32>)> = (0..64u64)
+        .map(|s| gen_sorted_pair(WorkloadKind::Uniform, job_size, job_size, s))
+        .collect();
+
+    // Warmup so pool threads and queues are hot before timing.
+    for (a, b) in inputs.iter().take(16) {
+        let h = svc
+            .submit(JobKind::Merge { a: a.clone(), b: b.clone() })
+            .expect("warmup submit");
+        std::hint::black_box(h.wait().expect("warmup merge"));
+    }
+
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(jobs);
+    for i in 0..jobs {
+        let (a, b) = &inputs[i % inputs.len()];
+        match svc.submit(JobKind::Merge { a: a.clone(), b: b.clone() }) {
+            Ok(h) => handles.push(h),
+            // Queue full: apply backpressure by draining the oldest
+            // handle, then retry once.
+            Err(_) => {
+                if let Some(h) = handles.pop() {
+                    std::hint::black_box(h.wait().expect("merge"));
+                }
+                let (a, b) = &inputs[i % inputs.len()];
+                let h = svc
+                    .submit(JobKind::Merge { a: a.clone(), b: b.clone() })
+                    .expect("submit after drain");
+                handles.push(h);
+            }
+        }
+    }
+    for h in handles {
+        std::hint::black_box(h.wait().expect("merge"));
+    }
+    let elapsed_ns = t0.elapsed().as_nanos().max(1) as u64;
+
+    let stats = svc.stats();
+    let p99_age = stats.stage_admission.quantile(0.99);
+    let stolen: u64 = (0..stats.dispatch_shard_count())
+        .map(|i| stats.dispatch_shard(i).unwrap().stolen_jobs.get())
+        .sum();
+    println!(
+        "dispatch_throughput shards={shards} steal={} jobs={jobs} size={job_size}: \
+         {}  p99-queue-age={}  stolen={stolen}  ({} total)",
+        if steal { "on" } else { "off" },
+        fmt_throughput(jobs as u64, elapsed_ns).replace("e/s", " jobs/s"),
+        fmt_ns(p99_age),
+        fmt_ns(elapsed_ns),
+    );
+    svc.shutdown();
+}
+
+fn main() {
+    let jobs: usize = std::env::var("MERGEFLOW_BENCH_JOBS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(20_000);
+    let job_size: usize = std::env::var("MERGEFLOW_BENCH_JOB_SIZE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64);
+    let max_shards: usize = std::env::var("MERGEFLOW_BENCH_SHARDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4);
+
+    println!("== dispatch throughput: tiny-job floods through the sharded control plane ==");
+    run(1, false, jobs, job_size);
+    let mut n = 2;
+    while n <= max_shards {
+        run(n, false, jobs, job_size);
+        run(n, true, jobs, job_size);
+        n *= 2;
+    }
+}

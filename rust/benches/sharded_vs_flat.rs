@@ -52,6 +52,12 @@ fn service(compact_shard_min_len: usize) -> MergeService {
         memory_budget: 0,
         inplace: InplaceMode::Never,
         kernel: MergeKernel::Auto,
+        // Single dispatcher shard, calibration probes off:
+        // deterministic control plane and knob values.
+        dispatch_shards: 1,
+        dispatch_steal: true,
+        calibrate: false,
+        shard_floor: 1 << 18,
         artifacts_dir: "artifacts".into(),
     };
     MergeService::start(cfg).expect("service start")

@@ -10,6 +10,7 @@
 //! mergeflow probe   [--scale S]
 //! mergeflow artifacts [--dir artifacts]
 //! mergeflow store   [verify] --dir DIR [--verbose]
+//! mergeflow stats   --listen ADDR
 //! mergeflow kernels
 //! ```
 
@@ -113,6 +114,7 @@ USAGE:
   mergeflow probe   [--scale S]
   mergeflow artifacts [--dir DIR]
   mergeflow store   [verify] --dir DIR [--verbose]
+  mergeflow stats   --listen HOST:PORT|unix:/PATH
   mergeflow kernels
   mergeflow help
 

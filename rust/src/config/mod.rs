@@ -219,15 +219,27 @@ pub struct MergeflowConfig {
     /// Largest run count `k` served by the flat single-pass k-way merge
     /// engine (`mergepath::kway_path`) — and by the rank-sharded route,
     /// which runs the same per-shard k-way kernel; compactions with
-    /// more runs fall back to the pairwise-tree engine. 0 disables the
-    /// flat engine (and sharding with it).
+    /// more runs fall back to the pairwise-tree engine.
+    ///
+    /// **0 means auto-calibrate**: at service start the
+    /// [`Calibrator`](crate::coordinator::calibrate) probes the
+    /// flat-vs-tree crossover on the host and pins the measured value
+    /// (when [`calibrate`](Self::calibrate) is off, 0 falls back to the
+    /// modeled default). Any non-zero value pins the knob.
+    ///
+    /// **Migration note:** before the calibration change, `0` meant
+    /// "flat engine off". Spell off as `kway_flat_max_k = 1` now — the
+    /// flat, sharded and eager routes all require `k ≥ 2`, so `1`
+    /// routes every compaction to the pairwise tree exactly as `0` used
+    /// to (the same `0 = auto` convention as `segment_len` and
+    /// `compact_shard_min_len`).
     ///
     /// The default comes from the crossover *model* documented in
     /// `docs/ARCHITECTURE.md` §5, anchored by
     /// `benches/kway_flat_vs_tree.rs` runs at `k ≤ 64` (the flat
     /// engine won at every swept k; 128 sits past the sweep but well
-    /// below the stream-thrash regime). Re-derive it per deployment by
-    /// running the bench with larger k.
+    /// below the stream-thrash regime). Set the knob to 0 to let the
+    /// calibrator re-derive it per deployment.
     pub kway_flat_max_k: usize,
     /// Whether rank-sharded compaction (`coordinator::shard`) is
     /// enabled at all.
@@ -290,6 +302,36 @@ pub struct MergeflowConfig {
     /// `auto`, completed jobs that ran the leaf kernel report a
     /// `+<kernel>`-suffixed backend tag so the pin is visible in stats.
     pub kernel: MergeKernel,
+    /// Dispatcher shards (`dispatch.shards`): independent dispatcher
+    /// threads, each owning a private job queue and session-table
+    /// slice; jobs and sessions are routed to a shard by id hash.
+    /// **0 means auto**: one shard per ~8 hardware threads, clamped to
+    /// `[1, 8]`. `1` reproduces the classic single-dispatcher control
+    /// plane bit for bit.
+    pub dispatch_shards: usize,
+    /// Whether an idle dispatcher shard may steal queued one-shot jobs
+    /// from the most loaded peer shard's queue (`dispatch.steal`).
+    /// Streaming-session messages are never stolen — a session's
+    /// ordering is owned by its home shard. Meaningless with one shard.
+    pub dispatch_steal: bool,
+    /// Whether the startup [`Calibrator`](crate::coordinator::calibrate)
+    /// may resolve `0 = auto-calibrate` knobs
+    /// ([`kway_flat_max_k`](Self::kway_flat_max_k),
+    /// [`shard_floor`](Self::shard_floor), and the detected cache feeding
+    /// [`kway_segment_elems`](Self::kway_segment_elems)) from in-process
+    /// probe merges (`dispatch.calibrate`). When `false`, those knobs
+    /// fall back to their modeled defaults instead. Probes run once per
+    /// process and are cached.
+    pub calibrate: bool,
+    /// Profitability floor (elements) for auto-sized rank shards: when
+    /// [`compact_shard_min_len`](Self::compact_shard_min_len)` = 0`,
+    /// the per-job shard size is `clamp(total / workers, shard_floor,
+    /// u32::MAX)` (`dispatch.shard_floor`). **0 means auto-calibrate**
+    /// from the measured merge rate (shards below the floor would spend
+    /// more time on dispatch than merging); the default pins the
+    /// modeled 256 Ki-element floor that `benches/sharded_vs_flat.rs`
+    /// locates per machine.
+    pub shard_floor: usize,
     /// Directory holding AOT artifacts.
     pub artifacts_dir: String,
 }
@@ -315,6 +357,10 @@ impl Default for MergeflowConfig {
             memory_budget: 0,
             inplace: InplaceMode::Auto,
             kernel: MergeKernel::Auto,
+            dispatch_shards: 0,
+            dispatch_steal: true,
+            calibrate: true,
+            shard_floor: 1 << 18,
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -347,6 +393,10 @@ impl MergeflowConfig {
             memory_budget: raw.get_usize("merge.memory_budget", d.memory_budget)?,
             inplace: raw.get_str("merge.inplace", "auto").parse()?,
             kernel: raw.get_str("merge.kernel", "auto").parse()?,
+            dispatch_shards: raw.get_usize("dispatch.shards", d.dispatch_shards)?,
+            dispatch_steal: raw.get_bool("dispatch.steal", d.dispatch_steal)?,
+            calibrate: raw.get_bool("dispatch.calibrate", d.calibrate)?,
+            shard_floor: raw.get_usize("dispatch.shard_floor", d.shard_floor)?,
             artifacts_dir: raw.get_str("service.artifacts_dir", &d.artifacts_dir),
         };
         cfg.validate()?;
@@ -427,6 +477,20 @@ impl MergeflowConfig {
         .segment_elems
     }
 
+    /// Resolved dispatcher shard count:
+    /// [`dispatch_shards`](Self::dispatch_shards) when non-zero, else
+    /// one shard per ~8 hardware threads (a dispatcher shard is pure
+    /// control plane — it plans and hands off, so a few keep many
+    /// workers fed), clamped to `[1, 8]` so small hosts get the classic
+    /// single dispatcher and huge ones don't burn cores on idle pollers.
+    pub fn effective_dispatch_shards(&self) -> usize {
+        if self.dispatch_shards > 0 {
+            return self.dispatch_shards;
+        }
+        let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+        (cores / 8).clamp(1, 8)
+    }
+
     /// Whether a pairwise merge over `total_bytes` of input should take
     /// the in-place route. `Auto` routes in-place exactly when a
     /// [`memory_budget`](Self::memory_budget) is set and the allocating
@@ -456,6 +520,11 @@ impl MergeflowConfig {
         }
         if self.max_batch == 0 {
             return Err(Error::Config("batcher.max_batch must be >= 1".into()));
+        }
+        // Each shard is a live thread; 256 matches the shard::MAX_SHARDS
+        // sanity bound and stops a typo'd value from spawning thousands.
+        if self.dispatch_shards > 256 {
+            return Err(Error::Config("dispatch.shards must be <= 256 (0 = auto)".into()));
         }
         Ok(())
     }
@@ -753,6 +822,12 @@ memory_budget = 268435456
 inplace = "always"
 kernel = "branchless"
 
+[dispatch]
+shards = 2
+steal = false
+calibrate = false
+shard_floor = 32768
+
 [serve]
 listen = "unix:/tmp/mergeflow.sock"
 tenant_quota_bytes = 1048576
@@ -791,6 +866,27 @@ compact_backoff_ms = 25
         assert_eq!(cfg.inplace, InplaceMode::Always);
         assert_eq!(cfg.kernel, MergeKernel::Branchless);
         assert_eq!(cfg.batch_timeout_us, 150);
+        assert_eq!(cfg.dispatch_shards, 2);
+        assert!(!cfg.dispatch_steal);
+        assert!(!cfg.calibrate);
+        assert_eq!(cfg.shard_floor, 32768);
+    }
+
+    #[test]
+    fn dispatch_defaults_and_resolution() {
+        let cfg = MergeflowConfig::from_raw(&RawConfig::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.dispatch_shards, 0, "shards default to auto");
+        assert!(cfg.dispatch_steal, "stealing defaults to on");
+        assert!(cfg.calibrate, "calibration defaults to on");
+        assert_eq!(cfg.shard_floor, 1 << 18, "floor defaults to the modeled 256Ki");
+        // Auto resolution lands in the documented [1, 8] band; a pinned
+        // value passes through verbatim.
+        assert!((1..=8).contains(&cfg.effective_dispatch_shards()));
+        let pinned = MergeflowConfig { dispatch_shards: 3, ..Default::default() };
+        assert_eq!(pinned.effective_dispatch_shards(), 3);
+        // The thread-count guard rejects absurd shard counts.
+        let raw = RawConfig::parse("[dispatch]\nshards = 1000\n").unwrap();
+        assert!(MergeflowConfig::from_raw(&raw).is_err());
     }
 
     #[test]

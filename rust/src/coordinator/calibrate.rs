@@ -1,0 +1,324 @@
+//! Online knob calibration: short in-process probe merges that
+//! re-derive the `0 = auto-calibrate` tuning knobs from *measured*
+//! crossovers instead of the documented hand models.
+//!
+//! Three knobs resolve through here (see `docs/ARCHITECTURE.md` §11):
+//!
+//! - `merge.kway_flat_max_k = 0` — the flat-vs-tree engine crossover:
+//!   the largest run count `k` at which the single-pass loser-tree
+//!   walk still beats a pairwise merge tree over the same data.
+//! - `dispatch.shard_floor = 0` — the rank-shard profitability floor:
+//!   how many elements a shard must merge for the merge work to
+//!   dominate its dispatch overhead, derived from the measured
+//!   sequential merge rate.
+//! - `merge.cache_bytes` feeding `kway_segment_elems = 0` — the
+//!   streaming working-set cliff: the largest merge footprint whose
+//!   per-element cost stays near the in-cache optimum. Only probed
+//!   when the segmented route is on with every window knob left auto.
+//!
+//! Probes are machine properties, not service properties: they run at
+//! most once per process (`OnceLock`) and the whole suite is budgeted
+//! at a few milliseconds of sequential work, so a service (or a test
+//! spinning up hundreds of services) pays essentially nothing.
+//! [`MergeService::start`](super::service::MergeService::start) applies
+//! the report by rewriting its own config copy — a non-zero config
+//! value always pins the knob, and `dispatch.calibrate = false` swaps
+//! the probes for the modeled defaults.
+
+use crate::config::MergeflowConfig;
+use crate::mergepath::{loser_tree_merge, merge_into};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Modeled flat-engine crossover (ARCHITECTURE §5) used when
+/// calibration is disabled but `kway_flat_max_k = 0` asks for auto.
+pub const MODEL_FLAT_MAX_K: usize = 128;
+/// Modeled shard profitability floor (256 Ki elements,
+/// `benches/sharded_vs_flat.rs`) used when calibration is disabled but
+/// `dispatch.shard_floor = 0` asks for auto.
+pub const MODEL_SHARD_FLOOR: usize = 1 << 18;
+
+/// Bounds on the calibrated flat crossover: below 8 the probe is
+/// noise-dominated, above 512 the loser tree's log-k compare chain is
+/// provably past any modern cache's stream budget.
+const FLAT_K_MIN: usize = 8;
+const FLAT_K_MAX: usize = 512;
+/// Bounds on the calibrated shard floor (elements).
+const SHARD_FLOOR_MIN: usize = 1 << 15;
+const SHARD_FLOOR_MAX: usize = 1 << 21;
+/// Bounds on the calibrated cache estimate (bytes) — the same band the
+/// config layer clamps configured/detected cache sizes to.
+const CACHE_MIN: usize = 64 << 10;
+const CACHE_MAX: usize = 1 << 30;
+
+/// What the probes measured. All values are already clamped to their
+/// documented bands; `probe_ns` is the wall cost of the whole suite.
+#[derive(Debug, Clone, Copy)]
+pub struct CalibrationReport {
+    /// Measured flat-vs-tree crossover `k`.
+    pub flat_max_k: usize,
+    /// Measured shard profitability floor (elements).
+    pub shard_floor: usize,
+    /// Measured streaming working-set cliff (bytes).
+    pub cache_bytes: usize,
+    /// Sequential merge rate the floor was derived from (elements/ms).
+    pub merge_elems_per_ms: u64,
+    /// Wall time the probe suite took (ns).
+    pub probe_ns: u64,
+}
+
+/// Run (or reuse) the process-wide probe suite.
+pub fn calibration() -> &'static CalibrationReport {
+    static REPORT: OnceLock<CalibrationReport> = OnceLock::new();
+    REPORT.get_or_init(run_probes)
+}
+
+/// Resolve every `0 = auto-calibrate` knob in `cfg` in place. Returns
+/// the report when probes were consulted, `None` when nothing needed
+/// them (all knobs pinned, or calibration disabled — the latter still
+/// substitutes the modeled defaults so downstream code never sees 0).
+pub fn apply(cfg: &mut MergeflowConfig) -> Option<&'static CalibrationReport> {
+    let wants_flat_k = cfg.kway_flat_max_k == 0;
+    let wants_floor = cfg.shard_floor == 0;
+    let wants_cache = cfg.segmented
+        && cfg.kway_segment_elems == 0
+        && cfg.segment_len == 0
+        && cfg.cache_bytes == 0;
+    if !cfg.calibrate {
+        if wants_flat_k {
+            cfg.kway_flat_max_k = MODEL_FLAT_MAX_K;
+        }
+        if wants_floor {
+            cfg.shard_floor = MODEL_SHARD_FLOOR;
+        }
+        return None;
+    }
+    if !(wants_flat_k || wants_floor || wants_cache) {
+        return None;
+    }
+    let report = calibration();
+    if wants_flat_k {
+        cfg.kway_flat_max_k = report.flat_max_k;
+    }
+    if wants_floor {
+        cfg.shard_floor = report.shard_floor;
+    }
+    if wants_cache {
+        cfg.cache_bytes = report.cache_bytes;
+    }
+    Some(report)
+}
+
+fn run_probes() -> CalibrationReport {
+    let t0 = Instant::now();
+    let (merge_elems_per_ms, cache_bytes) = probe_merge_rate_and_cache();
+    let flat_max_k = probe_flat_crossover();
+    let shard_floor = floor_from_rate(merge_elems_per_ms);
+    CalibrationReport {
+        flat_max_k,
+        shard_floor,
+        cache_bytes,
+        merge_elems_per_ms,
+        probe_ns: u64::try_from(t0.elapsed().as_nanos()).unwrap_or(u64::MAX),
+    }
+}
+
+/// Deterministic sorted run: strictly increasing with pseudo-random
+/// gaps so adjacent probes never degenerate into all-ties or pure
+/// interleave (both have atypical branch behavior).
+fn probe_run(len: usize, seed: u64) -> Vec<i32> {
+    let mut x = seed | 1;
+    let mut v = 0i32;
+    (0..len)
+        .map(|_| {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            v = v.wrapping_add(((x >> 33) % 7) as i32 + 1);
+            v
+        })
+        .collect()
+}
+
+/// Time one closure, best of `reps` (best-of filters scheduler noise
+/// without needing long runs).
+fn best_ns(reps: usize, mut f: impl FnMut()) -> u64 {
+    let mut best = u64::MAX;
+    for _ in 0..reps.max(1) {
+        let t = Instant::now();
+        f();
+        best = best.min(u64::try_from(t.elapsed().as_nanos()).unwrap_or(u64::MAX));
+    }
+    best
+}
+
+/// Sweep pairwise merges over doubling footprints: the smallest sizes
+/// give the in-cache merge rate (→ shard floor), and the largest
+/// footprint whose per-element cost stays within 25% of the best one
+/// locates the working-set cliff (→ cache estimate). The probe's live
+/// footprint is `2·S` bytes (inputs + output), so the cache estimate
+/// is twice the last good input size.
+fn probe_merge_rate_and_cache() -> (u64, usize) {
+    // Input sizes S in bytes; footprint is 2S. Capped at 4 MiB so the
+    // whole sweep stays in the low single-digit milliseconds.
+    const SIZES: [usize; 4] = [64 << 10, 256 << 10, 1 << 20, 4 << 20];
+    let mut per_elem = [0u64; SIZES.len()];
+    let mut best_rate = 0u64;
+    for (i, &bytes) in SIZES.iter().enumerate() {
+        let n = bytes / std::mem::size_of::<i32>() / 2;
+        let a = probe_run(n, 0x9E37_79B9 + i as u64);
+        let b = probe_run(n, 0x85EB_CA6B + i as u64);
+        let mut out = vec![0i32; 2 * n];
+        let ns = best_ns(2, || {
+            merge_into(&a, &b, &mut out);
+            std::hint::black_box(&out);
+        });
+        let elems = (2 * n) as u64;
+        // Scaled ns-per-1024-elements keeps integer math meaningful.
+        per_elem[i] = ns.saturating_mul(1024) / elems.max(1);
+        best_rate = best_rate.max(elems.saturating_mul(1_000_000) / ns.max(1));
+    }
+    let best = per_elem.iter().copied().min().unwrap_or(u64::MAX).max(1);
+    let mut cache = CACHE_MIN;
+    for (i, &bytes) in SIZES.iter().enumerate() {
+        if per_elem[i] <= best.saturating_mul(5) / 4 {
+            cache = 2 * bytes;
+        }
+    }
+    (best_rate, cache.clamp(CACHE_MIN, CACHE_MAX))
+}
+
+/// Sweep run counts and time the flat single-pass loser tree against a
+/// sequential pairwise merge tree over the same 64 Ki elements. The
+/// calibrated `kway_flat_max_k` is the largest swept `k` where the
+/// flat walk stays within 10% of the tree (one memory pass at log k
+/// compares, vs log k passes at one compare each — the crossover is
+/// where compare cost overtakes the saved memory traffic).
+fn probe_flat_crossover() -> usize {
+    const TOTAL: usize = 64 << 10;
+    let mut winner = FLAT_K_MIN;
+    for &k in &[8usize, 16, 32, 64, 128, 256] {
+        let run_len = TOTAL / k;
+        let runs: Vec<Vec<i32>> = (0..k).map(|i| probe_run(run_len, 0xC0FF_EE00 + i as u64)).collect();
+        let refs: Vec<&[i32]> = runs.iter().map(|r| r.as_slice()).collect();
+        let total = run_len * k;
+        let mut out = vec![0i32; total];
+        let flat_ns = best_ns(2, || {
+            loser_tree_merge(&refs, &mut out);
+            std::hint::black_box(&out);
+        });
+        let tree_ns = best_ns(2, || {
+            std::hint::black_box(tree_merge_seq(&runs));
+        });
+        if flat_ns <= tree_ns.saturating_mul(11) / 10 {
+            winner = k;
+        } else {
+            break;
+        }
+    }
+    winner.clamp(FLAT_K_MIN, FLAT_K_MAX)
+}
+
+/// Sequential pairwise merge tree (the fallback engine's cost shape
+/// without its thread fan-out — probes compare engine *work*, not
+/// scheduling).
+fn tree_merge_seq(runs: &[Vec<i32>]) -> Vec<i32> {
+    let mut level: Vec<Vec<i32>> = runs.to_vec();
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len().div_ceil(2));
+        let mut iter = level.chunks(2);
+        for pair in &mut iter {
+            match pair {
+                [a, b] => {
+                    let mut out = vec![0i32; a.len() + b.len()];
+                    merge_into(a, b, &mut out);
+                    next.push(out);
+                }
+                [a] => next.push(a.clone()),
+                _ => unreachable!("chunks(2) yields 1- or 2-slices"),
+            }
+        }
+        level = next;
+    }
+    level.pop().unwrap_or_default()
+}
+
+/// A shard is profitable once its merge work comfortably dominates the
+/// fixed dispatch cost (queue hop, slot acquire, stitch bookkeeping —
+/// modeled at ~50µs of budget amortized to 2% overhead): floor at the
+/// elements merged in ~2.5ms of sequential work, rounded down to a
+/// power of two to keep shard cuts aligned, clamped to the documented
+/// band.
+fn floor_from_rate(elems_per_ms: u64) -> usize {
+    let raw = usize::try_from(elems_per_ms.saturating_mul(5) / 2).unwrap_or(SHARD_FLOOR_MAX);
+    let pow2 = if raw <= 1 { 1 } else { 1usize << (usize::BITS - 1 - raw.leading_zeros()) };
+    pow2.clamp(SHARD_FLOOR_MIN, SHARD_FLOOR_MAX)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_lands_in_documented_bands() {
+        let r = calibration();
+        assert!((FLAT_K_MIN..=FLAT_K_MAX).contains(&r.flat_max_k), "{r:?}");
+        assert!((SHARD_FLOOR_MIN..=SHARD_FLOOR_MAX).contains(&r.shard_floor), "{r:?}");
+        assert!(r.shard_floor.is_power_of_two(), "{r:?}");
+        assert!((CACHE_MIN..=CACHE_MAX).contains(&r.cache_bytes), "{r:?}");
+        assert!(r.merge_elems_per_ms > 0, "{r:?}");
+        assert!(r.probe_ns > 0, "{r:?}");
+        // Cached: the second call must reuse the same report.
+        assert_eq!(calibration().probe_ns, r.probe_ns);
+    }
+
+    #[test]
+    fn apply_pins_and_calibrates() {
+        // All knobs pinned: apply is a no-op and consults no probes.
+        let mut pinned = MergeflowConfig::default();
+        let before = pinned.clone();
+        assert!(apply(&mut pinned).is_none());
+        assert_eq!(pinned.kway_flat_max_k, before.kway_flat_max_k);
+        assert_eq!(pinned.shard_floor, before.shard_floor);
+        assert_eq!(pinned.cache_bytes, before.cache_bytes);
+
+        // calibrate = false substitutes the modeled defaults for 0.
+        let mut modeled = MergeflowConfig {
+            calibrate: false,
+            kway_flat_max_k: 0,
+            shard_floor: 0,
+            ..Default::default()
+        };
+        assert!(apply(&mut modeled).is_none());
+        assert_eq!(modeled.kway_flat_max_k, MODEL_FLAT_MAX_K);
+        assert_eq!(modeled.shard_floor, MODEL_SHARD_FLOOR);
+
+        // calibrate = true resolves 0 from the measured report and
+        // leaves non-zero knobs alone.
+        let mut auto = MergeflowConfig {
+            kway_flat_max_k: 0,
+            shard_floor: 0,
+            kway_segment_elems: 0,
+            segment_len: 0,
+            cache_bytes: 0,
+            ..Default::default()
+        };
+        let r = apply(&mut auto).expect("probes consulted");
+        assert_eq!(auto.kway_flat_max_k, r.flat_max_k);
+        assert_eq!(auto.shard_floor, r.shard_floor);
+        assert_eq!(auto.cache_bytes, r.cache_bytes, "auto windows get the measured cache");
+        let mut window_pinned = MergeflowConfig {
+            kway_flat_max_k: 0,
+            kway_segment_elems: 2048,
+            ..Default::default()
+        };
+        apply(&mut window_pinned);
+        assert_eq!(window_pinned.cache_bytes, 0, "pinned window leaves cache detection alone");
+    }
+
+    #[test]
+    fn floor_rounds_to_power_of_two_in_band() {
+        assert_eq!(floor_from_rate(0), SHARD_FLOOR_MIN);
+        assert_eq!(floor_from_rate(u64::MAX), SHARD_FLOOR_MAX);
+        let mid = floor_from_rate(100_000); // 250k elems → 2^17
+        assert_eq!(mid, 1 << 17);
+    }
+}

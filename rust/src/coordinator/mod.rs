@@ -23,10 +23,17 @@
 //! by chunk while the dispatcher eagerly merges the already-settled
 //! output prefix, overlapping ingest and merge end to end.
 //!
+//! The control plane itself is sharded (`dispatch.shards`): each
+//! dispatcher shard owns a private admission queue and session-table
+//! slice keyed by id hash, idle shards work-steal one-shot jobs from
+//! loaded peers, and the `0 = auto-calibrate` tuning knobs are
+//! resolved at startup by [`calibrate`]'s in-process probe merges.
+//!
 //! See `docs/ARCHITECTURE.md` for the full job flow
 //! (`submit → queue → execute_job → shard / flat / tree`) and the
 //! streaming session protocol.
 
+pub mod calibrate;
 pub mod job;
 pub mod queue;
 pub mod service;
@@ -34,9 +41,10 @@ pub mod session;
 pub mod shard;
 pub mod stats;
 
+pub use calibrate::CalibrationReport;
 pub use job::{Job, JobHandle, JobKind, JobResult};
 pub use queue::{BoundedQueue, PushError};
 pub use service::{I32MergeService, MergeService, StoreSink};
 pub use session::CompactionSession;
 pub use shard::ShardTask;
-pub use stats::ServiceStats;
+pub use stats::{DispatchShardStats, ServiceStats};

@@ -170,6 +170,30 @@ impl<T> BoundedQueue<T> {
         out
     }
 
+    /// Steal up to `max` items from the *front* while `stealable`
+    /// approves each (work stealing between dispatcher shards). The
+    /// front-only discipline stops at the first refused item, so the
+    /// relative order of everything left behind — in particular a
+    /// streaming session's ordered message sequence — is untouched, and
+    /// a session message never migrates off its owning shard.
+    pub fn steal_front(&self, max: usize, stealable: impl Fn(&T) -> bool) -> Vec<T> {
+        let mut g = self.inner.lock().unwrap();
+        let mut out = Vec::new();
+        while out.len() < max {
+            match g.items.front() {
+                Some(item) if stealable(item) => {
+                    out.push(g.items.pop_front().expect("front was Some"));
+                }
+                _ => break,
+            }
+        }
+        drop(g);
+        if !out.is_empty() {
+            self.not_full.notify_all();
+        }
+        out
+    }
+
     /// Close the queue: pending items remain poppable, new pushes fail.
     pub fn close(&self) {
         self.inner.lock().unwrap().closed = true;
@@ -245,6 +269,28 @@ mod tests {
         assert_eq!(batch, vec![0, 1, 2, 3]);
         assert_eq!(q.len(), 3);
         assert!(q.drain_up_to(0).is_empty());
+    }
+
+    #[test]
+    fn steal_front_stops_at_first_refusal() {
+        let q = BoundedQueue::new(10);
+        for i in 0..6 {
+            q.try_push(i).unwrap();
+        }
+        // Odd items are "session messages": 0 is taken, 1 blocks the
+        // scan even though 2 and 4 would qualify.
+        let stolen = q.steal_front(10, |x| x % 2 == 0);
+        assert_eq!(stolen, vec![0]);
+        assert_eq!(q.len(), 5);
+        // The remaining order is untouched.
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), Some(1));
+        let stolen = q.steal_front(2, |x| x % 2 == 0);
+        assert_eq!(stolen, vec![2], "3 refuses before the max of 2 is reached");
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), Some(3));
+        let stolen = q.steal_front(1, |_| true);
+        assert_eq!(stolen, vec![4], "max = 1 takes exactly one even when more qualify");
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), Some(5));
+        assert!(q.steal_front(4, |_| true).is_empty());
     }
 
     #[test]

@@ -8,10 +8,19 @@
 //! of A's ties precede B's; sorts are stable by key) — see
 //! [`crate::record`].
 //!
-//! One dispatcher thread assembles batches from the admission queue
-//! (dispatch on `max_batch` or `batch_timeout_us`, whichever first),
-//! expands oversized compactions into rank shards ([`super::shard`]),
-//! and hands jobs to the worker pool. The router sends a merge job to
+//! The control plane is sharded (`dispatch.shards`, default auto from
+//! the core count): each dispatcher shard owns a private admission
+//! queue and session-table slice, keyed by job/session id hash, and
+//! assembles batches from its own queue (dispatch on `max_batch` or
+//! `batch_timeout_us`, whichever first), expands oversized compactions
+//! into rank shards ([`super::shard`]), and hands jobs to the shared
+//! worker pool behind one shared in-flight semaphore. Idle shards
+//! steal one-shot jobs from the front of loaded peers' queues
+//! (`dispatch.steal`); streaming-session messages are never stolen, so
+//! a session's ordered message sequence is always absorbed by its
+//! owning shard. With `dispatch.shards = 1` the control plane is
+//! exactly the historical single dispatcher. The router sends a merge
+//! job to
 //! the XLA backend when an AOT artifact with the exact baked shape
 //! exists (`Backend::Xla`/`Auto`) **and** the record type is the baked
 //! `i32` (see [`crate::record::KeyedI32`] — any other instantiation
@@ -23,11 +32,12 @@
 //! fork-join from inside a worker is deadlock-free because the pool's
 //! scoped wait is helping, see [`WorkerPool::run_scoped`]).
 
+use super::calibrate;
 use super::job::{Job, JobHandle, JobKind, JobResult};
 use super::queue::{BoundedQueue, PushError};
 use super::session::{self, CompactionSession, SessionTable};
 use super::shard;
-use super::stats::ServiceStats;
+use super::stats::{DispatchShardStats, ServiceStats};
 use crate::config::{Backend, MergeflowConfig};
 use crate::exec::WorkerPool;
 use crate::mergepath::kernel::{tagged_backend, KernelKind, LeafKernel, MergeKernel};
@@ -140,18 +150,39 @@ impl Drop for SlotGuard {
     }
 }
 
+/// One dispatcher shard's control-plane slice: a private admission
+/// queue and session table, owned by one dispatcher thread. Jobs and
+/// sessions land on a shard by id hash ([`shard_index`]); with
+/// `dispatch.shards = 1` everything routes to shard 0 and the control
+/// plane behaves exactly like the historical single dispatcher.
+struct DispatchShard<R: Record> {
+    queue: Arc<BoundedQueue<Job<R>>>,
+    table: Arc<SessionTable<R>>,
+}
+
+/// Route a job/session id onto a dispatcher shard. Ids are sequential,
+/// so the Fibonacci multiplicative hash is what spreads consecutive
+/// ids across shards; a single shard degenerates to the identity
+/// (always 0), keeping that configuration bit-identical to the
+/// historical dispatcher.
+fn shard_index(id: u64, shards: usize) -> usize {
+    if shards <= 1 {
+        return 0;
+    }
+    (id.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32) as usize % shards
+}
+
 /// A running merge/sort service over records of type `R` (default:
 /// the classic `i32` scalar workload). See [`crate::record`] for the
 /// typed API and its stability contract.
 pub struct MergeService<R: Record = i32> {
     cfg: MergeflowConfig,
-    queue: Arc<BoundedQueue<Job<R>>>,
-    table: Arc<SessionTable<R>>,
+    shards: Vec<DispatchShard<R>>,
     stats: Arc<ServiceStats>,
     runtime: Option<Arc<XlaExecutor>>,
     store: StoreSlot<R>,
     next_id: AtomicU64,
-    dispatcher: Option<std::thread::JoinHandle<()>>,
+    dispatchers: Vec<std::thread::JoinHandle<()>>,
 }
 
 /// The classic `i32`-keyed service, spelled explicitly.
@@ -178,7 +209,21 @@ impl<R: Record> MergeService<R> {
     /// [`KeyedI32`](crate::record::KeyedI32) records fit the baked
     /// artifacts; everything else routes native deterministically.)
     pub fn start(cfg: MergeflowConfig) -> Result<Self> {
+        let mut cfg = cfg;
         cfg.validate()?;
+        // Resolve the `0 = auto-calibrate` knobs before anything reads
+        // them (routing gates, shard planning, the session planner):
+        // past this point the dispatchers and workers only ever see
+        // concrete values. Which knobs were actually calibrated (vs
+        // pinned by config) is captured first so the stats report 0
+        // for pinned ones.
+        let wanted_flat = cfg.kway_flat_max_k == 0;
+        let wanted_floor = cfg.shard_floor == 0;
+        let wanted_cache = cfg.segmented
+            && cfg.kway_segment_elems == 0
+            && cfg.segment_len == 0
+            && cfg.cache_bytes == 0;
+        let report = calibrate::apply(&mut cfg);
         let runtime = match cfg.backend {
             Backend::Native => None,
             Backend::Xla => {
@@ -188,37 +233,76 @@ impl<R: Record> MergeService<R> {
                 XlaExecutor::start(std::path::Path::new(&cfg.artifacts_dir)).ok()
             }
         };
-        let queue = Arc::new(BoundedQueue::<Job<R>>::new(cfg.queue_capacity));
-        let table = Arc::new(SessionTable::<R>::default());
         let stats = Arc::new(ServiceStats::new());
+        if let Some(report) = report {
+            stats.record_calibration(
+                if wanted_flat { cfg.kway_flat_max_k as u64 } else { 0 },
+                if wanted_floor { cfg.shard_floor as u64 } else { 0 },
+                if wanted_cache { cfg.cache_bytes as u64 } else { 0 },
+                report.probe_ns,
+            );
+            eprintln!(
+                "mergeflow: calibration ({}, ~{}K elems/ms) resolved \
+                 kway_flat_max_k={} shard_floor={} cache_bytes={}",
+                crate::metrics::fmt_ns(report.probe_ns),
+                report.merge_elems_per_ms / 1000,
+                cfg.kway_flat_max_k,
+                cfg.shard_floor,
+                cfg.cache_bytes,
+            );
+        }
         let pool = Arc::new(WorkerPool::new(cfg.workers));
         let store: StoreSlot<R> = Arc::new(OnceLock::new());
-
-        let dispatcher = {
-            let queue = Arc::clone(&queue);
-            let table = Arc::clone(&table);
-            let stats = Arc::clone(&stats);
-            let cfg2 = cfg.clone();
-            let runtime = runtime.clone();
-            let store = Arc::clone(&store);
-            std::thread::Builder::new()
-                .name("mergeflow-dispatcher".into())
-                .spawn(move || {
-                    dispatcher_loop(cfg2, queue, table, pool, runtime, stats, store)
-                })
-                .expect("spawn dispatcher")
-        };
+        let n = cfg.effective_dispatch_shards();
+        let shard_stats = stats.init_dispatch_shards(n);
+        let shards: Vec<DispatchShard<R>> = (0..n)
+            .map(|_| DispatchShard {
+                queue: Arc::new(BoundedQueue::<Job<R>>::new(cfg.queue_capacity)),
+                table: Arc::new(SessionTable::<R>::default()),
+            })
+            .collect();
+        // Every dispatcher sees every queue (for stealing) but only its
+        // own session table — session messages route by id hash to
+        // their owning shard and are never stolen, so no other shard
+        // ever needs another's table.
+        let queues: Vec<Arc<BoundedQueue<Job<R>>>> =
+            shards.iter().map(|s| Arc::clone(&s.queue)).collect();
+        let in_flight = Arc::new(InFlight::new(cfg.workers * 2));
+        let dispatchers = (0..n)
+            .map(|i| {
+                let ctx = DispatcherCtx {
+                    shard_idx: i,
+                    cfg: cfg.clone(),
+                    queues: queues.clone(),
+                    table: Arc::clone(&shards[i].table),
+                    pool: Arc::clone(&pool),
+                    runtime: runtime.clone(),
+                    stats: Arc::clone(&stats),
+                    store: Arc::clone(&store),
+                    in_flight: Arc::clone(&in_flight),
+                    shard_stats: Arc::clone(&shard_stats[i]),
+                };
+                std::thread::Builder::new()
+                    .name(format!("mergeflow-dispatcher-{i}"))
+                    .spawn(move || dispatcher_loop(ctx))
+                    .expect("spawn dispatcher")
+            })
+            .collect();
 
         Ok(Self {
             cfg,
-            queue,
-            table,
+            shards,
             stats,
             runtime,
             store,
             next_id: AtomicU64::new(1),
-            dispatcher: Some(dispatcher),
+            dispatchers,
         })
+    }
+
+    /// The dispatcher shard owning `id` (jobs and sessions alike).
+    fn shard_for(&self, id: u64) -> &DispatchShard<R> {
+        &self.shards[shard_index(id, self.shards.len())]
     }
 
     /// Attach the persistent store's sink. At most one store per
@@ -333,7 +417,7 @@ impl<R: Record> MergeService<R> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = channel();
         let job = Job { id, kind, enqueued_at: Instant::now(), reply: tx };
-        match self.queue.try_push(job) {
+        match self.shard_for(id).queue.try_push(job) {
             Ok(()) => {
                 self.stats.submitted.inc();
                 Ok(JobHandle::new(id, rx))
@@ -412,7 +496,7 @@ impl<R: Record> MergeService<R> {
         blocking: bool,
         eager: bool,
     ) -> Result<CompactionSession<R>> {
-        if self.queue.is_closed() {
+        if self.shards[0].queue.is_closed() {
             return Err(Error::Service("service shut down".into()));
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
@@ -421,9 +505,15 @@ impl<R: Record> MergeService<R> {
         // (submitted = completed + rejected + in-flight) still holds
         // for sessions that are aborted or rejected mid-feed.
         self.stats.streamed_sessions.inc();
+        // Session affinity: the whole session — every chunk, seal, and
+        // abort reap — lives on the shard owning its id. Its ordered
+        // message sequence is absorbed by that one dispatcher (steals
+        // never take session messages), which is what preserves the
+        // single-dispatcher session semantics per shard.
+        let shard = self.shard_for(id);
         Ok(session::open(
-            Arc::clone(&self.queue),
-            Arc::clone(&self.table),
+            Arc::clone(&shard.queue),
+            Arc::clone(&shard.table),
             Arc::clone(&self.stats),
             id,
             runs,
@@ -461,9 +551,10 @@ impl<R: Record> MergeService<R> {
     /// error (at whichever feed hits it) instead of blocking the caller.
     fn submit_compact(&self, runs: Vec<Vec<R>>) -> Result<JobHandle<R>> {
         // Cheap early-out before opening a session the queue clearly
-        // has no room to carry (racy snapshot; the session's
-        // reject-mode first push is the authoritative check).
-        if self.queue.is_full() {
+        // has no room to carry (racy snapshot — probe the shard the
+        // next allocated id would land on; the session's reject-mode
+        // first push is the authoritative check).
+        if self.shard_for(self.next_id.load(Ordering::Relaxed)).queue.is_full() {
             self.stats.rejected.inc();
             return Err(Error::Service("queue full (back-pressure)".into()));
         }
@@ -500,10 +591,16 @@ impl<R: Record> MergeService<R> {
         }
     }
 
-    /// Drain and stop. Pending jobs are completed first.
+    /// Drain and stop. Pending jobs are completed first: every shard
+    /// queue is closed up front (so no shard can keep admitting while
+    /// another drains), then each dispatcher drains its own queue,
+    /// waits on the shared in-flight barrier, and exits — the last one
+    /// out provably holds the final pool handle and joins the workers.
     pub fn shutdown(mut self) {
-        self.queue.close();
-        if let Some(h) = self.dispatcher.take() {
+        for s in &self.shards {
+            s.queue.close();
+        }
+        for h in self.dispatchers.drain(..) {
             let _ = h.join();
         }
     }
@@ -511,8 +608,10 @@ impl<R: Record> MergeService<R> {
 
 impl<R: Record> Drop for MergeService<R> {
     fn drop(&mut self) {
-        self.queue.close();
-        if let Some(h) = self.dispatcher.take() {
+        for s in &self.shards {
+            s.queue.close();
+        }
+        for h in self.dispatchers.drain(..) {
             let _ = h.join();
         }
     }
@@ -614,50 +713,116 @@ fn estimated_job_bytes<R: Record>(cfg: &MergeflowConfig, kind: &JobKind<R>) -> u
     }
 }
 
-fn dispatcher_loop<R: Record>(
+/// Everything one dispatcher shard's loop needs, bundled so the spawn
+/// site stays readable. `queues[shard_idx]` is this shard's own queue;
+/// the rest are peers it may steal from.
+struct DispatcherCtx<R: Record> {
+    shard_idx: usize,
     cfg: MergeflowConfig,
-    queue: Arc<BoundedQueue<Job<R>>>,
+    queues: Vec<Arc<BoundedQueue<Job<R>>>>,
     table: Arc<SessionTable<R>>,
     pool: Arc<WorkerPool>,
     runtime: Option<Arc<XlaExecutor>>,
     stats: Arc<ServiceStats>,
     store: StoreSlot<R>,
-) {
+    in_flight: Arc<InFlight>,
+    shard_stats: Arc<DispatchShardStats>,
+}
+
+fn dispatcher_loop<R: Record>(ctx: DispatcherCtx<R>) {
+    let DispatcherCtx {
+        shard_idx,
+        cfg,
+        queues,
+        table,
+        pool,
+        runtime,
+        stats,
+        store,
+        in_flight,
+        shard_stats,
+    } = ctx;
+    let queue = &queues[shard_idx];
     let timeout = Duration::from_micros(cfg.batch_timeout_us.max(1));
-    let in_flight = Arc::new(InFlight::new(cfg.workers * 2));
     loop {
         // Free the buffered ingest of any sessions aborted since the
         // last iteration (runs on idle ticks too, so an abort on a
         // quiet service is still reclaimed within one poll interval).
         table.reap_aborted(&stats);
+        shard_stats.depth.set(queue.len() as u64);
         // Block for the first job of a batch.
-        let Some(first) = queue.pop_timeout(Duration::from_millis(50)) else {
-            if queue.is_closed() && queue.is_empty() {
-                // Admission is drained; now wait for execution. Only
-                // after the last SlotGuard drops do we provably hold
-                // the final Arc<WorkerPool>, so dropping `pool` on the
-                // way out joins the workers from this thread — and
-                // shutdown() really does complete pending jobs first.
-                in_flight.wait_idle();
-                return;
+        let batch = match queue.pop_timeout(Duration::from_millis(50)) {
+            Some(first) => {
+                // Assemble the rest of the batch: wait at most
+                // `timeout` for stragglers, cap at max_batch.
+                let mut batch = vec![first];
+                let deadline = Instant::now() + timeout;
+                while batch.len() < cfg.max_batch {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match queue.pop_timeout(deadline - now) {
+                        Some(j) => batch.push(j),
+                        None => break,
+                    }
+                }
+                batch
             }
-            continue;
+            None => {
+                if queue.is_closed() && queue.is_empty() {
+                    // Admission is drained; now wait for execution
+                    // across *all* shards (the semaphore is shared).
+                    // Only once no job is in flight does the exiting
+                    // dispatcher provably hold a final Arc<WorkerPool>,
+                    // so the last shard out drops the last handle and
+                    // joins the workers from its own thread — and
+                    // shutdown() really does complete pending jobs
+                    // first. Peers' leftover queues are their owners'
+                    // to drain; every queue was closed before any join.
+                    in_flight.wait_idle();
+                    return;
+                }
+                // Idle tick: steal a batch from the deepest peer's
+                // queue front. Only non-session jobs move — the scan
+                // stops at the first session message, so a session's
+                // ordered sequence never leaves its owning shard.
+                if !cfg.dispatch_steal || queues.len() < 2 {
+                    continue;
+                }
+                let victim = queues
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| *i != shard_idx)
+                    .map(|(_, q)| q)
+                    .max_by_key(|q| q.len());
+                let stolen = match victim {
+                    Some(v) => v
+                        .steal_front(cfg.max_batch, |j| {
+                            !session::is_session_message(&j.kind)
+                        }),
+                    None => Vec::new(),
+                };
+                if stolen.is_empty() {
+                    continue;
+                }
+                shard_stats.stolen_batches.inc();
+                shard_stats.stolen_jobs.add(stolen.len() as u64);
+                stolen
+            }
         };
-        // Assemble the rest of the batch: wait at most `timeout` for
-        // stragglers, cap at max_batch.
-        let mut batch = vec![first];
-        let deadline = Instant::now() + timeout;
-        while batch.len() < cfg.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match queue.pop_timeout(deadline - now) {
-                Some(j) => batch.push(j),
-                None => break,
-            }
-        }
         stats.batches.inc();
+        // Per-stage observability: how long each job of this batch sat
+        // in admission before planning, and how stale the oldest one
+        // was (the shard's queue-age gauge).
+        let mut oldest_ns = 0u64;
+        for job in &batch {
+            let age_ns =
+                u64::try_from(job.enqueued_at.elapsed().as_nanos()).unwrap_or(u64::MAX);
+            stats.stage_admission.record(age_ns.max(1));
+            oldest_ns = oldest_ns.max(age_ns);
+        }
+        shard_stats.oldest_age_us.set(oldest_ns / 1_000);
 
         // Execute the batch on the pool: jobs own their data, so they
         // can be moved into 'static closures; a latch in run_scoped
@@ -694,15 +859,30 @@ fn dispatcher_loop<R: Record>(
                 let stats = Arc::clone(&stats);
                 let store = Arc::clone(&store);
                 stats.resident_bytes.add(est_bytes);
+                shard_stats.dispatched.inc();
                 let guard = SlotGuard {
                     pool: Some(Arc::clone(&pool)),
                     in_flight: Arc::clone(&in_flight),
                     stats: Arc::clone(&stats),
                     est_bytes,
                 };
+                let planned_at = Instant::now();
                 pool.submit(move || {
+                    // Stage: planning → a worker actually starting
+                    // (slot acquire above happened before `planned_at`,
+                    // so this is pure pool queueing).
+                    stats.stage_dispatch.record(
+                        u64::try_from(planned_at.elapsed().as_nanos())
+                            .unwrap_or(u64::MAX)
+                            .max(1),
+                    );
                     let pool = guard.pool.as_deref().expect("guard holds the pool");
+                    let t0 = Instant::now();
                     execute_job(&cfg, runtime.as_deref(), &stats, pool, sub, &store);
+                    // Stage: pure execution (reply send included).
+                    stats.stage_exec.record(
+                        u64::try_from(t0.elapsed().as_nanos()).unwrap_or(u64::MAX).max(1),
+                    );
                     // `guard` drops here: pool handle first, then
                     // the in-flight slot — on unwind too.
                 });
@@ -710,6 +890,7 @@ fn dispatcher_loop<R: Record>(
         };
         for job in batch {
             let unlocked = if session::is_session_message(&job.kind) {
+                shard_stats.session_msgs.inc();
                 session::handle_message(&cfg, &stats, &table, job, &mut touched)
             } else {
                 vec![job]
@@ -1075,6 +1256,13 @@ mod tests {
             memory_budget: 0,
             inplace: InplaceMode::Auto,
             kernel: MergeKernel::Auto,
+            // One dispatcher shard, probes off: unit tests exercise
+            // the historical single-dispatcher control plane with
+            // deterministic knob values; multi-shard tests opt in.
+            dispatch_shards: 1,
+            dispatch_steal: true,
+            calibrate: false,
+            shard_floor: 1 << 18,
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -1343,6 +1531,106 @@ mod tests {
         }
         assert_eq!(svc.stats().completed.get(), 40);
         assert!(svc.stats().batches.get() >= 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn sharded_control_plane_completes_and_reports() {
+        let mut cfg = test_config();
+        cfg.dispatch_shards = 4;
+        let svc = MergeService::start(cfg).unwrap();
+        let handles: Vec<_> = (0..32)
+            .map(|i| {
+                let (a, b) = gen_sorted_pair(WorkloadKind::Uniform, 200 + i, 150, i as u64);
+                svc.submit(JobKind::Merge { a, b }).unwrap()
+            })
+            .collect();
+        for h in handles {
+            let res = h.wait().unwrap();
+            assert!(res.output.windows(2).all(|w| w[0] <= w[1]));
+        }
+        let stats = svc.stats();
+        assert_eq!(stats.completed.get(), 32);
+        assert_eq!(stats.dispatch_shard_count(), 4);
+        let per_shard: Vec<u64> = (0..4)
+            .map(|i| {
+                let sh = stats.dispatch_shard(i).unwrap();
+                // Jobs either dispatched from their home shard or were
+                // stolen by an idle peer; the sum must cover them all.
+                sh.dispatched.get()
+            })
+            .collect();
+        assert_eq!(per_shard.iter().sum::<u64>(), 32, "{per_shard:?}");
+        assert!(
+            per_shard.iter().filter(|&&n| n > 0).count() >= 2,
+            "sequential ids must hash across shards: {per_shard:?}"
+        );
+        let snap = stats.snapshot();
+        assert!(snap.contains("dispatch: shards=4"), "{snap}");
+        assert!(snap.contains("stages: admit[p50="), "{snap}");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn single_shard_control_plane_matches_legacy_routing() {
+        // dispatch.shards = 1: every id hashes to shard 0 and the
+        // shard's counters account for the whole service.
+        let svc = MergeService::start(test_config()).unwrap();
+        for i in 0..8u64 {
+            let (a, b) = gen_sorted_pair(WorkloadKind::Uniform, 300, 200, i);
+            svc.submit_blocking(JobKind::Merge { a, b }).unwrap();
+        }
+        let stats = svc.stats();
+        assert_eq!(stats.dispatch_shard_count(), 1);
+        let sh = stats.dispatch_shard(0).unwrap();
+        assert_eq!(sh.dispatched.get(), 8);
+        assert_eq!(sh.stolen_jobs.get(), 0, "one shard has no peers to steal from");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn calibrate_off_substitutes_model_defaults_for_auto_knobs() {
+        let mut cfg = test_config();
+        cfg.kway_flat_max_k = 0; // auto, but calibrate=false in tests
+        cfg.shard_floor = 0;
+        let svc = MergeService::<i32>::start(cfg).unwrap();
+        assert_eq!(svc.config().kway_flat_max_k, calibrate::MODEL_FLAT_MAX_K);
+        assert_eq!(svc.config().shard_floor, calibrate::MODEL_SHARD_FLOOR);
+        let snap = svc.stats().snapshot();
+        assert!(
+            snap.contains("calibration: flat-max-k=0 shard-floor=0"),
+            "model fallback is not a calibration: {snap}"
+        );
+        svc.shutdown();
+    }
+
+    #[test]
+    fn calibration_resolves_auto_knobs_and_reports() {
+        let mut cfg = test_config();
+        cfg.calibrate = true;
+        cfg.kway_flat_max_k = 0;
+        cfg.shard_floor = 0;
+        let svc = MergeService::<i32>::start(cfg).unwrap();
+        let resolved = svc.config();
+        assert!((8..=512).contains(&resolved.kway_flat_max_k), "{resolved:?}");
+        assert!(
+            (1 << 15..=1 << 21).contains(&resolved.shard_floor),
+            "{resolved:?}"
+        );
+        let stats = svc.stats();
+        assert_eq!(stats.calibrated_flat_max_k.get(), resolved.kway_flat_max_k as u64);
+        assert_eq!(stats.calibrated_shard_floor.get(), resolved.shard_floor as u64);
+        assert!(stats.calibration_probe_ns.get() > 0);
+        // cache_bytes stays pinned: segmented is off in the test base.
+        assert_eq!(stats.calibrated_cache_bytes.get(), 0);
+        // Calibrated knobs serve real traffic.
+        let runs: Vec<Vec<i32>> = (0..6u64)
+            .map(|i| gen_sorted_pair(WorkloadKind::Uniform, 2000, 1, 70 + i).0)
+            .collect();
+        let mut expected: Vec<i32> = runs.iter().flatten().copied().collect();
+        expected.sort_unstable();
+        let res = svc.submit_blocking(JobKind::Compact { runs }).unwrap();
+        assert_eq!(res.output, expected);
         svc.shutdown();
     }
 

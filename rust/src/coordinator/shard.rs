@@ -67,24 +67,31 @@ pub const BACKEND_SHARDED: &str = "native-kway-sharded";
 /// Shared with the streaming remainder planner ([`super::session`]).
 pub(crate) const MAX_SHARDS: usize = 256;
 
-/// Smallest shard length the auto-tuner will pick
-/// (`merge.compact_shard_min_len = 0`). Below this, per-shard dispatch
-/// and planning overhead eat the scheduling win —
+/// Model fallback for the smallest shard length the auto-tuner will
+/// pick (`merge.compact_shard_min_len = 0`). Below this, per-shard
+/// dispatch and planning overhead eat the scheduling win —
 /// `benches/sharded_vs_flat.rs` locates the boundary per machine; 256
-/// Ki elements sits above it on every shape the bench has swept.
+/// Ki elements sits above it on every shape the bench has swept. The
+/// runtime floor is `dispatch.shard_floor`, which defaults to this
+/// constant and can be re-derived per machine at service start by
+/// [`super::calibrate`] (`dispatch.shard_floor = 0`).
 pub(crate) const AUTO_SHARD_FLOOR: usize = 1 << 18;
 
 /// Resolve the configured shard length for a job of `total` output
 /// elements. A configured `compact_shard_min_len` is used as-is;
 /// **0 means auto**: one shard per pool worker
-/// (`total / workers`), clamped to `[AUTO_SHARD_FLOOR, u32::MAX]` so
-/// shards never drop below the measured profitability floor and the
+/// (`total / workers`), clamped to `[shard_floor, u32::MAX]` so shards
+/// never drop below the profitability floor (configured or calibrated
+/// — the service resolves `dispatch.shard_floor = 0` through
+/// [`super::calibrate`] before any job is planned, so the model
+/// fallback here only covers configs used without a service) and the
 /// arithmetic stays sane for absurd totals.
 pub(crate) fn effective_shard_min_len(cfg: &MergeflowConfig, total: usize) -> usize {
     if cfg.compact_shard_min_len != 0 {
         return cfg.compact_shard_min_len;
     }
-    (total / cfg.workers.max(1)).clamp(AUTO_SHARD_FLOOR, u32::MAX as usize)
+    let floor = if cfg.shard_floor > 0 { cfg.shard_floor } else { AUTO_SHARD_FLOOR };
+    (total / cfg.workers.max(1)).clamp(floor, u32::MAX as usize)
 }
 
 /// Output buffer shared by concurrent writers of one merge group.
@@ -412,8 +419,11 @@ mod tests {
         let k_cap = cfg.kway_flat_max_k;
         assert_eq!(shard_count(&cfg, k_cap, 1 << 30), MAX_SHARDS);
         assert_eq!(shard_count(&cfg, k_cap + 1, 1 << 30), 1, "k over flat cap");
+        // `kway_flat_max_k = 1` is the off spelling (0 now means
+        // auto-calibrate at service start; k ≥ 2 everywhere makes 1
+        // unreachable, i.e. off).
         let mut flat_off = cfg_with(1000);
-        flat_off.kway_flat_max_k = 0;
+        flat_off.kway_flat_max_k = 1;
         assert_eq!(shard_count(&flat_off, 4, 1 << 30), 1, "flat engine off");
         // Threads floor: a qualifying job never gets fewer shards than
         // threads_per_job (sharding must not reduce parallelism), but
@@ -443,6 +453,14 @@ mod tests {
         assert_eq!(shard_count(&auto, 8, 2 * AUTO_SHARD_FLOOR), 2);
         // An explicit min_len is used as-is.
         assert_eq!(effective_shard_min_len(&cfg_with(1000), 1 << 30), 1000);
+        // A lowered dispatch.shard_floor (pinned or calibrated) moves
+        // the clamp: totals the model floor would leave unsharded now
+        // split.
+        let mut low = cfg_with(0);
+        low.workers = 4;
+        low.shard_floor = 1 << 15;
+        assert_eq!(effective_shard_min_len(&low, 1 << 16), 1 << 15);
+        assert_eq!(shard_count(&low, 8, 1 << 16), 2);
         // The u32 clamp guards absurd totals on huge worker counts.
         let mut one = cfg_with(0);
         one.workers = 1;

@@ -2,6 +2,34 @@
 
 use crate::mergepath::kernel::KernelKind;
 use crate::metrics::{fmt_ns, Counter, Gauge, Histogram};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Per-dispatcher-shard control-plane metrics: one block per
+/// `dispatch.shards` thread, initialized by the service at start
+/// ([`ServiceStats::init_dispatch_shards`]) and rendered in the
+/// `dispatch:` section of [`ServiceStats::snapshot`].
+#[derive(Debug, Default)]
+pub struct DispatchShardStats {
+    /// Queue depth sampled at every batch-assembly pass (`peak()` is
+    /// the shard's high-water backlog).
+    pub depth: Gauge,
+    /// Age (µs) of the oldest job in the most recent batch — how stale
+    /// the head of this shard's queue was when the dispatcher got to
+    /// it.
+    pub oldest_age_us: Gauge,
+    /// Jobs this shard dispatched to the pool (including jobs it stole
+    /// and shard-expansion sub-jobs).
+    pub dispatched: Counter,
+    /// Jobs stolen *by* this shard from peers' queues.
+    pub stolen_jobs: Counter,
+    /// Steal passes by this shard that took at least one job.
+    pub stolen_batches: Counter,
+    /// Streaming-session messages absorbed by this shard (always on the
+    /// session's owning shard — messages are never stolen).
+    pub session_msgs: Counter,
+}
 
 /// Counters + latency histogram for the running service.
 #[derive(Debug, Default)]
@@ -138,6 +166,28 @@ pub struct ServiceStats {
     /// Scheduler passes rejected by the service (BUSY / budget) and
     /// retried after backoff.
     pub scheduler_backoffs: Counter,
+    /// Stage latency: admission → the dispatcher picking the job into a
+    /// batch (queue residency before planning).
+    pub stage_admission: Histogram,
+    /// Stage latency: batch planning → a pool worker picking the job up
+    /// (dispatch/slot-acquire overhead plus pool queueing).
+    pub stage_dispatch: Histogram,
+    /// Stage latency: worker start → reply sent (pure execution).
+    pub stage_exec: Histogram,
+    /// Per-shard control-plane metrics, sized once at service start.
+    dispatch: OnceLock<Vec<Arc<DispatchShardStats>>>,
+    /// Elements completed per backend base tag (throughput counters;
+    /// kernel suffixes are stripped like the per-backend job counters).
+    backend_elements: Mutex<BTreeMap<String, u64>>,
+    /// Calibrated `kway_flat_max_k` in effect (0 = knob pinned by
+    /// config, calibration not consulted).
+    pub calibrated_flat_max_k: Gauge,
+    /// Calibrated shard floor in effect (elements; 0 = pinned).
+    pub calibrated_shard_floor: Gauge,
+    /// Calibrated cache estimate in effect (bytes; 0 = pinned/detected).
+    pub calibrated_cache_bytes: Gauge,
+    /// Wall cost of the calibration probe suite (ns; 0 = never ran).
+    pub calibration_probe_ns: Gauge,
 }
 
 impl ServiceStats {
@@ -161,6 +211,9 @@ impl ServiceStats {
         self.latency.record(latency_ns.max(1));
         self.queue_wait.record(wait_ns.max(1));
         let backend = backend.split_once('+').map_or(backend, |(base, _)| base);
+        if let Ok(mut per) = self.backend_elements.lock() {
+            *per.entry(backend.to_string()).or_insert(0) += elements;
+        }
         match backend {
             "xla" => self.xla_jobs.inc(),
             "native-segmented" => self.segmented_jobs.inc(),
@@ -183,6 +236,47 @@ impl ServiceStats {
         self.resident_bytes.peak()
     }
 
+    /// Size the per-shard metric blocks (idempotent — the first caller
+    /// wins, matching the service's one-time shard layout) and hand
+    /// back clones of the per-shard handles for the dispatcher threads.
+    pub fn init_dispatch_shards(&self, n: usize) -> Vec<Arc<DispatchShardStats>> {
+        self.dispatch
+            .get_or_init(|| (0..n.max(1)).map(|_| Arc::new(DispatchShardStats::default())).collect())
+            .clone()
+    }
+
+    /// Metrics block of dispatcher shard `i` (`None` before the service
+    /// initialized the layout, or past the shard count).
+    pub fn dispatch_shard(&self, i: usize) -> Option<&Arc<DispatchShardStats>> {
+        self.dispatch.get().and_then(|v| v.get(i))
+    }
+
+    /// Number of dispatcher shards the metrics were sized for (0 before
+    /// service start).
+    pub fn dispatch_shard_count(&self) -> usize {
+        self.dispatch.get().map_or(0, |v| v.len())
+    }
+
+    /// Elements completed under a backend base tag (0 if never seen).
+    pub fn backend_elements(&self, tag: &str) -> u64 {
+        self.backend_elements.lock().map_or(0, |per| per.get(tag).copied().unwrap_or(0))
+    }
+
+    /// Record the calibration outcome the service start resolved
+    /// (values of 0 mean the corresponding knob was pinned by config).
+    pub fn record_calibration(
+        &self,
+        flat_max_k: u64,
+        shard_floor: u64,
+        cache_bytes: u64,
+        probe_ns: u64,
+    ) {
+        self.calibrated_flat_max_k.set(flat_max_k);
+        self.calibrated_shard_floor.set(shard_floor);
+        self.calibrated_cache_bytes.set(cache_bytes);
+        self.calibration_probe_ns.set(probe_ns);
+    }
+
     /// Record which leaf kernel a job's pairwise merges ran on.
     ///
     /// Called once per job that routed through a
@@ -197,8 +291,60 @@ impl ServiceStats {
         }
     }
 
-    /// Human-readable snapshot (the `serve` CLI's stats dump).
+    /// Human-readable snapshot (the `serve` CLI's stats dump and the
+    /// wire `STATS` verb's payload). Fixed counter sections first, then
+    /// the variable-width sections: per-stage latency histograms,
+    /// per-shard dispatch gauges, per-backend element throughput, and
+    /// the calibration report in effect.
     pub fn snapshot(&self) -> String {
+        let mut out = self.snapshot_fixed();
+        let stage = |h: &Histogram| {
+            format!("p50={} p99={} n={}", fmt_ns(h.quantile(0.5)), fmt_ns(h.quantile(0.99)), h.count())
+        };
+        let _ = write!(
+            out,
+            " | stages: admit[{}] plan[{}] exec[{}]",
+            stage(&self.stage_admission),
+            stage(&self.stage_dispatch),
+            stage(&self.stage_exec),
+        );
+        if let Some(shards) = self.dispatch.get() {
+            let _ = write!(out, " | dispatch: shards={}", shards.len());
+            for (i, sh) in shards.iter().enumerate() {
+                let _ = write!(
+                    out,
+                    " s{i}[depth={}/{} age={}µs disp={} stole={}/{} sess={}]",
+                    sh.depth.get(),
+                    sh.depth.peak(),
+                    sh.oldest_age_us.get(),
+                    sh.dispatched.get(),
+                    sh.stolen_jobs.get(),
+                    sh.stolen_batches.get(),
+                    sh.session_msgs.get(),
+                );
+            }
+        }
+        if let Ok(per) = self.backend_elements.lock() {
+            if !per.is_empty() {
+                out.push_str(" | throughput:");
+                for (tag, n) in per.iter() {
+                    let _ = write!(out, " {tag}={n}e");
+                }
+            }
+        }
+        let _ = write!(
+            out,
+            " | calibration: flat-max-k={} shard-floor={} cache-bytes={} probe={}",
+            self.calibrated_flat_max_k.get(),
+            self.calibrated_shard_floor.get(),
+            self.calibrated_cache_bytes.get(),
+            fmt_ns(self.calibration_probe_ns.get()),
+        );
+        out
+    }
+
+    /// The fixed-width counter sections of [`snapshot`](Self::snapshot).
+    fn snapshot_fixed(&self) -> String {
         format!(
             "jobs: submitted={} completed={} rejected={} | backends: native={} segmented={} kway={} kway-seg={} sharded={} streamed={} inplace={} xla={} | \
              kernels: scalar={} branchless={} hybrid={} simd={} | \
@@ -403,6 +549,71 @@ mod tests {
         assert!(snap.contains("passes=1"));
         assert!(snap.contains("skips=2"));
         assert!(snap.contains("backoffs=5"));
+    }
+
+    #[test]
+    fn stage_histograms_in_snapshot() {
+        let s = ServiceStats::new();
+        s.stage_admission.record(1_000);
+        s.stage_dispatch.record(2_000);
+        s.stage_exec.record(500_000);
+        let snap = s.snapshot();
+        assert!(snap.contains("stages: admit[p50="), "{snap}");
+        assert!(snap.contains("plan[p50="), "{snap}");
+        assert!(snap.contains("exec[p50="), "{snap}");
+        assert!(snap.contains("n=1]"), "{snap}");
+    }
+
+    #[test]
+    fn dispatch_shard_stats_sized_once_and_rendered() {
+        let s = ServiceStats::new();
+        assert_eq!(s.dispatch_shard_count(), 0, "unsized before service start");
+        assert!(!s.snapshot().contains("dispatch:"), "section hidden until sized");
+        let shards = s.init_dispatch_shards(2);
+        assert_eq!(shards.len(), 2);
+        assert_eq!(s.dispatch_shard_count(), 2);
+        // Idempotent: a second init keeps the first layout.
+        assert_eq!(s.init_dispatch_shards(8).len(), 2);
+        shards[0].depth.set(3);
+        shards[0].oldest_age_us.set(250);
+        shards[0].dispatched.add(7);
+        shards[1].stolen_jobs.add(4);
+        shards[1].stolen_batches.inc();
+        shards[1].session_msgs.add(2);
+        let snap = s.snapshot();
+        assert!(snap.contains("dispatch: shards=2"), "{snap}");
+        assert!(snap.contains("s0[depth=3/3 age=250µs disp=7 stole=0/0 sess=0]"), "{snap}");
+        assert!(snap.contains("s1[depth=0/0 age=0µs disp=0 stole=4/1 sess=2]"), "{snap}");
+        assert!(s.dispatch_shard(1).is_some());
+        assert!(s.dispatch_shard(2).is_none());
+    }
+
+    #[test]
+    fn backend_element_throughput_in_snapshot() {
+        let s = ServiceStats::new();
+        s.record_completion("native", 100, 1000, 10);
+        s.record_completion("native", 150, 1000, 10);
+        s.record_completion("native-kway+simd", 300, 1000, 10);
+        assert_eq!(s.backend_elements("native"), 250);
+        assert_eq!(s.backend_elements("native-kway"), 300, "kernel suffix stripped");
+        assert_eq!(s.backend_elements("xla"), 0);
+        let snap = s.snapshot();
+        assert!(snap.contains("throughput:"), "{snap}");
+        assert!(snap.contains("native=250e"), "{snap}");
+        assert!(snap.contains("native-kway=300e"), "{snap}");
+    }
+
+    #[test]
+    fn calibration_report_in_snapshot() {
+        let s = ServiceStats::new();
+        let snap = s.snapshot();
+        assert!(snap.contains("calibration: flat-max-k=0 shard-floor=0 cache-bytes=0"), "{snap}");
+        s.record_calibration(64, 1 << 17, 2 << 20, 1_500_000);
+        let snap = s.snapshot();
+        assert!(snap.contains("flat-max-k=64"), "{snap}");
+        assert!(snap.contains("shard-floor=131072"), "{snap}");
+        assert!(snap.contains("cache-bytes=2097152"), "{snap}");
+        assert!(snap.contains("probe=1.50ms"), "{snap}");
     }
 
     #[test]

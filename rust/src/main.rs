@@ -40,6 +40,7 @@ fn run(args: Vec<String>) -> Result<()> {
         }
         "artifacts" => cmd_artifacts(&cli),
         "store" => cmd_store(&cli),
+        "stats" => cmd_stats(&cli),
         "kernels" => cmd_kernels(),
         "" | "help" | "--help" | "-h" => {
             print!("{USAGE}");
@@ -335,6 +336,43 @@ fn cmd_store(cli: &Cli) -> Result<()> {
             "store {dir}: unsupported wire id {other}"
         ))),
     }
+}
+
+/// `mergeflow stats --listen ADDR`: connect to a running server as an
+/// ordinary wire client, issue `STATS` (and `STORE_STATS`), and
+/// pretty-print the reply one section per line — the operator's view
+/// of the per-stage latency histograms, per-shard dispatch gauges,
+/// backend throughput, and the calibration report without scraping the
+/// server's own periodic dump.
+fn cmd_stats(cli: &Cli) -> Result<()> {
+    use mergeflow::server::Client;
+    let addr = cli.flag("listen").ok_or_else(|| {
+        Error::Config("stats: --listen <HOST:PORT|unix:/PATH> is required".into())
+    })?;
+    let mut client = Client::<i32>::connect(addr, "stats-cli")?;
+    let snap = client.stats()?;
+    println!("service stats @ {addr}");
+    let mut lines = snap.lines();
+    // First line: the service snapshot, one ` | `-delimited section
+    // per line. The remaining lines (tenant table) pass through as-is.
+    for section in lines.next().unwrap_or("").split(" | ") {
+        println!("  {section}");
+    }
+    for line in lines {
+        println!("  {line}");
+    }
+    // A server without a store answers STORE_STATS with a typed error;
+    // report it instead of failing the whole command.
+    match client.store_stats() {
+        Ok(text) => {
+            println!("store stats:");
+            for line in text.lines() {
+                println!("  {line}");
+            }
+        }
+        Err(e) => println!("store: unavailable ({e})"),
+    }
+    Ok(())
 }
 
 fn cmd_artifacts(cli: &Cli) -> Result<()> {

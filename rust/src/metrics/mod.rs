@@ -59,8 +59,36 @@ impl Gauge {
 
     /// Raise the current value by `n` and fold it into the peak.
     pub fn add(&self, n: u64) {
-        let now = self.value.fetch_add(n, Ordering::Relaxed) + n;
-        self.peak.fetch_max(now, Ordering::Relaxed);
+        let now = self.value.fetch_add(n, Ordering::Relaxed).saturating_add(n);
+        self.fold_peak(now);
+    }
+
+    /// Overwrite the current value (sampled gauges: queue depth, ages)
+    /// and fold it into the peak.
+    pub fn set(&self, v: u64) {
+        self.value.store(v, Ordering::Relaxed);
+        self.fold_peak(v);
+    }
+
+    /// Monotone peak fold. A plain `fetch_max` is insufficient on
+    /// targets that polyfill it with load+CAS without a retry bound,
+    /// and two concurrent `add`s can each observe a stale peak between
+    /// their own `fetch_add` and the max update; an explicit CAS loop
+    /// that only ever raises the peak makes the high-water mark exact
+    /// for every interleaving of concurrent `add`/`set` calls.
+    fn fold_peak(&self, candidate: u64) {
+        let mut seen = self.peak.load(Ordering::Relaxed);
+        while candidate > seen {
+            match self.peak.compare_exchange_weak(
+                seen,
+                candidate,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(now) => seen = now,
+            }
+        }
     }
 
     /// Lower the current value by `n` (saturating at zero).
@@ -249,6 +277,61 @@ mod tests {
         g.add(10);
         assert_eq!(g.get(), 10);
         assert_eq!(g.peak(), 150, "peak is a high-water mark");
+    }
+
+    #[test]
+    fn gauge_set_overwrites_and_folds_peak() {
+        let g = Gauge::new();
+        g.set(40);
+        g.set(7);
+        assert_eq!(g.get(), 7);
+        assert_eq!(g.peak(), 40);
+        g.add(100);
+        assert_eq!(g.get(), 107);
+        assert_eq!(g.peak(), 107);
+    }
+
+    /// Concurrent `add`s must never lose the true high-water mark: with
+    /// every thread adding before any subtracts, the peak must be at
+    /// least the full sum regardless of how the peak folds interleave.
+    #[test]
+    fn gauge_peak_exact_under_concurrent_adds() {
+        use std::sync::Arc;
+        const THREADS: u64 = 8;
+        const PER_THREAD: u64 = 1000;
+        let g = Arc::new(Gauge::new());
+        let handles: Vec<_> = (0..THREADS)
+            .map(|_| {
+                let g = Arc::clone(&g);
+                std::thread::spawn(move || {
+                    for _ in 0..PER_THREAD {
+                        g.add(1);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(g.get(), THREADS * PER_THREAD);
+        assert_eq!(g.peak(), THREADS * PER_THREAD, "no add may be missed by the peak");
+        // And a mixed add/sub phase never raises the peak spuriously.
+        let handles: Vec<_> = (0..THREADS)
+            .map(|_| {
+                let g = Arc::clone(&g);
+                std::thread::spawn(move || {
+                    for _ in 0..PER_THREAD {
+                        g.add(3);
+                        g.sub(3);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(g.get(), THREADS * PER_THREAD);
+        assert!(g.peak() <= THREADS * (PER_THREAD + 3), "peak bounded by max possible residency");
     }
 
     #[test]

@@ -1,0 +1,219 @@
+//! Sharded control-plane integration: multi-shard routing and work
+//! stealing must be *behaviourally invisible* — every job's output and
+//! backend tag bit-identical to the single-dispatcher oracle — while
+//! session affinity and the shutdown drain ledger hold per shard.
+//!
+//! The CI stress job re-runs this suite with the shard count pinned via
+//! `MERGEFLOW_TEST_DISPATCH_SHARDS` (1, 2, 8); without the variable
+//! each test sweeps 1, 2 and 4 shards itself.
+
+use mergeflow::bench::workload::{gen_sorted_pair, gen_sorted_runs, gen_unsorted, WorkloadKind};
+use mergeflow::config::{Backend, InplaceMode, MergeKernel, MergeflowConfig};
+use mergeflow::coordinator::{JobKind, MergeService};
+
+fn base_config() -> MergeflowConfig {
+    MergeflowConfig {
+        workers: 2,
+        threads_per_job: 2,
+        queue_capacity: 256,
+        max_batch: 8,
+        batch_timeout_us: 100,
+        backend: Backend::Native,
+        // Deterministic backend routing: segmented / sharded / eager
+        // paths stay off so the oracle comparison is about *dispatch*,
+        // not planner heuristics.
+        segmented: false,
+        segment_len: 0,
+        kway_segment_elems: 0,
+        cache_bytes: 0,
+        kway_flat_max_k: 64,
+        compact_sharding: false,
+        compact_shard_min_len: 0,
+        compact_chunk_len: 0,
+        compact_eager_min_len: 0,
+        memory_budget: 0,
+        inplace: InplaceMode::Auto,
+        kernel: MergeKernel::Auto,
+        dispatch_shards: 1,
+        dispatch_steal: true,
+        calibrate: false,
+        shard_floor: 1 << 18,
+        artifacts_dir: "artifacts".into(),
+    }
+}
+
+/// Shard counts to exercise: pinned by the CI stress matrix via
+/// `MERGEFLOW_TEST_DISPATCH_SHARDS`, otherwise a local 1/2/4 sweep.
+fn shard_counts() -> Vec<usize> {
+    match std::env::var("MERGEFLOW_TEST_DISPATCH_SHARDS") {
+        Ok(v) => {
+            let n: usize = v
+                .parse()
+                .expect("MERGEFLOW_TEST_DISPATCH_SHARDS must be a positive integer");
+            assert!(n >= 1, "MERGEFLOW_TEST_DISPATCH_SHARDS must be >= 1");
+            vec![n]
+        }
+        Err(_) => vec![1, 2, 4],
+    }
+}
+
+/// A deterministic mixed job list for one workload kind: merges, sorts
+/// and compactions with varied sizes so jobs spread across shards.
+fn job_mix(kind: WorkloadKind) -> Vec<JobKind<i32>> {
+    let mut jobs = Vec::new();
+    for i in 0..6u64 {
+        let (a, b) = gen_sorted_pair(kind, 800 + 37 * i as usize, 600 + 13 * i as usize, i);
+        jobs.push(JobKind::Merge { a, b });
+        jobs.push(JobKind::Sort { data: gen_unsorted(900 + 11 * i as usize, 100 + i) });
+        jobs.push(JobKind::Compact { runs: gen_sorted_runs(kind, 4, 500, 200 + i) });
+    }
+    jobs
+}
+
+/// Run every job through a service with the given shard count and
+/// stealing mode; return `(backend, output)` per job in submit order.
+fn run_all(
+    shards: usize,
+    steal: bool,
+    jobs: &[JobKind<i32>],
+) -> Vec<(String, Vec<i32>)> {
+    let mut cfg = base_config();
+    cfg.dispatch_shards = shards;
+    cfg.dispatch_steal = steal;
+    let svc = MergeService::start(cfg).unwrap();
+    let handles: Vec<_> = jobs
+        .iter()
+        .map(|j| svc.submit(j.clone()).unwrap())
+        .collect();
+    let out = handles
+        .into_iter()
+        .map(|h| {
+            let r = h.wait().unwrap();
+            (r.backend.to_string(), r.output)
+        })
+        .collect();
+    svc.shutdown();
+    out
+}
+
+/// Property: for every workload kind, shard routing (with and without
+/// stealing) produces outputs and backend tags bit-identical to the
+/// single-dispatcher oracle.
+#[test]
+fn routing_and_stealing_match_single_dispatcher_oracle() {
+    for kind in WorkloadKind::all() {
+        let jobs = job_mix(kind);
+        let oracle = run_all(1, false, &jobs);
+        for shards in shard_counts() {
+            for steal in [false, true] {
+                let got = run_all(shards, steal, &jobs);
+                assert_eq!(got.len(), oracle.len());
+                for (i, (g, o)) in got.iter().zip(&oracle).enumerate() {
+                    assert_eq!(
+                        g.0, o.0,
+                        "job {i} backend drifted ({kind:?}, shards={shards}, steal={steal})"
+                    );
+                    assert_eq!(
+                        g.1, o.1,
+                        "job {i} output not bit-identical ({kind:?}, shards={shards}, steal={steal})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Session affinity: every message of a streamed compaction session —
+/// chunks, run seals and the final seal — is absorbed by exactly one
+/// shard (the owner picked by the id hash), never by a stealer.
+#[test]
+fn streamed_session_messages_land_on_owning_shard() {
+    for shards in shard_counts() {
+        let mut cfg = base_config();
+        cfg.dispatch_shards = shards;
+        let svc = MergeService::start(cfg).unwrap();
+        let stats = svc.stats_arc();
+        let per_shard = || -> Vec<u64> {
+            (0..stats.dispatch_shard_count())
+                .map(|i| stats.dispatch_shard(i).unwrap().session_msgs.get())
+                .collect()
+        };
+        // Several sessions in sequence: ids differ, so with >1 shard the
+        // owners differ, but each session's messages must stay together.
+        for s in 0..4u64 {
+            let runs = gen_sorted_runs(WorkloadKind::Uniform, 3, 600, 40 + s);
+            let mut expected: Vec<i32> = runs.iter().flatten().copied().collect();
+            expected.sort_unstable();
+
+            let before = per_shard();
+            let mut session = svc.open_compaction(runs.len()).unwrap();
+            for (i, run) in runs.iter().enumerate() {
+                for chunk in run.chunks(150) {
+                    session.feed(i, chunk.to_vec()).unwrap();
+                }
+                session.seal_run(i).unwrap();
+            }
+            let res = session.seal().unwrap().wait().unwrap();
+            assert_eq!(res.output, expected, "session {s} output wrong");
+            let after = per_shard();
+
+            // 3 runs × (4 chunks + 1 run seal) + 1 session seal = 16
+            // messages, all on one shard.
+            let deltas: Vec<u64> =
+                after.iter().zip(&before).map(|(a, b)| a - b).collect();
+            assert_eq!(
+                deltas.iter().sum::<u64>(),
+                16,
+                "session {s}: message count off (shards={shards}, deltas={deltas:?})"
+            );
+            assert_eq!(
+                deltas.iter().filter(|&&d| d > 0).count(),
+                1,
+                "session {s}: messages split across shards (shards={shards}, deltas={deltas:?})"
+            );
+        }
+        svc.shutdown();
+    }
+}
+
+/// Shutdown under load: with every shard's queue holding backlog,
+/// `shutdown` must drain all of them — every handle resolved, and the
+/// ledger balances (`submitted == completed + rejected`, nothing lost
+/// on any shard).
+#[test]
+fn shutdown_under_load_drains_every_shard() {
+    for shards in shard_counts() {
+        let mut cfg = base_config();
+        cfg.dispatch_shards = shards;
+        let svc = MergeService::start(cfg).unwrap();
+        let handles: Vec<_> = (0..48u64)
+            .map(|i| {
+                let (a, b) =
+                    gen_sorted_pair(WorkloadKind::Uniform, 20_000, 20_000, i);
+                svc.submit(JobKind::Merge { a, b }).unwrap()
+            })
+            .collect();
+        let stats = svc.stats_arc();
+        svc.shutdown();
+        for (i, h) in handles.iter().enumerate() {
+            let res = h.try_wait();
+            assert!(
+                res.is_some(),
+                "job {i} unresolved after shutdown (shards={shards})"
+            );
+        }
+        assert_eq!(stats.submitted.get(), 48);
+        assert_eq!(stats.rejected.get(), 0, "no admission pressure expected");
+        assert_eq!(
+            stats.completed.get(),
+            48,
+            "drain ledger must balance (shards={shards})"
+        );
+        // Conservation across the control plane: every job dispatched
+        // exactly once, whether by its home shard or a stealer.
+        let dispatched: u64 = (0..stats.dispatch_shard_count())
+            .map(|i| stats.dispatch_shard(i).unwrap().dispatched.get())
+            .sum();
+        assert_eq!(dispatched, 48, "dispatch conservation (shards={shards})");
+    }
+}

@@ -34,6 +34,12 @@ fn base_config() -> MergeflowConfig {
         memory_budget: 0,
         inplace: InplaceMode::Auto,
         kernel: MergeKernel::Auto,
+        // Single dispatcher shard, calibration probes off:
+        // deterministic control plane and knob values.
+        dispatch_shards: 1,
+        dispatch_steal: true,
+        calibrate: false,
+        shard_floor: 1 << 18,
         artifacts_dir: "artifacts".into(),
     }
 }

@@ -83,6 +83,12 @@ fn inplace_route_never_allocates_a_second_output_buffer() {
         memory_budget: 0,
         inplace: InplaceMode::Always,
         kernel: MergeKernel::Auto,
+        // Single dispatcher shard, calibration probes off:
+        // deterministic control plane and knob values.
+        dispatch_shards: 1,
+        dispatch_steal: true,
+        calibrate: false,
+        shard_floor: 1 << 18,
         artifacts_dir: "artifacts".into(),
     };
     let svc = MergeService::start(cfg).unwrap();
